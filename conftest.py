@@ -1,0 +1,5 @@
+import sys
+import pathlib
+
+# Make `python/compile` importable when pytest runs from the repo root.
+sys.path.insert(0, str(pathlib.Path(__file__).parent / "python"))

@@ -1,0 +1,57 @@
+//! Quickstart: train sparse logistic regression with block-wise
+//! asynchronous ADMM on a small synthetic dataset, native backend.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! For the full three-layer path (JAX/Pallas-compiled XLA artifacts on
+//! the hot path), run `make artifacts` first and see
+//! `examples/sparse_logreg_e2e.rs`.
+
+use asybadmm::config::Config;
+use asybadmm::coordinator::run_async;
+use asybadmm::data::gen_partitioned;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Configure: 2k samples, 16 blocks x 64 features, 4 workers,
+    //    2 server shards (the "small" shape set).
+    let mut cfg = Config::small();
+    cfg.epochs = 400;
+    cfg.log_every = 50;
+
+    // 2. Generate a block-sparse synthetic workload (each worker's data
+    //    touches only `blocks_per_worker` of the consensus blocks).
+    let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+    println!("dataset: {} samples, {} features, {} nnz", ds.samples(), ds.dim(), ds.a.nnz());
+    for s in &shards {
+        println!(
+            "  worker {}: {} rows, active blocks {:?}",
+            s.worker_id,
+            s.samples(),
+            s.active_blocks
+        );
+    }
+
+    // 3. Train asynchronously (Algorithm 1).
+    let report = run_async(&cfg, &ds, &shards)?;
+
+    // 4. Inspect.
+    println!("\n{:>8} {:>12} {:>12}", "epoch", "objective", "time(s)");
+    for s in &report.samples {
+        println!("{:>8} {:>12.6} {:>12.4}", s.epoch, s.objective, s.time_s);
+    }
+    println!(
+        "\nfinal objective {:.6} | consensus gap {:.2e} | stationarity P(X,Y,z) {:.2e}",
+        report.final_objective.total(),
+        report.consensus_max,
+        report.stationarity
+    );
+    println!(
+        "pushes {} | max staleness {} versions | elapsed {:.2}s",
+        report.total_pushes(),
+        report.max_staleness(),
+        report.elapsed_s
+    );
+    let nnz = report.z_final.iter().filter(|v| v.abs() > 1e-8).count();
+    println!("model sparsity: {nnz}/{} non-zero", report.z_final.len());
+    Ok(())
+}

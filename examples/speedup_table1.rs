@@ -1,0 +1,117 @@
+//! Reproduce paper Table 1: running time (virtual seconds) to complete
+//! k ∈ {20, 50, 100} iterations for p ∈ {1, 4, 8, 16, 32} workers, and
+//! the speedup column T_k(1)/T_k(p).
+//!
+//! Experimental semantics match the paper's §5 setup exactly:
+//!   * one FIXED dataset, evenly partitioned across p workers
+//!     (generated once as 32 virtual shards, regrouped per p);
+//!   * "iteration" = one full cycle through the worker's blocks
+//!     ("each worker updates the blocks by cycling through the
+//!     coordinates of x and updating each in turn");
+//!   * KDDa's random partitioning makes every worker touch essentially
+//!     every block, so the workload footprint is dense
+//!     (blocks_per_worker = n_blocks) — the block-SPARSE regime is
+//!     exercised by the e2e example and the ablations instead;
+//!   * strong scaling: per-cycle compute shrinks ∝ 1/p while network +
+//!     server-service costs stay fixed.
+//!
+//! Timing is virtual (DES) with per-row compute cost measured on the
+//! real AOT XLA `worker_step` artifact at the reference shape; the
+//! numerics (every gradient, every prox) run for real.
+//!
+//!     cargo run --release --example speedup_table1 [-- --quick]
+//!
+//! Writes reports/table1.md and reports/table1.csv.
+
+use std::path::Path;
+
+use asybadmm::config::{BlockSelection, Config};
+use asybadmm::data::gen_virtual_partitioned;
+use asybadmm::problem::Problem;
+use asybadmm::report::{write_file, SpeedupTable};
+use asybadmm::runtime::Manifest;
+use asybadmm::sim::{calibrate_native, calibrate_xla, run_sim, CostModel};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let ks_cycles = vec![20usize, 50, 100];
+    let worker_counts = [1usize, 4, 8, 16, 32];
+
+    let mut base = Config::default();
+    // Paper §5 workload: dense footprint + cyclic block selection.
+    base.blocks_per_worker = base.n_blocks;
+    base.selection = BlockSelection::Cyclic;
+    // rho sized against the local-mean block Lipschitz constants of the
+    // dense-footprint workload (4L ~= 1.25; see admm::penalty).
+    base.rho = 1.5;
+    base.samples = if quick { 8192 } else { 65536 };
+    let cycles = *ks_cycles.last().unwrap();
+    base.epochs = cycles * base.n_blocks; // internal epochs = block updates
+    base.log_every = 100_000; // objective sampling off the hot path
+
+    println!(
+        "Table 1 reproduction — m={}, d={}, k={ks_cycles:?} cycles ({} blocks/cycle)",
+        base.samples,
+        base.n_blocks * base.block_size,
+        base.n_blocks
+    );
+
+    // Cost model: per-row rate measured on the real XLA artifact
+    // (rows-linear = the sparse row-streaming regime of the paper's
+    // ps-lite workers; see DESIGN.md).
+    let manifest = Manifest::load(&base.artifacts_dir).ok();
+    let cost: CostModel = match &manifest {
+        Some(m) => calibrate_xla(m, base.loss, base.block_size, base.m_chunk, base.d_pad)
+            .map(|c| {
+                let mut c = c.linearized();
+                // Shared-tenancy compute variance of the paper's EC2 c4
+                // fleet (stragglers bound time-to-k at high p).
+                c.compute_jitter = 0.15;
+                c
+            })
+            .unwrap_or_else(|e| {
+                eprintln!("xla calibration unavailable ({e:#}); native fallback");
+                let (ds, shards) = gen_virtual_partitioned(&base.synth_spec(), 32, 4);
+                calibrate_native(&ds, &shards, Problem::new(base.loss, base.lambda, base.clip))
+            }),
+        None => {
+            let (ds, shards) = gen_virtual_partitioned(&base.synth_spec(), 32, 4);
+            calibrate_native(&ds, &shards, Problem::new(base.loss, base.lambda, base.clip))
+        }
+    };
+    println!(
+        "cost model: {:.2}us/row-per-block-update, service={:.1}us, net={:.0}us",
+        cost.compute_per_row_s * 1e6,
+        cost.server_service_s * 1e6,
+        cost.net_mean_s * 1e6
+    );
+
+    let mut rows = Vec::new();
+    for &p in &worker_counts {
+        let mut cfg = base.clone();
+        cfg.n_workers = p;
+        let (ds, shards) = gen_virtual_partitioned(&cfg.synth_spec(), 32, p);
+        let r = run_sim(&cfg, &ds, &shards, &cost)?;
+        let ts: Vec<f64> = ks_cycles
+            .iter()
+            .map(|&k| r.time_to_epoch[k * base.n_blocks])
+            .collect();
+        println!(
+            "p={p:>2}: t(k=20)={:.1}s t(k=50)={:.1}s t(k=100)={:.1}s (virtual), final obj {:.5}",
+            ts[0],
+            ts[1],
+            ts[2],
+            r.final_objective.total()
+        );
+        rows.push((p, ts));
+    }
+
+    let table = SpeedupTable { ks: ks_cycles, rows };
+    println!("\n{}", table.to_markdown());
+    println!("paper's Table 1 speedups for reference: 1.0 / 3.87 / 7.92 / 16.31 / 29.83");
+
+    write_file(Path::new("reports/table1.md"), &table.to_markdown())?;
+    write_file(Path::new("reports/table1.csv"), &table.to_csv())?;
+    println!("wrote reports/table1.md, reports/table1.csv");
+    Ok(())
+}

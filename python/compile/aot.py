@@ -1,0 +1,162 @@
+"""AOT pipeline: lower L2 entry points to HLO *text* artifacts + manifest.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` rust crate binds) rejects with
+``proto.id() <= INT_MAX``; the text parser reassigns ids and round-trips
+cleanly.  Lowered with ``return_tuple=True`` — rust unwraps with
+``to_tuple1/2/4``.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts \
+                            --shapes default,small,tiny
+
+Runs once at build time (`make artifacts`); never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, shapes
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(fn, arg_specs) -> str:
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _io(spec_list):
+    return [{"shape": list(s.shape), "dtype": str(s.dtype)} for s in spec_list]
+
+
+def entries_for(ss: shapes.ShapeSet, use_pallas: bool = True):
+    """Yield (name, fn, arg_specs, out_specs, meta) for one shape set."""
+    m, d, db = ss.m_chunk, ss.d_pad, ss.db
+    a, lab, wgt, z = spec((m, d)), spec((m,)), spec((m,)), spec((d,))
+    blk, sc, off = spec((db,)), spec((1,)), spec((1,), I32)
+    meta = dict(
+        shape_set=ss.name, m_chunk=m, d_pad=d, db=db, tile_m=ss.tile_m,
+        prox_tile=ss.prox_tile, variant="pallas" if use_pallas else "jnp",
+    )
+    for kind in ("logistic", "squared"):
+        km = dict(meta, kind=kind)
+        yield (
+            f"worker_step_{kind}_{m}x{d}x{db}",
+            model.worker_step(kind, tile_m=ss.tile_m, db=db, use_pallas=use_pallas),
+            [a, lab, wgt, z, blk, off, sc],
+            [blk, blk, blk, spec((1,))],
+            dict(km, entry="worker_step"),
+        )
+        yield (
+            f"grad_chunk_{kind}_{m}x{d}x{db}",
+            model.grad_chunk(kind, tile_m=ss.tile_m, db=db, use_pallas=use_pallas),
+            [a, lab, wgt, z, off],
+            [blk, spec((1,))],
+            dict(km, entry="grad_chunk"),
+        )
+        yield (
+            f"objective_{kind}_{m}x{d}",
+            model.objective_chunk(kind),
+            [a, lab, wgt, z],
+            [spec((1,))],
+            dict(km, entry="objective"),
+        )
+    yield (
+        f"worker_update_{db}",
+        model.worker_update,
+        [blk, blk, blk, sc],
+        [blk, blk, blk],
+        dict(meta, entry="worker_update", kind="any"),
+    )
+    yield (
+        f"server_prox_{db}",
+        model.server_prox(tile=ss.prox_tile),
+        [blk, blk, sc, sc, sc, sc],
+        [blk],
+        dict(meta, entry="server_prox", kind="any"),
+    )
+
+
+def build(
+    out_dir: pathlib.Path, shape_names: str, force: bool = False, use_pallas: bool = True
+) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest_path = out_dir / "manifest.json"
+    old = {}
+    if manifest_path.exists() and not force:
+        try:
+            old = {e["name"]: e for e in json.loads(manifest_path.read_text())["entries"]}
+        except Exception:
+            old = {}
+    entries = []
+    seen = set()
+    for ss in shapes.resolve(shape_names):
+        for name, fn, arg_specs, out_specs, meta in entries_for(ss, use_pallas):
+            if name in seen:  # worker_update/server_prox can collide across sets
+                continue
+            seen.add(name)
+            fname = f"{name}.hlo.txt"
+            path = out_dir / fname
+            prev = old.get(name)
+            # Reuse only if the generation parameters are unchanged
+            # (tile sizes matter even though they are not in the name).
+            unchanged = prev is not None and all(
+                prev.get(k) == v for k, v in meta.items()
+            )
+            if unchanged and path.exists() and not force:
+                entries.append(prev)
+                continue
+            text = to_hlo_text(fn, arg_specs)
+            path.write_text(text)
+            entries.append(
+                dict(
+                    meta,
+                    name=name,
+                    file=fname,
+                    inputs=_io(arg_specs),
+                    outputs=_io(out_specs),
+                    sha256=hashlib.sha256(text.encode()).hexdigest()[:16],
+                )
+            )
+            print(f"  wrote {fname} ({len(text)} chars)")
+    manifest = {"version": 1, "entries": entries}
+    manifest_path.write_text(json.dumps(manifest, indent=1))
+    print(f"manifest: {manifest_path} ({len(entries)} artifacts)")
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--shapes", default="default,small,tiny")
+    p.add_argument("--force", action="store_true")
+    p.add_argument(
+        "--cpu-fused",
+        action="store_true",
+        help="lower the gradient hot-spot through plain jnp instead of the "
+        "interpret-mode Pallas kernel (faster on CPU; see EXPERIMENTS.md §Perf)",
+    )
+    args = p.parse_args()
+    build(pathlib.Path(args.out_dir), args.shapes, args.force, use_pallas=not args.cpu_fused)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1: Pallas kernels for AsyBADMM's compute hot-spots + jnp oracles."""
+
+from . import logistic, prox, ref  # noqa: F401

@@ -1,0 +1,132 @@
+"""L1: fused margin + block-gradient Pallas kernels.
+
+The compute hot-spot of AsyBADMM's worker step (Eq. 11 of the paper) is
+computing the block partial gradient nabla_j f_i(z~) over the worker's local
+data shard.  For a generalized linear loss
+
+    f_i(z) = sum_l  wgt_l * phi(<a_l, z>, y_l)
+
+the gradient w.r.t. block j is  A[:, j]^T s  with  s_l = wgt_l *
+phi'(<a_l, z>, y_l).  A naive implementation makes two passes over A in HBM
+(one for margins A z, one for the block gradient).  The kernel below fuses
+them: the grid walks row tiles of A; each tile computes its margins, the
+loss-derivative weighting s, and accumulates both the scalar loss and the
+block gradient, so A is read exactly once.
+
+TPU mapping (see DESIGN.md section "Hardware adaptation"): both per-tile
+matmuls (A_tile @ z and A_blk^T @ s) target the MXU; z and the (db,)
+accumulator stay VMEM-resident across the whole grid; the row-tile size is
+chosen so tile_m*d + d + db floats fit comfortably in VMEM.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the rust runtime
+(xla crate / xla_extension 0.5.1) compiles and runs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Loss kinds supported by the fused kernel.  Each entry maps a margin vector
+# (m,), labels (m,) and per-sample weights (m,) to (per-sample loss,
+# per-sample dloss/dmargin), both already weight-scaled.
+#
+#   logistic:  phi(m, y) = log(1 + exp(-y m))       (paper Eq. 22)
+#   squared:   phi(m, y) = 0.5 (m - y)^2            (lasso / robust MC)
+LOSS_KINDS = ("logistic", "squared")
+
+
+def _loss_and_slope(kind: str, margins, labels, weights):
+    if kind == "logistic":
+        t = -labels * margins
+        loss = weights * jnp.logaddexp(0.0, t)
+        slope = -labels * jax.nn.sigmoid(t) * weights
+    elif kind == "squared":
+        r = margins - labels
+        loss = 0.5 * weights * r * r
+        slope = weights * r
+    else:  # pragma: no cover - guarded by LOSS_KINDS
+        raise ValueError(f"unknown loss kind {kind!r}")
+    return loss, slope
+
+
+def _grad_block_kernel(
+    off_ref, a_ref, y_ref, w_ref, z_ref, g_ref, loss_ref, *, kind: str, db: int
+):
+    """One grid step: row tile of A -> partial (g_blk, loss) accumulation."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    a = a_ref[...]  # (tile_m, d)  — single HBM read of this tile
+    margins = a @ z_ref[...]  # (tile_m,)   MXU matmul #1
+    loss, slope = _loss_and_slope(kind, margins, y_ref[...], w_ref[...])
+    loss_ref[...] += jnp.sum(loss)[None]
+    off = off_ref[0]
+    a_blk = jax.lax.dynamic_slice(a, (0, off), (a.shape[0], db))
+    g_ref[...] += a_blk.T @ slope  # (db,)   MXU matmul #2
+
+
+def grad_block(kind: str, *, tile_m: int, db: int, interpret: bool = True):
+    """Build the fused block-gradient function.
+
+    Returns ``fn(offset_i32[1], A[m,d], labels[m], weights[m], z[d]) ->
+    (g_blk[db], loss[1])`` where ``m % tile_m == 0`` (pad rows with
+    weight 0) and ``offset + db <= d`` with ``offset % db == 0``.
+    """
+    if kind not in LOSS_KINDS:
+        raise ValueError(f"unknown loss kind {kind!r}")
+
+    kernel = functools.partial(_grad_block_kernel, kind=kind, db=db)
+
+    def fn(offset, a, labels, weights, z):
+        m, d = a.shape
+        if m % tile_m:
+            raise ValueError(f"m={m} not a multiple of tile_m={tile_m}")
+        grid = (m // tile_m,)
+        g, loss = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1,), lambda i: (0,)),  # offset
+                pl.BlockSpec((tile_m, d), lambda i: (i, 0)),  # A row tile
+                pl.BlockSpec((tile_m,), lambda i: (i,)),  # labels
+                pl.BlockSpec((tile_m,), lambda i: (i,)),  # weights
+                pl.BlockSpec((d,), lambda i: (0,)),  # z (VMEM-resident)
+            ],
+            out_specs=[
+                pl.BlockSpec((db,), lambda i: (0,)),  # g accumulator
+                pl.BlockSpec((1,), lambda i: (0,)),  # loss accumulator
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((db,), jnp.float32),
+                jax.ShapeDtypeStruct((1,), jnp.float32),
+            ],
+            interpret=interpret,
+        )(offset, a, labels, weights, z)
+        return g, loss
+
+    return fn
+
+
+def vmem_estimate_bytes(tile_m: int, d: int, db: int) -> int:
+    """Static VMEM footprint estimate (f32) for one grid step.
+
+    Used by DESIGN.md section 9 / the perf notes: A tile + z + labels +
+    weights + margins + g accumulator.  Real-TPU sizing keeps this under
+    ~half of the 16 MiB VMEM to allow double buffering of the A tile.
+    """
+    floats = tile_m * d + d + 3 * tile_m + db + 1
+    return 4 * floats
+
+
+def mxu_macs_per_step(m: int, d: int, db: int) -> int:
+    """MACs per fused worker-gradient invocation (both matmuls)."""
+    return m * d + m * db

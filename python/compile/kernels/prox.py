@@ -1,0 +1,58 @@
+"""L1: server-side proximal update Pallas kernel (paper Eq. 13).
+
+The server shard owning block j applies, upon receiving a worker push,
+
+    z_j <- prox_h^mu( (gamma * z~_j + sum_i w~_ij) / (gamma + sum_i rho_i) )
+
+with h = lam * ||.||_1 plus the box constraint |z| <= C (paper Eq. 22),
+whose proximal operator is soft-thresholding followed by clipping:
+
+    prox(v) = clip(sign(v) * max(|v| - lam/mu, 0), -C, C)
+
+Elementwise over the block; tiled so arbitrary block sizes stream through
+VMEM.  Scalars travel as (1,)-shaped f32 inputs so the AOT-compiled
+executable is reusable across hyper-parameter settings.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _prox_kernel(zt_ref, ws_ref, gamma_ref, denom_ref, lam_ref, clip_ref, out_ref):
+    denom = denom_ref[0]
+    v = (gamma_ref[0] * zt_ref[...] + ws_ref[...]) / denom
+    thr = lam_ref[0] / denom
+    soft = jnp.sign(v) * jnp.maximum(jnp.abs(v) - thr, 0.0)
+    out_ref[...] = jnp.clip(soft, -clip_ref[0], clip_ref[0])
+
+
+def server_prox(*, tile: int, interpret: bool = True):
+    """Build ``fn(z_tilde[db], w_sum[db], gamma[1], denom[1], lam[1],
+    clip[1]) -> z_new[db]`` with ``db % tile == 0``."""
+
+    def fn(z_tilde, w_sum, gamma, denom, lam, clip):
+        (db,) = z_tilde.shape
+        if db % tile:
+            raise ValueError(f"db={db} not a multiple of tile={tile}")
+        grid = (db // tile,)
+        scalar = pl.BlockSpec((1,), lambda i: (0,))
+        return pl.pallas_call(
+            _prox_kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tile,), lambda i: (i,)),
+                pl.BlockSpec((tile,), lambda i: (i,)),
+                scalar,
+                scalar,
+                scalar,
+                scalar,
+            ],
+            out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((db,), jnp.float32),
+            interpret=interpret,
+        )(z_tilde, w_sum, gamma, denom, lam, clip)
+
+    return fn

@@ -1,0 +1,68 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has an entry here written in the most obvious
+vectorized jnp form (no tiling, no fusion tricks).  pytest compares kernel
+vs oracle across hypothesis-generated shapes; the rust integration tests
+compare the AOT-compiled artifacts against numbers produced from these same
+formulas re-implemented natively.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def loss_terms(kind: str, margins, labels, weights):
+    """(per-sample loss, per-sample dloss/dmargin), weight-scaled."""
+    if kind == "logistic":
+        t = -labels * margins
+        return weights * jnp.logaddexp(0.0, t), -labels * jax.nn.sigmoid(t) * weights
+    if kind == "squared":
+        r = margins - labels
+        return 0.5 * weights * r * r, weights * r
+    raise ValueError(f"unknown loss kind {kind!r}")
+
+
+def grad_block_ref(kind, offset, a, labels, weights, z, db):
+    """Oracle for kernels.logistic.grad_block."""
+    margins = a @ z
+    loss, slope = loss_terms(kind, margins, labels, weights)
+    a_blk = jax.lax.dynamic_slice(a, (0, offset[0]), (a.shape[0], db))
+    return a_blk.T @ slope, jnp.sum(loss)[None]
+
+
+def full_grad_ref(kind, a, labels, weights, z):
+    """Full local gradient (all columns), for jax.grad cross-checks."""
+    margins = a @ z
+    _, slope = loss_terms(kind, margins, labels, weights)
+    return a.T @ slope
+
+
+def objective_ref(kind, a, labels, weights, x):
+    margins = a @ x
+    loss, _ = loss_terms(kind, margins, labels, weights)
+    return jnp.sum(loss)[None]
+
+
+def soft_threshold(v, thr):
+    return jnp.sign(v) * jnp.maximum(jnp.abs(v) - thr, 0.0)
+
+
+def server_prox_ref(z_tilde, w_sum, gamma, denom, lam, clip):
+    """Oracle for kernels.prox.server_prox (Eq. 13 with l1 + box)."""
+    v = (gamma[0] * z_tilde + w_sum) / denom[0]
+    return jnp.clip(soft_threshold(v, lam[0] / denom[0]), -clip[0], clip[0])
+
+
+def worker_update_ref(g_blk, y_blk, z_blk, rho):
+    """Oracle for the Eq. 9/11/12 epilogue.
+
+    x  = z~ - (g + y)/rho          (Eq. 11)
+    y' = y + rho (x - z~) = -g     (Eq. 12; the -g identity is Eq. 25)
+    w  = rho x + y'                (Eq. 9)
+    """
+    x = z_blk - (g_blk + y_blk) / rho[0]
+    y_new = y_blk + rho[0] * (x - z_blk)
+    w = rho[0] * x + y_new
+    return w, y_new, x

@@ -1,0 +1,123 @@
+"""L2: AsyBADMM compute graphs in JAX, composing the L1 Pallas kernels.
+
+These are the *numerical* pieces of Algorithm 1 — everything a worker or a
+server shard computes per message, with all coordination stripped out (the
+rust L3 owns loops, topology, versions, delays).  Each public function here
+is an AOT entry point lowered once by ``aot.py`` to HLO text and executed
+from rust via PJRT; Python never runs on the request path.
+
+Shape conventions (static per compiled artifact, see shapes.py):
+
+  m_chunk : rows per data chunk.  A worker's shard is stored as fixed-size
+            row chunks (last chunk zero-padded with weight 0) so artifact
+            shapes are independent of the worker count p.
+  d_pad   : padded local feature width = max_active_blocks * db.  Each
+            worker packs its active blocks into slots [0, n_active); unused
+            slots are zero columns (zero columns contribute nothing to
+            margins, so numerics are exact).
+  db      : block size (one consensus block z_j per server slot).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import logistic as lk
+from .kernels import prox as pk
+from .kernels import ref
+
+
+def grad_chunk(
+    kind: str, *, tile_m: int, db: int, interpret: bool = True, use_pallas: bool = True
+):
+    """AOT entry: fused block gradient over one data chunk.
+
+    fn(A[m,d], labels[m], weights[m], z_local[d], offset i32[1])
+        -> (g_blk[db], loss[1])
+
+    ``use_pallas=False`` lowers the same math through plain jnp instead
+    of the interpret-mode Pallas kernel: XLA:CPU fuses it ~4x faster
+    (EXPERIMENTS.md §Perf) because the Pallas interpreter's per-step
+    buffer shuffling disappears.  The Pallas kernel remains the default
+    (and the real-TPU lowering); both variants are verified against
+    kernels/ref.py by pytest.
+    """
+    if not use_pallas:
+        def fn(a, labels, weights, z_local, offset):
+            return ref.grad_block_ref(kind, offset, a, labels, weights, z_local, db)
+
+        return fn
+
+    kernel = lk.grad_block(kind, tile_m=tile_m, db=db, interpret=interpret)
+
+    def fn(a, labels, weights, z_local, offset):
+        return kernel(offset, a, labels, weights, z_local)
+
+    return fn
+
+
+def worker_update(g_blk, y_blk, z_blk, rho):
+    """AOT entry: the Eq. 9/11/12 epilogue after the block gradient.
+
+    fn(g_blk[db], y_blk[db], z_blk[db], rho f32[1])
+        -> (w_blk[db], y_new[db], x_blk[db])
+    """
+    x = z_blk - (g_blk + y_blk) / rho[0]
+    y_new = y_blk + rho[0] * (x - z_blk)
+    w = rho[0] * x + y_new
+    return w, y_new, x
+
+
+def worker_step(
+    kind: str, *, tile_m: int, db: int, interpret: bool = True, use_pallas: bool = True
+):
+    """AOT entry: fully fused worker iteration (gradient + epilogue).
+
+    fn(A[m,d], labels[m], weights[m], z_local[d], y_blk[db],
+       offset i32[1], rho f32[1])
+        -> (w_blk[db], y_new[db], x_blk[db], loss[1])
+
+    Single-chunk workers use this one executable per iteration; multi-chunk
+    workers run grad_chunk per chunk, sum gradients in rust, then apply
+    worker_update.
+    """
+    gfn = grad_chunk(kind, tile_m=tile_m, db=db, interpret=interpret, use_pallas=use_pallas)
+
+    def fn(a, labels, weights, z_local, y_blk, offset, rho):
+        g_blk, loss = gfn(a, labels, weights, z_local, offset)
+        z_blk = jax.lax.dynamic_slice(z_local, (offset[0],), (db,))
+        w, y_new, x = worker_update(g_blk, y_blk, z_blk, rho)
+        return w, y_new, x, loss
+
+    return fn
+
+
+def server_prox(*, tile: int, interpret: bool = True):
+    """AOT entry: server-side block update, Eq. 13 with h = l1 + box.
+
+    fn(z_tilde[db], w_sum[db], gamma f32[1], denom f32[1], lam f32[1],
+       clip f32[1]) -> z_new[db]
+    """
+    return pk.server_prox(tile=tile, interpret=interpret)
+
+
+def objective_chunk(kind: str):
+    """AOT entry: data-term objective over one chunk (metric logging only;
+    h(z) is accumulated in rust where the full z lives).
+
+    fn(A[m,d], labels[m], weights[m], x[d]) -> loss[1]
+    """
+
+    def fn(a, labels, weights, x):
+        return ref.objective_ref(kind, a, labels, weights, x)
+
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted(kind, tile_m, db):
+    """Cached jitted worker_step for python-side tests."""
+    return jax.jit(worker_step(kind, tile_m=tile_m, db=db))

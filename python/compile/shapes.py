@@ -1,0 +1,60 @@
+"""Static shape configurations for the AOT artifact build.
+
+Each ShapeSet yields a family of artifacts whose names encode the shapes,
+so the rust runtime can pick executables by (m_chunk, d_pad, db) from
+``artifacts/manifest.json``.  Keep these in sync with rust `config`
+defaults (rust reads the manifest, so a mismatch fails loudly at startup,
+not silently).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSet:
+    name: str
+    m_chunk: int  # rows per data chunk
+    d_pad: int  # padded local feature width (= max_active_blocks * db)
+    db: int  # consensus block size
+    tile_m: int  # kernel row-tile
+    prox_tile: int  # prox kernel tile
+
+    def __post_init__(self):
+        assert self.m_chunk % self.tile_m == 0
+        assert self.d_pad % self.db == 0
+        assert self.db % self.prox_tile == 0
+
+
+# "default": the Fig.2 / Table 1 reproduction scale (synthetic KDDa-like).
+# "small":  quickstart + rust integration tests.
+# "tiny":   python pytest round-trips and CI smoke.
+# PERF (EXPERIMENTS.md §Perf, L1): on the CPU-interpret path every Pallas
+# grid step pays interpreter dispatch + buffer shuffling, which dominates
+# the actual GEMV work; tile_m == m_chunk collapses the grid to one step
+# per chunk (~8x faster end-to-end on this machine).  On a real TPU the
+# row tile must instead fit VMEM (tile_m=256 at d_pad=4096 uses ~4.2 MB,
+# allowing double buffering); `ShapeSet.tpu_tile_m` records that sizing
+# and kernels would use it when lowered without interpret=True.
+SHAPE_SETS = {
+    "default": ShapeSet("default", m_chunk=2048, d_pad=4096, db=512, tile_m=2048, prox_tile=512),
+    "small": ShapeSet("small", m_chunk=256, d_pad=512, db=64, tile_m=256, prox_tile=64),
+    "tiny": ShapeSet("tiny", m_chunk=32, d_pad=64, db=16, tile_m=32, prox_tile=16),
+}
+
+# TPU VMEM-sized row tiles per set (documentation + real-TPU lowering).
+TPU_TILE_M = {"default": 256, "small": 64, "tiny": 16}
+
+
+def resolve(names: str) -> Iterator[ShapeSet]:
+    """'default,small' -> ShapeSets; 'all' -> everything."""
+    if names == "all":
+        yield from SHAPE_SETS.values()
+        return
+    for n in names.split(","):
+        n = n.strip()
+        if n not in SHAPE_SETS:
+            raise KeyError(f"unknown shape set {n!r}; have {sorted(SHAPE_SETS)}")
+        yield SHAPE_SETS[n]

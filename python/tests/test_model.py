@@ -1,0 +1,115 @@
+"""L2 model graph tests: worker step algebra, fused step vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand_blk(rng, db):
+    return rng.standard_normal(db).astype(np.float32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 16, 64]),
+       st.floats(0.5, 500.0))
+def test_worker_update_matches_ref(seed, db, rho):
+    rng = np.random.default_rng(seed)
+    g, y, z = rand_blk(rng, db), rand_blk(rng, db), rand_blk(rng, db)
+    rho_a = np.array([rho], np.float32)
+    w, y_new, x = model.worker_update(g, y, z, rho_a)
+    w_r, y_r, x_r = ref.worker_update_ref(g, y, z, rho_a)
+    np.testing.assert_allclose(w, w_r, rtol=1e-6)
+    np.testing.assert_allclose(y_new, y_r, rtol=1e-6)
+    np.testing.assert_allclose(x, x_r, rtol=1e-6)
+
+
+def test_worker_update_dual_identity():
+    """Eq. 25: after Eqs. 11+12, y_new == -g exactly."""
+    rng = np.random.default_rng(1)
+    g, y, z = rand_blk(rng, 32), rand_blk(rng, 32), rand_blk(rng, 32)
+    _, y_new, _ = model.worker_update(g, y, z, np.array([100.0], np.float32))
+    # f32 round-trip through *rho and /rho costs a few ulp
+    np.testing.assert_allclose(np.asarray(y_new), -g, rtol=1e-4, atol=1e-5)
+
+
+def test_worker_update_w_identity():
+    """w = rho*x + y' = rho*z - 2g - y (closed form)."""
+    rng = np.random.default_rng(2)
+    g, y, z = rand_blk(rng, 16), rand_blk(rng, 16), rand_blk(rng, 16)
+    rho = 7.5
+    w, _, _ = model.worker_update(g, y, z, np.array([rho], np.float32))
+    np.testing.assert_allclose(np.asarray(w), rho * z - 2 * g - y, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ("logistic", "squared"))
+def test_worker_step_fused_matches_composition(kind):
+    m, d, db, tile_m = 32, 32, 8, 16
+    rng = np.random.default_rng(5)
+    a = rng.standard_normal((m, d)).astype(np.float32)
+    labels = rng.choice([-1.0, 1.0], m).astype(np.float32)
+    weights = np.full(m, 1.0 / m, np.float32)
+    z = rng.standard_normal(d).astype(np.float32)
+    y = rand_blk(rng, db)
+    off = np.array([2 * db], np.int32)
+    rho = np.array([50.0], np.float32)
+
+    step = model.worker_step(kind, tile_m=tile_m, db=db)
+    w, y_new, x, loss = step(a, labels, weights, z, y, off, rho)
+
+    g_ref, loss_ref = ref.grad_block_ref(kind, off, a, labels, weights, z, db)
+    z_blk = z[2 * db:3 * db]
+    w_r, y_r, x_r = ref.worker_update_ref(g_ref, y, z_blk, rho)
+    np.testing.assert_allclose(w, w_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(y_new, y_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(x, x_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(loss, loss_ref, rtol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ("logistic", "squared"))
+def test_objective_chunk(kind):
+    m, d = 16, 8
+    rng = np.random.default_rng(9)
+    a = rng.standard_normal((m, d)).astype(np.float32)
+    labels = rng.choice([-1.0, 1.0], m).astype(np.float32)
+    weights = np.full(m, 1.0 / m, np.float32)
+    x = rng.standard_normal(d).astype(np.float32)
+    out = model.objective_chunk(kind)(a, labels, weights, x)
+    expect = ref.objective_ref(kind, a, labels, weights, x)
+    np.testing.assert_allclose(out, expect, rtol=1e-6)
+
+
+def test_logistic_loss_at_zero_is_log2():
+    """Sanity anchor: x=0 -> mean loss = log 2 (used by rust tests too)."""
+    m, d = 16, 8
+    rng = np.random.default_rng(10)
+    a = rng.standard_normal((m, d)).astype(np.float32)
+    labels = rng.choice([-1.0, 1.0], m).astype(np.float32)
+    weights = np.full(m, 1.0 / m, np.float32)
+    out = model.objective_chunk("logistic")(a, labels, weights, np.zeros(d, np.float32))
+    np.testing.assert_allclose(out, [np.log(2.0)], rtol=1e-6)
+
+
+@pytest.mark.parametrize("kind", ("logistic", "squared"))
+def test_worker_step_jnp_variant_matches_pallas(kind):
+    """The --cpu-fused AOT variant must agree with the Pallas lowering."""
+    m, d, db, tile_m = 32, 32, 8, 16
+    rng = np.random.default_rng(21)
+    a = rng.standard_normal((m, d)).astype(np.float32)
+    labels = rng.choice([-1.0, 1.0], m).astype(np.float32)
+    weights = np.full(m, 1.0 / m, np.float32)
+    z = rng.standard_normal(d).astype(np.float32)
+    y = rand_blk(rng, db)
+    off = np.array([db], np.int32)
+    rho = np.array([2.0], np.float32)
+
+    pallas = model.worker_step(kind, tile_m=tile_m, db=db, use_pallas=True)
+    jnp_v = model.worker_step(kind, tile_m=tile_m, db=db, use_pallas=False)
+    outs_p = pallas(a, labels, weights, z, y, off, rho)
+    outs_j = jnp_v(a, labels, weights, z, y, off, rho)
+    for p_out, j_out in zip(outs_p, outs_j):
+        np.testing.assert_allclose(p_out, j_out, rtol=1e-4, atol=1e-5)

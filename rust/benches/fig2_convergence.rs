@@ -1,0 +1,59 @@
+//! E1/E2 bench: regenerate the Fig. 2 convergence curves (objective vs
+//! iterations and vs virtual time) at bench scale and assert their
+//! qualitative shape: every worker count converges, and more workers
+//! reach a given objective sooner in (virtual) time.
+
+use asybadmm::config::Config;
+use asybadmm::data::gen_virtual_partitioned;
+use asybadmm::sim::{run_sim, CostModel};
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").as_deref() == Ok("1");
+    let mut base = Config::default();
+    base.epochs = if quick { 30 } else { 100 };
+    base.log_every = 5;
+    base.samples = if quick { 1024 } else { 4096 };
+
+    println!("== Fig. 2: convergence under asynchrony ==");
+    let mut finals = Vec::new();
+    let mut t_to_target = Vec::new();
+    let cost = CostModel {
+        compute_fixed_s: 1e-5,
+        compute_per_row_s: 2e-5,
+        server_service_s: 2e-5,
+        net_mean_s: 2e-4,
+        chunk_rows: 0,
+        per_chunk_s: 0.0,
+        compute_jitter: 0.1,
+    };
+    for p in [1usize, 4, 16] {
+        let mut cfg = base.clone();
+        cfg.n_workers = p;
+        let (ds, shards) = gen_virtual_partitioned(&cfg.synth_spec(), 32, p);
+        let r = run_sim(&cfg, &ds, &shards, &cost).unwrap();
+        let first = r.samples.first().unwrap().objective;
+        let target = first - 0.5 * (first - r.final_objective.total());
+        let t_half = r
+            .samples
+            .iter()
+            .find(|s| s.objective <= target)
+            .map(|s| s.time_s)
+            .unwrap_or(r.virtual_time_s);
+        println!(
+            "p={p:>2}: obj {first:.5} -> {:.5}, half-way at {t_half:.2} virtual s",
+            r.final_objective.total()
+        );
+        finals.push(r.final_objective.total());
+        t_to_target.push(t_half);
+    }
+    // Fig 2(a) shape: all curves converge to the same neighborhood.
+    let spread = finals.iter().cloned().fold(f64::MIN, f64::max)
+        - finals.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(spread < 0.05, "worker counts disagree on the optimum: {finals:?}");
+    // Fig 2(b) shape: more workers = faster in wall(virtual)-clock.
+    assert!(
+        t_to_target[2] < t_to_target[0],
+        "16 workers not faster than 1: {t_to_target:?}"
+    );
+    println!("shape checks passed (consistent optimum; asynchrony speeds wall-clock).");
+}

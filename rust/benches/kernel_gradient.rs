@@ -1,0 +1,78 @@
+//! L1 kernel bench: the fused margin + block-gradient hot-spot, native
+//! CSR vs the AOT XLA artifact (grad_chunk / fused worker_step).
+//!
+//!     cargo bench --bench kernel_gradient        # full
+//!     BENCH_QUICK=1 cargo bench --bench kernel_gradient
+
+use std::path::Path;
+
+use asybadmm::admm::NativeEngine;
+use asybadmm::bench::harness_from_env;
+use asybadmm::data::{gen_partitioned, BlockGeometry, LossKind, SynthSpec};
+use asybadmm::problem::Problem;
+use asybadmm::runtime::{Manifest, WorkerXla, XlaEngine};
+
+fn main() {
+    let mut h = harness_from_env();
+    println!("== L1 gradient kernel (lower is better) ==");
+
+    // --- native across scales -------------------------------------------
+    for (m, blocks, db, nnz) in [(256usize, 8usize, 64usize, 16usize), (2048, 8, 512, 40)] {
+        let spec = SynthSpec {
+            samples: m,
+            geometry: BlockGeometry::new(blocks, db),
+            nnz_per_row: nnz,
+            blocks_per_worker: blocks,
+            shared_blocks: 1,
+            ..Default::default()
+        };
+        let (ds, shards) = gen_partitioned(&spec, 1);
+        let shard = &shards[0];
+        let problem = Problem::new(LossKind::Logistic, 1e-5, 1e4);
+        let mut eng = NativeEngine::new(shard, problem, 1.0 / ds.samples() as f32);
+        let z = vec![0.01f32; shard.packed_dim()];
+        let mut g = vec![0.0f32; db];
+        let r = h.bench(&format!("native grad_block m={m} d={} db={db}", blocks * db), || {
+            eng.grad_block(&z, 0, &mut g);
+        });
+        println!("  -> {:.1} Mrows/s, {:.1} Mnnz/s",
+            m as f64 / r.mean_s / 1e6,
+            ds.a.nnz() as f64 / r.mean_s / 1e6);
+    }
+
+    // --- XLA artifacts (requires `make artifacts`) ------------------------
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let Ok(manifest) = Manifest::load(&dir) else {
+        println!("(skipping XLA benches: run `make artifacts`)");
+        return;
+    };
+    for (mc, dp, db, m, blocks, nnz) in
+        [(256usize, 512usize, 64usize, 256usize, 8usize, 16usize), (2048, 4096, 512, 2048, 8, 40)]
+    {
+        let spec = SynthSpec {
+            samples: m,
+            geometry: BlockGeometry::new(blocks, db),
+            nnz_per_row: nnz,
+            blocks_per_worker: blocks,
+            shared_blocks: 1,
+            ..Default::default()
+        };
+        let (ds, shards) = gen_partitioned(&spec, 1);
+        let shard = &shards[0];
+        let Ok(engine) = XlaEngine::new(&manifest, "logistic", mc, dp, db) else {
+            println!("(no artifacts for m_chunk={mc}; skipping)");
+            continue;
+        };
+        let mut xla = WorkerXla::new(engine, shard, 1.0 / ds.samples() as f32).unwrap();
+        let z = vec![0.01f32; shard.packed_dim()];
+        let y = vec![0.0f32; db];
+        let r = h.bench(&format!("xla   worker_step m={m} d_pad={dp} db={db}"), || {
+            xla.step(&z, &y, 0, 4.0).unwrap();
+        });
+        // Dense MACs the artifact executes: margins (m*dp) + block grad
+        // (m*db) per chunk.
+        let macs = (m * dp + m * db) as f64;
+        println!("  -> {:.2} GMAC/s dense-equivalent", macs / r.mean_s / 1e9);
+    }
+    println!("\n{}", h.csv());
+}

@@ -1,0 +1,79 @@
+//! Server-side Eq. 13 prox update throughput: native vs XLA artifact,
+//! plus the incremental w̃-sum bookkeeping — i.e. the entire per-push
+//! server service time that bounds coordinator scalability.
+//!
+//!     cargo bench --bench server_prox
+
+use std::path::Path;
+use std::sync::Arc;
+
+use asybadmm::admm::prox_l1_box;
+use asybadmm::bench::harness_from_env;
+use asybadmm::coordinator::{BlockStore, PushMsg, ServerShard, Topology};
+use asybadmm::data::{gen_partitioned, BlockGeometry, LossKind, SynthSpec};
+use asybadmm::problem::Problem;
+use asybadmm::runtime::{Manifest, ServerProxXla};
+
+fn main() {
+    let mut h = harness_from_env();
+    println!("== server prox / push service (lower is better) ==");
+
+    for db in [64usize, 512] {
+        let zt = vec![0.1f32; db];
+        let ws = vec![0.2f32; db];
+        let mut out = vec![0.0f32; db];
+        let r = h.bench(&format!("native prox_l1_box db={db}"), || {
+            prox_l1_box(&zt, &ws, 0.01, 16.0, 1e-5, 1e4, &mut out);
+        });
+        println!("  -> {:.1} Melem/s", db as f64 / r.mean_s / 1e6);
+    }
+
+    // Full push handling (w̃ bookkeeping + prox + store write).
+    let spec = SynthSpec {
+        samples: 64,
+        geometry: BlockGeometry::new(8, 64),
+        nnz_per_row: 8,
+        blocks_per_worker: 8,
+        shared_blocks: 1,
+        ..Default::default()
+    };
+    let (_, shards) = gen_partitioned(&spec, 4);
+    let topo = Topology::build(&shards, 8, 1);
+    let store = Arc::new(BlockStore::new(8, 64));
+    let problem = Problem::new(LossKind::Logistic, 1e-5, 1e4);
+    let mut srv = ServerShard::new(0, &topo, store, problem, 4.0, 0.01);
+    let block = srv.owned_blocks()[0];
+    let worker = topo.workers_of_block[block][0];
+    let w = vec![0.3f32; 64];
+    h.bench("server handle_push (native, db=64)", || {
+        srv.handle_push(
+            &PushMsg {
+                worker,
+                block,
+                w: w.clone(),
+                worker_epoch: 0,
+                z_version_used: 0,
+                sent_at: std::time::Instant::now(),
+            },
+            &asybadmm::coordinator::ProxBackend::Native,
+        )
+        .unwrap();
+    });
+
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Manifest::load(&dir) {
+        Err(_) => println!("(skipping XLA prox: run `make artifacts`)"),
+        Ok(m) => {
+            for db in [64usize, 512] {
+                let Ok(sp) = ServerProxXla::load(&m, db) else { continue };
+                let zt = vec![0.1f32; db];
+                let ws = vec![0.2f32; db];
+                let r = h.bench(&format!("xla    server_prox db={db}"), || {
+                    sp.prox(&zt, &ws, 0.01, 16.0, 1e-5, 1e4).unwrap();
+                });
+                println!("  -> {:.1} Melem/s (incl. PJRT dispatch)", db as f64 / r.mean_s / 1e6);
+            }
+        }
+    }
+    println!("\n{}", h.csv());
+}

@@ -1,0 +1,54 @@
+//! E3 bench: regenerate paper Table 1 (time to k iterations × worker
+//! count + speedup) via the calibrated DES.  `cargo bench` runs the
+//! quick profile; `examples/speedup_table1` is the full reproduction
+//! recorded in EXPERIMENTS.md.
+
+use asybadmm::config::Config;
+use asybadmm::data::gen_virtual_partitioned;
+use asybadmm::report::SpeedupTable;
+use asybadmm::sim::{run_sim, CostModel};
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").as_deref() == Ok("1");
+    let ks = vec![20usize, 50, 100];
+    let mut base = Config::default();
+    base.epochs = 100;
+    base.log_every = 10_000;
+    if quick {
+        base.samples = 1024;
+    }
+
+    println!("== Table 1: time-to-k iterations (virtual, calibrated DES) ==");
+    let t0 = std::time::Instant::now();
+    let mut rows = Vec::new();
+    // Compute-dominated cost model (the paper's regime) so the gate is
+    // calibration-independent; examples/speedup_table1 is the measured
+    // reproduction.
+    let cost = CostModel {
+        compute_fixed_s: 1e-5,
+        compute_per_row_s: 2e-5,
+        server_service_s: 2e-5,
+        net_mean_s: 2e-4,
+        chunk_rows: 0,
+        per_chunk_s: 0.0,
+        compute_jitter: 0.1,
+    };
+    for p in [1usize, 4, 8, 16, 32] {
+        let mut cfg = base.clone();
+        cfg.n_workers = p;
+        let (ds, shards) = gen_virtual_partitioned(&cfg.synth_spec(), 32, p);
+        let r = run_sim(&cfg, &ds, &shards, &cost).unwrap();
+        rows.push((p, ks.iter().map(|&k| r.time_to_epoch[k]).collect::<Vec<_>>()));
+    }
+    let table = SpeedupTable { ks, rows };
+    println!("{}", table.to_markdown());
+    println!("paper speedups: 1.0 / 3.87 / 7.92 / 16.31 / 29.83");
+    println!("bench wall time: {:.1}s", t0.elapsed().as_secs_f64());
+
+    // Sanity gates so `cargo bench` fails loudly if the shape regresses.
+    let sp = table.speedups();
+    let s32 = sp.iter().find(|(p, _)| *p == 32).map(|(_, s)| *s).unwrap_or(0.0);
+    assert!(s32 > 8.0, "32-worker speedup collapsed: {s32:.2}");
+    let s4 = sp.iter().find(|(p, _)| *p == 4).map(|(_, s)| *s).unwrap_or(0.0);
+    assert!(s4 > 2.0, "4-worker speedup collapsed: {s4:.2}");
+}

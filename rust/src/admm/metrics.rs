@@ -1,0 +1,198 @@
+//! Convergence metrics: global objective, consensus gap, and the paper's
+//! Eq. 14 stationarity residual P(X, Y, z) whose decay to 0 certifies
+//! convergence to a KKT point (Theorem 1 part 3).
+
+use super::native::NativeEngine;
+use super::prox::soft_threshold;
+use crate::data::WorkerShard;
+use crate::problem::Problem;
+
+/// Objective decomposition at the consensus point z:
+/// F(z) = Σ_i f_i(z) + h(z)  (what Fig. 2 plots).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Objective {
+    pub data_loss: f64,
+    pub reg: f64,
+}
+
+impl Objective {
+    pub fn total(&self) -> f64 {
+        self.data_loss + self.reg
+    }
+}
+
+/// Evaluate F(z) by gathering each worker's packed view of z.
+pub fn objective_at_z(
+    shards: &[WorkerShard],
+    problem: &Problem,
+    sample_weight: f32,
+    z_global: &[f32],
+) -> Objective {
+    let mut data_loss = 0.0f64;
+    for shard in shards {
+        let z_local = gather_packed(shard, z_global);
+        let mut eng = NativeEngine::new(shard, *problem, sample_weight);
+        data_loss += eng.data_loss(&z_local) as f64;
+    }
+    Objective { data_loss, reg: problem.h(z_global) }
+}
+
+/// Copy the worker's active blocks of the global z into packed layout.
+pub fn gather_packed(shard: &WorkerShard, z_global: &[f32]) -> Vec<f32> {
+    let db = shard.block_size;
+    let mut out = vec![0.0f32; shard.packed_dim()];
+    for (slot, &j) in shard.active_blocks.iter().enumerate() {
+        out[slot * db..(slot + 1) * db].copy_from_slice(&z_global[j * db..(j + 1) * db]);
+    }
+    out
+}
+
+/// Consensus gap statistics: max and mean ‖x_ij − z_j‖ over ℰ.
+pub fn consensus_gap(
+    shards: &[WorkerShard],
+    xs: &[Vec<f32>],
+    z_global: &[f32],
+) -> (f64, f64) {
+    let mut max_gap = 0.0f64;
+    let mut sum = 0.0f64;
+    let mut count = 0usize;
+    for (shard, x) in shards.iter().zip(xs) {
+        let z_local = gather_packed(shard, z_global);
+        let db = shard.block_size;
+        for slot in 0..shard.n_slots() {
+            let (lo, hi) = (slot * db, (slot + 1) * db);
+            let gap: f64 = x[lo..hi]
+                .iter()
+                .zip(&z_local[lo..hi])
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            max_gap = max_gap.max(gap);
+            sum += gap;
+            count += 1;
+        }
+    }
+    (max_gap, sum / count.max(1) as f64)
+}
+
+/// Paper Eq. 14: P(X,Y,z) = ‖z − ẑ‖² + Σ‖∇_{x_ij} L‖² + Σ‖x_ij − z_j‖²,
+/// with ẑ_j = prox_h(z_j − ∇_{z_j}(L − h)) (Eq. 15).
+///
+/// Gradients:
+///   ∇_{x_ij} L = ∇_j f_i(x_i) + y_ij + ρ_i (x_ij − z_j)
+///   ∇_{z_j}(L−h) = −Σ_{i∈𝒩(j)} [ y_ij + ρ_i (x_ij − z_j) ]
+pub fn stationarity_residual(
+    shards: &[WorkerShard],
+    problem: &Problem,
+    rho: f32,
+    xs: &[Vec<f32>],
+    ys: &[Vec<f32>],
+    z_global: &[f32],
+) -> f64 {
+    let db = shards.first().map(|s| s.block_size).unwrap_or(0);
+    let mut grad_x_sq = 0.0f64;
+    let mut gap_sq = 0.0f64;
+    // ∇_{z_j}(L−h) accumulated per global coordinate.
+    let mut grad_z = vec![0.0f32; z_global.len()];
+
+    for ((shard, x), y) in shards.iter().zip(xs).zip(ys) {
+        let z_local = gather_packed(shard, z_global);
+        // f_i is the worker's LOCAL mean loss (same convention as
+        // training; see DESIGN.md "objective scaling").
+        let w_i = 1.0 / shard.samples().max(1) as f32;
+        let mut eng = NativeEngine::new(shard, *problem, w_i);
+        let mut g_full = vec![0.0f32; shard.packed_dim()];
+        eng.grad_full(x, &mut g_full);
+        for slot in 0..shard.n_slots() {
+            let j = shard.block_of_slot(slot);
+            let (lo, hi) = (slot * db, (slot + 1) * db);
+            for k in lo..hi {
+                let resid = x[k] - z_local[k];
+                let gx = g_full[k] + y[k] + rho * resid;
+                grad_x_sq += (gx as f64) * (gx as f64);
+                gap_sq += (resid as f64) * (resid as f64);
+                grad_z[j * db + (k - lo)] -= y[k] + rho * resid;
+            }
+        }
+    }
+
+    // ‖z − ẑ‖² with ẑ = prox_h(z − ∇_z(L−h)): soft-threshold λ then box.
+    let mut z_hat_sq = 0.0f64;
+    for (k, &z) in z_global.iter().enumerate() {
+        let v = z - grad_z[k];
+        let zh = soft_threshold(v, problem.lambda).clamp(-problem.clip, problem.clip);
+        z_hat_sq += ((z - zh) as f64).powi(2);
+    }
+
+    z_hat_sq + grad_x_sq + gap_sq
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_partitioned, BlockGeometry, LossKind, SynthSpec};
+
+    #[allow(clippy::type_complexity)]
+    fn setup() -> (Vec<WorkerShard>, Problem, f32, usize) {
+        let spec = SynthSpec {
+            samples: 48,
+            geometry: BlockGeometry::new(6, 8),
+            nnz_per_row: 5,
+            blocks_per_worker: 3,
+            shared_blocks: 1,
+            ..Default::default()
+        };
+        let (ds, shards) = gen_partitioned(&spec, 3);
+        let w = 1.0 / ds.samples() as f32;
+        (shards, Problem::new(LossKind::Logistic, 1e-3, 1e4), w, ds.dim())
+    }
+
+    #[test]
+    fn objective_at_zero_is_log2_plus_zero_reg() {
+        let (shards, p, w, d) = setup();
+        let obj = objective_at_z(&shards, &p, w, &vec![0.0; d]);
+        assert!((obj.data_loss - std::f64::consts::LN_2).abs() < 1e-4, "{obj:?}");
+        assert_eq!(obj.reg, 0.0);
+    }
+
+    #[test]
+    fn gather_packed_roundtrip() {
+        let (shards, _, _, d) = setup();
+        let z: Vec<f32> = (0..d).map(|k| k as f32).collect();
+        for shard in &shards {
+            let packed = gather_packed(shard, &z);
+            for (slot, &j) in shard.active_blocks.iter().enumerate() {
+                let db = shard.block_size;
+                assert_eq!(packed[slot * db], (j * db) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn consensus_gap_zero_when_x_equals_z() {
+        let (shards, _, _, d) = setup();
+        let z: Vec<f32> = (0..d).map(|k| (k % 7) as f32 * 0.1).collect();
+        let xs: Vec<Vec<f32>> = shards.iter().map(|s| gather_packed(s, &z)).collect();
+        let (max_gap, mean_gap) = consensus_gap(&shards, &xs, &z);
+        assert!(max_gap < 1e-12);
+        assert!(mean_gap < 1e-12);
+    }
+
+    #[test]
+    fn residual_nonnegative_and_detects_disagreement() {
+        let (shards, p, _w, d) = setup();
+        let z = vec![0.0f32; d];
+        let xs_agree: Vec<Vec<f32>> = shards.iter().map(|s| gather_packed(s, &z)).collect();
+        let ys: Vec<Vec<f32>> = shards.iter().map(|s| vec![0.0f32; s.packed_dim()]).collect();
+        let p0 = stationarity_residual(&shards, &p, 10.0, &xs_agree, &ys, &z);
+        assert!(p0 >= 0.0);
+
+        // Perturb x away from z: residual must grow.
+        let xs_off: Vec<Vec<f32>> = xs_agree
+            .iter()
+            .map(|x| x.iter().map(|v| v + 1.0).collect())
+            .collect();
+        let p1 = stationarity_residual(&shards, &p, 10.0, &xs_off, &ys, &z);
+        assert!(p1 > p0 + 1.0, "{p1} vs {p0}");
+    }
+}

@@ -1,0 +1,17 @@
+//! ADMM math core (S3): update rules (paper Eqs. 9, 11-13), proximal
+//! operators, Theorem-1 penalty feasibility, and convergence metrics
+//! (Eq. 14 stationarity residual).  Everything here is coordinator-free
+//! pure math, reusable by the threaded runtime, the DES simulator, and
+//! the baselines.
+
+mod metrics;
+mod native;
+mod penalty;
+mod prox;
+mod state;
+
+pub use metrics::{consensus_gap, gather_packed, objective_at_z, stationarity_residual, Objective};
+pub use native::{worker_update, NativeEngine};
+pub use penalty::{check_theorem1, estimate_block_lipschitz, suggest_gamma, Theorem1Report};
+pub use prox::{prox_l1_box, soft_threshold};
+pub use state::WorkerState;

@@ -1,0 +1,216 @@
+//! Native (pure-rust, CSR) compute engine — the exact same math as the
+//! AOT artifacts, over the packed per-worker shard.
+//!
+//! Two roles: (a) the numeric engine of the DES cluster simulator and the
+//! baselines; (b) the reference the XLA backend is cross-checked against
+//! in `rust/tests/artifact_parity.rs`.  Keep formulas in lock-step with
+//! `python/compile/model.py` / `kernels/ref.py`.
+
+use crate::data::WorkerShard;
+use crate::problem::Problem;
+
+/// Eq. 11/12/9 epilogue — mirror of `model.worker_update`:
+/// x = z̃ − (g + y)/ρ,  y' = y + ρ(x − z̃),  w = ρx + y'.
+pub fn worker_update(
+    g: &[f32],
+    y: &[f32],
+    z_blk: &[f32],
+    rho: f32,
+    w_out: &mut [f32],
+    y_out: &mut [f32],
+    x_out: &mut [f32],
+) {
+    let n = g.len();
+    debug_assert!(y.len() == n && z_blk.len() == n);
+    debug_assert!(w_out.len() == n && y_out.len() == n && x_out.len() == n);
+    for k in 0..n {
+        let x = z_blk[k] - (g[k] + y[k]) / rho;
+        let y_new = y[k] + rho * (x - z_blk[k]);
+        w_out[k] = rho * x + y_new;
+        y_out[k] = y_new;
+        x_out[k] = x;
+    }
+}
+
+/// Per-worker compute engine with reusable scratch buffers (no
+/// allocation on the iteration hot path).
+pub struct NativeEngine<'a> {
+    pub shard: &'a WorkerShard,
+    pub problem: Problem,
+    /// Uniform per-sample weight (1/m_total so that Σ_i f_i equals the
+    /// global mean loss of paper Eq. 22).
+    pub sample_weight: f32,
+    margins: Vec<f32>,
+    slopes: Vec<f32>,
+}
+
+impl<'a> NativeEngine<'a> {
+    pub fn new(shard: &'a WorkerShard, problem: Problem, sample_weight: f32) -> Self {
+        let m = shard.samples();
+        NativeEngine { shard, problem, sample_weight, margins: vec![0.0; m], slopes: vec![0.0; m] }
+    }
+
+    /// Fused margins + slopes pass; returns total (weighted) data loss at
+    /// `point` (packed coordinates).  Mirrors one grid pass of the L1
+    /// Pallas kernel.
+    fn margins_pass(&mut self, point: &[f32]) -> f32 {
+        debug_assert_eq!(point.len(), self.shard.packed_dim());
+        self.shard.a_packed.matvec(point, &mut self.margins);
+        let mut loss = 0.0f32;
+        for (k, &m) in self.margins.iter().enumerate() {
+            let (l, s) = self.problem.loss_slope(m, self.shard.labels[k]);
+            loss += self.sample_weight * l;
+            self.slopes[k] = self.sample_weight * s;
+        }
+        loss
+    }
+
+    /// ∇_slot f_i(point): block gradient at packed slot, plus shard data
+    /// loss at `point` — mirror of the `grad_chunk` artifact.
+    pub fn grad_block(&mut self, point: &[f32], slot: usize, g: &mut [f32]) -> f32 {
+        let (lo, hi) = self.shard.slot_range(slot);
+        debug_assert_eq!(g.len(), hi - lo);
+        let loss = self.margins_pass(point);
+        g.fill(0.0);
+        self.shard.a_packed.tmatvec_block_acc(&self.slopes, lo, hi, g);
+        loss
+    }
+
+    /// Full packed gradient (used by baselines + stationarity metric).
+    pub fn grad_full(&mut self, point: &[f32], g: &mut [f32]) -> f32 {
+        debug_assert_eq!(g.len(), self.shard.packed_dim());
+        let loss = self.margins_pass(point);
+        g.fill(0.0);
+        self.shard.a_packed.tmatvec_acc(&self.slopes, g);
+        loss
+    }
+
+    /// Weighted data loss at `point` — mirror of the `objective`
+    /// artifact.
+    pub fn data_loss(&mut self, point: &[f32]) -> f32 {
+        self.margins_pass(point)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{BlockGeometry, Dataset, LossKind};
+    use crate::sparse::{dense, CsrBuilder};
+    use crate::util::rng::Rng;
+
+    fn toy_shard(rng: &mut Rng, m: usize, blocks: usize, db: usize) -> (Dataset, WorkerShard) {
+        let d = blocks * db;
+        let mut b = CsrBuilder::new(m, d);
+        for r in 0..m {
+            for c in 0..d {
+                if rng.bernoulli(0.4) {
+                    b.push(r, c, rng.normal_f32(0.0, 1.0));
+                }
+            }
+        }
+        let ds = Dataset {
+            name: "toy".into(),
+            kind: LossKind::Logistic,
+            a: b.build(),
+            labels: (0..m).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect(),
+            geometry: BlockGeometry::new(blocks, db),
+        };
+        let shard = WorkerShard::from_rows(0, &ds, 0, m, None);
+        (ds, shard)
+    }
+
+    /// Finite-difference check of the block gradient.
+    #[test]
+    fn grad_block_matches_finite_difference() {
+        let mut rng = Rng::new(1);
+        let (_, shard) = toy_shard(&mut rng, 12, 3, 4);
+        let p = Problem::new(LossKind::Logistic, 0.0, 1e4);
+        let w = 1.0 / 12.0;
+        let mut eng = NativeEngine::new(&shard, p, w);
+        let z: Vec<f32> = (0..shard.packed_dim()).map(|_| rng.normal_f32(0.0, 0.5)).collect();
+        for slot in 0..shard.n_slots() {
+            let mut g = vec![0.0f32; 4];
+            eng.grad_block(&z, slot, &mut g);
+            let (lo, _) = shard.slot_range(slot);
+            for k in 0..4 {
+                let eps = 1e-2f32;
+                let mut zp = z.clone();
+                zp[lo + k] += eps;
+                let mut zm = z.clone();
+                zm[lo + k] -= eps;
+                let fd = (eng.data_loss(&zp) - eng.data_loss(&zm)) / (2.0 * eps);
+                assert!((fd - g[k]).abs() < 2e-3, "slot {slot} k {k}: fd {fd} vs {}", g[k]);
+            }
+        }
+    }
+
+    #[test]
+    fn grad_full_equals_dense_formula() {
+        let mut rng = Rng::new(2);
+        let (_, shard) = toy_shard(&mut rng, 10, 2, 4);
+        let p = Problem::new(LossKind::Squared, 0.0, 1e4);
+        // squared loss with labels y: grad = w * A^T (A z - y)
+        let mut eng = NativeEngine::new(&shard, p, 0.1);
+        let z: Vec<f32> = (0..8).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut g = vec![0.0f32; 8];
+        eng.grad_full(&z, &mut g);
+
+        let mut a_dense = vec![0.0f32; 10 * 8];
+        shard.a_packed.densify_rows(0, 10, &mut a_dense);
+        let margins = dense::matvec(&a_dense, 10, 8, &z);
+        let resid: Vec<f32> =
+            margins.iter().zip(&shard.labels).map(|(m, y)| 0.1 * (m - y)).collect();
+        let expect = dense::tmatvec(&a_dense, 10, 8, &resid);
+        for (a, b) in g.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn block_grads_concatenate_to_full() {
+        let mut rng = Rng::new(3);
+        let (_, shard) = toy_shard(&mut rng, 9, 3, 4);
+        let p = Problem::new(LossKind::Logistic, 0.0, 1e4);
+        let mut eng = NativeEngine::new(&shard, p, 1.0 / 9.0);
+        let z: Vec<f32> = (0..12).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut full = vec![0.0f32; 12];
+        eng.grad_full(&z, &mut full);
+        for slot in 0..3 {
+            let mut g = vec![0.0f32; 4];
+            eng.grad_block(&z, slot, &mut g);
+            assert_eq!(&full[slot * 4..(slot + 1) * 4], &g[..]);
+        }
+    }
+
+    #[test]
+    fn worker_update_identities() {
+        let mut rng = Rng::new(4);
+        let n = 16;
+        let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let y: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let z: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let rho = 50.0;
+        let (mut w, mut yn, mut x) = (vec![0.0; n], vec![0.0; n], vec![0.0; n]);
+        worker_update(&g, &y, &z, rho, &mut w, &mut yn, &mut x);
+        for k in 0..n {
+            // Eq. 25: y' = -g
+            assert!((yn[k] + g[k]).abs() < 1e-4);
+            // closed form w = rho z - 2g - y
+            assert!((w[k] - (rho * z[k] - 2.0 * g[k] - y[k])).abs() < 1e-3);
+            // Eq. 11
+            assert!((x[k] - (z[k] - (g[k] + y[k]) / rho)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn loss_at_zero_is_log2_for_logistic() {
+        let mut rng = Rng::new(5);
+        let (_, shard) = toy_shard(&mut rng, 20, 2, 4);
+        let p = Problem::new(LossKind::Logistic, 0.0, 1e4);
+        let mut eng = NativeEngine::new(&shard, p, 1.0 / 20.0);
+        let z = vec![0.0f32; shard.packed_dim()];
+        let loss = eng.data_loss(&z);
+        assert!((loss - std::f32::consts::LN_2).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,183 @@
+//! Theorem-1 hyper-parameter feasibility (paper Eqs. 16-18).
+//!
+//! The theorem requires, for every server block j and worker i,
+//!
+//!   α_j = (γ + ρ) − Σ_{i∈𝒩(j)} (1/2 + 1/ρ_i) L_ij² (T_ij+1)²
+//!                  − Σ_{i∈𝒩(j)} (4L_ij + ρ_i + 1) T_ij² / 2  > 0     (17)
+//!   β_i = (ρ_i − 4 max_{j∈𝒩(i)} L_ij) / (2|𝒩(i)|)            > 0     (18)
+//!
+//! These are *sufficient* conditions and (as in the paper's own
+//! experiments, which use γ = 0.01) wildly conservative in practice; the
+//! checker reports both the strict verdict and the practical
+//! recommendation, and the driver logs it at startup.
+
+use crate::data::WorkerShard;
+use crate::problem::Problem;
+
+/// Upper-bound estimate of the block Lipschitz constants L_ij
+/// (Assumption 1) for worker i: for a generalized linear loss with
+/// curvature bound c (= max φ''), ‖∇_j f(u) − ∇_j f(v)‖ ≤
+/// weight·c·σ_max(A_j)²·‖u_j − v_j‖ ≤ weight·c·‖A_j‖_F²·‖u_j − v_j‖.
+/// Returns one L per packed slot.
+pub fn estimate_block_lipschitz(
+    shard: &WorkerShard,
+    problem: &Problem,
+    sample_weight: f32,
+) -> Vec<f64> {
+    let c = problem.curvature_bound() as f64 * sample_weight as f64;
+    let mut frob2 = vec![0.0f64; shard.n_slots()];
+    for r in 0..shard.a_packed.rows() {
+        let (idx, vals) = shard.a_packed.row(r);
+        for (&col, &v) in idx.iter().zip(vals) {
+            frob2[col as usize / shard.block_size] += (v as f64) * (v as f64);
+        }
+    }
+    frob2.iter().map(|f| c * f).collect()
+}
+
+#[derive(Debug, Clone)]
+pub struct Theorem1Report {
+    /// α_j per global block (Eq. 17); only blocks with 𝒩(j) ≠ ∅.
+    pub alpha: Vec<(usize, f64)>,
+    /// β_i per worker (Eq. 18).
+    pub beta: Vec<f64>,
+    pub min_alpha: f64,
+    pub min_beta: f64,
+    /// Strict Theorem-1 feasibility.
+    pub feasible: bool,
+    /// γ that would make min α_j = margin > 0 with everything else fixed.
+    pub gamma_needed: f64,
+    /// ρ that would make all β_i > 0.
+    pub rho_needed: f64,
+}
+
+/// Evaluate Eqs. 16-18 for uniform ρ_i = ρ and uniform delay bound T.
+pub fn check_theorem1(
+    shards: &[&WorkerShard],
+    problem: &Problem,
+    n_blocks: usize,
+    rho: f64,
+    gamma: f64,
+    delay_bound: usize,
+) -> Theorem1Report {
+    let t = delay_bound as f64;
+    // Per-block accumulators over i ∈ 𝒩(j).
+    let mut alpha_penalty = vec![0.0f64; n_blocks];
+    let mut block_used = vec![false; n_blocks];
+    let mut beta = Vec::with_capacity(shards.len());
+    let mut max_l_all: f64 = 0.0;
+
+    for shard in shards {
+        // f_i = local mean loss => weight 1/m_i.
+        let w_i = 1.0 / shard.samples().max(1) as f32;
+        let l = estimate_block_lipschitz(shard, problem, w_i);
+        let mut max_l: f64 = 0.0;
+        for (slot, &lij) in l.iter().enumerate() {
+            let j = shard.block_of_slot(slot);
+            block_used[j] = true;
+            alpha_penalty[j] += (0.5 + 1.0 / rho) * lij * lij * (t + 1.0) * (t + 1.0)
+                + (4.0 * lij + rho + 1.0) * t * t / 2.0;
+            max_l = max_l.max(lij);
+        }
+        max_l_all = max_l_all.max(max_l);
+        beta.push((rho - 4.0 * max_l) / (2.0 * shard.n_slots() as f64));
+    }
+
+    let alpha: Vec<(usize, f64)> = (0..n_blocks)
+        .filter(|&j| block_used[j])
+        .map(|j| (j, gamma + rho - alpha_penalty[j]))
+        .collect();
+    let min_alpha = alpha.iter().map(|&(_, a)| a).fold(f64::INFINITY, f64::min);
+    let min_beta = beta.iter().copied().fold(f64::INFINITY, f64::min);
+    let worst_penalty = alpha_penalty.iter().copied().fold(0.0f64, f64::max);
+
+    Theorem1Report {
+        alpha,
+        beta,
+        min_alpha,
+        min_beta,
+        feasible: min_alpha > 0.0 && min_beta > 0.0,
+        gamma_needed: (worst_penalty - rho + 1e-9).max(0.0),
+        rho_needed: 4.0 * max_l_all + 1e-9,
+    }
+}
+
+/// Paper §4 remark: γ must grow with the delay bound. Practical rule
+/// used by the driver when auto-tuning: γ ∝ (T/T₀)² scaled from the
+/// paper's (γ=0.01, observed small delay) operating point.
+pub fn suggest_gamma(base_gamma: f64, delay_bound: usize) -> f64 {
+    let t = delay_bound.max(1) as f64;
+    base_gamma * t * t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_partitioned, LossKind, SynthSpec};
+
+    fn setup() -> (Vec<crate::data::WorkerShard>, Problem) {
+        let spec = SynthSpec {
+            samples: 64,
+            geometry: crate::data::BlockGeometry::new(8, 8),
+            nnz_per_row: 6,
+            blocks_per_worker: 4,
+            shared_blocks: 1,
+            ..Default::default()
+        };
+        let (_, shards) = gen_partitioned(&spec, 3);
+        (shards, Problem::new(LossKind::Logistic, 0.0, 1e4))
+    }
+
+    #[test]
+    fn lipschitz_positive_and_scales_with_weight() {
+        let (shards, p) = setup();
+        let l1 = estimate_block_lipschitz(&shards[0], &p, 1.0 / 64.0);
+        let l2 = estimate_block_lipschitz(&shards[0], &p, 2.0 / 64.0);
+        assert_eq!(l1.len(), shards[0].n_slots());
+        for (a, b) in l1.iter().zip(&l2) {
+            assert!(*a >= 0.0);
+            assert!((b - 2.0 * a).abs() < 1e-12);
+        }
+        assert!(l1.iter().any(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn zero_delay_large_rho_is_feasible() {
+        let (shards, p) = setup();
+        let refs: Vec<&_> = shards.iter().collect();
+        // T=0 kills the delay penalty; rho large beats 4L.
+        let r = check_theorem1(&refs, &p, 8, 10.0, 0.0, 0);
+        assert!(r.feasible, "{r:?}");
+        assert!(r.min_alpha > 0.0 && r.min_beta > 0.0);
+    }
+
+    #[test]
+    fn large_delay_needs_large_gamma() {
+        let (shards, p) = setup();
+        let refs: Vec<&_> = shards.iter().collect();
+        let r0 = check_theorem1(&refs, &p, 8, 10.0, 0.01, 0);
+        let r16 = check_theorem1(&refs, &p, 8, 10.0, 0.01, 16);
+        assert!(r16.min_alpha < r0.min_alpha);
+        assert!(!r16.feasible); // rho*T²/2 term dominates at T=16, gamma=0.01
+        assert!(r16.gamma_needed > 0.0);
+        // And the suggested gamma indeed repairs alpha:
+        let fixed = check_theorem1(&refs, &p, 8, 10.0, r16.gamma_needed + 1.0, 16);
+        assert!(fixed.min_alpha > 0.0);
+    }
+
+    #[test]
+    fn small_rho_fails_beta() {
+        let (shards, p) = setup();
+        let refs: Vec<&_> = shards.iter().collect();
+        // Absurdly small rho vs Lipschitz -> beta < 0 (L > rho/4).
+        let r = check_theorem1(&refs, &p, 8, 1e-6, 0.0, 0);
+        assert!(r.min_beta < 0.0);
+        assert!(r.rho_needed > 1e-6);
+    }
+
+    #[test]
+    fn suggest_gamma_grows_quadratically() {
+        assert_eq!(suggest_gamma(0.01, 1), 0.01);
+        assert!((suggest_gamma(0.01, 4) - 0.16).abs() < 1e-12);
+    }
+}

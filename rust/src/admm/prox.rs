@@ -1,0 +1,89 @@
+//! Proximal operators — native mirror of the L1 Pallas prox kernel
+//! (`python/compile/kernels/prox.py`), bit-compatible in f32 up to
+//! rounding.  The server update (paper Eq. 13) is
+//!
+//! ```text
+//! z_j <- prox_h^mu( (gamma*z~_j + sum_i w~_ij) / mu ),  mu = gamma + sum_i rho_i
+//! ```
+//!
+//! with h = λ‖·‖₁ + box(C), whose prox is soft-threshold then clip.
+
+#[inline]
+pub fn soft_threshold(v: f32, thr: f32) -> f32 {
+    v.signum() * (v.abs() - thr).max(0.0)
+}
+
+/// In-place Eq. 13: `z[k] = clip(soft((γ z̃[k] + w_sum[k]) / denom, λ/denom), ±C)`.
+pub fn prox_l1_box(
+    z_tilde: &[f32],
+    w_sum: &[f32],
+    gamma: f32,
+    denom: f32,
+    lambda: f32,
+    clip: f32,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(z_tilde.len(), w_sum.len());
+    debug_assert_eq!(z_tilde.len(), out.len());
+    debug_assert!(denom > 0.0);
+    let thr = lambda / denom;
+    for ((o, &zt), &ws) in out.iter_mut().zip(z_tilde).zip(w_sum) {
+        let v = (gamma * zt + ws) / denom;
+        *o = soft_threshold(v, thr).clamp(-clip, clip);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn soft_threshold_cases() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(-0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(2.0, 0.0), 2.0);
+    }
+
+    #[test]
+    fn prox_analytic_case() {
+        // gamma=1, denom=2, lam=0.4 => thr=0.2
+        // v = (1*1.0 + 1.0)/2 = 1.0 -> soft 0.8
+        let mut out = [0.0f32; 1];
+        prox_l1_box(&[1.0], &[1.0], 1.0, 2.0, 0.4, 10.0, &mut out);
+        assert!((out[0] - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prox_clips_to_box() {
+        let mut out = [0.0f32; 2];
+        prox_l1_box(&[1e6, -1e6], &[0.0, 0.0], 1.0, 1.0, 0.0, 3.0, &mut out);
+        assert_eq!(out, [3.0, -3.0]);
+    }
+
+    #[test]
+    fn prox_zero_lambda_is_projection_of_average() {
+        // lam=0: out = clip((gamma z + w)/denom)
+        let mut out = [0.0f32; 1];
+        prox_l1_box(&[2.0], &[4.0], 0.5, 2.5, 0.0, 100.0, &mut out);
+        assert!((out[0] - 2.0).abs() < 1e-6); // (1 + 4)/2.5
+    }
+
+    #[test]
+    fn prox_nonexpansive() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(5);
+        for _ in 0..100 {
+            let u: Vec<f32> = (0..8).map(|_| rng.normal_f32(0.0, 5.0)).collect();
+            let v: Vec<f32> = (0..8).map(|_| rng.normal_f32(0.0, 5.0)).collect();
+            let zero = vec![0.0f32; 8];
+            let (mut pu, mut pv) = (vec![0.0f32; 8], vec![0.0f32; 8]);
+            prox_l1_box(&zero, &u, 0.0, 1.0, 0.3, 50.0, &mut pu);
+            prox_l1_box(&zero, &v, 0.0, 1.0, 0.3, 50.0, &mut pv);
+            let d_in: f32 = u.iter().zip(&v).map(|(a, b)| (a - b).powi(2)).sum();
+            let d_out: f32 = pu.iter().zip(&pv).map(|(a, b)| (a - b).powi(2)).sum();
+            assert!(d_out <= d_in + 1e-5);
+        }
+    }
+}

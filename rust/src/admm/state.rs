@@ -1,0 +1,55 @@
+//! Per-worker ADMM state: local primal/dual variables in packed
+//! coordinates (slot s ↔ global block `shard.active_blocks[s]`).
+
+use crate::data::WorkerShard;
+
+/// Worker i's local variables (paper notation in packed layout):
+/// `x[s*db..(s+1)*db]` is x_{i,j} and `y[..]` is y_{i,j} for
+/// j = active_blocks[s]; `z_local` caches the latest pulled z̃ blocks.
+#[derive(Clone, Debug)]
+pub struct WorkerState {
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub z_local: Vec<f32>,
+    /// Local epoch t (Algorithm 1 line 3).
+    pub epoch: usize,
+    /// Data loss observed at the last gradient evaluation (for logging).
+    pub last_loss: f32,
+}
+
+impl WorkerState {
+    /// Algorithm 1 lines 1-2: pull z⁰, x⁰ = z⁰, y⁰ = 0.
+    pub fn init_from_z(z_local: Vec<f32>) -> Self {
+        let x = z_local.clone();
+        let y = vec![0.0; z_local.len()];
+        WorkerState { x, y, z_local, epoch: 0, last_loss: f32::NAN }
+    }
+
+    pub fn packed_dim(&self) -> usize {
+        self.x.len()
+    }
+
+    /// Mutable views of one slot across the three packed vectors.
+    pub fn slot_mut(
+        &mut self,
+        shard: &WorkerShard,
+        slot: usize,
+    ) -> (&mut [f32], &mut [f32], &[f32]) {
+        let (lo, hi) = shard.slot_range(slot);
+        // Disjoint-field borrows: x, y mutable, z_local shared.
+        (&mut self.x[lo..hi], &mut self.y[lo..hi], &self.z_local[lo..hi])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_sets_x_to_z_and_y_to_zero() {
+        let s = WorkerState::init_from_z(vec![1.0, 2.0, 3.0]);
+        assert_eq!(s.x, vec![1.0, 2.0, 3.0]);
+        assert_eq!(s.y, vec![0.0; 3]);
+        assert_eq!(s.epoch, 0);
+    }
+}

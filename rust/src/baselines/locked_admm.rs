@@ -1,0 +1,177 @@
+//! Asynchronous **full-vector, globally-locked** ADMM — the prior-art
+//! design AsyBADMM replaces (paper §1: "all existing asynchronous
+//! distributed ADMM requires locking global consensus variables at the
+//! (single) server for each model update").
+//!
+//! Workers run asynchronously, but each iteration (a) computes the
+//! gradient of *all* its blocks at a locked-out snapshot and (b) applies
+//! the w/z updates for all its blocks while holding one global mutex —
+//! exactly the serialization bottleneck Fig. 1's multi-server layout
+//! removes.  Used by the E4 locking ablation bench.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::BaselineReport;
+use crate::admm::{objective_at_z, prox_l1_box, worker_update, NativeEngine};
+use crate::config::Config;
+use crate::coordinator::{ObjSample, Topology};
+use crate::data::{Dataset, WorkerShard};
+use crate::problem::Problem;
+
+/// Everything a prior-art single server holds, behind ONE lock.
+struct GlobalState {
+    z: Vec<f32>,
+    /// w̃_{i,j} per (block, worker-slot) + running sums.
+    w_tilde: Vec<Vec<Vec<f32>>>,
+    w_sum: Vec<Vec<f32>>,
+}
+
+pub fn run_locked_admm(
+    cfg: &Config,
+    ds: &Dataset,
+    shards: &[WorkerShard],
+) -> Result<BaselineReport> {
+    let problem = Problem::new(cfg.loss, cfg.lambda, cfg.clip);
+    let weight = 1.0 / ds.samples() as f32;
+    let topo = Topology::build(shards, cfg.n_blocks, cfg.n_servers);
+    let db = cfg.block_size;
+    let d = cfg.n_blocks * db;
+
+    let state = Mutex::new(GlobalState {
+        z: vec![0.0f32; d],
+        w_tilde: (0..cfg.n_blocks)
+            .map(|j| vec![vec![0.0f32; db]; topo.workers_of_block[j].len()])
+            .collect(),
+        w_sum: (0..cfg.n_blocks).map(|_| vec![0.0f32; db]).collect(),
+    });
+    /// Nanoseconds spent inside the global critical section (contention
+    /// metric reported by the locking ablation).
+    static LOCKED_NS: AtomicU64 = AtomicU64::new(0);
+    LOCKED_NS.store(0, Ordering::Relaxed);
+
+    let start = Instant::now();
+    std::thread::scope(|scope| {
+        for shard in shards {
+            let state = &state;
+            let topo = &topo;
+            scope.spawn(move || {
+                let local_w = 1.0 / shard.samples().max(1) as f32;
+                let mut eng = NativeEngine::new(shard, problem, local_w);
+                let dim = shard.packed_dim();
+                let mut z_local = vec![0.0f32; dim];
+                let mut x = vec![0.0f32; dim];
+                let mut y = vec![0.0f32; dim];
+                let mut g_full = vec![0.0f32; dim];
+                let (mut w_new, mut y_new, mut x_new) =
+                    (vec![0.0f32; db], vec![0.0f32; db], vec![0.0f32; db]);
+                let mut z_out = vec![0.0f32; db];
+                for _t in 0..cfg.epochs {
+                    // Snapshot z under the global lock (prior art: pull
+                    // requires the same latch as updates).
+                    {
+                        let t0 = Instant::now();
+                        let st = state.lock().unwrap();
+                        for (slot, &j) in shard.active_blocks.iter().enumerate() {
+                            z_local[slot * db..(slot + 1) * db]
+                                .copy_from_slice(&st.z[j * db..(j + 1) * db]);
+                        }
+                        LOCKED_NS.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    }
+                    // Full-vector gradient (all blocks, Hong'17 style).
+                    eng.grad_full(&z_local, &mut g_full);
+                    // Apply every block's update inside ONE critical
+                    // section over the whole model.
+                    let t0 = Instant::now();
+                    let mut st = state.lock().unwrap();
+                    for (slot, &j) in shard.active_blocks.iter().enumerate() {
+                        let (lo, hi) = (slot * db, (slot + 1) * db);
+                        worker_update(
+                            &g_full[lo..hi],
+                            &y[lo..hi],
+                            &z_local[lo..hi],
+                            cfg.rho,
+                            &mut w_new,
+                            &mut y_new,
+                            &mut x_new,
+                        );
+                        x[lo..hi].copy_from_slice(&x_new);
+                        y[lo..hi].copy_from_slice(&y_new);
+                        let wslot = topo.workers_of_block[j]
+                            .iter()
+                            .position(|&wk| wk == shard.worker_id)
+                            .expect("edge");
+                        let st = &mut *st;
+                        let (sums, tildes) = (&mut st.w_sum[j], &mut st.w_tilde[j]);
+                        for ((s, nv), ov) in
+                            sums.iter_mut().zip(&w_new).zip(tildes[wslot].iter())
+                        {
+                            *s += nv - ov;
+                        }
+                        tildes[wslot].copy_from_slice(&w_new);
+                        let denom = cfg.gamma + cfg.rho * topo.workers_of_block[j].len() as f32;
+                        prox_l1_box(
+                            &st.z[j * db..(j + 1) * db],
+                            &st.w_sum[j],
+                            cfg.gamma,
+                            denom,
+                            problem.lambda,
+                            problem.clip,
+                            &mut z_out,
+                        );
+                        st.z[j * db..(j + 1) * db].copy_from_slice(&z_out);
+                    }
+                    drop(st);
+                    LOCKED_NS.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                }
+            });
+        }
+    });
+
+    let elapsed_s = start.elapsed().as_secs_f64();
+    let z_final = state.into_inner().unwrap().z;
+    let final_objective = objective_at_z(shards, &problem, weight, &z_final);
+    let locked_s = LOCKED_NS.load(Ordering::Relaxed) as f64 / 1e9;
+    crate::info!(
+        "locked_admm",
+        "global-lock time {:.3}s of {:.3}s wall ({:.0}% serialized)",
+        locked_s,
+        elapsed_s,
+        100.0 * locked_s / elapsed_s.max(1e-9)
+    );
+    Ok(BaselineReport {
+        samples: vec![ObjSample {
+            time_s: elapsed_s,
+            epoch: cfg.epochs,
+            objective: final_objective.total(),
+            data_loss: final_objective.data_loss,
+            consensus_max: 0.0,
+        }],
+        final_objective,
+        z_final,
+        elapsed_s,
+        epochs: cfg.epochs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen_partitioned;
+
+    #[test]
+    fn locked_admm_converges_too() {
+        let mut cfg = Config::tiny_test();
+        cfg.epochs = 100;
+        let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+        let r = run_locked_admm(&cfg, &ds, &shards).unwrap();
+        assert!(
+            r.final_objective.total() < std::f64::consts::LN_2 * 0.9,
+            "{}",
+            r.final_objective.total()
+        );
+    }
+}

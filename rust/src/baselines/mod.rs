@@ -1,0 +1,32 @@
+//! Baselines (S6) the paper compares against or builds upon:
+//!
+//! * [`sync_admm`] — the synchronous block-wise distributed ADMM of §3.1
+//!   (epoch barrier, γ = 0 allowed): the correctness anchor.
+//! * [`locked_admm`] — asynchronous **full-vector** ADMM in the style of
+//!   all prior work the paper cites (Zhang-Kwok '14, Hong '17): workers
+//!   are asynchronous but every model update serializes through a single
+//!   global lock. This is the design AsyBADMM's lock-free block-wise
+//!   updates replace (paper §1), and the E4 ablation quantifies the gap.
+//! * [`hogwild_sgd`] — lock-free asynchronous proximal SGD (HOGWILD!-
+//!   style), the gradient-method alternative mentioned in §1.
+
+mod hogwild;
+mod locked_admm;
+mod sync_admm;
+
+pub use hogwild::run_hogwild_sgd;
+pub use locked_admm::run_locked_admm;
+pub use sync_admm::run_sync_admm;
+
+use crate::admm::Objective;
+use crate::coordinator::ObjSample;
+
+/// Common result shape for baseline runs.
+#[derive(Debug)]
+pub struct BaselineReport {
+    pub samples: Vec<ObjSample>,
+    pub final_objective: Objective,
+    pub z_final: Vec<f32>,
+    pub elapsed_s: f64,
+    pub epochs: usize,
+}

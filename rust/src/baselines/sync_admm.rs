@@ -1,0 +1,166 @@
+//! Synchronous block-wise distributed ADMM (paper §3.1).
+//!
+//! Reference semantics for the asynchronous algorithm: every epoch, each
+//! worker updates **all** its blocks from the same z^t snapshot (Eqs.
+//! 6-7), then every block performs the Eq. 8 aggregation — a full
+//! barrier.  With zero delay Theorem 1 admits γ = 0.  Single-threaded by
+//! construction (a barrier serializes the math anyway); the async runtime
+//! must reach the same objective neighborhood, which the integration
+//! tests assert.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::BaselineReport;
+use crate::admm::{objective_at_z, prox_l1_box, worker_update, NativeEngine};
+use crate::config::Config;
+use crate::coordinator::{ObjSample, Topology};
+use crate::data::{Dataset, WorkerShard};
+use crate::problem::Problem;
+
+pub fn run_sync_admm(cfg: &Config, ds: &Dataset, shards: &[WorkerShard]) -> Result<BaselineReport> {
+    let problem = Problem::new(cfg.loss, cfg.lambda, cfg.clip);
+    let weight = 1.0 / ds.samples() as f32;
+    let topo = Topology::build(shards, cfg.n_blocks, cfg.n_servers);
+    let db = cfg.block_size;
+    let d = cfg.n_blocks * db;
+
+    let mut z = vec![0.0f32; d];
+    // Per worker: packed x, y, z_local, engine.
+    let mut engines: Vec<NativeEngine> = shards
+        .iter()
+        .map(|s| NativeEngine::new(s, problem, 1.0 / s.samples().max(1) as f32))
+        .collect();
+    let mut xs: Vec<Vec<f32>> = shards.iter().map(|s| vec![0.0; s.packed_dim()]).collect();
+    let mut ys: Vec<Vec<f32>> = shards.iter().map(|s| vec![0.0; s.packed_dim()]).collect();
+    // w_{i,j} laid out per (block, worker slot in 𝒩(j)).
+    let mut w: Vec<Vec<Vec<f32>>> = (0..cfg.n_blocks)
+        .map(|j| vec![vec![0.0f32; db]; topo.workers_of_block[j].len()])
+        .collect();
+
+    let mut g = vec![0.0f32; db];
+    let mut z_new = vec![0.0f32; db];
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    let log_every = cfg.log_every.max(1);
+
+    for t in 0..cfg.epochs {
+        if t % log_every == 0 {
+            let obj = objective_at_z(shards, &problem, weight, &z);
+            samples.push(ObjSample {
+                time_s: start.elapsed().as_secs_f64(),
+                epoch: t,
+                objective: obj.total(),
+                data_loss: obj.data_loss,
+                consensus_max: 0.0,
+            });
+        }
+        // -- worker phase: all blocks from the same z^t ---------------------
+        for (i, shard) in shards.iter().enumerate() {
+            // gather packed z̃ = z^t
+            let mut z_local = vec![0.0f32; shard.packed_dim()];
+            for (slot, &j) in shard.active_blocks.iter().enumerate() {
+                z_local[slot * db..(slot + 1) * db].copy_from_slice(&z[j * db..(j + 1) * db]);
+            }
+            for (slot, &j) in shard.active_blocks.iter().enumerate() {
+                let (lo, hi) = (slot * db, (slot + 1) * db);
+                engines[i].grad_block(&z_local, slot, &mut g);
+                let wslot =
+                    topo.workers_of_block[j].iter().position(|&wk| wk == i).expect("edge");
+                // split-borrow x/y slices
+                let (x_s, y_s) = (&mut xs[i][lo..hi], &mut ys[i][lo..hi]);
+                let mut y_new = vec![0.0f32; db];
+                let mut x_new = vec![0.0f32; db];
+                worker_update(&g, y_s, &z_local[lo..hi], cfg.rho, &mut w[j][wslot], &mut y_new, &mut x_new);
+                x_s.copy_from_slice(&x_new);
+                y_s.copy_from_slice(&y_new);
+            }
+        }
+        // -- server phase: Eq. 8 per block (barrier) ------------------------
+        for j in 0..cfg.n_blocks {
+            let degree = topo.workers_of_block[j].len();
+            if degree == 0 {
+                continue;
+            }
+            let mut w_sum = vec![0.0f32; db];
+            for wi in &w[j] {
+                for (acc, v) in w_sum.iter_mut().zip(wi) {
+                    *acc += v;
+                }
+            }
+            let denom = cfg.gamma + cfg.rho * degree as f32;
+            prox_l1_box(
+                &z[j * db..(j + 1) * db],
+                &w_sum,
+                cfg.gamma,
+                denom,
+                problem.lambda,
+                problem.clip,
+                &mut z_new,
+            );
+            z[j * db..(j + 1) * db].copy_from_slice(&z_new);
+        }
+    }
+
+    let final_objective = objective_at_z(shards, &problem, weight, &z);
+    samples.push(ObjSample {
+        time_s: start.elapsed().as_secs_f64(),
+        epoch: cfg.epochs,
+        objective: final_objective.total(),
+        data_loss: final_objective.data_loss,
+        consensus_max: 0.0,
+    });
+    Ok(BaselineReport {
+        samples,
+        final_objective,
+        z_final: z,
+        elapsed_s: start.elapsed().as_secs_f64(),
+        epochs: cfg.epochs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen_partitioned;
+
+    #[test]
+    fn sync_admm_converges_on_tiny_problem() {
+        let mut cfg = Config::tiny_test();
+        cfg.epochs = 80;
+        cfg.gamma = 0.0; // sync case allows gamma = 0 (paper §4)
+        let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+        let r = run_sync_admm(&cfg, &ds, &shards).unwrap();
+        let first = r.samples.first().unwrap().objective;
+        let last = r.final_objective.total();
+        assert!(last < first * 0.8, "{first} -> {last}");
+        // log(2) start for logistic at z=0
+        assert!((first - std::f64::consts::LN_2).abs() < 0.02);
+    }
+
+    #[test]
+    fn iterates_stay_in_box() {
+        let mut cfg = Config::tiny_test();
+        cfg.epochs = 30;
+        cfg.clip = 0.05; // tight box to make clipping bite
+        let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+        let r = run_sync_admm(&cfg, &ds, &shards).unwrap();
+        assert!(r.z_final.iter().all(|v| v.abs() <= 0.05 + 1e-6));
+    }
+
+    #[test]
+    fn l1_induces_sparsity() {
+        let mut cfg = Config::tiny_test();
+        cfg.epochs = 60;
+        cfg.lambda = 5e-3; // strong l1
+        let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+        let r = run_sync_admm(&cfg, &ds, &shards).unwrap();
+        let nnz = r.z_final.iter().filter(|v| v.abs() > 1e-9).count();
+        let mut weak = cfg.clone();
+        weak.lambda = 0.0;
+        let r2 = run_sync_admm(&weak, &ds, &shards).unwrap();
+        let nnz2 = r2.z_final.iter().filter(|v| v.abs() > 1e-9).count();
+        assert!(nnz < nnz2, "l1 should sparsify: {nnz} vs {nnz2}");
+    }
+}

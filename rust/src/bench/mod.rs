@@ -1,0 +1,194 @@
+//! Criterion-style micro-bench harness (no `criterion` offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive this module:
+//! warmup, adaptive iteration count, robust stats (mean ± std, p50/p95),
+//! and aligned terminal output.  Results can also be dumped as CSV for
+//! EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+use crate::util::{mean_std, percentile};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Seconds per iteration samples.
+    pub samples: Vec<f64>,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchResult {
+    pub fn throughput_line(&self, unit: &str, per_iter: f64) -> String {
+        format!(
+            "{:<40} {:>12}/s",
+            self.name,
+            human(per_iter / self.mean_s, unit)
+        )
+    }
+}
+
+fn human(v: f64, unit: &str) -> String {
+    if v >= 1e9 {
+        format!("{:.2}G{unit}", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2}M{unit}", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.2}k{unit}", v / 1e3)
+    } else {
+        format!("{v:.2}{unit}")
+    }
+}
+
+fn fmt_t(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+pub struct Harness {
+    /// Target measurement time per benchmark.
+    pub measure_s: f64,
+    pub warmup_s: f64,
+    pub min_samples: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Harness {
+    fn default() -> Self {
+        // Modest defaults: the full suite has many benches and one core.
+        Harness { measure_s: 2.0, warmup_s: 0.3, min_samples: 5, results: Vec::new() }
+    }
+}
+
+impl Harness {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick harness for smoke runs (CI / tests).
+    pub fn quick() -> Self {
+        Harness { measure_s: 0.2, warmup_s: 0.05, min_samples: 3, results: Vec::new() }
+    }
+
+    /// Benchmark `f`, which performs ONE logical iteration per call.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
+        // Warmup + cost estimate.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed().as_secs_f64() < self.warmup_s || warm_iters < 1 {
+            f();
+            warm_iters += 1;
+        }
+        let est = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+
+        // Sample loop: batch iterations so timer overhead stays <1%.
+        let batch = ((1e-4 / est.max(1e-9)).ceil() as u64).max(1);
+        let n_samples = ((self.measure_s / (est * batch as f64).max(1e-9)) as usize)
+            .clamp(self.min_samples, 200);
+        let mut samples = Vec::with_capacity(n_samples);
+        for _ in 0..n_samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t0.elapsed().as_secs_f64() / batch as f64);
+        }
+        let (mean_s, std_s) = mean_std(&samples);
+        let result = BenchResult {
+            name: name.to_string(),
+            p50_s: percentile(&samples, 50.0),
+            p95_s: percentile(&samples, 95.0),
+            samples,
+            mean_s,
+            std_s,
+        };
+        println!(
+            "{:<44} {:>10} ± {:>9}   p50 {:>10}  p95 {:>10}  ({} samples)",
+            result.name,
+            fmt_t(result.mean_s),
+            fmt_t(result.std_s),
+            fmt_t(result.p50_s),
+            fmt_t(result.p95_s),
+            result.samples.len(),
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Time a single one-shot run (for end-to-end benches where one
+    /// "iteration" is a whole training run).
+    pub fn once(&mut self, name: &str, f: impl FnOnce()) -> Duration {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed();
+        println!("{:<44} {:>10}   (single run)", name, fmt_t(dt.as_secs_f64()));
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            samples: vec![dt.as_secs_f64()],
+            mean_s: dt.as_secs_f64(),
+            std_s: 0.0,
+            p50_s: dt.as_secs_f64(),
+            p95_s: dt.as_secs_f64(),
+        });
+        dt
+    }
+
+    pub fn csv(&self) -> String {
+        let mut s = String::from("name,mean_s,std_s,p50_s,p95_s,samples\n");
+        for r in &self.results {
+            s.push_str(&format!(
+                "{},{:.9},{:.9},{:.9},{:.9},{}\n",
+                r.name,
+                r.mean_s,
+                r.std_s,
+                r.p50_s,
+                r.p95_s,
+                r.samples.len()
+            ));
+        }
+        s
+    }
+}
+
+/// Whether benches should run in quick mode (smoke): set BENCH_QUICK=1.
+pub fn harness_from_env() -> Harness {
+    if std::env::var("BENCH_QUICK").as_deref() == Ok("1") {
+        Harness::quick()
+    } else {
+        Harness::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut h = Harness::quick();
+        let r = h.bench("noop-ish", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.mean_s > 0.0 && r.mean_s < 1e-3);
+        assert!(r.samples.len() >= 3);
+        assert!(r.p95_s >= r.p50_s * 0.5);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut h = Harness::quick();
+        h.bench("a", || std::hint::black_box(()));
+        let csv = h.csv();
+        assert!(csv.starts_with("name,mean_s"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+}

@@ -1,0 +1,401 @@
+//! Experiment/runtime configuration: one struct, three sources layered in
+//! order — defaults, config file (TOML-subset `key = value` lines, with
+//! `[section]` headers allowed and flattened), CLI `--set key=value`
+//! overrides.  Every run logs its full resolved config so experiments in
+//! EXPERIMENTS.md are reproducible from the header alone.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::data::LossKind;
+
+/// Which compute backend executes the worker/server numeric steps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT XLA artifacts via PJRT — the production three-layer path.
+    Xla,
+    /// Pure-rust CSR math — ablation baseline + DES numeric engine.
+    Native,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "xla" => Ok(Backend::Xla),
+            "native" => Ok(Backend::Native),
+            other => anyhow::bail!("unknown backend {other:?} (xla|native)"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Backend::Xla => "xla",
+            Backend::Native => "native",
+        }
+    }
+}
+
+/// Block selection rule on workers (paper uses uniform random; cyclic is
+/// the variant mentioned for the experiments).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockSelection {
+    UniformRandom,
+    Cyclic,
+}
+
+impl BlockSelection {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "uniform" => Ok(BlockSelection::UniformRandom),
+            "cyclic" => Ok(BlockSelection::Cyclic),
+            other => anyhow::bail!("unknown block selection {other:?} (uniform|cyclic)"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BlockSelection::UniformRandom => "uniform",
+            BlockSelection::Cyclic => "cyclic",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Config {
+    // -- problem ---------------------------------------------------------
+    pub loss: LossKind,
+    /// l1 coefficient λ (paper Eq. 22).
+    pub lambda: f32,
+    /// Box clip C (paper: 1e4).
+    pub clip: f32,
+
+    // -- data ------------------------------------------------------------
+    pub samples: usize,
+    pub n_blocks: usize,
+    pub block_size: usize,
+    pub nnz_per_row: usize,
+    pub blocks_per_worker: usize,
+    pub shared_blocks: usize,
+    pub zipf_s: f64,
+    pub noise: f64,
+    /// Optional libsvm file; replaces the synthetic generator.
+    pub data_path: Option<PathBuf>,
+
+    // -- topology ----------------------------------------------------------
+    pub n_workers: usize,
+    pub n_servers: usize,
+
+    // -- algorithm ---------------------------------------------------------
+    /// Penalty ρ_i (paper experiment: 100, uniform across workers).
+    pub rho: f32,
+    /// Server regularization γ (paper experiment: 0.01).
+    pub gamma: f32,
+    /// Local epochs per worker (T in Algorithm 1).
+    pub epochs: usize,
+    pub selection: BlockSelection,
+    /// Bounded-delay cap T_ij (Assumption 3); staleness beyond this is a
+    /// hard error when `enforce_delay_bound`.
+    pub max_delay: usize,
+    pub enforce_delay_bound: bool,
+
+    // -- execution ---------------------------------------------------------
+    pub backend: Backend,
+    pub artifacts_dir: PathBuf,
+    /// Rows per AOT chunk; must match an artifact shape set.
+    pub m_chunk: usize,
+    /// Padded packed width; must match an artifact shape set.
+    pub d_pad: usize,
+    /// Injected network delay (virtual/real ms) mean; 0 disables.
+    pub net_delay_mean_ms: f64,
+    /// Workers refresh their cached z̃ only every `pull_hold` iterations
+    /// (1 = every iteration); >1 injects deterministic staleness (E5).
+    pub pull_hold: usize,
+    pub seed: u64,
+    /// Log the objective every `log_every` epochs (0 = only at end).
+    pub log_every: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            loss: LossKind::Logistic,
+            lambda: 1e-5,
+            clip: 1e4,
+            samples: 8192,
+            n_blocks: 32,
+            block_size: 512,
+            nnz_per_row: 40,
+            blocks_per_worker: 8,
+            shared_blocks: 2,
+            zipf_s: 1.1,
+            noise: 0.05,
+            data_path: None,
+            n_workers: 4,
+            n_servers: 2,
+            // Paper uses rho=100 with *unweighted* per-sample losses; this
+            // repo weights by 1/m (Eq. 22's mean), which rescales the
+            // block Lipschitz constants by 1/m, so the equivalent
+            // penalty is O(1).  rho=4 satisfies rho > 4·L_ij for the
+            // default synthetic workload (see admm::penalty).
+            rho: 4.0,
+            gamma: 0.01,
+            epochs: 100,
+            selection: BlockSelection::UniformRandom,
+            max_delay: 16,
+            enforce_delay_bound: false,
+            backend: Backend::Native,
+            artifacts_dir: PathBuf::from("artifacts"),
+            m_chunk: 2048,
+            d_pad: 4096,
+            net_delay_mean_ms: 0.0,
+            pull_hold: 1,
+            seed: 42,
+            log_every: 5,
+        }
+    }
+}
+
+impl Config {
+    /// A tiny config used across unit/integration tests: matches the
+    /// "tiny" artifact shape set (m_chunk=32, d_pad=64, db=16).
+    pub fn tiny_test() -> Self {
+        Config {
+            samples: 96,
+            n_blocks: 8,
+            block_size: 16,
+            nnz_per_row: 6,
+            blocks_per_worker: 4,
+            shared_blocks: 1,
+            n_workers: 3,
+            n_servers: 2,
+            epochs: 30,
+            m_chunk: 32,
+            d_pad: 64,
+            rho: 2.0,
+            lambda: 1e-4,
+            log_every: 1,
+            ..Default::default()
+        }
+    }
+
+    /// The "small" artifact shape set (m_chunk=256, d_pad=512, db=64).
+    pub fn small() -> Self {
+        Config {
+            samples: 2048,
+            n_blocks: 16,
+            block_size: 64,
+            nnz_per_row: 16,
+            blocks_per_worker: 8,
+            shared_blocks: 2,
+            n_workers: 4,
+            n_servers: 2,
+            epochs: 100,
+            m_chunk: 256,
+            d_pad: 512,
+            ..Default::default()
+        }
+    }
+
+    pub fn apply_kv(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
+        let v = value.trim().trim_matches('"');
+        match key.trim() {
+            "loss" => self.loss = LossKind::parse(v)?,
+            "lambda" => self.lambda = v.parse()?,
+            "clip" => self.clip = v.parse()?,
+            "samples" => self.samples = v.parse()?,
+            "n_blocks" => self.n_blocks = v.parse()?,
+            "block_size" => self.block_size = v.parse()?,
+            "nnz_per_row" => self.nnz_per_row = v.parse()?,
+            "blocks_per_worker" => self.blocks_per_worker = v.parse()?,
+            "shared_blocks" => self.shared_blocks = v.parse()?,
+            "zipf_s" => self.zipf_s = v.parse()?,
+            "noise" => self.noise = v.parse()?,
+            "data_path" => self.data_path = Some(PathBuf::from(v)),
+            "n_workers" => self.n_workers = v.parse()?,
+            "n_servers" => self.n_servers = v.parse()?,
+            "rho" => self.rho = v.parse()?,
+            "gamma" => self.gamma = v.parse()?,
+            "epochs" => self.epochs = v.parse()?,
+            "selection" => self.selection = BlockSelection::parse(v)?,
+            "max_delay" => self.max_delay = v.parse()?,
+            "enforce_delay_bound" => self.enforce_delay_bound = v.parse()?,
+            "backend" => self.backend = Backend::parse(v)?,
+            "artifacts_dir" => self.artifacts_dir = PathBuf::from(v),
+            "m_chunk" => self.m_chunk = v.parse()?,
+            "d_pad" => self.d_pad = v.parse()?,
+            "net_delay_mean_ms" => self.net_delay_mean_ms = v.parse()?,
+            "pull_hold" => self.pull_hold = v.parse()?,
+            "seed" => self.seed = v.parse()?,
+            "log_every" => self.log_every = v.parse()?,
+            other => anyhow::bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+
+    /// Parse a TOML-subset config file: `key = value` lines; `[section]`
+    /// headers and `#` comments ignored (sections are flat namespace).
+    pub fn apply_file(&mut self, path: &Path) -> anyhow::Result<()> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() || (line.starts_with('[') && line.ends_with(']')) {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("{path:?}:{}: expected key = value", lineno + 1))?;
+            self.apply_kv(k, v)
+                .with_context(|| format!("{path:?}:{}", lineno + 1))?;
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n_workers > 0, "n_workers must be > 0");
+        anyhow::ensure!(self.n_servers > 0, "n_servers must be > 0");
+        anyhow::ensure!(
+            self.n_servers <= self.n_blocks,
+            "n_servers ({}) cannot exceed n_blocks ({})",
+            self.n_servers,
+            self.n_blocks
+        );
+        anyhow::ensure!(self.rho > 0.0, "rho must be positive");
+        anyhow::ensure!(self.gamma >= 0.0, "gamma must be non-negative");
+        anyhow::ensure!(self.lambda >= 0.0, "lambda must be non-negative");
+        anyhow::ensure!(self.clip > 0.0, "clip must be positive");
+        anyhow::ensure!(
+            self.blocks_per_worker >= self.shared_blocks,
+            "blocks_per_worker < shared_blocks"
+        );
+        anyhow::ensure!(
+            self.blocks_per_worker <= self.n_blocks,
+            "blocks_per_worker > n_blocks"
+        );
+        anyhow::ensure!(self.d_pad % self.block_size == 0, "d_pad % block_size != 0");
+        // The fixed-shape XLA artifacts bound the packed worker width;
+        // the native/DES paths handle any width.
+        if self.backend == Backend::Xla {
+            anyhow::ensure!(
+                self.blocks_per_worker * self.block_size <= self.d_pad,
+                "worker footprint ({} blocks x {}) exceeds artifact d_pad {}; \
+                 regenerate artifacts or lower blocks_per_worker",
+                self.blocks_per_worker,
+                self.block_size,
+                self.d_pad
+            );
+        }
+        Ok(())
+    }
+
+    /// One-line summary for report headers.
+    pub fn summary(&self) -> String {
+        format!(
+            "loss={} m={} M={} db={} p={} servers={} rho={} gamma={} lambda={} T={} sel={} backend={} seed={}",
+            self.loss.as_str(),
+            self.samples,
+            self.n_blocks,
+            self.block_size,
+            self.n_workers,
+            self.n_servers,
+            self.rho,
+            self.gamma,
+            self.lambda,
+            self.epochs,
+            self.selection.as_str(),
+            self.backend.as_str(),
+            self.seed
+        )
+    }
+
+    pub fn geometry(&self) -> crate::data::BlockGeometry {
+        crate::data::BlockGeometry::new(self.n_blocks, self.block_size)
+    }
+
+    pub fn synth_spec(&self) -> crate::data::SynthSpec {
+        crate::data::SynthSpec {
+            kind: self.loss,
+            samples: self.samples,
+            geometry: self.geometry(),
+            nnz_per_row: self.nnz_per_row,
+            blocks_per_worker: self.blocks_per_worker,
+            shared_blocks: self.shared_blocks,
+            zipf_s: self.zipf_s,
+            truth_density: 0.05,
+            noise: self.noise,
+            seed: self.seed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        Config::default().validate().unwrap();
+        Config::tiny_test().validate().unwrap();
+        Config::small().validate().unwrap();
+    }
+
+    #[test]
+    fn kv_overrides() {
+        let mut c = Config::default();
+        c.apply_kv("n_workers", "16").unwrap();
+        c.apply_kv("gamma", "0.5").unwrap();
+        c.apply_kv("backend", "xla").unwrap();
+        c.apply_kv("selection", "cyclic").unwrap();
+        assert_eq!(c.n_workers, 16);
+        assert_eq!(c.gamma, 0.5);
+        assert_eq!(c.backend, Backend::Xla);
+        assert_eq!(c.selection, BlockSelection::Cyclic);
+        assert!(c.apply_kv("nope", "1").is_err());
+        assert!(c.apply_kv("n_workers", "abc").is_err());
+    }
+
+    #[test]
+    fn file_parsing() {
+        let dir = std::env::temp_dir().join("asybadmm_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("exp.toml");
+        std::fs::write(
+            &p,
+            "# experiment\n[algorithm]\nrho = 25.0\ngamma = 0.1 # inline\n\n[data]\nsamples = 100\n",
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply_file(&p).unwrap();
+        assert_eq!(c.rho, 25.0);
+        assert_eq!(c.gamma, 0.1);
+        assert_eq!(c.samples, 100);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = Config::default();
+        c.n_servers = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = Config::default();
+        c.n_servers = c.n_blocks + 1;
+        assert!(c.validate().is_err());
+
+        let mut c = Config::default();
+        c.blocks_per_worker = c.n_blocks + 1;
+        assert!(c.validate().is_err());
+
+        let mut c = Config::default();
+        c.blocks_per_worker = 9; // 9 * 512 > 4096: only the XLA backend cares
+        assert!(c.validate().is_ok());
+        c.backend = Backend::Xla;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn summary_mentions_key_params() {
+        let s = Config::default().summary();
+        assert!(s.contains("rho=4"));
+        assert!(s.contains("backend=native"));
+    }
+}

@@ -1,0 +1,88 @@
+//! Delay injection (E5: γ-vs-delay ablation; Assumption-3 stress).
+//!
+//! Two mechanisms, composable:
+//! * **network latency** — each push sleeps a random duration before the
+//!   server sees it (exponential with a configured mean, truncated at
+//!   4× mean so Assumption 3's *bounded* delay holds);
+//! * **stale pulls** — a worker refreshes its cached z̃ blocks only every
+//!   `hold` iterations, giving a deterministic iteration-count staleness
+//!   (the knob the γ-ablation sweeps).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DelayPolicy {
+    /// Mean injected network delay in milliseconds (0 = none).
+    pub net_mean_ms: f64,
+    /// Refresh local z̃ every `hold` iterations (1 = every iteration).
+    pub pull_hold: usize,
+}
+
+impl Default for DelayPolicy {
+    fn default() -> Self {
+        DelayPolicy { net_mean_ms: 0.0, pull_hold: 1 }
+    }
+}
+
+impl DelayPolicy {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Sample one network delay (milliseconds, bounded by 4× mean).
+    pub fn sample_net_ms(&self, rng: &mut Rng) -> f64 {
+        if self.net_mean_ms <= 0.0 {
+            return 0.0;
+        }
+        rng.exponential(1.0 / self.net_mean_ms).min(4.0 * self.net_mean_ms)
+    }
+
+    /// Should the worker refresh its z̃ cache at local epoch `t`?
+    pub fn should_pull(&self, t: usize) -> bool {
+        self.pull_hold <= 1 || t % self.pull_hold == 0
+    }
+
+    pub fn sleep_net(&self, rng: &mut Rng) {
+        let ms = self.sample_net_ms(rng);
+        if ms > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(ms / 1e3));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_mean_is_no_delay() {
+        let mut rng = Rng::new(1);
+        let p = DelayPolicy::none();
+        for _ in 0..10 {
+            assert_eq!(p.sample_net_ms(&mut rng), 0.0);
+        }
+    }
+
+    #[test]
+    fn delays_bounded_by_4x_mean() {
+        let mut rng = Rng::new(2);
+        let p = DelayPolicy { net_mean_ms: 5.0, pull_hold: 1 };
+        let mut total = 0.0;
+        for _ in 0..5000 {
+            let d = p.sample_net_ms(&mut rng);
+            assert!((0.0..=20.0).contains(&d));
+            total += d;
+        }
+        let mean = total / 5000.0;
+        assert!((mean - 5.0).abs() < 0.8, "mean {mean}"); // truncation pulls it slightly below 5
+    }
+
+    #[test]
+    fn pull_hold_schedule() {
+        let p = DelayPolicy { net_mean_ms: 0.0, pull_hold: 4 };
+        let pulls: Vec<bool> = (0..8).map(|t| p.should_pull(t)).collect();
+        assert_eq!(pulls, vec![true, false, false, false, true, false, false, false]);
+        let every = DelayPolicy::none();
+        assert!((0..5).all(|t| every.should_pull(t)));
+    }
+}

@@ -1,0 +1,48 @@
+//! Training telemetry records (the rows Fig. 2 is drawn from).
+
+/// One objective sample taken by the monitor thread.
+#[derive(Clone, Debug)]
+pub struct ObjSample {
+    /// Wall-clock (or virtual, in the simulator) seconds since start.
+    pub time_s: f64,
+    /// Minimum local epoch across workers when the sample was taken
+    /// ("iterations k" on the paper's x-axis).
+    pub epoch: usize,
+    /// F(z) = Σ_i f_i(z) + h(z).
+    pub objective: f64,
+    pub data_loss: f64,
+    /// max_{(i,j)} ‖x_ij − z_j‖ (0 if x not sampled at this point).
+    pub consensus_max: f64,
+}
+
+impl ObjSample {
+    pub fn csv_header() -> &'static str {
+        "time_s,epoch,objective,data_loss,consensus_max"
+    }
+
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{:.6},{},{:.8},{:.8},{:.3e}",
+            self.time_s, self.epoch, self.objective, self.data_loss, self.consensus_max
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_fields() {
+        let s = ObjSample {
+            time_s: 1.5,
+            epoch: 20,
+            objective: 0.69,
+            data_loss: 0.68,
+            consensus_max: 1e-3,
+        };
+        let line = s.to_csv();
+        assert_eq!(line.split(',').count(), ObjSample::csv_header().split(',').count());
+        assert!(line.starts_with("1.500000,20,"));
+    }
+}

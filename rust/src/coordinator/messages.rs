@@ -1,0 +1,22 @@
+//! Worker → server push protocol (Algorithm 1 line 7 / server line 2).
+
+/// w_{i,j} push (Eq. 9).  `worker_epoch` and `z_version_used` implement
+//  the staleness accounting for Assumption 3.
+#[derive(Clone, Debug)]
+pub struct PushMsg {
+    pub worker: usize,
+    pub block: usize,
+    pub w: Vec<f32>,
+    /// Worker's local epoch t when this w was produced.
+    pub worker_epoch: usize,
+    /// BlockStore version of z̃_j the worker used to compute this w.
+    pub z_version_used: u64,
+    /// Wall-clock send time (for queueing-delay stats).
+    pub sent_at: std::time::Instant,
+}
+
+pub enum ServerMsg {
+    Push(PushMsg),
+    /// Drain and exit (sent by the driver once all workers joined).
+    Shutdown,
+}

@@ -1,0 +1,31 @@
+//! L3 coordinator (S5) — the paper's system contribution.
+//!
+//! A Parameter-Server runtime in the shape of Fig. 1 of the paper:
+//! multiple *server shards*, each owning a subset of the consensus
+//! blocks z_j; multiple *workers*, each owning a data shard and running
+//! Algorithm 1 asynchronously; and a shared [`BlockStore`] whose locking
+//! granularity is a single block — the paper's "lock-free" property: no
+//! operation ever locks more than one z_j, so updates to different
+//! blocks proceed fully in parallel (contrast `baselines::locked_admm`,
+//! which serializes through one global model lock as all prior
+//! asynchronous ADMMs required).
+
+mod block_store;
+mod compute;
+mod delay;
+mod driver;
+mod events;
+mod messages;
+mod server;
+mod topology;
+mod worker;
+
+pub use block_store::BlockStore;
+pub use compute::{make_compute, NativeCompute, WorkerCompute, XlaCompute};
+pub use delay::DelayPolicy;
+pub use driver::{run_async, TrainReport};
+pub use events::ObjSample;
+pub use messages::{PushMsg, ServerMsg};
+pub use server::{ProxBackend, ServerShard, ServerStats};
+pub use topology::Topology;
+pub use worker::{WorkerCtx, WorkerStats};

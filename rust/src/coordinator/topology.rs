@@ -1,0 +1,133 @@
+//! The bipartite sparsity graph ℰ (paper §2.2) and the block→server
+//! placement.
+//!
+//! 𝒩(i) = blocks worker i touches (from its shard's active set);
+//! 𝒩(j) = workers touching block j.  Blocks are placed on server shards
+//! round-robin, which balances both block count and — because the
+//! synthetic workload's hot shared blocks have low indices — spreads the
+//! hot blocks across shards like a production PS hash placement would.
+
+use crate::data::WorkerShard;
+
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub n_workers: usize,
+    pub n_servers: usize,
+    pub n_blocks: usize,
+    pub block_size: usize,
+    /// server shard owning each block.
+    pub server_of_block: Vec<usize>,
+    /// blocks owned by each server shard.
+    pub blocks_of_server: Vec<Vec<usize>>,
+    /// 𝒩(j): workers touching each block.
+    pub workers_of_block: Vec<Vec<usize>>,
+    /// 𝒩(i): blocks touched by each worker (== shard.active_blocks).
+    pub blocks_of_worker: Vec<Vec<usize>>,
+}
+
+impl Topology {
+    pub fn build(shards: &[WorkerShard], n_blocks: usize, n_servers: usize) -> Self {
+        assert!(!shards.is_empty());
+        let block_size = shards[0].block_size;
+        let n_workers = shards.len();
+
+        let server_of_block: Vec<usize> = (0..n_blocks).map(|j| j % n_servers).collect();
+        let mut blocks_of_server = vec![Vec::new(); n_servers];
+        for (j, &s) in server_of_block.iter().enumerate() {
+            blocks_of_server[s].push(j);
+        }
+
+        let mut workers_of_block = vec![Vec::new(); n_blocks];
+        let mut blocks_of_worker = Vec::with_capacity(n_workers);
+        for shard in shards {
+            debug_assert_eq!(shard.worker_id, blocks_of_worker.len());
+            for &j in &shard.active_blocks {
+                workers_of_block[j].push(shard.worker_id);
+            }
+            blocks_of_worker.push(shard.active_blocks.clone());
+        }
+
+        Topology {
+            n_workers,
+            n_servers,
+            n_blocks,
+            block_size,
+            server_of_block,
+            blocks_of_server,
+            workers_of_block,
+            blocks_of_worker,
+        }
+    }
+
+    /// |𝒩(j)| — the Eq. 13 denominator is γ + ρ·|𝒩(j)| for uniform ρ.
+    pub fn degree_of_block(&self, j: usize) -> usize {
+        self.workers_of_block[j].len()
+    }
+
+    /// Blocks nobody touches (padding blocks; stay at prox fixed point).
+    pub fn orphan_blocks(&self) -> Vec<usize> {
+        (0..self.n_blocks).filter(|&j| self.workers_of_block[j].is_empty()).collect()
+    }
+
+    /// Edge count |ℰ|.
+    pub fn n_edges(&self) -> usize {
+        self.blocks_of_worker.iter().map(Vec::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_partitioned, BlockGeometry, SynthSpec};
+
+    fn shards() -> Vec<WorkerShard> {
+        let spec = SynthSpec {
+            samples: 64,
+            geometry: BlockGeometry::new(8, 8),
+            nnz_per_row: 4,
+            blocks_per_worker: 3,
+            shared_blocks: 1,
+            ..Default::default()
+        };
+        gen_partitioned(&spec, 4).1
+    }
+
+    #[test]
+    fn round_robin_placement_partitions_blocks() {
+        let t = Topology::build(&shards(), 8, 3);
+        let mut all: Vec<usize> = t.blocks_of_server.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..8).collect::<Vec<_>>());
+        assert_eq!(t.server_of_block[5], 5 % 3);
+        for (s, blocks) in t.blocks_of_server.iter().enumerate() {
+            for &j in blocks {
+                assert_eq!(t.server_of_block[j], s);
+            }
+        }
+    }
+
+    #[test]
+    fn adjacency_is_consistent() {
+        let t = Topology::build(&shards(), 8, 2);
+        for (i, blocks) in t.blocks_of_worker.iter().enumerate() {
+            for &j in blocks {
+                assert!(t.workers_of_block[j].contains(&i), "edge ({i},{j}) asymmetric");
+            }
+        }
+        for (j, workers) in t.workers_of_block.iter().enumerate() {
+            for &i in workers {
+                assert!(t.blocks_of_worker[i].contains(&j));
+            }
+        }
+        assert_eq!(
+            t.n_edges(),
+            t.workers_of_block.iter().map(Vec::len).sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn shared_block_has_full_degree() {
+        let t = Topology::build(&shards(), 8, 2);
+        assert_eq!(t.degree_of_block(0), 4); // shared_blocks=1 -> block 0 hot
+    }
+}

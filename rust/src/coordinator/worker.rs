@@ -1,0 +1,191 @@
+//! Worker task: Algorithm 1 (worker side).
+//!
+//! Per local epoch t: select a block slot (uniform or cyclic), refresh
+//! the cached z̃ per the delay policy, compute the fused step via the
+//! configured backend, push w to the owning server shard, and advance.
+//! No allocation happens inside the loop — all buffers are pre-sized.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::SyncSender;
+
+use anyhow::Result;
+
+use super::block_store::BlockStore;
+use super::compute::WorkerCompute;
+use super::delay::DelayPolicy;
+use super::messages::{PushMsg, ServerMsg};
+use super::topology::Topology;
+use crate::admm::WorkerState;
+use crate::config::BlockSelection;
+use crate::data::WorkerShard;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, Default)]
+pub struct WorkerStats {
+    pub epochs: usize,
+    /// Max staleness (in block versions) of any z̃ used in a step.
+    pub max_staleness: u64,
+    /// Number of forced refreshes from bound enforcement.
+    pub forced_refreshes: usize,
+    pub last_loss: f32,
+}
+
+pub struct WorkerCtx<'a> {
+    pub shard: &'a WorkerShard,
+    topo: &'a Topology,
+    store: &'a BlockStore,
+    senders: &'a [SyncSender<ServerMsg>],
+    state: WorkerState,
+    policy: DelayPolicy,
+    selection: BlockSelection,
+    rho: f32,
+    epochs: usize,
+    max_delay: usize,
+    enforce_delay: bool,
+    rng: Rng,
+    /// Published progress for the monitor thread.
+    progress: &'a AtomicUsize,
+    /// Version of z̃ currently cached per slot.
+    z_versions: Vec<u64>,
+    // scratch
+    w: Vec<f32>,
+    y_new: Vec<f32>,
+    x_new: Vec<f32>,
+    pub stats: WorkerStats,
+}
+
+#[allow(clippy::too_many_arguments)]
+impl<'a> WorkerCtx<'a> {
+    pub fn new(
+        shard: &'a WorkerShard,
+        topo: &'a Topology,
+        store: &'a BlockStore,
+        senders: &'a [SyncSender<ServerMsg>],
+        policy: DelayPolicy,
+        selection: BlockSelection,
+        rho: f32,
+        epochs: usize,
+        max_delay: usize,
+        enforce_delay: bool,
+        seed: u64,
+        progress: &'a AtomicUsize,
+    ) -> Self {
+        let db = shard.block_size;
+        // Algorithm 1 lines 1-2: pull z⁰, x⁰ = z⁰, y⁰ = 0.
+        let mut z0 = vec![0.0f32; shard.packed_dim()];
+        let mut z_versions = vec![0u64; shard.n_slots()];
+        for (slot, &j) in shard.active_blocks.iter().enumerate() {
+            z_versions[slot] = store.read_into(j, &mut z0[slot * db..(slot + 1) * db]);
+        }
+        WorkerCtx {
+            shard,
+            topo,
+            store,
+            senders,
+            state: WorkerState::init_from_z(z0),
+            policy,
+            selection,
+            rho,
+            epochs,
+            max_delay,
+            enforce_delay,
+            rng: Rng::new(seed),
+            progress,
+            z_versions,
+            w: vec![0.0; db],
+            y_new: vec![0.0; db],
+            x_new: vec![0.0; db],
+            stats: WorkerStats::default(),
+        }
+    }
+
+    fn select_slot(&mut self, t: usize) -> usize {
+        match self.selection {
+            BlockSelection::UniformRandom => self.rng.below(self.shard.n_slots()),
+            BlockSelection::Cyclic => t % self.shard.n_slots(),
+        }
+    }
+
+    /// Pull fresh z̃ for all slots (Algorithm 1 line 8).
+    fn refresh_z(&mut self) {
+        let db = self.shard.block_size;
+        for (slot, &j) in self.shard.active_blocks.iter().enumerate() {
+            self.z_versions[slot] =
+                self.store.read_into(j, &mut self.state.z_local[slot * db..(slot + 1) * db]);
+        }
+    }
+
+    /// Refresh only one slot (bound enforcement).
+    fn refresh_slot(&mut self, slot: usize) {
+        let db = self.shard.block_size;
+        let j = self.shard.active_blocks[slot];
+        self.z_versions[slot] =
+            self.store.read_into(j, &mut self.state.z_local[slot * db..(slot + 1) * db]);
+    }
+
+    /// Run Algorithm 1 for `epochs` local epochs.
+    pub fn run(&mut self, compute: &mut dyn WorkerCompute) -> Result<WorkerStats> {
+        for t in 0..self.epochs {
+            let slot = self.select_slot(t);
+            let j = self.shard.active_blocks[slot];
+
+            if self.policy.should_pull(t) && t > 0 {
+                self.refresh_z();
+            }
+            // Assumption-3 enforcement: if the cached copy is older than
+            // the bound, force a refresh of that block before using it.
+            let staleness = self.store.version(j).saturating_sub(self.z_versions[slot]);
+            if self.enforce_delay && staleness > self.max_delay as u64 {
+                self.refresh_slot(slot);
+                self.stats.forced_refreshes += 1;
+            }
+            let used_version = self.z_versions[slot];
+            self.stats.max_staleness = self
+                .stats
+                .max_staleness
+                .max(self.store.version(j).saturating_sub(used_version));
+
+            // Eqs. 11/12/9 via the backend.
+            let db = self.shard.block_size;
+            let (lo, hi) = (slot * db, (slot + 1) * db);
+            let loss = compute.step(
+                &self.state.z_local,
+                &self.state.y[lo..hi],
+                slot,
+                self.rho,
+                &mut self.w,
+                &mut self.y_new,
+                &mut self.x_new,
+            )?;
+            self.state.x[lo..hi].copy_from_slice(&self.x_new);
+            self.state.y[lo..hi].copy_from_slice(&self.y_new);
+            self.state.last_loss = loss;
+            self.stats.last_loss = loss;
+
+            // Push w to the owning server shard (with injected latency).
+            self.policy.sleep_net(&mut self.rng);
+            let server = self.topo.server_of_block[j];
+            self.senders[server]
+                .send(ServerMsg::Push(PushMsg {
+                    worker: self.shard.worker_id,
+                    block: j,
+                    w: self.w.clone(),
+                    worker_epoch: t,
+                    z_version_used: used_version,
+                    sent_at: std::time::Instant::now(),
+                }))
+                .map_err(|_| anyhow::anyhow!("server {server} hung up"))?;
+
+            self.state.epoch = t + 1;
+            self.stats.epochs = t + 1;
+            self.progress.store(t + 1, Ordering::Release);
+        }
+        Ok(self.stats.clone())
+    }
+
+    /// Final local variables (packed), consumed by the driver for
+    /// stationarity metrics.
+    pub fn into_state(self) -> (Vec<f32>, Vec<f32>) {
+        (self.state.x, self.state.y)
+    }
+}

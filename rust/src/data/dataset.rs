@@ -1,0 +1,133 @@
+//! Core dataset types and the consensus block geometry.
+
+use crate::sparse::CsrMatrix;
+
+/// Which generalized-linear loss the problem uses. Must match the `kind`
+/// of the AOT artifacts the runtime loads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LossKind {
+    /// log(1 + exp(-y <a, x>)), labels in {-1, +1}  (paper Eq. 22)
+    Logistic,
+    /// 0.5 (<a, x> - y)^2, real labels (lasso / robust MC example)
+    Squared,
+}
+
+impl LossKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            LossKind::Logistic => "logistic",
+            LossKind::Squared => "squared",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "logistic" => Ok(LossKind::Logistic),
+            "squared" => Ok(LossKind::Squared),
+            other => anyhow::bail!("unknown loss kind {other:?}"),
+        }
+    }
+}
+
+/// How the global model vector is cut into consensus blocks z_j.
+///
+/// The model dimension is padded up to `n_blocks * block_size`; features
+/// in the padding never appear in data, so their z entries stay at the
+/// prox fixed point (0 for l1) and do not affect anything.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockGeometry {
+    pub n_blocks: usize,
+    pub block_size: usize,
+}
+
+impl BlockGeometry {
+    pub fn new(n_blocks: usize, block_size: usize) -> Self {
+        assert!(n_blocks > 0 && block_size > 0);
+        BlockGeometry { n_blocks, block_size }
+    }
+
+    /// Smallest geometry with `block_size` covering `d` features.
+    pub fn covering(d: usize, block_size: usize) -> Self {
+        let n_blocks = d.div_ceil(block_size).max(1);
+        BlockGeometry { n_blocks, block_size }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.n_blocks * self.block_size
+    }
+
+    pub fn block_of(&self, feature: usize) -> usize {
+        debug_assert!(feature < self.dim());
+        feature / self.block_size
+    }
+
+    /// Global feature range [lo, hi) of block j.
+    pub fn range(&self, j: usize) -> (usize, usize) {
+        assert!(j < self.n_blocks);
+        (j * self.block_size, (j + 1) * self.block_size)
+    }
+}
+
+/// A labeled sparse dataset. `a.cols()` equals `geometry.dim()`.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub kind: LossKind,
+    pub a: CsrMatrix,
+    pub labels: Vec<f32>,
+    pub geometry: BlockGeometry,
+}
+
+impl Dataset {
+    pub fn samples(&self) -> usize {
+        self.a.rows()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.a.cols()
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.a.rows() == self.labels.len(), "labels/rows mismatch");
+        anyhow::ensure!(self.a.cols() == self.geometry.dim(), "cols/geometry mismatch");
+        if self.kind == LossKind::Logistic {
+            anyhow::ensure!(
+                self.labels.iter().all(|&y| y == 1.0 || y == -1.0),
+                "logistic labels must be ±1"
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_ranges() {
+        let g = BlockGeometry::new(4, 8);
+        assert_eq!(g.dim(), 32);
+        assert_eq!(g.range(0), (0, 8));
+        assert_eq!(g.range(3), (24, 32));
+        assert_eq!(g.block_of(0), 0);
+        assert_eq!(g.block_of(31), 3);
+    }
+
+    #[test]
+    fn covering_rounds_up() {
+        let g = BlockGeometry::covering(17, 8);
+        assert_eq!(g.n_blocks, 3);
+        assert_eq!(g.dim(), 24);
+        let g1 = BlockGeometry::covering(16, 8);
+        assert_eq!(g1.n_blocks, 2);
+    }
+
+    #[test]
+    fn loss_kind_parse_roundtrip() {
+        for k in [LossKind::Logistic, LossKind::Squared] {
+            assert_eq!(LossKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(LossKind::parse("huber").is_err());
+    }
+}

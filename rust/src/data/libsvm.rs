@@ -1,0 +1,157 @@
+//! libsvm/svmlight format parser, so real datasets (including the paper's
+//! KDDa, if available) drop into the pipeline:
+//!
+//! ```text
+//! <label> <index>:<value> <index>:<value> ...
+//! ```
+//!
+//! Indices may be 0- or 1-based (auto-detected: a 0 index anywhere means
+//! 0-based).  Labels: for `LossKind::Logistic`, values <= 0 (or 0/1
+//! encodings) map to -1/+1; for `Squared` they pass through.
+
+use std::io::{BufReader, Read};
+use std::path::Path;
+
+use anyhow::Context;
+
+use super::dataset::{BlockGeometry, Dataset, LossKind};
+use crate::sparse::CsrBuilder;
+
+/// Parse libsvm text. `block_size` fixes the consensus geometry; the
+/// feature dimension is padded up to a whole number of blocks.
+pub fn parse_libsvm(text: &str, kind: LossKind, block_size: usize) -> anyhow::Result<Dataset> {
+    let mut rows: Vec<(f32, Vec<(usize, f32)>)> = Vec::new();
+    let mut max_idx = 0usize;
+    let mut saw_zero = false;
+
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label: f32 = parts
+            .next()
+            .unwrap()
+            .parse()
+            .with_context(|| format!("line {}: bad label", lineno + 1))?;
+        let mut feats = Vec::new();
+        for tok in parts {
+            let (i, v) = tok
+                .split_once(':')
+                .with_context(|| format!("line {}: expected idx:val, got {tok:?}", lineno + 1))?;
+            let idx: usize = i
+                .parse()
+                .with_context(|| format!("line {}: bad index {i:?}", lineno + 1))?;
+            let val: f32 = v
+                .parse()
+                .with_context(|| format!("line {}: bad value {v:?}", lineno + 1))?;
+            saw_zero |= idx == 0;
+            max_idx = max_idx.max(idx);
+            feats.push((idx, val));
+        }
+        rows.push((label, feats));
+    }
+    anyhow::ensure!(!rows.is_empty(), "empty libsvm file");
+
+    let offset = usize::from(!saw_zero); // 1-based unless a 0 index appeared
+    let dim = max_idx + 1 - offset;
+    let geometry = BlockGeometry::covering(dim.max(1), block_size);
+
+    let mut b = CsrBuilder::new(rows.len(), geometry.dim());
+    let mut labels = Vec::with_capacity(rows.len());
+    for (r, (label, feats)) in rows.into_iter().enumerate() {
+        labels.push(match kind {
+            LossKind::Logistic => {
+                if label > 0.0 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            }
+            LossKind::Squared => label,
+        });
+        for (idx, val) in feats {
+            b.push(r, idx - offset, val);
+        }
+    }
+
+    let ds = Dataset {
+        name: "libsvm".into(),
+        kind,
+        a: b.build(),
+        labels,
+        geometry,
+    };
+    ds.validate()?;
+    Ok(ds)
+}
+
+pub fn load_libsvm(path: &Path, kind: LossKind, block_size: usize) -> anyhow::Result<Dataset> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut text = String::new();
+    BufReader::new(file)
+        .read_to_string(&mut text)
+        .with_context(|| format!("read {path:?}"))?;
+    let mut ds = parse_libsvm(&text, kind, block_size)?;
+    ds.name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "libsvm".into());
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_one_based() {
+        let ds = parse_libsvm("+1 1:0.5 3:2.0\n-1 2:1.0\n", LossKind::Logistic, 2).unwrap();
+        assert_eq!(ds.samples(), 2);
+        assert_eq!(ds.geometry.n_blocks, 2); // dim 3 -> padded 4
+        assert_eq!(ds.labels, vec![1.0, -1.0]);
+        assert_eq!(ds.a.row(0), (&[0u32, 2u32][..], &[0.5f32, 2.0f32][..]));
+    }
+
+    #[test]
+    fn parses_zero_based() {
+        let ds = parse_libsvm("1 0:1.0 2:1.0\n0 1:3.0\n", LossKind::Logistic, 4).unwrap();
+        assert_eq!(ds.dim(), 4);
+        assert_eq!(ds.a.row(0).0, &[0, 2]);
+        assert_eq!(ds.labels, vec![1.0, -1.0]); // 0 label -> -1
+    }
+
+    #[test]
+    fn squared_labels_pass_through() {
+        let ds = parse_libsvm("2.5 1:1\n-0.5 2:1\n", LossKind::Squared, 2).unwrap();
+        assert_eq!(ds.labels, vec![2.5, -0.5]);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_skipped() {
+        let ds =
+            parse_libsvm("# header\n\n+1 1:1.0 # trailing\n\n-1 2:1.0\n", LossKind::Logistic, 2)
+                .unwrap();
+        assert_eq!(ds.samples(), 2);
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        assert!(parse_libsvm("", LossKind::Logistic, 2).is_err());
+        assert!(parse_libsvm("+1 nonsense\n", LossKind::Logistic, 2).is_err());
+        assert!(parse_libsvm("abc 1:1\n", LossKind::Logistic, 2).is_err());
+        assert!(parse_libsvm("+1 1:xyz\n", LossKind::Logistic, 2).is_err());
+    }
+
+    #[test]
+    fn roundtrip_through_file() {
+        let dir = std::env::temp_dir().join("asybadmm_test_libsvm");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("toy.svm");
+        std::fs::write(&p, "+1 1:1.5\n-1 2:-0.5\n").unwrap();
+        let ds = load_libsvm(&p, LossKind::Logistic, 2).unwrap();
+        assert_eq!(ds.name, "toy");
+        assert_eq!(ds.samples(), 2);
+    }
+}

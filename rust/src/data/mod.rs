@@ -1,0 +1,13 @@
+//! Dataset substrate (S2): synthetic KDDa-like generation, libsvm-format
+//! loading, sample partitioning, and the feature-block geometry that
+//! defines the general-form-consensus sparsity graph ℰ.
+
+mod dataset;
+mod libsvm;
+mod partition;
+mod synth;
+
+pub use dataset::{BlockGeometry, Dataset, LossKind};
+pub use libsvm::{load_libsvm, parse_libsvm};
+pub use partition::{partition_even, WorkerShard};
+pub use synth::{gen_partitioned, gen_virtual_partitioned, SynthSpec};

@@ -1,0 +1,230 @@
+//! Sample partitioning and per-worker packed shards.
+//!
+//! A `WorkerShard` is worker i's view of the problem: its local rows, and
+//! its *packed* feature space — the worker's active consensus blocks
+//! 𝒩(i) laid out contiguously in "slots" [0, |𝒩(i)|). Packing is what
+//! lets one fixed-shape AOT artifact (d_pad columns) serve every worker:
+//! slot s columns are global block `active_blocks[s]`, slots beyond
+//! `n_slots` are zero padding.
+
+use super::dataset::Dataset;
+use crate::sparse::CsrMatrix;
+
+#[derive(Clone, Debug)]
+pub struct WorkerShard {
+    pub worker_id: usize,
+    /// Global row range [lo, hi) in the originating dataset.
+    pub rows: (usize, usize),
+    pub labels: Vec<f32>,
+    /// Sorted global block ids this worker touches (𝒩(i) in the paper).
+    pub active_blocks: Vec<usize>,
+    /// Local matrix with columns remapped to packed slots;
+    /// `a_packed.cols() == active_blocks.len() * block_size`.
+    pub a_packed: CsrMatrix,
+    pub block_size: usize,
+}
+
+impl WorkerShard {
+    /// Build a shard from dataset rows [lo, hi).
+    ///
+    /// `forced_blocks`: use this active set (must cover every feature the
+    /// rows touch) — the synthetic generator passes the designed
+    /// footprint so empty-but-assigned blocks stay in ℰ. `None` derives
+    /// the minimal active set from the data.
+    pub fn from_rows(
+        worker_id: usize,
+        ds: &Dataset,
+        lo: usize,
+        hi: usize,
+        forced_blocks: Option<Vec<usize>>,
+    ) -> Self {
+        let g = ds.geometry;
+        let slice = ds.a.row_slice(lo, hi);
+        let mut active: Vec<usize> = match forced_blocks {
+            Some(b) => b,
+            None => {
+                let mut seen = vec![false; g.n_blocks];
+                for r in 0..slice.rows() {
+                    for &j in slice.row(r).0 {
+                        seen[g.block_of(j as usize)] = true;
+                    }
+                }
+                (0..g.n_blocks).filter(|&b| seen[b]).collect()
+            }
+        };
+        active.sort_unstable();
+        active.dedup();
+
+        // Global feature -> packed column map.
+        let mut map = vec![u32::MAX; g.dim()];
+        for (slot, &b) in active.iter().enumerate() {
+            let (flo, fhi) = g.range(b);
+            for (k, f) in (flo..fhi).enumerate() {
+                map[f] = (slot * g.block_size + k) as u32;
+            }
+        }
+        // All touched features must be covered by the active set.
+        for r in 0..slice.rows() {
+            for &j in slice.row(r).0 {
+                assert!(
+                    map[j as usize] != u32::MAX,
+                    "feature {j} outside forced active blocks"
+                );
+            }
+        }
+        let a_packed = slice.remap_cols(&map, active.len() * g.block_size);
+
+        WorkerShard {
+            worker_id,
+            rows: (lo, hi),
+            labels: ds.labels[lo..hi].to_vec(),
+            active_blocks: active,
+            a_packed,
+            block_size: g.block_size,
+        }
+    }
+
+    pub fn samples(&self) -> usize {
+        self.a_packed.rows()
+    }
+
+    /// Number of packed block slots (|𝒩(i)|).
+    pub fn n_slots(&self) -> usize {
+        self.active_blocks.len()
+    }
+
+    pub fn packed_dim(&self) -> usize {
+        self.a_packed.cols()
+    }
+
+    /// Packed slot of global block j, if active.
+    pub fn slot_of_block(&self, j: usize) -> Option<usize> {
+        self.active_blocks.binary_search(&j).ok()
+    }
+
+    pub fn block_of_slot(&self, slot: usize) -> usize {
+        self.active_blocks[slot]
+    }
+
+    /// Packed column range of slot s.
+    pub fn slot_range(&self, slot: usize) -> (usize, usize) {
+        (slot * self.block_size, (slot + 1) * self.block_size)
+    }
+}
+
+/// Partition an arbitrary dataset into `n_workers` even contiguous row
+/// shards (the paper: "the whole dataset will be evenly split").
+/// Active blocks are derived from each shard's data.
+pub fn partition_even(ds: &Dataset, n_workers: usize) -> Vec<WorkerShard> {
+    assert!(n_workers > 0);
+    let m = ds.samples();
+    let base = m / n_workers;
+    let rem = m % n_workers;
+    let mut out = Vec::with_capacity(n_workers);
+    let mut lo = 0;
+    for i in 0..n_workers {
+        let hi = lo + base + usize::from(i < rem);
+        out.push(WorkerShard::from_rows(i, ds, lo, hi, None));
+        lo = hi;
+    }
+    assert_eq!(lo, m);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::{BlockGeometry, LossKind};
+    use crate::sparse::CsrBuilder;
+
+    fn toy_dataset() -> Dataset {
+        // 6 samples, 4 blocks of 4 features = dim 16.
+        let mut b = CsrBuilder::new(6, 16);
+        // rows 0-2 touch blocks {0,1}; rows 3-5 touch blocks {2,3}
+        b.push(0, 0, 1.0);
+        b.push(0, 5, 2.0);
+        b.push(1, 1, 1.0);
+        b.push(2, 6, -1.0);
+        b.push(3, 8, 1.0);
+        b.push(4, 12, 2.0);
+        b.push(5, 15, -2.0);
+        Dataset {
+            name: "toy".into(),
+            kind: LossKind::Logistic,
+            a: b.build(),
+            labels: vec![1.0, -1.0, 1.0, 1.0, -1.0, 1.0],
+            geometry: BlockGeometry::new(4, 4),
+        }
+    }
+
+    #[test]
+    fn partition_covers_all_rows_once() {
+        let ds = toy_dataset();
+        let shards = partition_even(&ds, 2);
+        assert_eq!(shards[0].rows, (0, 3));
+        assert_eq!(shards[1].rows, (3, 6));
+        assert_eq!(shards.iter().map(|s| s.samples()).sum::<usize>(), 6);
+        assert_eq!(
+            shards.iter().map(|s| s.a_packed.nnz()).sum::<usize>(),
+            ds.a.nnz()
+        );
+    }
+
+    #[test]
+    fn active_blocks_match_footprint() {
+        let ds = toy_dataset();
+        let shards = partition_even(&ds, 2);
+        assert_eq!(shards[0].active_blocks, vec![0, 1]);
+        assert_eq!(shards[1].active_blocks, vec![2, 3]);
+    }
+
+    #[test]
+    fn packing_remaps_features_consistently() {
+        let ds = toy_dataset();
+        let shards = partition_even(&ds, 2);
+        let s1 = &shards[1];
+        // global feature 8 (block 2, offset 0) -> slot 0, col 0
+        // global feature 12 (block 3, offset 0) -> slot 1, col 4
+        // global feature 15 (block 3, offset 3) -> slot 1, col 7
+        assert_eq!(s1.a_packed.row(0), (&[0u32][..], &[1.0f32][..]));
+        assert_eq!(s1.a_packed.row(1), (&[4u32][..], &[2.0f32][..]));
+        assert_eq!(s1.a_packed.row(2), (&[7u32][..], &[-2.0f32][..]));
+        assert_eq!(s1.packed_dim(), 8);
+    }
+
+    #[test]
+    fn slot_lookup() {
+        let ds = toy_dataset();
+        let shards = partition_even(&ds, 2);
+        let s = &shards[1];
+        assert_eq!(s.slot_of_block(2), Some(0));
+        assert_eq!(s.slot_of_block(3), Some(1));
+        assert_eq!(s.slot_of_block(0), None);
+        assert_eq!(s.block_of_slot(1), 3);
+        assert_eq!(s.slot_range(1), (4, 8));
+    }
+
+    #[test]
+    fn forced_blocks_keep_empty_slots() {
+        let ds = toy_dataset();
+        let s = WorkerShard::from_rows(0, &ds, 0, 3, Some(vec![0, 1, 2]));
+        assert_eq!(s.n_slots(), 3);
+        assert_eq!(s.packed_dim(), 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside forced active blocks")]
+    fn forced_blocks_must_cover_data() {
+        let ds = toy_dataset();
+        let _ = WorkerShard::from_rows(0, &ds, 0, 3, Some(vec![0])); // row 0 touches block 1
+    }
+
+    #[test]
+    fn single_worker_gets_everything() {
+        let ds = toy_dataset();
+        let shards = partition_even(&ds, 1);
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0].samples(), 6);
+        assert_eq!(shards[0].active_blocks, vec![0, 1, 2, 3]);
+    }
+}

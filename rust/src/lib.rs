@@ -1,0 +1,31 @@
+//! # AsyBADMM — block-wise asynchronous distributed ADMM
+//!
+//! Production-quality reproduction of *"A Block-wise, Asynchronous and
+//! Distributed ADMM Algorithm for General Form Consensus Optimization"*
+//! (Zhu, Niu, Li, 2018) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordination contribution: a parameter-
+//!   server runtime with per-block consensus state, lock-free block-wise
+//!   asynchronous updates, bounded-delay tracking, plus baselines and a
+//!   discrete-event cluster simulator for the paper's scaling study.
+//! * **L2 (`python/compile/model.py`)** — worker/server compute graphs in
+//!   JAX, AOT-lowered once to HLO text artifacts.
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the fused
+//!   margin + block-gradient hot-spot and the proximal update.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod admm;
+pub mod baselines;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod problem;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod sparse;
+pub mod testutil;
+pub mod util;

@@ -1,0 +1,281 @@
+//! `asybadmm` — CLI launcher for the AsyBADMM parameter-server runtime.
+//!
+//! Subcommands:
+//!   train       threaded async training run (Algorithm 1)
+//!   sim         discrete-event cluster simulation of the same run
+//!   sync        synchronous baseline (paper §3.1)
+//!   gen-data    emit a synthetic KDDa-like dataset as libsvm text
+//!   check       Theorem-1 hyper-parameter feasibility report
+//!   artifacts   inspect the AOT artifact manifest
+//!
+//! Common options are config keys: any `--set key=value` (repeatable via
+//! comma list) overrides `--config <file>` which overrides defaults.
+//! `asybadmm <cmd> --help` lists the per-command options.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use asybadmm::baselines::run_sync_admm;
+use asybadmm::config::Config;
+use asybadmm::coordinator::run_async;
+use asybadmm::data::{gen_partitioned, load_libsvm, partition_even, Dataset, WorkerShard};
+use asybadmm::problem::Problem;
+use asybadmm::report::{write_file, write_trace_csv, Checkpoint};
+use asybadmm::runtime::Manifest;
+use asybadmm::sim::{calibrate_native, run_sim};
+use asybadmm::util::cli::{Args, Parsed};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let cmd = argv.get(1).map(String::as_str).unwrap_or("");
+    let rest: Vec<String> = std::iter::once(format!("asybadmm {cmd}"))
+        .chain(argv.iter().skip(2).cloned())
+        .collect();
+    let code = match cmd {
+        "train" => run("train", &rest),
+        "sim" => run("sim", &rest),
+        "sync" => run("sync", &rest),
+        "gen-data" => run("gen-data", &rest),
+        "check" => run("check", &rest),
+        "artifacts" => run("artifacts", &rest),
+        "--help" | "-h" | "help" | "" => {
+            eprintln!(
+                "asybadmm — block-wise asynchronous distributed ADMM\n\n\
+                 USAGE: asybadmm <train|sim|sync|gen-data|check|artifacts> [OPTIONS]\n\
+                 Run `asybadmm <cmd> --help` for options."
+            );
+            if cmd.is_empty() {
+                2
+            } else {
+                0
+            }
+        }
+        other => {
+            eprintln!("unknown command {other:?}; see `asybadmm --help`");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(cmd: &str, argv: &[String]) -> i32 {
+    let result = match cmd {
+        "train" => cmd_train(argv, false),
+        "sim" => cmd_train(argv, true),
+        "sync" => cmd_sync(argv),
+        "gen-data" => cmd_gen_data(argv),
+        "check" => cmd_check(argv),
+        "artifacts" => cmd_artifacts(argv),
+        _ => unreachable!(),
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}
+
+fn config_args(a: Args) -> Args {
+    a.opt("config", "", "config file (TOML-subset key = value)")
+        .opt("set", "", "comma-separated key=value config overrides")
+}
+
+fn build_config(p: &Parsed) -> Result<Config> {
+    let mut cfg = Config::default();
+    let file = p.get("config");
+    if !file.is_empty() {
+        cfg.apply_file(std::path::Path::new(file))?;
+    }
+    for kv in p.get("set").split(',').filter(|s| !s.is_empty()) {
+        let (k, v) = kv
+            .split_once('=')
+            .with_context(|| format!("--set expects key=value, got {kv:?}"))?;
+        cfg.apply_kv(k, v)?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Generate or load the dataset + shards for a config.
+pub fn load_data(cfg: &Config) -> Result<(Dataset, Vec<WorkerShard>)> {
+    match &cfg.data_path {
+        Some(path) => {
+            let ds = load_libsvm(path, cfg.loss, cfg.block_size)?;
+            let shards = partition_even(&ds, cfg.n_workers);
+            Ok((ds, shards))
+        }
+        None => Ok(gen_partitioned(&cfg.synth_spec(), cfg.n_workers)),
+    }
+}
+
+fn cmd_train(argv: &[String], use_sim: bool) -> Result<()> {
+    let about = if use_sim {
+        "DES cluster simulation of Algorithm 1 (virtual time; calibrated costs)"
+    } else {
+        "threaded asynchronous training run (Algorithm 1)"
+    };
+    let p = config_args(Args::new(about))
+        .opt("trace-out", "", "write objective trace CSV here")
+        .opt("checkpoint-out", "", "save the trained model checkpoint here")
+        .parse_from(argv);
+    let cfg = build_config(&p)?;
+    let (ds, shards) = load_data(&cfg)?;
+    println!("# {}", cfg.summary());
+    println!(
+        "# dataset {}: m={} d={} nnz={}",
+        ds.name,
+        ds.samples(),
+        ds.dim(),
+        ds.a.nnz()
+    );
+
+    let (samples, final_obj, elapsed, extra, z_final) = if use_sim {
+        let problem = Problem::new(cfg.loss, cfg.lambda, cfg.clip);
+        let cost = calibrate_native(&ds, &shards, problem);
+        println!(
+            "# calibrated cost model: {:.2}us/row, {:.2}us service, {:.2}us net",
+            cost.compute_per_row_s * 1e6,
+            cost.server_service_s * 1e6,
+            cost.net_mean_s * 1e6
+        );
+        let r = run_sim(&cfg, &ds, &shards, &cost)?;
+        let extra = format!("virtual_time={:.3}s pushes={} max_queue={}", r.virtual_time_s, r.pushes, r.max_queue);
+        (r.samples, r.final_objective, r.virtual_time_s, extra, r.z_final)
+    } else {
+        let r = run_async(&cfg, &ds, &shards)?;
+        let extra = format!(
+            "pushes={} max_staleness={} stationarity={:.3e} consensus_max={:.3e}",
+            r.total_pushes(),
+            r.max_staleness(),
+            r.stationarity,
+            r.consensus_max
+        );
+        (r.samples, r.final_objective, r.elapsed_s, extra, r.z_final)
+    };
+
+    for s in &samples {
+        println!(
+            "epoch {:>6}  t {:>9.3}s  obj {:.6}  (data {:.6})",
+            s.epoch, s.time_s, s.objective, s.data_loss
+        );
+    }
+    println!(
+        "# done in {elapsed:.3}s: objective {:.6} (data {:.6} + reg {:.6}); {extra}",
+        final_obj.total(),
+        final_obj.data_loss,
+        final_obj.reg
+    );
+    let out = p.get("trace-out");
+    if !out.is_empty() {
+        write_trace_csv(std::path::Path::new(out), &samples)?;
+        println!("# trace written to {out}");
+    }
+    let ckpt = p.get("checkpoint-out");
+    if !ckpt.is_empty() {
+        Checkpoint {
+            config_summary: cfg.summary(),
+            n_blocks: cfg.n_blocks,
+            block_size: cfg.block_size,
+            epoch: cfg.epochs,
+            objective: final_obj.total(),
+            z: z_final,
+        }
+        .save(std::path::Path::new(ckpt))?;
+        println!("# checkpoint written to {ckpt}");
+    }
+    Ok(())
+}
+
+fn cmd_sync(argv: &[String]) -> Result<()> {
+    let p = config_args(Args::new("synchronous block-wise ADMM baseline (paper §3.1)"))
+        .opt("trace-out", "", "write objective trace CSV here")
+        .parse_from(argv);
+    let cfg = build_config(&p)?;
+    let (ds, shards) = load_data(&cfg)?;
+    println!("# {}", cfg.summary());
+    let r = run_sync_admm(&cfg, &ds, &shards)?;
+    for s in &r.samples {
+        println!("epoch {:>6}  obj {:.6}", s.epoch, s.objective);
+    }
+    println!("# done in {:.3}s: objective {:.6}", r.elapsed_s, r.final_objective.total());
+    let out = p.get("trace-out");
+    if !out.is_empty() {
+        write_trace_csv(std::path::Path::new(out), &r.samples)?;
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(argv: &[String]) -> Result<()> {
+    let p = config_args(Args::new("emit the synthetic KDDa-like dataset as libsvm text"))
+        .opt("out", "reports/synth.svm", "output path")
+        .parse_from(argv);
+    let cfg = build_config(&p)?;
+    let (ds, _) = load_data(&cfg)?;
+    let mut text = String::new();
+    for r in 0..ds.samples() {
+        text.push_str(&format!("{}", ds.labels[r]));
+        let (idx, vals) = ds.a.row(r);
+        for (&j, &v) in idx.iter().zip(vals) {
+            text.push_str(&format!(" {}:{}", j + 1, v));
+        }
+        text.push('\n');
+    }
+    let out = PathBuf::from(p.get("out"));
+    write_file(&out, &text)?;
+    println!(
+        "wrote {} ({} samples, {} features, {} nnz)",
+        out.display(),
+        ds.samples(),
+        ds.dim(),
+        ds.a.nnz()
+    );
+    Ok(())
+}
+
+fn cmd_check(argv: &[String]) -> Result<()> {
+    let p = config_args(Args::new("Theorem-1 feasibility of the configured hyper-parameters"))
+        .parse_from(argv);
+    let cfg = build_config(&p)?;
+    let (_ds, shards) = load_data(&cfg)?;
+    let problem = Problem::new(cfg.loss, cfg.lambda, cfg.clip);
+    let refs: Vec<&WorkerShard> = shards.iter().collect();
+    let r = asybadmm::admm::check_theorem1(
+        &refs,
+        &problem,
+        cfg.n_blocks,
+        cfg.rho as f64,
+        cfg.gamma as f64,
+        cfg.max_delay,
+    );
+    println!("{}", cfg.summary());
+    println!(
+        "min alpha_j = {:.4e}   min beta_i = {:.4e}   strict-feasible: {}",
+        r.min_alpha, r.min_beta, r.feasible
+    );
+    if !r.feasible {
+        println!(
+            "to satisfy Eq. 17/18 strictly: gamma >= {:.4e}, rho >= {:.4e}",
+            r.gamma_needed, r.rho_needed
+        );
+        println!("(the paper's own experiments run outside the strict bound, as do ours)");
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(argv: &[String]) -> Result<()> {
+    let p = config_args(Args::new("inspect the AOT artifact manifest")).parse_from(argv);
+    let cfg = build_config(&p)?;
+    let m = Manifest::load(&cfg.artifacts_dir)?;
+    println!("{} artifacts in {:?}:", m.entries.len(), m.dir);
+    for e in &m.entries {
+        println!(
+            "  {:<44} entry={:<13} kind={:<8} m_chunk={:<5} d_pad={:<5} db={}",
+            e.name, e.entry, e.kind, e.m_chunk, e.d_pad, e.db
+        );
+    }
+    println!("shape sets: {:?}", m.shape_sets());
+    Ok(())
+}

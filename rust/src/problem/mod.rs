@@ -1,0 +1,124 @@
+//! Problem abstraction (S8): the general-form-consensus objective
+//!
+//! ```text
+//! min  sum_i f_i({x_ij}) + h(z),   h(z) = lambda*||z||_1 + indicator(||z||_inf <= C)
+//! ```
+//!
+//! with f_i a generalized linear loss over worker i's shard.  Instances:
+//! sparse logistic regression (paper Eq. 22) and lasso (squared loss).
+//! The per-margin math here is the single source of truth for the native
+//! backend; the XLA backend's artifacts are generated from the matching
+//! jnp formulas and cross-checked by `rust/tests/artifact_parity.rs`.
+
+use crate::data::LossKind;
+
+/// Regularizer + loss parameters for one experiment.
+#[derive(Clone, Copy, Debug)]
+pub struct Problem {
+    pub kind: LossKind,
+    /// l1 coefficient λ.
+    pub lambda: f32,
+    /// Box constraint ‖z‖∞ ≤ C.
+    pub clip: f32,
+}
+
+impl Problem {
+    pub fn new(kind: LossKind, lambda: f32, clip: f32) -> Self {
+        Problem { kind, lambda, clip }
+    }
+
+    /// Per-sample loss φ(margin, y) and slope ∂φ/∂margin (unweighted).
+    #[inline]
+    pub fn loss_slope(&self, margin: f32, label: f32) -> (f32, f32) {
+        match self.kind {
+            LossKind::Logistic => {
+                let t = -label * margin;
+                // log(1+e^t) computed stably; sigmoid(t) likewise.
+                let loss = if t > 0.0 { t + (-t).exp().ln_1p() } else { t.exp().ln_1p() };
+                let sig = if t >= 0.0 {
+                    1.0 / (1.0 + (-t).exp())
+                } else {
+                    let e = t.exp();
+                    e / (1.0 + e)
+                };
+                (loss, -label * sig)
+            }
+            LossKind::Squared => {
+                let r = margin - label;
+                (0.5 * r * r, r)
+            }
+        }
+    }
+
+    /// Regularizer value h(z) = λ‖z‖₁ over the full model (box indicator
+    /// contributes 0 for feasible z; iterates are feasible by
+    /// construction of the prox).
+    pub fn h(&self, z: &[f32]) -> f64 {
+        self.lambda as f64 * z.iter().map(|v| v.abs() as f64).sum::<f64>()
+    }
+
+    /// Curvature bound max φ'' — feeds the block-Lipschitz estimates
+    /// (Assumption 1) in `admm::penalty`.
+    pub fn curvature_bound(&self) -> f32 {
+        match self.kind {
+            LossKind::Logistic => 0.25,
+            LossKind::Squared => 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logistic() -> Problem {
+        Problem::new(LossKind::Logistic, 1e-4, 1e4)
+    }
+
+    #[test]
+    fn logistic_loss_at_zero_margin() {
+        let p = logistic();
+        let (l, s) = p.loss_slope(0.0, 1.0);
+        assert!((l - std::f32::consts::LN_2).abs() < 1e-6);
+        assert!((s + 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn logistic_loss_stable_at_extremes() {
+        let p = logistic();
+        let (l, s) = p.loss_slope(100.0, 1.0); // well classified
+        assert!(l >= 0.0 && l < 1e-6);
+        assert!(s.abs() < 1e-6);
+        let (l2, s2) = p.loss_slope(-100.0, 1.0); // badly misclassified
+        assert!((l2 - 100.0).abs() < 1e-3);
+        assert!((s2 + 1.0).abs() < 1e-6);
+        assert!(l.is_finite() && l2.is_finite());
+    }
+
+    #[test]
+    fn squared_loss_and_slope() {
+        let p = Problem::new(LossKind::Squared, 0.0, 1e4);
+        let (l, s) = p.loss_slope(3.0, 1.0);
+        assert_eq!(l, 2.0);
+        assert_eq!(s, 2.0);
+    }
+
+    #[test]
+    fn slope_is_derivative_numerically() {
+        let p = logistic();
+        for &(m, y) in &[(0.3f32, 1.0f32), (-1.2, -1.0), (2.0, -1.0)] {
+            let eps = 1e-3;
+            let (lp, _) = p.loss_slope(m + eps, y);
+            let (lm, _) = p.loss_slope(m - eps, y);
+            let (_, s) = p.loss_slope(m, y);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - s).abs() < 1e-3, "m={m} y={y}: fd {fd} vs slope {s}");
+        }
+    }
+
+    #[test]
+    fn h_is_l1() {
+        let p = Problem::new(LossKind::Logistic, 2.0, 10.0);
+        assert!((p.h(&[1.0, -2.0, 0.5]) - 7.0).abs() < 1e-9);
+    }
+}

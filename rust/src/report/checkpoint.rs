@@ -1,0 +1,162 @@
+//! Training-state checkpointing: persist/restore the consensus model
+//! (and optionally per-worker duals) so long runs survive restarts and
+//! trained models ship to serving.
+//!
+//! Format: a small JSON header (config summary, geometry, seed, epoch)
+//! followed by base64-free raw little-endian f32 payload in a sidecar
+//! `.bin` file — human-inspectable metadata, zero-copy-ish data.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{num, obj, s, Json};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub config_summary: String,
+    pub n_blocks: usize,
+    pub block_size: usize,
+    pub epoch: usize,
+    pub objective: f64,
+    pub z: Vec<f32>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        anyhow::ensure!(
+            self.z.len() == self.n_blocks * self.block_size,
+            "z length {} != geometry {}x{}",
+            self.z.len(),
+            self.n_blocks,
+            self.block_size
+        );
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).with_context(|| format!("mkdir {dir:?}"))?;
+        }
+        let header = obj(vec![
+            ("format", s("asybadmm-checkpoint")),
+            ("version", num(1.0)),
+            ("config", s(&self.config_summary)),
+            ("n_blocks", num(self.n_blocks as f64)),
+            ("block_size", num(self.block_size as f64)),
+            ("epoch", num(self.epoch as f64)),
+            ("objective", num(self.objective)),
+            ("dim", num(self.z.len() as f64)),
+        ]);
+        std::fs::write(path, header.to_string_pretty())
+            .with_context(|| format!("write {path:?}"))?;
+        let bin = path.with_extension("bin");
+        let mut f = std::fs::File::create(&bin).with_context(|| format!("create {bin:?}"))?;
+        let mut bytes = Vec::with_capacity(self.z.len() * 4);
+        for v in &self.z {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        f.write_all(&bytes)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        let header = Json::parse(&text).with_context(|| format!("parse {path:?}"))?;
+        anyhow::ensure!(
+            header.req_str("format")? == "asybadmm-checkpoint",
+            "not an asybadmm checkpoint"
+        );
+        let n_blocks = header.req_usize("n_blocks")?;
+        let block_size = header.req_usize("block_size")?;
+        let dim = header.req_usize("dim")?;
+        anyhow::ensure!(dim == n_blocks * block_size, "corrupt header: dim mismatch");
+
+        let bin = path.with_extension("bin");
+        let mut bytes = Vec::new();
+        std::fs::File::open(&bin)
+            .with_context(|| format!("open {bin:?}"))?
+            .read_to_end(&mut bytes)?;
+        anyhow::ensure!(
+            bytes.len() == dim * 4,
+            "payload size {} != expected {}",
+            bytes.len(),
+            dim * 4
+        );
+        let z = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(Checkpoint {
+            config_summary: header.req_str("config")?.to_string(),
+            n_blocks,
+            block_size,
+            epoch: header.req_usize("epoch")?,
+            objective: header.get("objective").and_then(Json::as_f64).unwrap_or(f64::NAN),
+            z,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("asybadmm_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let mut rng = Rng::new(3);
+        let z: Vec<f32> = (0..64).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+        let ck = Checkpoint {
+            config_summary: "rho=1.5 gamma=0.01".into(),
+            n_blocks: 4,
+            block_size: 16,
+            epoch: 1234,
+            objective: 0.512345,
+            z,
+        };
+        let p = tmp("rt.ckpt");
+        ck.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back, ck);
+    }
+
+    #[test]
+    fn rejects_wrong_geometry() {
+        let ck = Checkpoint {
+            config_summary: String::new(),
+            n_blocks: 2,
+            block_size: 4,
+            epoch: 0,
+            objective: 0.0,
+            z: vec![0.0; 7], // != 8
+        };
+        assert!(ck.save(&tmp("bad.ckpt")).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let ck = Checkpoint {
+            config_summary: String::new(),
+            n_blocks: 2,
+            block_size: 4,
+            epoch: 5,
+            objective: 0.1,
+            z: vec![1.0; 8],
+        };
+        let p = tmp("trunc.ckpt");
+        ck.save(&p).unwrap();
+        std::fs::write(p.with_extension("bin"), [0u8; 12]).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_foreign_json() {
+        let p = tmp("foreign.ckpt");
+        std::fs::write(&p, "{\"format\": \"something-else\"}").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+}

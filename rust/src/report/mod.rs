@@ -1,0 +1,169 @@
+//! Report emission (S7): CSV series for the figures, markdown tables for
+//! Table 1, and JSON run records — everything EXPERIMENTS.md cites is
+//! regenerated through this module into `reports/`.
+
+mod checkpoint;
+
+use std::path::Path;
+
+pub use checkpoint::Checkpoint;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::ObjSample;
+use crate::util::json::{num, obj, s, Json};
+
+/// Write an objective-trace CSV (one series; Fig. 2a/2b plot several of
+/// these files together).
+pub fn write_trace_csv(path: &Path, samples: &[ObjSample]) -> Result<()> {
+    let mut out = String::from(ObjSample::csv_header());
+    out.push('\n');
+    for smp in samples {
+        out.push_str(&smp.to_csv());
+        out.push('\n');
+    }
+    write_file(path, &out)
+}
+
+/// Table 1 of the paper: rows (workers p) × columns (iteration counts k)
+/// of time-to-k, plus the speedup column T_k(1)/T_k(p) at the largest k.
+#[derive(Debug, Clone)]
+pub struct SpeedupTable {
+    pub ks: Vec<usize>,
+    /// (p, time_at_k seconds per k in `ks`).
+    pub rows: Vec<(usize, Vec<f64>)>,
+}
+
+impl SpeedupTable {
+    pub fn speedups(&self) -> Vec<(usize, f64)> {
+        let Some(base) = self.rows.iter().find(|(p, _)| *p == 1) else {
+            return Vec::new();
+        };
+        let k_last = self.ks.len() - 1;
+        self.rows
+            .iter()
+            .map(|(p, ts)| (*p, base.1[k_last] / ts[k_last].max(1e-12)))
+            .collect()
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut md = String::from("| Workers p |");
+        for k in &self.ks {
+            md.push_str(&format!(" k = {k} |"));
+        }
+        md.push_str(" Speedup |\n|---|");
+        for _ in &self.ks {
+            md.push_str("---|");
+        }
+        md.push_str("---|\n");
+        let sp = self.speedups();
+        for (p, ts) in &self.rows {
+            md.push_str(&format!("| {p} |"));
+            for t in ts {
+                md.push_str(&format!(" {t:.1} |"));
+            }
+            let s = sp.iter().find(|(pp, _)| pp == p).map(|(_, s)| *s).unwrap_or(f64::NAN);
+            md.push_str(&format!(" {s:.2} |\n"));
+        }
+        md
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("workers");
+        for k in &self.ks {
+            out.push_str(&format!(",t_k{k}_s"));
+        }
+        out.push_str(",speedup\n");
+        let sp = self.speedups();
+        for (p, ts) in &self.rows {
+            out.push_str(&p.to_string());
+            for t in ts {
+                out.push_str(&format!(",{t:.6}"));
+            }
+            let s = sp.iter().find(|(pp, _)| pp == p).map(|(_, s)| *s).unwrap_or(f64::NAN);
+            out.push_str(&format!(",{s:.4}\n"));
+        }
+        out
+    }
+}
+
+/// JSON run record (config summary + headline numbers) for EXPERIMENTS.md
+/// provenance.
+pub fn run_record(
+    experiment: &str,
+    config_summary: &str,
+    fields: Vec<(&str, f64)>,
+) -> Json {
+    let mut pairs = vec![("experiment", s(experiment)), ("config", s(config_summary))];
+    for (k, v) in fields {
+        pairs.push((k, num(v)));
+    }
+    obj(pairs)
+}
+
+pub fn write_file(path: &Path, content: &str) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).with_context(|| format!("mkdir {dir:?}"))?;
+    }
+    std::fs::write(path, content).with_context(|| format!("write {path:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> SpeedupTable {
+        SpeedupTable {
+            ks: vec![20, 50, 100],
+            rows: vec![
+                (1, vec![1404.0, 3688.0, 6802.0]),
+                (4, vec![363.0, 952.0, 1758.0]),
+                (32, vec![47.0, 124.0, 228.0]),
+            ],
+        }
+    }
+
+    #[test]
+    fn speedup_matches_paper_arithmetic() {
+        // Using the paper's own Table 1 numbers: speedup(32) = 6802/228.
+        let sp = table().speedups();
+        let s32 = sp.iter().find(|(p, _)| *p == 32).unwrap().1;
+        assert!((s32 - 29.83).abs() < 0.01, "{s32}");
+        let s1 = sp.iter().find(|(p, _)| *p == 1).unwrap().1;
+        assert!((s1 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn markdown_and_csv_shapes() {
+        let t = table();
+        let md = t.to_markdown();
+        assert!(md.contains("| Workers p | k = 20 | k = 50 | k = 100 | Speedup |"));
+        assert_eq!(md.lines().count(), 2 + 3);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("workers,t_k20_s,t_k50_s,t_k100_s,speedup"));
+        assert_eq!(csv.lines().count(), 4);
+    }
+
+    #[test]
+    fn trace_csv_written() {
+        let dir = std::env::temp_dir().join("asybadmm_report_test");
+        let p = dir.join("trace.csv");
+        let samples = vec![ObjSample {
+            time_s: 0.5,
+            epoch: 10,
+            objective: 0.6,
+            data_loss: 0.59,
+            consensus_max: 0.0,
+        }];
+        write_trace_csv(&p, &samples).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 2);
+    }
+
+    #[test]
+    fn run_record_is_valid_json() {
+        let r = run_record("table1", "p=4", vec![("speedup", 3.9)]);
+        let parsed = Json::parse(&r.to_string_pretty()).unwrap();
+        assert_eq!(parsed.req_str("experiment").unwrap(), "table1");
+    }
+}

@@ -1,0 +1,324 @@
+//! XLA execution engines: compile the HLO-text artifacts on a per-thread
+//! PJRT CPU client and run them with device-resident data buffers.
+//!
+//! Hot-path discipline: the worker's data chunks (the big `A` matrices)
+//! are transferred to the device once at construction; per-iteration
+//! calls upload only the small dynamic inputs (z_local, y block, scalars)
+//! and download only the small outputs (w/y/x blocks + loss scalar).
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::data::WorkerShard;
+use crate::runtime::Manifest;
+
+/// Per-thread compiled artifact set for one (kind, shape set).
+pub struct XlaEngine {
+    pub client: xla::PjRtClient,
+    worker_step: xla::PjRtLoadedExecutable,
+    grad_chunk: xla::PjRtLoadedExecutable,
+    worker_update: xla::PjRtLoadedExecutable,
+    server_prox: xla::PjRtLoadedExecutable,
+    objective: xla::PjRtLoadedExecutable,
+    pub m_chunk: usize,
+    pub d_pad: usize,
+    pub db: usize,
+}
+
+fn compile(client: &xla::PjRtClient, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+    let path_str = path
+        .to_str()
+        .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path {path:?}"))?;
+    let proto = xla::HloModuleProto::from_text_file(path_str)
+        .with_context(|| format!("parse HLO text {path:?}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).with_context(|| format!("XLA compile {path:?}"))
+}
+
+impl XlaEngine {
+    /// Compile all five entry points for `kind` ("logistic"|"squared")
+    /// at shape (m_chunk, d_pad, db). One per thread — `xla` types are
+    /// not `Send`.
+    pub fn new(
+        manifest: &Manifest,
+        kind: &str,
+        m_chunk: usize,
+        d_pad: usize,
+        db: usize,
+    ) -> Result<Rc<Self>> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let find = |entry: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let e = manifest.find(entry, Some(kind), m_chunk, d_pad, db)?;
+            compile(&client, &e.path)
+        };
+        Ok(Rc::new(XlaEngine {
+            worker_step: find("worker_step")?,
+            grad_chunk: find("grad_chunk")?,
+            worker_update: find("worker_update")?,
+            server_prox: find("server_prox")?,
+            objective: find("objective")?,
+            client,
+            m_chunk,
+            d_pad,
+            db,
+        }))
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Eq. 13 server update via the `server_prox` artifact.
+    pub fn server_prox(
+        &self,
+        z_tilde: &[f32],
+        w_sum: &[f32],
+        gamma: f32,
+        denom: f32,
+        lambda: f32,
+        clip: f32,
+    ) -> Result<Vec<f32>> {
+        debug_assert_eq!(z_tilde.len(), self.db);
+        let args = [
+            self.upload_f32(z_tilde, &[self.db])?,
+            self.upload_f32(w_sum, &[self.db])?,
+            self.upload_f32(&[gamma], &[1])?,
+            self.upload_f32(&[denom], &[1])?,
+            self.upload_f32(&[lambda], &[1])?,
+            self.upload_f32(&[clip], &[1])?,
+        ];
+        let out = self.server_prox.execute_b(&args)?[0][0].to_literal_sync()?;
+        Ok(out.to_tuple1()?.to_vec::<f32>()?)
+    }
+
+    /// Eq. 9/11/12 epilogue via the `worker_update` artifact.
+    pub fn worker_update(
+        &self,
+        g: &[f32],
+        y: &[f32],
+        z_blk: &[f32],
+        rho: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let args = [
+            self.upload_f32(g, &[self.db])?,
+            self.upload_f32(y, &[self.db])?,
+            self.upload_f32(z_blk, &[self.db])?,
+            self.upload_f32(&[rho], &[1])?,
+        ];
+        let out = self.worker_update.execute_b(&args)?[0][0].to_literal_sync()?;
+        let (w, y_new, x) = out.to_tuple3()?;
+        Ok((w.to_vec::<f32>()?, y_new.to_vec::<f32>()?, x.to_vec::<f32>()?))
+    }
+}
+
+/// One device-resident data chunk of a worker shard.
+struct Chunk {
+    a: xla::PjRtBuffer,
+    labels: xla::PjRtBuffer,
+    weights: xla::PjRtBuffer,
+}
+
+/// A worker's XLA execution context: engine + chunked device data.
+///
+/// PERF (EXPERIMENTS.md §Perf, L3): besides the data chunks, the
+/// per-slot offset literals and the ρ scalar are uploaded once at
+/// construction — the per-iteration uploads are only z_local and the
+/// y block.
+pub struct WorkerXla {
+    pub engine: Rc<XlaEngine>,
+    chunks: Vec<Chunk>,
+    /// Scratch for padding the packed z to d_pad.
+    z_pad: Vec<f32>,
+    /// Device-resident block offsets, one per packed slot.
+    offsets: Vec<xla::PjRtBuffer>,
+    /// Device-resident ρ (invalidated if a different ρ is requested).
+    rho_buf: Option<(f32, xla::PjRtBuffer)>,
+}
+
+impl WorkerXla {
+    /// Densify the shard into `ceil(m / m_chunk)` row chunks of width
+    /// d_pad (zero rows weighted 0 pad the tail) and park them on device.
+    pub fn new(engine: Rc<XlaEngine>, shard: &WorkerShard, sample_weight: f32) -> Result<Self> {
+        let (mc, dp) = (engine.m_chunk, engine.d_pad);
+        anyhow::ensure!(
+            shard.packed_dim() <= dp,
+            "worker {} packed dim {} exceeds artifact d_pad {}",
+            shard.worker_id,
+            shard.packed_dim(),
+            dp
+        );
+        let m = shard.samples();
+        let n_chunks = m.div_ceil(mc).max(1);
+        let mut chunks = Vec::with_capacity(n_chunks);
+        let mut a_host = vec![0.0f32; mc * dp];
+        for c in 0..n_chunks {
+            let lo = c * mc;
+            let hi = ((c + 1) * mc).min(m);
+            a_host.fill(0.0);
+            for r in lo..hi {
+                let (idx, vals) = shard.a_packed.row(r);
+                let base = (r - lo) * dp;
+                for (&j, &v) in idx.iter().zip(vals) {
+                    a_host[base + j as usize] = v;
+                }
+            }
+            let mut labels = vec![1.0f32; mc];
+            labels[..hi - lo].copy_from_slice(&shard.labels[lo..hi]);
+            let mut weights = vec![0.0f32; mc];
+            weights[..hi - lo].fill(sample_weight);
+            chunks.push(Chunk {
+                a: engine.upload_f32(&a_host, &[mc, dp])?,
+                labels: engine.upload_f32(&labels, &[mc])?,
+                weights: engine.upload_f32(&weights, &[mc])?,
+            });
+        }
+        let db = engine.db;
+        let n_slots = shard.n_slots();
+        let mut offsets = Vec::with_capacity(n_slots);
+        for slot in 0..n_slots {
+            let off = [(slot * db) as i32];
+            offsets.push(engine.client.buffer_from_host_buffer(&off, &[1], None)?);
+        }
+        Ok(WorkerXla { engine, chunks, z_pad: vec![0.0f32; dp], offsets, rho_buf: None })
+    }
+
+    fn rho_buffer(&mut self, rho: f32) -> Result<&xla::PjRtBuffer> {
+        let stale = !matches!(&self.rho_buf, Some((r, _)) if *r == rho);
+        if stale {
+            let buf = self.engine.upload_f32(&[rho], &[1])?;
+            self.rho_buf = Some((rho, buf));
+        }
+        Ok(&self.rho_buf.as_ref().unwrap().1)
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    fn pad_z(&mut self, z_local: &[f32]) {
+        self.z_pad.fill(0.0);
+        self.z_pad[..z_local.len()].copy_from_slice(z_local);
+    }
+
+    /// Fused worker iteration (Algorithm 1 lines 5-7 numerics): returns
+    /// (w_blk, y_new, x_blk, shard data loss at z̃).
+    ///
+    /// Single-chunk shards use the fused `worker_step` artifact; larger
+    /// shards run `grad_chunk` per chunk, reduce on host (db floats), and
+    /// finish with the `worker_update` artifact.
+    pub fn step(
+        &mut self,
+        z_local: &[f32],
+        y_blk: &[f32],
+        slot: usize,
+        rho: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, f32)> {
+        let eng = self.engine.clone();
+        let db = eng.db;
+        self.pad_z(z_local);
+        if self.chunks.len() == 1 {
+            let z_buf = eng.upload_f32(&self.z_pad, &[eng.d_pad])?;
+            let y_buf = eng.upload_f32(y_blk, &[db])?;
+            self.rho_buffer(rho)?; // refresh cache before sharing borrows
+            let rho_buf = &self.rho_buf.as_ref().unwrap().1;
+            let c = &self.chunks[0];
+            let args =
+                [&c.a, &c.labels, &c.weights, &z_buf, &y_buf, &self.offsets[slot], rho_buf];
+            let out = eng.worker_step.execute_b(&args)?[0][0].to_literal_sync()?;
+            let (w, y_new, x, loss) = out.to_tuple4()?;
+            return Ok((
+                w.to_vec::<f32>()?,
+                y_new.to_vec::<f32>()?,
+                x.to_vec::<f32>()?,
+                loss.to_vec::<f32>()?[0],
+            ));
+        }
+        let (g, loss) = self.grad_block_inner(slot)?;
+        let z_blk = &self.z_pad[slot * db..(slot + 1) * db];
+        let (w, y_new, x) = eng.worker_update(&g, y_blk, z_blk, rho)?;
+        Ok((w, y_new, x, loss))
+    }
+
+    /// Block gradient + loss at z̃ (multi-chunk reduction).
+    pub fn grad_block(&mut self, z_local: &[f32], slot: usize) -> Result<(Vec<f32>, f32)> {
+        self.pad_z(z_local);
+        self.grad_block_inner(slot)
+    }
+
+    fn grad_block_inner(&mut self, slot: usize) -> Result<(Vec<f32>, f32)> {
+        let eng = self.engine.clone();
+        let db = eng.db;
+        let z_buf = eng.upload_f32(&self.z_pad, &[eng.d_pad])?;
+        let off_buf = &self.offsets[slot];
+        let mut g = vec![0.0f32; db];
+        let mut loss = 0.0f32;
+        for c in &self.chunks {
+            let args = [&c.a, &c.labels, &c.weights, &z_buf, off_buf];
+            let out = eng.grad_chunk.execute_b(&args)?[0][0].to_literal_sync()?;
+            let (gc, lc) = out.to_tuple2()?;
+            let gc = gc.to_vec::<f32>()?;
+            for (acc, v) in g.iter_mut().zip(&gc) {
+                *acc += v;
+            }
+            loss += lc.to_vec::<f32>()?[0];
+        }
+        Ok((g, loss))
+    }
+
+    /// Shard data loss at an arbitrary packed point (objective artifact).
+    pub fn data_loss(&mut self, x_local: &[f32]) -> Result<f32> {
+        let eng = self.engine.clone();
+        self.pad_z(x_local);
+        let x_buf = eng.upload_f32(&self.z_pad, &[eng.d_pad])?;
+        let mut loss = 0.0f32;
+        for c in &self.chunks {
+            let args = [&c.a, &c.labels, &c.weights, &x_buf];
+            let out = eng.objective.execute_b(&args)?[0][0].to_literal_sync()?;
+            loss += out.to_tuple1()?.to_vec::<f32>()?[0];
+        }
+        Ok(loss)
+    }
+}
+
+/// Server-side prox context: a standalone client + the single
+/// `server_prox` executable (server threads don't need the worker
+/// artifacts, so this avoids compiling them).
+pub struct ServerProxXla {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    db: usize,
+}
+
+impl ServerProxXla {
+    /// Compile just the prox artifact for block size `db`.
+    pub fn load(manifest: &Manifest, db: usize) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let e = manifest.find("server_prox", None, 0, 0, db)?;
+        let exe = compile(&client, &e.path)?;
+        Ok(ServerProxXla { client, exe, db })
+    }
+
+    pub fn prox(
+        &self,
+        z_tilde: &[f32],
+        w_sum: &[f32],
+        gamma: f32,
+        denom: f32,
+        lambda: f32,
+        clip: f32,
+    ) -> Result<Vec<f32>> {
+        debug_assert_eq!(z_tilde.len(), self.db);
+        let up = |d: &[f32], dims: &[usize]| self.client.buffer_from_host_buffer(d, dims, None);
+        let args = [
+            up(z_tilde, &[self.db])?,
+            up(w_sum, &[self.db])?,
+            up(&[gamma], &[1])?,
+            up(&[denom], &[1])?,
+            up(&[lambda], &[1])?,
+            up(&[clip], &[1])?,
+        ];
+        let out = self.exe.execute_b(&args)?[0][0].to_literal_sync()?;
+        Ok(out.to_tuple1()?.to_vec::<f32>()?)
+    }
+}

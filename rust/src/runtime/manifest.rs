@@ -1,0 +1,141 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the rust runtime.  Thread-safe (plain data), shared across worker
+//! threads; each thread compiles its own executables from the files.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub path: PathBuf,
+    /// One of: worker_step, grad_chunk, objective, worker_update,
+    /// server_prox.
+    pub entry: String,
+    /// "logistic" | "squared" | "any".
+    pub kind: String,
+    pub m_chunk: usize,
+    pub d_pad: usize,
+    pub db: usize,
+    pub n_inputs: usize,
+    pub n_outputs: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("read {path:?} — run `make artifacts` first")
+        })?;
+        let root = Json::parse(&text).with_context(|| format!("parse {path:?}"))?;
+        anyhow::ensure!(
+            root.req_usize("version")? == 1,
+            "unsupported manifest version"
+        );
+        let mut entries = Vec::new();
+        for e in root.req_arr("entries")? {
+            let entry = ArtifactEntry {
+                name: e.req_str("name")?.to_string(),
+                path: dir.join(e.req_str("file")?),
+                entry: e.req_str("entry")?.to_string(),
+                kind: e.req_str("kind")?.to_string(),
+                m_chunk: e.req_usize("m_chunk")?,
+                d_pad: e.req_usize("d_pad")?,
+                db: e.req_usize("db")?,
+                n_inputs: e.req_arr("inputs")?.len(),
+                n_outputs: e.req_arr("outputs")?.len(),
+            };
+            anyhow::ensure!(
+                entry.path.exists(),
+                "manifest references missing artifact {:?}",
+                entry.path
+            );
+            entries.push(entry);
+        }
+        anyhow::ensure!(!entries.is_empty(), "empty manifest");
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Find the artifact for an entry point + loss kind + shape triple.
+    pub fn find(
+        &self,
+        entry: &str,
+        kind: Option<&str>,
+        m_chunk: usize,
+        d_pad: usize,
+        db: usize,
+    ) -> anyhow::Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| {
+                e.entry == entry
+                    && kind.is_none_or(|k| e.kind == k || e.kind == "any")
+                    && (e.entry == "worker_update" || e.entry == "server_prox"
+                        || (e.m_chunk == m_chunk && e.d_pad == d_pad))
+                    && e.db == db
+            })
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no artifact for entry={entry} kind={kind:?} m_chunk={m_chunk} \
+                     d_pad={d_pad} db={db}; have: {:?}. Re-run `make artifacts` \
+                     with a matching shape set.",
+                    self.entries.iter().map(|e| &e.name).collect::<Vec<_>>()
+                )
+            })
+    }
+
+    /// Shape sets present (distinct (m_chunk, d_pad, db) triples of
+    /// worker_step entries).
+    pub fn shape_sets(&self) -> Vec<(usize, usize, usize)> {
+        let mut v: Vec<_> = self
+            .entries
+            .iter()
+            .filter(|e| e.entry == "worker_step")
+            .map(|e| (e.m_chunk, e.d_pad, e.db))
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<Manifest> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn loads_repo_manifest_when_built() {
+        let Some(m) = repo_artifacts() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        assert!(!m.entries.is_empty());
+        // tiny set must exist for the integration tests
+        let e = m.find("worker_step", Some("logistic"), 32, 64, 16).unwrap();
+        assert_eq!(e.n_inputs, 7);
+        assert_eq!(e.n_outputs, 4);
+        let p = m.find("server_prox", None, 32, 64, 16).unwrap();
+        assert_eq!(p.n_inputs, 6);
+        assert!(!m.shape_sets().is_empty());
+    }
+
+    #[test]
+    fn missing_dir_errors_with_hint() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

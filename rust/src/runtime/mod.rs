@@ -1,0 +1,13 @@
+//! PJRT runtime (S4): load AOT HLO-text artifacts, compile once per
+//! thread, execute from the L3 hot path.
+//!
+//! The `xla` crate's types are `Rc`-based (!Send), so an [`XlaEngine`]
+//! must live and die on one thread; each worker/server thread constructs
+//! its own from the shared [`Manifest`] (file parsing is cheap; XLA
+//! compilation of these small modules takes milliseconds).
+
+mod engine;
+mod manifest;
+
+pub use engine::{ServerProxXla, WorkerXla, XlaEngine};
+pub use manifest::{ArtifactEntry, Manifest};

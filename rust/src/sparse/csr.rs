@@ -1,0 +1,353 @@
+//! CSR (compressed sparse row) f32 matrix.
+
+/// Immutable CSR matrix.  Column indices within each row are kept sorted
+/// (the builder sorts and merges duplicates by summing).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    /// Row r spans `indptr[r]..indptr[r+1]` in `indices`/`values`.
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.indptr[r], self.indptr[r + 1]);
+        (&self.indices[a..b], &self.values[a..b])
+    }
+
+    /// y = A x.
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for r in 0..self.rows {
+            let (idx, vals) = self.row(r);
+            let mut acc = 0.0f32;
+            for (&j, &v) in idx.iter().zip(vals) {
+                acc += v * x[j as usize];
+            }
+            y[r] = acc;
+        }
+    }
+
+    /// g += A^T s (accumulating; caller zeroes g when needed).
+    pub fn tmatvec_acc(&self, s: &[f32], g: &mut [f32]) {
+        assert_eq!(s.len(), self.rows);
+        assert_eq!(g.len(), self.cols);
+        for r in 0..self.rows {
+            let sr = s[r];
+            if sr == 0.0 {
+                continue;
+            }
+            let (idx, vals) = self.row(r);
+            for (&j, &v) in idx.iter().zip(vals) {
+                g[j as usize] += v * sr;
+            }
+        }
+    }
+
+    /// Like `tmatvec_acc` but only accumulating columns in
+    /// `[col_lo, col_hi)`, writing into `g[0..col_hi-col_lo]`.  This is
+    /// the native block-gradient kernel: indices are sorted per row, so a
+    /// binary search bounds the scan.
+    pub fn tmatvec_block_acc(&self, s: &[f32], col_lo: usize, col_hi: usize, g: &mut [f32]) {
+        assert!(col_lo <= col_hi && col_hi <= self.cols);
+        assert_eq!(g.len(), col_hi - col_lo);
+        let (lo32, hi32) = (col_lo as u32, col_hi as u32);
+        for r in 0..self.rows {
+            let sr = s[r];
+            if sr == 0.0 {
+                continue;
+            }
+            let (idx, vals) = self.row(r);
+            let start = idx.partition_point(|&j| j < lo32);
+            for k in start..idx.len() {
+                let j = idx[k];
+                if j >= hi32 {
+                    break;
+                }
+                g[(j - lo32) as usize] += vals[k] * sr;
+            }
+        }
+    }
+
+    /// Sub-matrix of a contiguous row range (cheap copy of slices).
+    pub fn row_slice(&self, lo: usize, hi: usize) -> CsrMatrix {
+        assert!(lo <= hi && hi <= self.rows);
+        let (a, b) = (self.indptr[lo], self.indptr[hi]);
+        CsrMatrix {
+            rows: hi - lo,
+            cols: self.cols,
+            indptr: self.indptr[lo..=hi].iter().map(|p| p - a).collect(),
+            indices: self.indices[a..b].to_vec(),
+            values: self.values[a..b].to_vec(),
+        }
+    }
+
+    /// Sub-matrix keeping rows listed in `rows` (in the given order).
+    pub fn select_rows(&self, rows: &[usize]) -> CsrMatrix {
+        let mut b = CsrBuilder::new(rows.len(), self.cols);
+        for (new_r, &r) in rows.iter().enumerate() {
+            let (idx, vals) = self.row(r);
+            for (&j, &v) in idx.iter().zip(vals) {
+                b.push(new_r, j as usize, v);
+            }
+        }
+        b.build()
+    }
+
+    /// Remap columns: new matrix with `new_cols` columns where old column
+    /// `j` becomes `map[j]` (u32::MAX = drop).  Used to pack a worker's
+    /// active feature blocks into contiguous slots.
+    pub fn remap_cols(&self, map: &[u32], new_cols: usize) -> CsrMatrix {
+        assert_eq!(map.len(), self.cols);
+        let mut b = CsrBuilder::new(self.rows, new_cols);
+        for r in 0..self.rows {
+            let (idx, vals) = self.row(r);
+            for (&j, &v) in idx.iter().zip(vals) {
+                let nj = map[j as usize];
+                if nj != u32::MAX {
+                    b.push(r, nj as usize, v);
+                }
+            }
+        }
+        b.build()
+    }
+
+    /// Densify a row range into a row-major buffer of shape
+    /// (hi-lo, cols), zero-filled.
+    pub fn densify_rows(&self, lo: usize, hi: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), (hi - lo) * self.cols);
+        out.fill(0.0);
+        for r in lo..hi {
+            let (idx, vals) = self.row(r);
+            let base = (r - lo) * self.cols;
+            for (&j, &v) in idx.iter().zip(vals) {
+                out[base + j as usize] = v;
+            }
+        }
+    }
+
+    /// Column-usage histogram (for partitioner stats / tests).
+    pub fn col_counts(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.cols];
+        for &j in &self.indices {
+            c[j as usize] += 1;
+        }
+        c
+    }
+
+    /// Max column index actually used + 1 (0 if empty).
+    pub fn max_used_col(&self) -> usize {
+        self.indices.iter().map(|&j| j as usize + 1).max().unwrap_or(0)
+    }
+
+    /// Per-row squared l2 norm; `sum_r max_j a_rj^2`-style bounds feed the
+    /// Lipschitz estimates in `admm::penalty`.
+    pub fn row_sq_norms(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|r| self.row(r).1.iter().map(|v| v * v).sum())
+            .collect()
+    }
+}
+
+/// Triplet accumulator -> CSR.  Duplicates are summed; per-row column
+/// indices come out sorted.
+#[derive(Debug)]
+pub struct CsrBuilder {
+    rows: usize,
+    cols: usize,
+    triplets: Vec<(u32, u32, f32)>,
+}
+
+impl CsrBuilder {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        assert!(cols <= u32::MAX as usize && rows <= u32::MAX as usize);
+        CsrBuilder { rows, cols, triplets: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols, "({r},{c}) out of ({},{})", self.rows, self.cols);
+        self.triplets.push((r as u32, c as u32, v));
+    }
+
+    pub fn build(mut self) -> CsrMatrix {
+        self.triplets.sort_unstable_by_key(|&(r, c, _)| ((r as u64) << 32) | c as u64);
+        let mut indptr = vec![0usize; self.rows + 1];
+        let mut indices = Vec::with_capacity(self.triplets.len());
+        let mut values: Vec<f32> = Vec::with_capacity(self.triplets.len());
+        let mut last: Option<(u32, u32)> = None;
+        for &(r, c, v) in &self.triplets {
+            if last == Some((r, c)) {
+                *values.last_mut().unwrap() += v;
+            } else {
+                indptr[r as usize + 1] += 1;
+                indices.push(c);
+                values.push(v);
+                last = Some((r, c));
+            }
+        }
+        for r in 0..self.rows {
+            indptr[r + 1] += indptr[r];
+        }
+        CsrMatrix { rows: self.rows, cols: self.cols, indptr, indices, values }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::dense;
+    use crate::util::rng::Rng;
+
+    fn random_csr(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> (CsrMatrix, Vec<f32>) {
+        let mut b = CsrBuilder::new(rows, cols);
+        let mut d = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                if rng.bernoulli(density) {
+                    let v = rng.normal_f32(0.0, 1.0);
+                    b.push(r, c, v);
+                    d[r * cols + c] = v;
+                }
+            }
+        }
+        (b.build(), d)
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let mut rng = Rng::new(1);
+        let (a, d) = random_csr(&mut rng, 23, 17, 0.3);
+        let x: Vec<f32> = (0..17).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut y = vec![0.0; 23];
+        a.matvec(&x, &mut y);
+        let yd = dense::matvec(&d, 23, 17, &x);
+        for (u, v) in y.iter().zip(&yd) {
+            assert!((u - v).abs() < 1e-4, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn tmatvec_matches_dense() {
+        let mut rng = Rng::new(2);
+        let (a, d) = random_csr(&mut rng, 31, 9, 0.4);
+        let s: Vec<f32> = (0..31).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut g = vec![0.0; 9];
+        a.tmatvec_acc(&s, &mut g);
+        let gd = dense::tmatvec(&d, 31, 9, &s);
+        for (u, v) in g.iter().zip(&gd) {
+            assert!((u - v).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn tmatvec_block_matches_full_slice() {
+        let mut rng = Rng::new(3);
+        let (a, _) = random_csr(&mut rng, 40, 24, 0.25);
+        let s: Vec<f32> = (0..40).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut full = vec![0.0; 24];
+        a.tmatvec_acc(&s, &mut full);
+        for (lo, hi) in [(0, 8), (8, 16), (16, 24), (4, 20)] {
+            let mut blk = vec![0.0; hi - lo];
+            a.tmatvec_block_acc(&s, lo, hi, &mut blk);
+            for (k, g) in blk.iter().enumerate() {
+                assert!((g - full[lo + k]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn builder_sums_duplicates_and_sorts() {
+        let mut b = CsrBuilder::new(2, 4);
+        b.push(0, 3, 1.0);
+        b.push(0, 1, 2.0);
+        b.push(0, 3, 0.5);
+        b.push(1, 0, -1.0);
+        let m = b.build();
+        assert_eq!(m.nnz(), 3);
+        let (idx, vals) = m.row(0);
+        assert_eq!(idx, &[1, 3]);
+        assert_eq!(vals, &[2.0, 1.5]);
+        assert_eq!(m.row(1), (&[0u32][..], &[-1.0f32][..]));
+    }
+
+    #[test]
+    fn row_slice_preserves_content() {
+        let mut rng = Rng::new(4);
+        let (a, _) = random_csr(&mut rng, 20, 10, 0.3);
+        let s = a.row_slice(5, 12);
+        assert_eq!(s.rows(), 7);
+        for r in 0..7 {
+            assert_eq!(s.row(r), a.row(r + 5));
+        }
+    }
+
+    #[test]
+    fn select_rows_reorders() {
+        let mut b = CsrBuilder::new(3, 2);
+        b.push(0, 0, 1.0);
+        b.push(1, 1, 2.0);
+        b.push(2, 0, 3.0);
+        let m = b.build();
+        let sel = m.select_rows(&[2, 0]);
+        assert_eq!(sel.row(0), (&[0u32][..], &[3.0f32][..]));
+        assert_eq!(sel.row(1), (&[0u32][..], &[1.0f32][..]));
+    }
+
+    #[test]
+    fn remap_cols_packs_and_drops() {
+        let mut b = CsrBuilder::new(2, 6);
+        b.push(0, 0, 1.0);
+        b.push(0, 4, 2.0);
+        b.push(1, 5, 3.0);
+        let m = b.build();
+        // keep cols {4,5} -> {0,1}, drop the rest
+        let mut map = vec![u32::MAX; 6];
+        map[4] = 0;
+        map[5] = 1;
+        let p = m.remap_cols(&map, 2);
+        assert_eq!(p.cols(), 2);
+        assert_eq!(p.row(0), (&[0u32][..], &[2.0f32][..]));
+        assert_eq!(p.row(1), (&[1u32][..], &[3.0f32][..]));
+    }
+
+    #[test]
+    fn densify_rows_roundtrip() {
+        let mut rng = Rng::new(5);
+        let (a, d) = random_csr(&mut rng, 8, 6, 0.5);
+        let mut out = vec![0.0f32; 8 * 6];
+        a.densify_rows(0, 8, &mut out);
+        assert_eq!(out, d);
+        // partial range
+        let mut part = vec![0.0f32; 3 * 6];
+        a.densify_rows(2, 5, &mut part);
+        assert_eq!(part, d[12..30].to_vec());
+    }
+
+    #[test]
+    fn col_counts_and_norms() {
+        let mut b = CsrBuilder::new(2, 3);
+        b.push(0, 0, 3.0);
+        b.push(0, 2, 4.0);
+        b.push(1, 2, 1.0);
+        let m = b.build();
+        assert_eq!(m.col_counts(), vec![1, 0, 2]);
+        assert_eq!(m.row_sq_norms(), vec![25.0, 1.0]);
+        assert_eq!(m.max_used_col(), 3);
+    }
+}

@@ -1,0 +1,40 @@
+//! Sparse matrix substrate (S1): CSR storage and the kernels the native
+//! compute backend and the data pipeline need.
+//!
+//! KDDa-like workloads are extremely sparse (~40 nnz out of 20M features
+//! per row); everything data-side stays CSR.  The XLA backend densifies
+//! *packed* per-worker chunks (active feature columns only) once at
+//! startup — see `data::partition`.
+
+mod csr;
+pub use csr::{CsrBuilder, CsrMatrix};
+
+/// Dense reference ops used by tests and small utilities.
+pub mod dense {
+    /// y = A x for row-major `a` of shape (rows, cols).
+    pub fn matvec(a: &[f32], rows: usize, cols: usize, x: &[f32]) -> Vec<f32> {
+        assert_eq!(a.len(), rows * cols);
+        assert_eq!(x.len(), cols);
+        (0..rows)
+            .map(|r| {
+                let row = &a[r * cols..(r + 1) * cols];
+                row.iter().zip(x).map(|(v, w)| v * w).sum()
+            })
+            .collect()
+    }
+
+    /// g = A^T s.
+    pub fn tmatvec(a: &[f32], rows: usize, cols: usize, s: &[f32]) -> Vec<f32> {
+        assert_eq!(a.len(), rows * cols);
+        assert_eq!(s.len(), rows);
+        let mut g = vec![0.0f32; cols];
+        for r in 0..rows {
+            let row = &a[r * cols..(r + 1) * cols];
+            let sr = s[r];
+            for (gj, v) in g.iter_mut().zip(row) {
+                *gj += v * sr;
+            }
+        }
+        g
+    }
+}

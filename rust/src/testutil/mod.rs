@@ -1,0 +1,68 @@
+//! Seeded property-test driver (no `proptest` available offline).
+//!
+//! `forall` runs a property over `n` generated cases from deterministic
+//! seeds; on failure it reports the seed so the case replays exactly.
+//! No shrinking — generators here produce small cases by construction.
+
+use crate::util::rng::Rng;
+
+/// Run `prop` over `n` cases produced by `gen` from seeds 0..n (XORed
+/// with a fixed salt so different call sites decorrelate).  Panics with
+/// the failing seed and message.
+pub fn forall<T>(
+    name: &str,
+    n: u64,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    for seed in 0..n {
+        let mut rng = Rng::new(seed ^ 0xA11C_E0F0);
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            panic!("property {name:?} failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (k, (x, y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol {
+            return Err(format!("element {k}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("abs-nonneg", 50, |rng| rng.normal(), |x| {
+            if x.abs() >= 0.0 {
+                Ok(())
+            } else {
+                Err("negative abs".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at seed")]
+    fn forall_reports_seed_on_failure() {
+        forall("always-false", 3, |rng| rng.f64(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn allclose_detects_mismatch() {
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0, 2.0001], 1e-3, 0.0).is_ok());
+        assert!(assert_allclose(&[1.0], &[1.1], 1e-3, 0.0).is_err());
+        assert!(assert_allclose(&[1.0], &[1.0, 2.0], 1e-3, 0.0).is_err());
+    }
+}

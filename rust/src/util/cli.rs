@@ -1,0 +1,232 @@
+//! Tiny CLI argument substrate (no `clap` available offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! arguments, and auto-generated `--help` from registered options.  Used
+//! by the `asybadmm` binary and all examples so every entry point has a
+//! consistent, discoverable interface.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct Opt {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative argument parser.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: Vec<Opt>,
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+    about: &'static str,
+    prog: String,
+}
+
+impl Args {
+    pub fn new(about: &'static str) -> Self {
+        Args { about, ..Default::default() }
+    }
+
+    /// Register an option with a default value.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: Some(default.to_string()), is_flag: false });
+        self
+    }
+
+    /// Register a required option (no default).
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_flag: false });
+        self
+    }
+
+    /// Register a boolean flag (defaults to false).
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_flag: true });
+        self
+    }
+
+    fn usage(&self) -> String {
+        let mut s = format!("{}\n\nUSAGE: {} [OPTIONS]\n\nOPTIONS:\n", self.about, self.prog);
+        for o in &self.opts {
+            let d = match (&o.default, o.is_flag) {
+                (_, true) => " (flag)".to_string(),
+                (Some(d), _) if !d.is_empty() => format!(" [default: {d}]"),
+                _ => " (required)".to_string(),
+            };
+            s.push_str(&format!("  --{:<24} {}{}\n", o.name, o.help, d));
+        }
+        s.push_str("  --help                     show this message\n");
+        s
+    }
+
+    /// Parse process args. On `--help` prints usage and exits 0; on error
+    /// prints usage and exits 2.
+    pub fn parse(self) -> Parsed {
+        let argv: Vec<String> = std::env::args().collect();
+        self.parse_from(&argv)
+    }
+
+    pub fn parse_from(mut self, argv: &[String]) -> Parsed {
+        self.prog = argv.first().cloned().unwrap_or_default();
+        let mut i = 1;
+        let die = |msg: &str, usage: &str| -> ! {
+            eprintln!("error: {msg}\n\n{usage}");
+            std::process::exit(2);
+        };
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                println!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let Some(opt) = self.opts.iter().find(|o| o.name == key) else {
+                    die(&format!("unknown option --{key}"), &self.usage());
+                };
+                let val = if opt.is_flag {
+                    if inline_val.is_some() {
+                        die(&format!("--{key} is a flag"), &self.usage());
+                    }
+                    "true".to_string()
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    i += 1;
+                    if i >= argv.len() {
+                        die(&format!("--{key} needs a value"), &self.usage());
+                    }
+                    argv[i].clone()
+                };
+                self.values.insert(key, val);
+            } else {
+                self.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        // Fill defaults, check required.
+        for o in &self.opts {
+            if !self.values.contains_key(o.name) {
+                if o.is_flag {
+                    self.values.insert(o.name.to_string(), "false".to_string());
+                } else if let Some(d) = &o.default {
+                    self.values.insert(o.name.to_string(), d.clone());
+                } else {
+                    die(&format!("--{} is required", o.name), &self.usage());
+                }
+            }
+        }
+        Parsed { values: self.values, positional: self.positional }
+    }
+}
+
+#[derive(Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option {name:?} was not registered"))
+    }
+
+    pub fn usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer, got {:?}", self.get(name)))
+    }
+
+    pub fn u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer, got {:?}", self.get(name)))
+    }
+
+    pub fn f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects a number, got {:?}", self.get(name)))
+    }
+
+    pub fn f32(&self, name: &str) -> f32 {
+        self.f64(name) as f32
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        self.get(name) == "true"
+    }
+
+    /// Comma-separated integer list, e.g. `--workers 1,4,8,16,32`.
+    pub fn usize_list(&self, name: &str) -> Vec<usize> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects ints, got {s:?}"))
+            })
+            .collect()
+    }
+
+    pub fn f64_list(&self, name: &str) -> Vec<f64> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects floats, got {s:?}"))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        std::iter::once("prog".to_string())
+            .chain(parts.iter().map(|s| s.to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn parses_key_value_and_defaults() {
+        let p = Args::new("t")
+            .opt("workers", "4", "n")
+            .opt("gamma", "0.01", "g")
+            .flag("verbose", "v")
+            .parse_from(&argv(&["--workers", "8", "--verbose"]));
+        assert_eq!(p.usize("workers"), 8);
+        assert_eq!(p.f64("gamma"), 0.01);
+        assert!(p.bool("verbose"));
+    }
+
+    #[test]
+    fn parses_equals_form_and_lists() {
+        let p = Args::new("t")
+            .opt("workers", "1", "n")
+            .opt("sweep", "1,2", "s")
+            .parse_from(&argv(&["--workers=16", "--sweep=1,4,8"]));
+        assert_eq!(p.usize("workers"), 16);
+        assert_eq!(p.usize_list("sweep"), vec![1, 4, 8]);
+    }
+
+    #[test]
+    fn positional_args_collected() {
+        let p = Args::new("t").opt("x", "0", "x").parse_from(&argv(&["a", "--x", "1", "b"]));
+        assert_eq!(p.positional, vec!["a", "b"]);
+        assert_eq!(p.usize("x"), 1);
+    }
+}

@@ -1,0 +1,79 @@
+//! Minimal leveled logger (no `env_logger` offline). Level from
+//! `ASYBADMM_LOG` (error|warn|info|debug|trace), default `info`.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+use once_cell::sync::Lazy;
+
+#[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255);
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+
+fn level() -> u8 {
+    let l = LEVEL.load(Ordering::Relaxed);
+    if l != 255 {
+        return l;
+    }
+    let parsed = match std::env::var("ASYBADMM_LOG").as_deref() {
+        Ok("error") => 0,
+        Ok("warn") => 1,
+        Ok("debug") => 3,
+        Ok("trace") => 4,
+        _ => 2,
+    };
+    LEVEL.store(parsed, Ordering::Relaxed);
+    parsed
+}
+
+/// Override programmatically (tests, quiet benches).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn log(l: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if (l as u8) > level() {
+        return;
+    }
+    let t = START.elapsed().as_secs_f64();
+    let tag = match l {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{t:9.3}s {tag} {target}] {msg}");
+}
+
+#[macro_export]
+macro_rules! info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn_ {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, $target, format_args!($($arg)*))
+    };
+}

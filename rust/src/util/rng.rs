@@ -1,0 +1,328 @@
+//! Deterministic PRNG substrate (no `rand` crate available offline).
+//!
+//! Implements xoshiro256++ (Blackman & Vigna) seeded via SplitMix64, plus
+//! the distributions the data generator and coordinator need: uniform
+//! ranges, Bernoulli, Box-Muller normals, bounded Zipf (power-law feature
+//! frequencies for the synthetic KDDa-like dataset), Fisher-Yates shuffle
+//! and sampling without replacement.
+//!
+//! Everything in the repo that needs randomness takes an explicit `&mut
+//! Rng` so experiments are reproducible from a single seed recorded in the
+//! report header.
+
+/// xoshiro256++ PRNG. Deterministic, 2^256-1 period, splittable by
+/// re-seeding from `next_u64`.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second normal from Box-Muller.
+    spare_normal: Option<f64>,
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+#[inline]
+fn rotl(x: u64, k: u32) -> u64 {
+    x.rotate_left(k)
+}
+
+impl Rng {
+    /// Seed via SplitMix64 so that low-entropy seeds (0, 1, 2, ...) still
+    /// produce well-distributed states.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare_normal: None }
+    }
+
+    /// Derive an independent child stream (used to give each worker its
+    /// own deterministic stream from the experiment seed).
+    pub fn split(&mut self) -> Rng {
+        Rng::new(self.next_u64() ^ 0xA5A5_5A5A_DEAD_BEEF)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = rotl(s[0].wrapping_add(s[3]), 23).wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = rotl(s[3], 45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53 bits of precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n). Lemire's method without bias for the
+    /// sizes used here (n << 2^64, modulo bias < 2^-40 — fine for
+    /// simulation; tests only rely on coverage, not exact uniformity).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box-Muller (caches the spare).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        // Avoid u == 0.
+        let u = loop {
+            let u = self.f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let v = self.f64();
+        let r = (-2.0 * u.ln()).sqrt();
+        let (sin, cos) = (2.0 * std::f64::consts::PI * v).sin_cos();
+        self.spare_normal = Some(r * sin);
+        r * cos
+    }
+
+    #[inline]
+    pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal() as f32
+    }
+
+    /// Exponential with rate `lambda` (mean 1/lambda). Used by the delay
+    /// injector and the DES arrival processes.
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        debug_assert!(lambda > 0.0);
+        let u = loop {
+            let u = self.f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        -u.ln() / lambda
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// `k` distinct indices from [0, n), order randomized.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        // Partial Fisher-Yates over an index vec; O(n) memory is fine at
+        // the scales used (feature counts fit easily).
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// Bounded Zipf sampler over {0, .., n-1} with exponent `s` (probability
+/// of rank r proportional to 1/(r+1)^s). Uses the classic
+/// inverse-transform-with-rejection scheme (Devroye / as in rand_distr),
+/// O(1) per sample after O(1) setup.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: f64,
+    s: f64,
+    t: f64,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n >= 1);
+        assert!(s >= 0.0);
+        let n = n as f64;
+        let t = if (s - 1.0).abs() < 1e-9 {
+            1.0 + n.ln()
+        } else {
+            (n.powf(1.0 - s) - s) / (1.0 - s)
+        };
+        Zipf { n, s, t }
+    }
+
+    /// Inverse of the dominating distribution's CDF.
+    fn inv_cdf(&self, p: f64) -> f64 {
+        let pt = p * self.t;
+        if pt <= 1.0 {
+            pt
+        } else if (self.s - 1.0).abs() < 1e-9 {
+            (pt - 1.0).exp()
+        } else {
+            (1.0 + pt * (1.0 - self.s)).powf(1.0 / (1.0 - self.s))
+        }
+    }
+
+    /// Sample a rank in [0, n).
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        loop {
+            let p = 1.0 - rng.f64(); // (0, 1]
+            let x = self.inv_cdf(p);
+            let k = x.ceil().max(1.0).min(self.n);
+            // Acceptance test (k within [x, x+1) region).
+            let q = if (self.s - 1.0).abs() < 1e-9 {
+                k / (k + 1.0) * x.max(1.0) / k
+            } else {
+                (k / (k + 1.0)).powf(self.s - 1.0) * x.max(1.0).powf(self.s) / k.powf(self.s)
+            };
+            if rng.f64() < q {
+                return (k as usize) - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let (mut a, mut b) = (Rng::new(1), Rng::new(2));
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_covers_all_residues() {
+        let mut r = Rng::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            seen[r.below(10)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            sum += z;
+            sq += z * z;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::new(13);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.exponential(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(9);
+        let s = r.sample_indices(50, 20);
+        assert_eq!(s.len(), 20);
+        let mut dedup = s.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 20);
+        assert!(s.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_in_range() {
+        let z = Zipf::new(1000, 1.1);
+        let mut r = Rng::new(17);
+        let mut counts = vec![0usize; 1000];
+        for _ in 0..50_000 {
+            let k = z.sample(&mut r);
+            assert!(k < 1000);
+            counts[k] += 1;
+        }
+        // Rank 0 must dominate rank 100 heavily under s=1.1.
+        assert!(counts[0] > 20 * counts[100].max(1), "{} vs {}", counts[0], counts[100]);
+        // Tail still gets occasional mass.
+        assert!(counts[500..].iter().sum::<usize>() > 0);
+    }
+
+    #[test]
+    fn split_streams_are_independent_ish() {
+        let mut parent = Rng::new(1);
+        let mut a = parent.split();
+        let mut b = parent.split();
+        let va: Vec<u64> = (0..4).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..4).map(|_| b.next_u64()).collect();
+        assert_ne!(va, vb);
+    }
+}

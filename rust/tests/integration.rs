@@ -1,0 +1,283 @@
+//! Cross-module integration tests: convergence semantics (Theorem 1's
+//! observable consequences), async-vs-sync agreement, delay/γ behaviour,
+//! DES scaling shape, and data-pipeline round trips.
+
+use asybadmm::baselines::{run_hogwild_sgd, run_locked_admm, run_sync_admm};
+use asybadmm::config::{Backend, BlockSelection, Config};
+use asybadmm::coordinator::run_async;
+use asybadmm::data::{gen_partitioned, parse_libsvm, partition_even, LossKind};
+use asybadmm::problem::Problem;
+use asybadmm::sim::{run_sim, CostModel};
+
+fn tiny(epochs: usize) -> Config {
+    let mut cfg = Config::tiny_test();
+    cfg.epochs = epochs;
+    cfg
+}
+
+fn sim_cost() -> CostModel {
+    CostModel {
+        compute_fixed_s: 1e-4,
+        compute_per_row_s: 1e-5,
+        server_service_s: 1e-5,
+        net_mean_s: 1e-4,
+        chunk_rows: 0,
+        per_chunk_s: 0.0,
+        compute_jitter: 0.0,
+    }
+}
+
+#[test]
+fn async_matches_sync_final_objective() {
+    // Theorem 1's punchline, observably: asynchrony (bounded delay) does
+    // not change where the algorithm goes.  Async epochs touch one block
+    // per iteration, sync touches all |N(i)| per epoch — compare at
+    // matched block-update counts.
+    let cfg_sync = {
+        let mut c = tiny(60);
+        c.gamma = 0.0;
+        c
+    };
+    let (ds, shards) = gen_partitioned(&cfg_sync.synth_spec(), cfg_sync.n_workers);
+    let sync = run_sync_admm(&cfg_sync, &ds, &shards).unwrap();
+
+    // Async needs extra epochs: staleness slows per-update progress.
+    let mut cfg_async = tiny(60 * 6); // blocks_per_worker = 4 (+50% slack)
+    cfg_async.selection = BlockSelection::Cyclic;
+    let async_r = run_async(&cfg_async, &ds, &shards).unwrap();
+
+    let (a, b) = (sync.final_objective.total(), async_r.final_objective.total());
+    assert!(
+        (a - b).abs() < 0.04,
+        "sync {a} vs async {b} diverged beyond tolerance"
+    );
+}
+
+#[test]
+fn stationarity_residual_decreases_with_training() {
+    let (ds, shards) = gen_partitioned(&tiny(1).synth_spec(), 3);
+    let short = run_async(&tiny(20), &ds, &shards).unwrap();
+    let long = run_async(&tiny(400), &ds, &shards).unwrap();
+    assert!(
+        long.stationarity < short.stationarity,
+        "P(X,Y,z) should decay: {} -> {}",
+        short.stationarity,
+        long.stationarity
+    );
+    assert!(
+        long.consensus_max < short.consensus_max * 2.0,
+        "consensus gap exploded"
+    );
+}
+
+#[test]
+fn objective_curve_is_mostly_monotone() {
+    let cfg = tiny(300);
+    let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+    let r = run_async(&cfg, &ds, &shards).unwrap();
+    // Allow small async jitter, but the curve must trend down: count
+    // increases.
+    let objs: Vec<f64> = r.samples.iter().map(|s| s.objective).collect();
+    let increases = objs.windows(2).filter(|w| w[1] > w[0] + 1e-4).count();
+    assert!(
+        increases * 5 <= objs.len(),
+        "{increases} increases out of {} samples",
+        objs.len()
+    );
+    assert!(objs.last().unwrap() < &(objs[0] * 0.95));
+}
+
+#[test]
+fn gamma_stabilizes_large_delay() {
+    // E5 (paper §4 remark): with heavy staleness, larger γ must not hurt
+    // and should help (or at least keep) convergence vs γ≈0.
+    let mk = |gamma: f32| {
+        let mut c = tiny(400);
+        c.gamma = gamma;
+        c.seed = 11;
+        c
+    };
+    let (ds, shards) = gen_partitioned(&mk(0.0).synth_spec(), 3);
+
+    // Heavy delay: workers only refresh z every 8 iterations.
+    let run_with_hold = |cfg: &Config| {
+        // pull_hold is plumbed through DelayPolicy inside run_async via
+        // net_delay; emulate by enforcing staleness with sim instead:
+        let mut cost = sim_cost();
+        cost.net_mean_s = 5e-3; // long network -> very stale pulls
+        run_sim(cfg, &ds, &shards, &cost).unwrap()
+    };
+    let loose = run_with_hold(&mk(0.0));
+    let tight = run_with_hold(&mk(0.5));
+    // Both converge on this small problem; γ>0 must not be worse than
+    // γ=0 by more than noise, and the γ=0 run must not be better than
+    // γ-regularized by a large margin (stability).
+    let (lo, hi) = (loose.final_objective.total(), tight.final_objective.total());
+    assert!(hi < lo + 0.02, "gamma hurt badly: {hi} vs {lo}");
+}
+
+#[test]
+fn enforced_delay_bound_holds_under_injected_latency() {
+    let mut cfg = tiny(120);
+    cfg.net_delay_mean_ms = 0.2;
+    cfg.max_delay = 3;
+    cfg.enforce_delay_bound = true;
+    let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+    let r = run_async(&cfg, &ds, &shards).unwrap();
+    for w in &r.worker_stats {
+        assert!(w.max_staleness <= 4, "staleness {} > bound+1", w.max_staleness);
+    }
+    assert!(r.final_objective.total() < 0.69);
+}
+
+#[test]
+fn cyclic_and_uniform_selection_both_converge() {
+    let (ds, shards) = gen_partitioned(&tiny(1).synth_spec(), 3);
+    for sel in [BlockSelection::UniformRandom, BlockSelection::Cyclic] {
+        let mut cfg = tiny(240);
+        cfg.selection = sel;
+        let r = run_async(&cfg, &ds, &shards).unwrap();
+        assert!(
+            r.final_objective.total() < 0.66,
+            "{sel:?}: {}",
+            r.final_objective.total()
+        );
+    }
+}
+
+#[test]
+fn all_methods_reach_comparable_objectives() {
+    // ADMM variants agree; HOGWILD-SGD heads the same direction.
+    let cfg = tiny(200);
+    let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+    let asy = run_async(&cfg, &ds, &shards).unwrap().final_objective.total();
+    let locked = {
+        // full-vector epochs do 4 blocks each; add slack for its slower
+        // per-pass progress under the single global latch.
+        run_locked_admm(&tiny(250), &ds, &shards).unwrap().final_objective.total()
+    };
+    let sgd = run_hogwild_sgd(&tiny(200), &ds, &shards, 0.5)
+        .unwrap()
+        .final_objective
+        .total();
+    assert!((asy - locked).abs() < 0.08, "asy {asy} vs locked {locked}");
+    assert!(sgd < 0.693, "sgd did not descend: {sgd}");
+}
+
+#[test]
+fn sim_speedup_is_near_linear_then_saturates() {
+    // Shape of paper Table 1: strong scaling to p workers, less than
+    // ideal at the top end due to server contention.
+    let k = 30;
+    let mut times = Vec::new();
+    for p in [1usize, 2, 4, 8] {
+        let mut cfg = tiny(k);
+        cfg.n_workers = p;
+        cfg.samples = 192;
+        cfg.blocks_per_worker = 4;
+        let (ds, shards) = gen_partitioned(&cfg.synth_spec(), p);
+        // Compute-dominated cost model (the paper's regime): per-row
+        // work dwarfs the fixed dispatch + network terms, so strong
+        // scaling is visible. The Amdahl'd regime is covered by
+        // examples/speedup_table1.
+        let cost = CostModel {
+            compute_fixed_s: 1e-5,
+            compute_per_row_s: 2e-4,
+            server_service_s: 1e-5,
+            net_mean_s: 2e-5,
+            chunk_rows: 0,
+            per_chunk_s: 0.0,
+            compute_jitter: 0.0,
+        };
+        let r = run_sim(&cfg, &ds, &shards, &cost).unwrap();
+        times.push((p, r.time_to_epoch[k]));
+    }
+    let t1 = times[0].1;
+    for &(p, tp) in &times[1..] {
+        let speedup = t1 / tp;
+        assert!(
+            speedup > 0.55 * p as f64,
+            "p={p}: speedup {speedup:.2} too far from linear"
+        );
+        assert!(speedup < 1.3 * p as f64, "p={p}: superlinear {speedup:.2}?");
+    }
+}
+
+#[test]
+fn sim_virtual_time_scales_with_cost_model() {
+    let cfg = tiny(40);
+    let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+    let slow = CostModel { compute_per_row_s: 1e-4, ..sim_cost() };
+    let fast = CostModel { compute_per_row_s: 1e-6, ..sim_cost() };
+    let r_slow = run_sim(&cfg, &ds, &shards, &slow).unwrap();
+    let r_fast = run_sim(&cfg, &ds, &shards, &fast).unwrap();
+    assert!(r_slow.virtual_time_s > r_fast.virtual_time_s * 2.0);
+    // identical numerics regardless of the cost model (same event order
+    // is NOT guaranteed, but convergence neighborhood is)
+    assert!(
+        (r_slow.final_objective.total() - r_fast.final_objective.total()).abs() < 0.02
+    );
+}
+
+#[test]
+fn libsvm_pipeline_end_to_end() {
+    // Tiny hand-written libsvm text -> partition -> sync ADMM.
+    let mut text = String::new();
+    let mut rng = asybadmm::util::rng::Rng::new(4);
+    for i in 0..64 {
+        let y = if i % 2 == 0 { 1 } else { -1 };
+        let f1 = 1 + (i % 8);
+        let v = (y as f32) * (1.0 + rng.f32());
+        text.push_str(&format!("{y} {f1}:{v} {}:{:.3}\n", 9 + (i % 4), rng.f32()));
+    }
+    let ds = parse_libsvm(&text, LossKind::Logistic, 4).unwrap();
+    let shards = partition_even(&ds, 2);
+    let mut cfg = tiny(60);
+    cfg.samples = 64;
+    cfg.n_blocks = ds.geometry.n_blocks;
+    cfg.block_size = 4;
+    cfg.n_workers = 2;
+    cfg.n_servers = 2;
+    cfg.blocks_per_worker = cfg.n_blocks;
+    let r = run_sync_admm(&cfg, &ds, &shards).unwrap();
+    assert!(r.final_objective.total() < 0.6, "{}", r.final_objective.total());
+}
+
+#[test]
+fn lasso_squared_loss_converges() {
+    let mut cfg = tiny(200);
+    cfg.loss = LossKind::Squared;
+    cfg.lambda = 1e-3;
+    cfg.rho = 4.0;
+    let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+    let r = run_async(&cfg, &ds, &shards).unwrap();
+    let first = r.samples.first().unwrap().objective;
+    assert!(
+        r.final_objective.total() < first * 0.75,
+        "{first} -> {}",
+        r.final_objective.total()
+    );
+}
+
+#[test]
+fn single_worker_single_server_degenerates_to_star() {
+    // p=1, M servers=1: the architecture degenerates to the Spark-style
+    // star topology the paper mentions — must still work.
+    let mut cfg = tiny(120);
+    cfg.n_workers = 1;
+    cfg.n_servers = 1;
+    let (ds, shards) = gen_partitioned(&cfg.synth_spec(), 1);
+    let r = run_async(&cfg, &ds, &shards).unwrap();
+    assert!(r.final_objective.total() < 0.67);
+    assert_eq!(r.worker_stats.len(), 1);
+}
+
+#[test]
+fn backend_enum_roundtrip_and_config_validation() {
+    assert_eq!(Backend::parse("xla").unwrap(), Backend::Xla);
+    let mut cfg = Config::default();
+    cfg.apply_kv("backend", "xla").unwrap();
+    assert_eq!(cfg.backend, Backend::Xla);
+    let p = Problem::new(LossKind::Logistic, 1e-5, 1e4);
+    assert_eq!(p.curvature_bound(), 0.25);
+}

@@ -1,0 +1,295 @@
+//! Property-based tests on coordinator/substrate invariants (DESIGN.md
+//! §8), driven by the in-tree seeded property harness.
+
+use asybadmm::admm::{gather_packed, prox_l1_box, soft_threshold};
+use asybadmm::coordinator::{BlockStore, Topology};
+use asybadmm::data::{gen_partitioned, BlockGeometry, Dataset, LossKind, SynthSpec};
+use asybadmm::sparse::{dense, CsrBuilder, CsrMatrix};
+use asybadmm::testutil::forall;
+use asybadmm::util::rng::Rng;
+
+fn random_spec(rng: &mut Rng) -> (SynthSpec, usize) {
+    let n_blocks = 2 + rng.below(8);
+    let db = [4, 8, 16][rng.below(3)];
+    let bpw = 1 + rng.below(n_blocks);
+    let shared = rng.below(bpw + 1).min(bpw);
+    let workers = 1 + rng.below(5);
+    let spec = SynthSpec {
+        kind: if rng.bernoulli(0.5) { LossKind::Logistic } else { LossKind::Squared },
+        samples: 16 + rng.below(64),
+        geometry: BlockGeometry::new(n_blocks, db),
+        nnz_per_row: 1 + rng.below(6),
+        blocks_per_worker: bpw,
+        shared_blocks: shared,
+        zipf_s: 0.8 + rng.f64(),
+        truth_density: 0.1,
+        noise: 0.05,
+        seed: rng.next_u64(),
+    };
+    (spec, workers)
+}
+
+/// (a) Partition covers every sample exactly once and preserves nnz.
+#[test]
+fn prop_partition_covers_all_nnz() {
+    forall(
+        "partition-covers",
+        25,
+        |rng| random_spec(rng),
+        |(spec, workers)| {
+            let (ds, shards) = gen_partitioned(spec, *workers);
+            let total: usize = shards.iter().map(|s| s.samples()).sum();
+            if total != ds.samples() {
+                return Err(format!("row cover {total} != {}", ds.samples()));
+            }
+            let nnz: usize = shards.iter().map(|s| s.a_packed.nnz()).sum();
+            if nnz != ds.a.nnz() {
+                return Err(format!("nnz cover {nnz} != {}", ds.a.nnz()));
+            }
+            // contiguity: shard ranges tile [0, m)
+            let mut expect = 0;
+            for s in &shards {
+                if s.rows.0 != expect {
+                    return Err(format!("gap at row {expect}"));
+                }
+                expect = s.rows.1;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (b) Every (worker, block) edge maps to exactly one owning server, and
+/// the packed slot mapping is bijective.
+#[test]
+fn prop_topology_routing_is_total_and_unique() {
+    forall(
+        "routing",
+        25,
+        |rng| {
+            let (spec, workers) = random_spec(rng);
+            let servers = 1 + rng.below(spec.geometry.n_blocks);
+            (spec, workers, servers)
+        },
+        |(spec, workers, servers)| {
+            let (_, shards) = gen_partitioned(spec, *workers);
+            let topo = Topology::build(&shards, spec.geometry.n_blocks, *servers);
+            for shard in &shards {
+                for (slot, &j) in shard.active_blocks.iter().enumerate() {
+                    let srv = topo.server_of_block[j];
+                    if !topo.blocks_of_server[srv].contains(&j) {
+                        return Err(format!("block {j} not owned by its server {srv}"));
+                    }
+                    if shard.slot_of_block(j) != Some(slot) {
+                        return Err(format!("slot map broken for block {j}"));
+                    }
+                    if shard.block_of_slot(slot) != j {
+                        return Err("slot inverse broken".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (c) Block-store versions strictly increase per write and reads are
+/// torn-free under concurrency (single-block consistency).
+#[test]
+fn prop_block_store_versions_monotone() {
+    forall(
+        "store-versions",
+        20,
+        |rng| (1 + rng.below(6), [2usize, 4, 8][rng.below(3)], 1 + rng.below(30)),
+        |&(blocks, db, writes)| {
+            let store = BlockStore::new(blocks, db);
+            let mut rng = Rng::new(42);
+            let mut versions = vec![0u64; blocks];
+            for _ in 0..writes {
+                let j = rng.below(blocks);
+                let data: Vec<f32> = (0..db).map(|_| rng.f32()).collect();
+                let v = store.write(j, &data);
+                if v != versions[j] + 1 {
+                    return Err(format!("version jump {} -> {v}", versions[j]));
+                }
+                versions[j] = v;
+                let mut out = vec![0.0f32; db];
+                let rv = store.read_into(j, &mut out);
+                if rv != v || out != data {
+                    return Err("read does not reflect write".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (d) prox_l1_box is firmly nonexpansive and fixes feasible points
+/// when lambda = 0, gamma = 0, w = denom*z.
+#[test]
+fn prop_prox_nonexpansive_and_fixed_points() {
+    forall(
+        "prox",
+        50,
+        |rng| {
+            let db = 1 + rng.below(32);
+            let u: Vec<f32> = (0..db).map(|_| rng.normal_f32(0.0, 5.0)).collect();
+            let v: Vec<f32> = (0..db).map(|_| rng.normal_f32(0.0, 5.0)).collect();
+            let lam = rng.f32() * 2.0;
+            let clip = 0.5 + rng.f32() * 10.0;
+            let denom = 0.5 + rng.f32() * 20.0;
+            (u, v, lam, clip, denom)
+        },
+        |(u, v, lam, clip, denom)| {
+            let db = u.len();
+            let zeros = vec![0.0f32; db];
+            let (mut pu, mut pv) = (vec![0.0f32; db], vec![0.0f32; db]);
+            prox_l1_box(&zeros, u, 0.0, *denom, *lam, *clip, &mut pu);
+            prox_l1_box(&zeros, v, 0.0, *denom, *lam, *clip, &mut pv);
+            let din: f64 = u
+                .iter()
+                .zip(v.iter())
+                .map(|(a, b)| (((a - b) / denom) as f64).powi(2))
+                .sum();
+            let dout: f64 =
+                pu.iter().zip(&pv).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+            if dout > din + 1e-6 {
+                return Err(format!("expansive: {dout} > {din}"));
+            }
+            // fixed point: lam=0, w = denom*z (feasible z)
+            let z: Vec<f32> = u.iter().map(|x| (x / 4.0).clamp(-clip, *clip)).collect();
+            let w: Vec<f32> = z.iter().map(|x| x * denom).collect();
+            let mut pz = vec![0.0f32; db];
+            prox_l1_box(&z, &w, 0.0, *denom, 0.0, *clip, &mut pz);
+            for (a, b) in pz.iter().zip(&z) {
+                if (a - b).abs() > 1e-5 {
+                    return Err(format!("not a fixed point: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (e) soft-threshold shrinks toward zero by exactly thr.
+#[test]
+fn prop_soft_threshold_geometry() {
+    forall(
+        "soft-threshold",
+        100,
+        |rng| (rng.normal_f32(0.0, 10.0), rng.f32() * 3.0),
+        |&(v, thr)| {
+            let s = soft_threshold(v, thr);
+            if v.abs() <= thr {
+                if s != 0.0 {
+                    return Err(format!("inside threshold but {s}"));
+                }
+            } else {
+                if (s.abs() - (v.abs() - thr)).abs() > 1e-6 {
+                    return Err("wrong shrink amount".into());
+                }
+                if s.signum() != v.signum() {
+                    return Err("sign flipped".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (f) sparse spmv == dense spmv on random matrices.
+#[test]
+fn prop_sparse_matches_dense() {
+    forall(
+        "spmv",
+        30,
+        |rng| {
+            let rows = 1 + rng.below(24);
+            let cols = 1 + rng.below(24);
+            let mut b = CsrBuilder::new(rows, cols);
+            let mut d = vec![0.0f32; rows * cols];
+            for r in 0..rows {
+                for c in 0..cols {
+                    if rng.bernoulli(0.3) {
+                        let v = rng.normal_f32(0.0, 1.0);
+                        b.push(r, c, v);
+                        d[r * cols + c] = v;
+                    }
+                }
+            }
+            let x: Vec<f32> = (0..cols).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let s: Vec<f32> = (0..rows).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            (b.build(), d, rows, cols, x, s)
+        },
+        |(a, d, rows, cols, x, s): &(CsrMatrix, Vec<f32>, usize, usize, Vec<f32>, Vec<f32>)| {
+            let mut y = vec![0.0f32; *rows];
+            a.matvec(x, &mut y);
+            let yd = dense::matvec(d, *rows, *cols, x);
+            for (u, v) in y.iter().zip(&yd) {
+                if (u - v).abs() > 1e-3 {
+                    return Err(format!("matvec {u} vs {v}"));
+                }
+            }
+            let mut g = vec![0.0f32; *cols];
+            a.tmatvec_acc(s, &mut g);
+            let gd = dense::tmatvec(d, *rows, *cols, s);
+            for (u, v) in g.iter().zip(&gd) {
+                if (u - v).abs() > 1e-3 {
+                    return Err(format!("tmatvec {u} vs {v}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (g) gather_packed is the exact inverse of the packing layout.
+#[test]
+fn prop_gather_packed_consistent() {
+    forall(
+        "gather-packed",
+        25,
+        |rng| random_spec(rng),
+        |(spec, workers)| {
+            let (ds, shards): (Dataset, _) = gen_partitioned(spec, *workers);
+            let d = ds.dim();
+            let mut rng = Rng::new(1);
+            let z: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            for shard in &shards {
+                let packed = gather_packed(shard, &z);
+                let db = shard.block_size;
+                for (slot, &j) in shard.active_blocks.iter().enumerate() {
+                    if packed[slot * db..(slot + 1) * db] != z[j * db..(j + 1) * db] {
+                        return Err(format!("slot {slot} block {j} mismatch"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (h) The uniform block sampler covers all of 𝒩(i).
+#[test]
+fn prop_block_selection_covers_footprint() {
+    forall(
+        "selection-coverage",
+        10,
+        |rng| random_spec(rng),
+        |(spec, workers)| {
+            let (_, shards) = gen_partitioned(spec, *workers);
+            let mut rng = Rng::new(9);
+            for shard in &shards {
+                let n = shard.n_slots();
+                let mut seen = vec![false; n];
+                for _ in 0..n * 50 {
+                    seen[rng.below(n)] = true;
+                }
+                if !seen.iter().all(|&s| s) {
+                    return Err("uniform selection failed to cover slots".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
