@@ -1,22 +1,69 @@
-//! L1 kernel bench: the fused margin + block-gradient hot-spot, native
-//! CSR vs the AOT XLA artifact (grad_chunk / fused worker_step).
+//! L1 kernel bench: the fused margin + block-gradient hot-spot — the
+//! precomputed block-slice index vs the per-row `partition_point` scan,
+//! native CSR across scales, and (when artifacts exist) the AOT XLA
+//! artifact (grad_chunk / fused worker_step).
 //!
-//!     cargo bench --bench kernel_gradient        # full
+//!     cargo bench --bench kernel_gradient [-- --json]
 //!     BENCH_QUICK=1 cargo bench --bench kernel_gradient
 
 use std::path::Path;
 
 use asybadmm::admm::NativeEngine;
-use asybadmm::bench::harness_from_env;
+use asybadmm::bench::{emit_hotpath_json, harness_from_env, json_requested};
 use asybadmm::data::{gen_partitioned, BlockGeometry, LossKind, SynthSpec};
 use asybadmm::problem::Problem;
 use asybadmm::runtime::{Manifest, WorkerXla, XlaEngine};
+use asybadmm::util::rng::Rng;
 
 fn main() {
     let mut h = harness_from_env();
     println!("== L1 gradient kernel (lower is better) ==");
 
-    // --- native across scales -------------------------------------------
+    // --- block-sliced index vs partition_point scan -----------------------
+    // Shards where one block covers 1/blocks of the packed columns; the
+    // sliced kernel must win whenever that share is <= 25%.
+    let mut slice_speedups: Vec<f64> = Vec::new();
+    let slice_cases = [(2048usize, 8usize, 64usize, 16usize), (2048, 16, 64, 32), (512, 4, 256, 24)];
+    for (m, blocks, db, nnz) in slice_cases {
+        let spec = SynthSpec {
+            samples: m,
+            geometry: BlockGeometry::new(blocks, db),
+            nnz_per_row: nnz,
+            blocks_per_worker: blocks,
+            shared_blocks: 1,
+            ..Default::default()
+        };
+        let (_, shards) = gen_partitioned(&spec, 1);
+        let shard = &shards[0];
+        let a = &shard.a_packed;
+        let mut rng = Rng::new(17);
+        let s: Vec<f32> = (0..m).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut g = vec![0.0f32; db];
+        let slot = blocks / 2; // interior block: worst case for the scan
+        let (lo, hi) = shard.slot_range(slot);
+        let share = 100.0 / blocks as f64;
+        let scan = h
+            .bench(&format!("scan  block-grad d={} db={db} ({share:.0}% cols)", blocks * db), || {
+                g.fill(0.0);
+                a.tmatvec_block_acc(&s, lo, hi, &mut g);
+            })
+            .mean_s;
+        let sliced = h
+            .bench(&format!("slice block-grad d={} db={db} ({share:.0}% cols)", blocks * db), || {
+                g.fill(0.0);
+                a.tmatvec_block_sliced(&s, &shard.slices, slot, &mut g);
+            })
+            .mean_s;
+        let speedup = scan / sliced.max(1e-12);
+        slice_speedups.push(speedup);
+        println!(
+            "  -> sliced {speedup:.2}x vs scan ({:.1} vs {:.1} Mnnz-in-block/s)",
+            shard.slices.block_nnz(slot) as f64 / sliced / 1e6,
+            shard.slices.block_nnz(slot) as f64 / scan / 1e6,
+        );
+    }
+
+    // --- fused native grad_block across scales ----------------------------
     for (m, blocks, db, nnz) in [(256usize, 8usize, 64usize, 16usize), (2048, 8, 512, 40)] {
         let spec = SynthSpec {
             samples: m,
@@ -42,37 +89,48 @@ fn main() {
 
     // --- XLA artifacts (requires `make artifacts`) ------------------------
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let Ok(manifest) = Manifest::load(&dir) else {
-        println!("(skipping XLA benches: run `make artifacts`)");
-        return;
-    };
-    for (mc, dp, db, m, blocks, nnz) in
-        [(256usize, 512usize, 64usize, 256usize, 8usize, 16usize), (2048, 4096, 512, 2048, 8, 40)]
-    {
-        let spec = SynthSpec {
-            samples: m,
-            geometry: BlockGeometry::new(blocks, db),
-            nnz_per_row: nnz,
-            blocks_per_worker: blocks,
-            shared_blocks: 1,
-            ..Default::default()
-        };
-        let (ds, shards) = gen_partitioned(&spec, 1);
-        let shard = &shards[0];
-        let Ok(engine) = XlaEngine::new(&manifest, "logistic", mc, dp, db) else {
-            println!("(no artifacts for m_chunk={mc}; skipping)");
-            continue;
-        };
-        let mut xla = WorkerXla::new(engine, shard, 1.0 / ds.samples() as f32).unwrap();
-        let z = vec![0.01f32; shard.packed_dim()];
-        let y = vec![0.0f32; db];
-        let r = h.bench(&format!("xla   worker_step m={m} d_pad={dp} db={db}"), || {
-            xla.step(&z, &y, 0, 4.0).unwrap();
-        });
-        // Dense MACs the artifact executes: margins (m*dp) + block grad
-        // (m*db) per chunk.
-        let macs = (m * dp + m * db) as f64;
-        println!("  -> {:.2} GMAC/s dense-equivalent", macs / r.mean_s / 1e9);
+    match Manifest::load(&dir) {
+        Err(_) => println!("(skipping XLA benches: run `make artifacts`)"),
+        Ok(manifest) => {
+            for (mc, dp, db, m, blocks, nnz) in [
+                (256usize, 512usize, 64usize, 256usize, 8usize, 16usize),
+                (2048, 4096, 512, 2048, 8, 40),
+            ] {
+                let spec = SynthSpec {
+                    samples: m,
+                    geometry: BlockGeometry::new(blocks, db),
+                    nnz_per_row: nnz,
+                    blocks_per_worker: blocks,
+                    shared_blocks: 1,
+                    ..Default::default()
+                };
+                let (ds, shards) = gen_partitioned(&spec, 1);
+                let shard = &shards[0];
+                let Ok(engine) = XlaEngine::new(&manifest, "logistic", mc, dp, db) else {
+                    println!("(no artifacts for m_chunk={mc}; skipping)");
+                    continue;
+                };
+                let mut xla = WorkerXla::new(engine, shard, 1.0 / ds.samples() as f32).unwrap();
+                let z = vec![0.01f32; shard.packed_dim()];
+                let y = vec![0.0f32; db];
+                let r = h.bench(&format!("xla   worker_step m={m} d_pad={dp} db={db}"), || {
+                    xla.step(&z, &y, 0, 4.0).unwrap();
+                });
+                // Dense MACs the artifact executes: margins (m*dp) + block
+                // grad (m*db) per chunk.
+                let macs = (m * dp + m * db) as f64;
+                println!("  -> {:.2} GMAC/s dense-equivalent", macs / r.mean_s / 1e9);
+            }
+        }
     }
     println!("\n{}", h.csv());
+
+    if json_requested() {
+        let min_speedup = slice_speedups.iter().cloned().fold(f64::INFINITY, f64::min);
+        emit_hotpath_json(
+            "kernel_gradient",
+            &h,
+            &[("sliced_vs_scan_min_speedup", min_speedup)],
+        );
+    }
 }

@@ -2,32 +2,142 @@
 //! single-global-lock full-vector design of prior asynchronous ADMMs —
 //! the motivating claim of §1.
 //!
-//! Two measurements:
-//!  1. threaded wall-clock throughput (iterations/s) of run_async vs
+//! Three measurements:
+//!  1. store-level read throughput: the seqlock double-buffer BlockStore
+//!     vs the RwLock copy-under-lock baseline under 8 concurrent readers
+//!     + 1 writer per block (the hot-path gate: seqlock must win ≥ 2×),
+//!  2. threaded wall-clock throughput (iterations/s) of run_async vs
 //!     run_locked_admm at identical budgets (on a multi-core host the
-//!     gap widens with p; on this 1-core machine it mostly shows
+//!     gap widens with p; on a 1-2 core machine it mostly shows
 //!     overhead parity), and
-//!  2. the DES with per-block servers vs ONE server shard with service
+//!  3. the DES with per-block servers vs ONE server shard with service
 //!     time scaled by |N(i)| (full-vector application) — the
 //!     architecture-level serialization cost, core-count independent.
+//!
+//!     cargo bench --bench locking_ablation [-- --json]
+//!     BENCH_QUICK=1 cargo bench --bench locking_ablation
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Duration;
 
 use asybadmm::baselines::run_locked_admm;
+use asybadmm::bench::{emit_hotpath_json, harness_from_env, json_requested, BenchResult};
 use asybadmm::config::Config;
-use asybadmm::coordinator::run_async;
+use asybadmm::coordinator::{run_async, BlockStore, RwBlockStore};
 use asybadmm::data::gen_partitioned;
 use asybadmm::sim::{run_sim, CostModel};
 
+/// Store API surface the ablation needs, implemented by both stores.
+trait Store: Sync {
+    fn read_into(&self, j: usize, out: &mut [f32]) -> u64;
+    fn write(&self, j: usize, data: &[f32]) -> u64;
+}
+
+impl Store for BlockStore {
+    fn read_into(&self, j: usize, out: &mut [f32]) -> u64 {
+        BlockStore::read_into(self, j, out)
+    }
+    fn write(&self, j: usize, data: &[f32]) -> u64 {
+        BlockStore::write(self, j, data)
+    }
+}
+
+impl Store for RwBlockStore {
+    fn read_into(&self, j: usize, out: &mut [f32]) -> u64 {
+        RwBlockStore::read_into(self, j, out)
+    }
+    fn write(&self, j: usize, data: &[f32]) -> u64 {
+        RwBlockStore::write(self, j, data)
+    }
+}
+
+/// Reads/s across `readers` reader threads while one writer hammers
+/// every block round-robin (i.e. 1 writer per block at any instant).
+fn read_throughput<S: Store>(
+    store: &S,
+    n_blocks: usize,
+    db: usize,
+    readers: usize,
+    dur: Duration,
+) -> f64 {
+    let stop = AtomicBool::new(false);
+    let total = AtomicU64::new(0);
+    std::thread::scope(|scope| {
+        let (stop, total) = (&stop, &total);
+        for t in 0..readers {
+            scope.spawn(move || {
+                let mut buf = vec![0.0f32; db];
+                let mut n = 0u64;
+                let mut j = t;
+                while !stop.load(Ordering::Relaxed) {
+                    store.read_into(j % n_blocks, &mut buf);
+                    std::hint::black_box(&buf);
+                    j += 1;
+                    n += 1;
+                }
+                total.fetch_add(n, Ordering::Relaxed);
+            });
+        }
+        scope.spawn(move || {
+            let data = vec![1.0f32; db];
+            let mut j = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                store.write(j % n_blocks, &data);
+                j += 1;
+            }
+        });
+        std::thread::sleep(dur);
+        stop.store(true, Ordering::Relaxed);
+    });
+    total.load(Ordering::Relaxed) as f64 / dur.as_secs_f64()
+}
+
+/// Record an externally-timed measurement (seconds per op) so it lands
+/// in the harness's CSV/JSON alongside closure-timed benches.
+fn record(h: &mut asybadmm::bench::Harness, name: &str, per_op_s: f64) {
+    h.results.push(BenchResult {
+        name: name.to_string(),
+        samples: vec![per_op_s],
+        mean_s: per_op_s,
+        std_s: 0.0,
+        p50_s: per_op_s,
+        p95_s: per_op_s,
+    });
+}
+
 fn main() {
     let quick = std::env::var("BENCH_QUICK").as_deref() == Ok("1");
+    let mut h = harness_from_env();
+    println!("== E4: lock-free block-wise vs global-lock full-vector ==");
+
+    // 1. Store microbench: seqlock vs RwLock under readers + writer.
+    let (n_blocks, db, readers) = (4usize, 256usize, 8usize);
+    let dur = Duration::from_millis(if quick { 80 } else { 400 });
+    // Warm both stores (thread spawn amortization, page faults).
+    let seq_store = BlockStore::new(n_blocks, db);
+    let rw_store = RwBlockStore::new(n_blocks, db);
+    read_throughput(&seq_store, n_blocks, db, readers, Duration::from_millis(20));
+    read_throughput(&rw_store, n_blocks, db, readers, Duration::from_millis(20));
+    let seq_rps = read_throughput(&seq_store, n_blocks, db, readers, dur);
+    let rw_rps = read_throughput(&rw_store, n_blocks, db, readers, dur);
+    let ratio = seq_rps / rw_rps.max(1.0);
+    record(&mut h, "seqlock store read (8r+1w, db=256)", 1.0 / seq_rps.max(1.0));
+    record(&mut h, "rwlock store read (8r+1w, db=256)", 1.0 / rw_rps.max(1.0));
+    println!(
+        "store reads ({readers} readers + 1 writer, {n_blocks} blocks x db={db}):\n\
+         \x20 seqlock {:>10.0} reads/s\n\
+         \x20 rwlock  {:>10.0} reads/s\n\
+         \x20 -> seqlock/rwlock = {ratio:.2}x  (gate: >= 2.0x)",
+        seq_rps, rw_rps
+    );
+
+    // 2. Wall-clock (threaded).
     let mut cfg = Config::small();
     cfg.samples = if quick { 512 } else { 2048 };
     cfg.epochs = if quick { 100 } else { 400 };
     cfg.log_every = 100_000;
     let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
 
-    println!("== E4: lock-free block-wise vs global-lock full-vector ==");
-
-    // 1. Wall-clock (threaded).
     let t0 = std::time::Instant::now();
     let r_free = run_async(&cfg, &ds, &shards).unwrap();
     let t_free = t0.elapsed().as_secs_f64();
@@ -42,21 +152,26 @@ fn main() {
     let t_locked = t0.elapsed().as_secs_f64();
     let block_updates_locked = cfg_locked.epochs * cfg.n_workers * cfg.blocks_per_worker;
 
+    let free_rate = block_updates_free as f64 / t_free;
+    let locked_rate = block_updates_locked as f64 / t_locked;
+    record(&mut h, "threaded lock-free block-update", 1.0 / free_rate.max(1.0));
+    record(&mut h, "threaded global-lock block-update", 1.0 / locked_rate.max(1.0));
     println!(
         "threaded  lock-free : {:>8.0} block-updates/s (obj {:.5})",
-        block_updates_free as f64 / t_free,
+        free_rate,
         r_free.final_objective.total()
     );
     println!(
         "threaded  global-lock: {:>8.0} block-updates/s (obj {:.5})",
-        block_updates_locked as f64 / t_locked,
+        locked_rate,
         r_locked.final_objective.total()
     );
 
-    // 2. Architectural serialization via DES: multi-server block-wise
+    // 3. Architectural serialization via DES: multi-server block-wise
     //    vs single server whose service time covers a full-vector apply.
     println!("\nDES (architecture-level, virtual time to k=50):");
     let k = 50;
+    let mut des_gap_p32 = 0.0;
     for p in [4usize, 16, 32] {
         let mut c = Config::default();
         c.samples = if quick { 1024 } else { 4096 };
@@ -86,14 +201,32 @@ fn main() {
         };
         let r_locked = run_sim(&c1, &ds, &shards, &locked_cost).unwrap();
 
+        let gap = r_locked.time_to_epoch[k] / r_blockwise.time_to_epoch[k].max(1e-12);
+        if p == 32 {
+            des_gap_p32 = gap;
+        }
         println!(
-            "  p={p:>2}: block-wise {:>8.3}s vs global-lock {:>8.3}s  ({:.2}x, queue {} vs {})",
+            "  p={p:>2}: block-wise {:>8.3}s vs global-lock {:>8.3}s  ({gap:.2}x, queue {} vs {})",
             r_blockwise.time_to_epoch[k],
             r_locked.time_to_epoch[k],
-            r_locked.time_to_epoch[k] / r_blockwise.time_to_epoch[k].max(1e-12),
             r_blockwise.max_queue,
             r_locked.max_queue,
         );
     }
     println!("\n(expected: the global-lock column grows with p — the paper's motivating gap)");
+
+    if json_requested() {
+        emit_hotpath_json(
+            "locking_ablation",
+            &h,
+            &[
+                ("seqlock_reads_per_s", seq_rps),
+                ("rwlock_reads_per_s", rw_rps),
+                ("seqlock_vs_rwlock", ratio),
+                ("threaded_lockfree_updates_per_s", free_rate),
+                ("threaded_globallock_updates_per_s", locked_rate),
+                ("des_gap_p32", des_gap_p32),
+            ],
+        );
+    }
 }

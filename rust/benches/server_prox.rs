@@ -1,14 +1,17 @@
 //! Server-side Eq. 13 prox update throughput: native vs XLA artifact,
 //! plus the incremental w̃-sum bookkeeping — i.e. the entire per-push
-//! server service time that bounds coordinator scalability.
+//! server service time that bounds coordinator scalability.  The push
+//! message is built once and reused: with the pooled-buffer protocol the
+//! steady-state handle path allocates nothing, and the bench measures
+//! exactly that path.
 //!
-//!     cargo bench --bench server_prox
+//!     cargo bench --bench server_prox [-- --json]
 
 use std::path::Path;
 use std::sync::Arc;
 
 use asybadmm::admm::prox_l1_box;
-use asybadmm::bench::harness_from_env;
+use asybadmm::bench::{emit_hotpath_json, harness_from_env, json_requested};
 use asybadmm::coordinator::{BlockStore, PushMsg, ServerShard, Topology};
 use asybadmm::data::{gen_partitioned, BlockGeometry, LossKind, SynthSpec};
 use asybadmm::problem::Problem;
@@ -28,7 +31,7 @@ fn main() {
         println!("  -> {:.1} Melem/s", db as f64 / r.mean_s / 1e6);
     }
 
-    // Full push handling (w̃ bookkeeping + prox + store write).
+    // Full push handling (w̃ bookkeeping + prox + seqlock store publish).
     let spec = SynthSpec {
         samples: 64,
         geometry: BlockGeometry::new(8, 64),
@@ -44,20 +47,17 @@ fn main() {
     let mut srv = ServerShard::new(0, &topo, store, problem, 4.0, 0.01);
     let block = srv.owned_blocks()[0];
     let worker = topo.workers_of_block[block][0];
-    let w = vec![0.3f32; 64];
+    let msg = PushMsg {
+        worker,
+        block,
+        w: vec![0.3f32; 64],
+        worker_epoch: 0,
+        z_version_used: 0,
+        sent_at: std::time::Instant::now(),
+        recycle: None,
+    };
     h.bench("server handle_push (native, db=64)", || {
-        srv.handle_push(
-            &PushMsg {
-                worker,
-                block,
-                w: w.clone(),
-                worker_epoch: 0,
-                z_version_used: 0,
-                sent_at: std::time::Instant::now(),
-            },
-            &asybadmm::coordinator::ProxBackend::Native,
-        )
-        .unwrap();
+        srv.handle_push(&msg, &asybadmm::coordinator::ProxBackend::Native).unwrap();
     });
 
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -76,4 +76,8 @@ fn main() {
         }
     }
     println!("\n{}", h.csv());
+
+    if json_requested() {
+        emit_hotpath_json("server_prox", &h, &[]);
+    }
 }

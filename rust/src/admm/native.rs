@@ -66,13 +66,15 @@ impl<'a> NativeEngine<'a> {
     }
 
     /// ∇_slot f_i(point): block gradient at packed slot, plus shard data
-    /// loss at `point` — mirror of the `grad_chunk` artifact.
+    /// loss at `point` — mirror of the `grad_chunk` artifact.  Uses the
+    /// shard's precomputed block-slice index: the accumulate touches
+    /// exactly the in-block nonzeros (no per-row binary search).
     pub fn grad_block(&mut self, point: &[f32], slot: usize, g: &mut [f32]) -> f32 {
         let (lo, hi) = self.shard.slot_range(slot);
         debug_assert_eq!(g.len(), hi - lo);
         let loss = self.margins_pass(point);
         g.fill(0.0);
-        self.shard.a_packed.tmatvec_block_acc(&self.slopes, lo, hi, g);
+        self.shard.a_packed.tmatvec_block_sliced(&self.slopes, &self.shard.slices, slot, g);
         loss
     }
 

@@ -2,11 +2,13 @@
 //! Niu et al. '11 as the lock-free precedent).
 //!
 //! Workers pick a block uniformly, compute the block gradient of their
-//! *local* loss at the current consensus iterate, and apply
-//! z_j ← clip(soft(z_j − η g, η λ)) directly through the per-block lock
-//! of the shared store — no dual variables, no server aggregation.  SGD's
-//! known weakness on non-smooth composite objectives (paper §1) is
-//! visible as a noisier, flatter tail than ADMM's on the same budget.
+//! *local* loss at the current consensus iterate (via the shard's
+//! block-slice index), and apply z_j ← clip(soft(z_j − η g, η λ))
+//! through the store's per-block read-modify-write (seqlock writer path;
+//! concurrent pulls of other blocks never wait) — no dual variables, no
+//! server aggregation.  SGD's known weakness on non-smooth composite
+//! objectives (paper §1) is visible as a noisier, flatter tail than
+//! ADMM's on the same budget.
 
 use std::time::Instant;
 

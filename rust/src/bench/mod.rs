@@ -3,10 +3,14 @@
 //! `cargo bench` targets use `harness = false` and drive this module:
 //! warmup, adaptive iteration count, robust stats (mean ± std, p50/p95),
 //! and aligned terminal output.  Results can also be dumped as CSV for
-//! EXPERIMENTS.md.
+//! EXPERIMENTS.md, and — for the hot-path benches — merged into
+//! `BENCH_hotpath.json` (pass `--json` to the bench binary) so the perf
+//! trajectory is tracked across PRs.
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
+use crate::util::json::{num, obj, s as jstr, Json};
 use crate::util::{mean_std, percentile};
 
 #[derive(Clone, Debug)]
@@ -168,6 +172,82 @@ pub fn harness_from_env() -> Harness {
     }
 }
 
+/// Whether the bench binary was invoked with `--json`
+/// (`cargo bench --bench <name> -- --json`).
+pub fn json_requested() -> bool {
+    std::env::args().any(|a| a == "--json")
+}
+
+/// Default output file for [`emit_hotpath_json_at`]; relative to the
+/// bench's working directory (the `rust/` package root under cargo).
+pub const HOTPATH_JSON: &str = "BENCH_hotpath.json";
+
+/// Merge this harness's results (plus free-form scalar `extras`, e.g. a
+/// measured speedup ratio) into the hot-path JSON at `path` under
+/// `section`, preserving every other bench's section so the three
+/// hot-path benches accumulate into one file.
+pub fn emit_hotpath_json_at(
+    path: &Path,
+    section: &str,
+    h: &Harness,
+    extras: &[(&str, f64)],
+) -> anyhow::Result<()> {
+    let mut root = match std::fs::read_to_string(path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(v @ Json::Obj(_)) => v,
+            Ok(_) => {
+                eprintln!(
+                    "warning: {} has a non-object root; starting a fresh file",
+                    path.display()
+                );
+                obj(vec![])
+            }
+            Err(e) => {
+                eprintln!(
+                    "warning: existing {} is unparsable ({e}); starting a fresh file \
+                     (prior sections lost)",
+                    path.display()
+                );
+                obj(vec![])
+            }
+        },
+        Err(_) => obj(vec![]),
+    };
+    let results: Vec<Json> = h
+        .results
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("name", jstr(&r.name)),
+                ("mean_s", num(r.mean_s)),
+                ("std_s", num(r.std_s)),
+                ("p50_s", num(r.p50_s)),
+                ("p95_s", num(r.p95_s)),
+                ("samples", num(r.samples.len() as f64)),
+            ])
+        })
+        .collect();
+    let mut pairs = vec![("results", Json::Arr(results))];
+    for (k, v) in extras {
+        pairs.push((k, num(*v)));
+    }
+    let section_json = obj(pairs);
+    if let Json::Obj(m) = &mut root {
+        m.insert(section.to_string(), section_json);
+    }
+    crate::report::write_file(path, &root.to_string_pretty())
+}
+
+/// [`emit_hotpath_json_at`] into the default `BENCH_hotpath.json`,
+/// printing where the section landed.
+pub fn emit_hotpath_json(section: &str, h: &Harness, extras: &[(&str, f64)]) {
+    let path = PathBuf::from(HOTPATH_JSON);
+    match emit_hotpath_json_at(&path, section, h, extras) {
+        Ok(()) => println!("[{section}] results merged into {}", path.display()),
+        Err(e) => eprintln!("[{section}] FAILED to write {}: {e:#}", path.display()),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -190,5 +270,33 @@ mod tests {
         let csv = h.csv();
         assert!(csv.starts_with("name,mean_s"));
         assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn hotpath_json_merges_sections() {
+        let dir = std::env::temp_dir().join("asybadmm_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_hotpath.json");
+        let _ = std::fs::remove_file(&path);
+
+        let mut h1 = Harness::quick();
+        h1.bench("store read", || std::hint::black_box(()));
+        emit_hotpath_json_at(&path, "locking_ablation", &h1, &[("seqlock_vs_rwlock", 3.5)])
+            .unwrap();
+
+        let mut h2 = Harness::quick();
+        h2.bench("grad sliced", || std::hint::black_box(()));
+        emit_hotpath_json_at(&path, "kernel_gradient", &h2, &[]).unwrap();
+
+        let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        // Second emit must preserve the first section.
+        let lock = root.get("locking_ablation").expect("section dropped on merge");
+        assert_eq!(lock.get("seqlock_vs_rwlock").and_then(Json::as_f64), Some(3.5));
+        assert_eq!(lock.req_arr("results").unwrap().len(), 1);
+        let kern = root.get("kernel_gradient").unwrap();
+        assert_eq!(
+            kern.req_arr("results").unwrap()[0].req_str("name").unwrap(),
+            "grad sliced"
+        );
     }
 }

@@ -1,17 +1,60 @@
 //! The shared consensus-variable store — the concurrency heart of the
 //! paper's contribution.
 //!
-//! One slot per block z_j, each with its own `RwLock` and a monotonically
-//! increasing version counter.  There is **no global lock**: readers
-//! (workers pulling z̃) and the writer (the owning server shard) contend
-//! only per block, so updates to different blocks are fully parallel —
-//! the property the paper calls "lock-free" in contrast to prior
-//! full-vector asynchronous ADMMs that serialize every model update
-//! through one latch.  Block versions implement the staleness accounting
-//! of Assumption 3 (bounded delay).
+//! One slot per block z_j, each an independent **seqlock-style versioned
+//! double buffer**.  There is no lock on the read path at all: readers
+//! copy the stable buffer optimistically and retry only if a torn
+//! snapshot is detected, so reads never block writes and writes never
+//! block reads — the property the paper calls "lock-free" in contrast to
+//! prior full-vector asynchronous ADMMs that serialize every model
+//! update through one latch.  Distinct blocks share no state, so updates
+//! to different blocks are fully parallel.  Block versions implement the
+//! staleness accounting of Assumption 3 (bounded delay).
+//!
+//! ## Protocol (per slot)
+//!
+//! The slot holds two buffers and a sequence word `seq`:
+//!
+//! * `seq` even: stable; `version = seq >> 1`, current data lives in
+//!   `bufs[version & 1]`.
+//! * `seq` odd: a write of `version + 1` is in progress on the *other*
+//!   buffer `bufs[(version + 1) & 1]`; the stable buffer is untouched.
+//!
+//! Writer (serialized per block by a writer mutex that readers never
+//! touch):
+//!
+//! 1. `seq ← seq + 1` (release) — mark the write before any data store;
+//! 2. `fence(Release)` — order the mark before the data stores;
+//! 3. store the new value into the inactive buffer (relaxed stores);
+//! 4. `seq ← seq + 2` relative to start (release) — publish; the stable
+//!    buffer flips.
+//!
+//! Reader: load `seq` (acquire), copy `bufs[(seq >> 1) & 1]` with relaxed
+//! loads, `fence(Acquire)`, reload `seq`; the copy is valid iff the slot
+//! advanced by at most one whole write (`seq' − (seq & !1) ≤ 2`), because
+//! only the *second* write after the snapshot touches the buffer being
+//! copied.  Thanks to the double buffer a reader therefore retries only
+//! when the writer laps it twice mid-copy — under one writer per block
+//! reads are effectively wait-free.
+//!
+//! ## Safety argument
+//!
+//! The buffers are `AtomicU32` words (f32 bit patterns), so the
+//! concurrent plain-data access of a classic C seqlock is replaced by
+//! relaxed atomics — no data race exists in the Rust memory model and no
+//! `unsafe` is needed.  Consistency of the *snapshot* (not just of each
+//! word) follows from the fence pairing: if any torn word from write
+//! `v+2` were observed, the writer's release fence (step 2) synchronizes
+//! with the reader's acquire fence, forcing the reader's final `seq` load
+//! to observe `≥ 2v+3` and the validation to fail.  Observing `seq = 2v`
+//! (or the odd mark `2v+1`, also a release store) via the acquire load
+//! likewise makes all data stores of write `v` visible before the copy.
+//! This is the construction of Boehm, *"Can seqlocks get along with
+//! programming language memory models?"* (MSPC '12), as used by
+//! crossbeam's `SeqLock`.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::atomic::{fence, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
 
 pub struct BlockStore {
     blocks: Vec<Slot>,
@@ -19,16 +62,73 @@ pub struct BlockStore {
 }
 
 struct Slot {
-    data: RwLock<Vec<f32>>,
-    /// Bumped on every write; staleness of a read = current - observed.
-    version: AtomicU64,
+    /// Double buffer: after `v` published writes the stable copy is
+    /// `bufs[v & 1]` and the next write goes to `bufs[(v + 1) & 1]`.
+    bufs: [Box<[AtomicU32]>; 2],
+    /// Seqlock word: even = stable (version = `seq >> 1`), odd = write in
+    /// progress on the inactive buffer.
+    seq: AtomicU64,
+    /// Serializes writers to THIS block only — readers never touch it, so
+    /// reads cannot block writes and distinct blocks stay independent.
+    /// The guarded vector doubles as the read-modify-write scratch for
+    /// [`BlockStore::update_with`].
+    writer: Mutex<Vec<f32>>,
+}
+
+fn zero_buf(db: usize) -> Box<[AtomicU32]> {
+    (0..db).map(|_| AtomicU32::new(0)).collect()
+}
+
+impl Slot {
+    fn new(db: usize) -> Self {
+        Slot {
+            bufs: [zero_buf(db), zero_buf(db)],
+            seq: AtomicU64::new(0),
+            writer: Mutex::new(vec![0.0; db]),
+        }
+    }
+
+    /// Write protocol steps 1-4; caller must hold `self.writer`.
+    fn write_locked(&self, data: &[f32]) -> u64 {
+        let s0 = self.seq.load(Ordering::Relaxed);
+        debug_assert_eq!(s0 & 1, 0, "write while another write in progress");
+        let target = &self.bufs[(((s0 >> 1) + 1) & 1) as usize];
+        // Release so a reader that observes the odd mark still inherits
+        // the previous writer's data stores (writers may be different
+        // threads; happens-before chains through the writer mutex).
+        self.seq.store(s0 + 1, Ordering::Release);
+        fence(Ordering::Release);
+        for (a, &v) in target.iter().zip(data) {
+            a.store(v.to_bits(), Ordering::Relaxed);
+        }
+        self.seq.store(s0 + 2, Ordering::Release);
+        (s0 >> 1) + 1
+    }
+
+    /// Optimistic snapshot into `out`; returns the version read.
+    fn read_into(&self, out: &mut [f32]) -> u64 {
+        loop {
+            let s1 = self.seq.load(Ordering::Acquire);
+            let base = s1 & !1; // 2 * version of the stable buffer
+            let src = &self.bufs[((base >> 1) & 1) as usize];
+            for (o, a) in out.iter_mut().zip(src.iter()) {
+                *o = f32::from_bits(a.load(Ordering::Relaxed));
+            }
+            fence(Ordering::Acquire);
+            let s2 = self.seq.load(Ordering::Relaxed);
+            // The write of version v+1 targets the other buffer; only the
+            // write of v+2 (seq = base + 3) can tear this copy.
+            if s2.wrapping_sub(base) <= 2 {
+                return base >> 1;
+            }
+            std::hint::spin_loop();
+        }
+    }
 }
 
 impl BlockStore {
     pub fn new(n_blocks: usize, db: usize) -> Self {
-        let blocks = (0..n_blocks)
-            .map(|_| Slot { data: RwLock::new(vec![0.0; db]), version: AtomicU64::new(0) })
-            .collect();
+        let blocks = (0..n_blocks).map(|_| Slot::new(db)).collect();
         BlockStore { blocks, db }
     }
 
@@ -40,18 +140,105 @@ impl BlockStore {
         self.db
     }
 
-    /// Pull block j into `out`; returns the version read (torn-free: the
-    /// read lock guarantees a consistent snapshot of the block).
+    /// Pull block j into `out`; returns the version read.  Lock-free:
+    /// retries only if a concurrent writer lapped the copy (see module
+    /// docs), never blocks a writer.
+    pub fn read_into(&self, j: usize, out: &mut [f32]) -> u64 {
+        debug_assert_eq!(out.len(), self.db);
+        self.blocks[j].read_into(out)
+    }
+
+    /// Publish a new value of block j; returns the new version.  Writers
+    /// to the same block serialize on a per-block mutex; writers to
+    /// distinct blocks share nothing.
+    pub fn write(&self, j: usize, data: &[f32]) -> u64 {
+        debug_assert_eq!(data.len(), self.db);
+        let slot = &self.blocks[j];
+        let _guard = slot.writer.lock().unwrap();
+        slot.write_locked(data)
+    }
+
+    /// Atomic read-modify-write of block j (HOGWILD-SGD baseline): the
+    /// per-block writer mutex pins the stable buffer, so the read needs
+    /// no retry and the f→write sequence is atomic w.r.t. other writers.
+    pub fn update_with(&self, j: usize, f: impl FnOnce(&mut [f32])) -> u64 {
+        let slot = &self.blocks[j];
+        let mut scratch = slot.writer.lock().unwrap();
+        let s0 = slot.seq.load(Ordering::Relaxed);
+        let src = &slot.bufs[((s0 >> 1) & 1) as usize];
+        for (o, a) in scratch.iter_mut().zip(src.iter()) {
+            *o = f32::from_bits(a.load(Ordering::Relaxed));
+        }
+        f(&mut scratch);
+        slot.write_locked(&scratch[..])
+    }
+
+    pub fn version(&self, j: usize) -> u64 {
+        // Odd (in-progress) states round down to the published version.
+        self.blocks[j].seq.load(Ordering::Acquire) >> 1
+    }
+
+    /// Snapshot the whole model (monitoring only, never on the hot path;
+    /// per-block optimistic reads — no global freeze).
+    pub fn snapshot(&self) -> Vec<f32> {
+        let mut z = vec![0.0f32; self.blocks.len() * self.db];
+        for (j, chunk) in z.chunks_mut(self.db).enumerate() {
+            self.read_into(j, chunk);
+        }
+        z
+    }
+
+    /// Initialize all blocks without bumping versions.  Must run before
+    /// concurrent readers exist (it stores straight into the stable
+    /// buffer).
+    pub fn init_from(&self, z0: &[f32]) {
+        assert_eq!(z0.len(), self.blocks.len() * self.db);
+        for (j, chunk) in z0.chunks(self.db).enumerate() {
+            let slot = &self.blocks[j];
+            let _guard = slot.writer.lock().unwrap();
+            let s = slot.seq.load(Ordering::Relaxed);
+            let buf = &slot.bufs[((s >> 1) & 1) as usize];
+            for (a, &v) in buf.iter().zip(chunk) {
+                a.store(v.to_bits(), Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// The pre-seqlock store: one `RwLock` per block with copy-under-lock
+/// reads.  Kept as (a) the baseline the `locking_ablation` bench compares
+/// the seqlock against, and (b) a differential-testing oracle for the
+/// seqlock's sequential semantics (`rust/tests/proptests.rs`).
+pub struct RwBlockStore {
+    blocks: Vec<RwSlot>,
+    db: usize,
+}
+
+struct RwSlot {
+    data: RwLock<Vec<f32>>,
+    version: AtomicU64,
+}
+
+impl RwBlockStore {
+    pub fn new(n_blocks: usize, db: usize) -> Self {
+        let blocks = (0..n_blocks)
+            .map(|_| RwSlot { data: RwLock::new(vec![0.0; db]), version: AtomicU64::new(0) })
+            .collect();
+        RwBlockStore { blocks, db }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.db
+    }
+
     pub fn read_into(&self, j: usize, out: &mut [f32]) -> u64 {
         debug_assert_eq!(out.len(), self.db);
         let slot = &self.blocks[j];
         let guard = slot.data.read().unwrap();
         out.copy_from_slice(&guard);
-        // Version is read under the lock so it matches the data.
         slot.version.load(Ordering::Acquire)
     }
 
-    /// Publish a new value of block j; returns the new version.
     pub fn write(&self, j: usize, data: &[f32]) -> u64 {
         debug_assert_eq!(data.len(), self.db);
         let slot = &self.blocks[j];
@@ -60,8 +247,6 @@ impl BlockStore {
         slot.version.fetch_add(1, Ordering::AcqRel) + 1
     }
 
-    /// Read-modify-write of block j under its (single-block) write lock;
-    /// used by the HOGWILD-SGD baseline.
     pub fn update_with(&self, j: usize, f: impl FnOnce(&mut [f32])) -> u64 {
         let slot = &self.blocks[j];
         let mut guard = slot.data.write().unwrap();
@@ -71,25 +256,6 @@ impl BlockStore {
 
     pub fn version(&self, j: usize) -> u64 {
         self.blocks[j].version.load(Ordering::Acquire)
-    }
-
-    /// Snapshot the whole model (monitoring only, never on the hot path;
-    /// takes block read-locks one at a time — no global freeze).
-    pub fn snapshot(&self) -> Vec<f32> {
-        let mut z = vec![0.0f32; self.blocks.len() * self.db];
-        for (j, chunk) in z.chunks_mut(self.db).enumerate() {
-            self.read_into(j, chunk);
-        }
-        z
-    }
-
-    /// Initialize all blocks (before threads start).
-    pub fn init_from(&self, z0: &[f32]) {
-        assert_eq!(z0.len(), self.blocks.len() * self.db);
-        for (j, chunk) in z0.chunks(self.db).enumerate() {
-            let mut guard = self.blocks[j].data.write().unwrap();
-            guard.copy_from_slice(chunk);
-        }
     }
 }
 
@@ -121,6 +287,29 @@ mod tests {
     }
 
     #[test]
+    fn double_buffer_keeps_previous_version_readable() {
+        // Two consecutive writes land in alternating buffers; each read
+        // returns the value matching the version it reports.
+        let s = BlockStore::new(1, 3);
+        for v in 1..=6u64 {
+            let x = v as f32;
+            assert_eq!(s.write(0, &[x, x, x]), v);
+            let mut out = [0.0f32; 3];
+            assert_eq!(s.read_into(0, &mut out), v);
+            assert_eq!(out, [x, x, x]);
+        }
+    }
+
+    #[test]
+    fn init_from_does_not_bump_versions() {
+        let s = BlockStore::new(2, 2);
+        s.init_from(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.version(0), 0);
+        assert_eq!(s.version(1), 0);
+        assert_eq!(s.snapshot(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
     fn concurrent_writers_to_distinct_blocks_do_not_serialize_results() {
         // Smoke test for torn reads: hammer two blocks from two writers
         // while a reader checks each block is internally consistent
@@ -132,7 +321,7 @@ mod tests {
             handles.push(std::thread::spawn(move || {
                 for it in 0..500u64 {
                     let v = (it * 2 + j as u64) as f32;
-                    s.write(j, &vec![v; 64]);
+                    s.write(j, &[v; 64]);
                 }
             }));
         }
@@ -158,6 +347,53 @@ mod tests {
     }
 
     #[test]
+    fn seqlock_torture_same_block_writers_and_readers() {
+        // The seqlock torture mirror of the torn-read test: multiple
+        // writers contend on ONE block (exercising the writer mutex and
+        // both buffers) while several readers hammer the optimistic read
+        // path.  Every observed snapshot must be internally consistent
+        // AND consistent with the version it reports (value == version).
+        let s = Arc::new(BlockStore::new(1, 48));
+        let writers = 3usize;
+        let per_writer = 400u64;
+        let mut handles = Vec::new();
+        for _ in 0..writers {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..per_writer {
+                    s.update_with(0, |z| {
+                        // value tracks the version: every element = v.
+                        let next = z[0] + 1.0;
+                        z.iter_mut().for_each(|x| *x = next);
+                    });
+                }
+            }));
+        }
+        for _ in 0..4 {
+            let s = s.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut buf = vec![0.0f32; 48];
+                let mut last = 0u64;
+                for _ in 0..3000 {
+                    let v = s.read_into(0, &mut buf);
+                    let first = buf[0];
+                    assert!(buf.iter().all(|&x| x == first), "torn read");
+                    assert_eq!(first as u64, v, "value {first} disagrees with version {v}");
+                    assert!(v >= last, "version went backwards: {last} -> {v}");
+                    last = v;
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.version(0), writers as u64 * per_writer);
+        let mut out = vec![0.0f32; 48];
+        s.read_into(0, &mut out);
+        assert_eq!(out[0] as u64, writers as u64 * per_writer);
+    }
+
+    #[test]
     fn update_with_applies_in_place() {
         let s = BlockStore::new(1, 2);
         s.write(0, &[1.0, 2.0]);
@@ -170,5 +406,19 @@ mod tests {
         let mut out = [0.0f32; 2];
         s.read_into(0, &mut out);
         assert_eq!(out, [10.0, 20.0]);
+    }
+
+    #[test]
+    fn rwlock_baseline_matches_api() {
+        let s = RwBlockStore::new(2, 2);
+        assert_eq!(s.write(1, &[5.0, 6.0]), 1);
+        let mut out = [0.0f32; 2];
+        assert_eq!(s.read_into(1, &mut out), 1);
+        assert_eq!(out, [5.0, 6.0]);
+        assert_eq!(s.update_with(1, |z| z[0] = 9.0), 2);
+        s.read_into(1, &mut out);
+        assert_eq!(out, [9.0, 6.0]);
+        assert_eq!(s.version(0), 0);
+        assert_eq!(s.block_size(), 2);
     }
 }

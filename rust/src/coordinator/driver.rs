@@ -56,6 +56,13 @@ impl TrainReport {
     }
 }
 
+/// Capacity of each server shard's bounded push channel for `n_workers`
+/// workers.  Public so tests can assert the push-buffer pools' high-water
+/// marks against the actual in-flight bound.
+pub fn push_inflight(n_workers: usize) -> usize {
+    (2 * n_workers).max(8)
+}
+
 /// Run block-wise asynchronous ADMM (Algorithm 1) with the threaded
 /// parameter-server runtime.
 pub fn run_async(cfg: &Config, ds: &Dataset, shards: &[WorkerShard]) -> Result<TrainReport> {
@@ -99,7 +106,11 @@ pub fn run_async(cfg: &Config, ds: &Dataset, shards: &[WorkerShard]) -> Result<T
     // in-flight pushes): without it a fast worker can run all its epochs
     // against a starved server queue, i.e. unbounded effective delay,
     // violating Assumption 3 and stalling convergence.
-    let inflight = (2 * cfg.n_workers).max(8);
+    let inflight = push_inflight(cfg.n_workers);
+    // The push-buffer pool never needs more buffers than can be in
+    // flight at once: the channel depth, one in service, one in the
+    // worker's hands, plus slack for recycle-channel latency.
+    let pool_cap = inflight + 4;
     let mut server_txs = Vec::new();
     let mut server_rxs = Vec::new();
     for _ in 0..cfg.n_servers {
@@ -175,6 +186,7 @@ pub fn run_async(cfg: &Config, ds: &Dataset, shards: &[WorkerShard]) -> Result<T
                     cfg.enforce_delay_bound,
                     seed,
                     progress,
+                    pool_cap,
                 );
                 let stats = ctx.run(compute.as_mut()).expect("worker loop failed");
                 let (x, y) = ctx.into_state();
@@ -280,6 +292,28 @@ mod tests {
         assert!(report.total_pushes() >= cfg.epochs * cfg.n_workers);
         assert!(report.consensus_max.is_finite());
         assert_eq!(report.worker_stats.len(), cfg.n_workers);
+    }
+
+    #[test]
+    fn push_pool_high_water_bounded_by_channel_capacity_not_epochs() {
+        // The no-allocation-per-epoch invariant: buffers allocated on the
+        // push path are bounded by the in-flight channel capacity, not by
+        // the number of epochs run.
+        let mut cfg = Config::tiny_test();
+        cfg.epochs = 400;
+        let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+        let report = run_async(&cfg, &ds, &shards).unwrap();
+        let bound = push_inflight(cfg.n_workers) + 4;
+        for w in &report.worker_stats {
+            assert!(w.pool_high_water >= 1, "pool never used");
+            assert!(
+                w.pool_high_water <= bound,
+                "pool allocated {} buffers (bound {bound}, epochs {})",
+                w.pool_high_water,
+                cfg.epochs
+            );
+            assert!(w.pool_high_water < cfg.epochs / 8, "allocation scaled with epochs");
+        }
     }
 
     #[test]

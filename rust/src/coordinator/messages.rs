@@ -1,11 +1,16 @@
 //! Worker → server push protocol (Algorithm 1 line 7 / server line 2).
 
+use std::sync::mpsc::Sender;
+
 /// w_{i,j} push (Eq. 9).  `worker_epoch` and `z_version_used` implement
 //  the staleness accounting for Assumption 3.
 #[derive(Clone, Debug)]
 pub struct PushMsg {
     pub worker: usize,
     pub block: usize,
+    /// The pushed w block.  Pooled: after `handle_push` the server shard
+    /// sends it home on `recycle` instead of dropping it, so the steady
+    /// state allocates nothing per epoch (see `coordinator::bufpool`).
     pub w: Vec<f32>,
     /// Worker's local epoch t when this w was produced.
     pub worker_epoch: usize,
@@ -13,6 +18,9 @@ pub struct PushMsg {
     pub z_version_used: u64,
     /// Wall-clock send time (for queueing-delay stats).
     pub sent_at: std::time::Instant,
+    /// Return address of the worker's buffer pool; `None` means the
+    /// buffer is unpooled and the server just drops it (tests, benches).
+    pub recycle: Option<Sender<Vec<f32>>>,
 }
 
 pub enum ServerMsg {

@@ -3,14 +3,18 @@
 //! A Parameter-Server runtime in the shape of Fig. 1 of the paper:
 //! multiple *server shards*, each owning a subset of the consensus
 //! blocks z_j; multiple *workers*, each owning a data shard and running
-//! Algorithm 1 asynchronously; and a shared [`BlockStore`] whose locking
-//! granularity is a single block — the paper's "lock-free" property: no
-//! operation ever locks more than one z_j, so updates to different
-//! blocks proceed fully in parallel (contrast `baselines::locked_admm`,
-//! which serializes through one global model lock as all prior
-//! asynchronous ADMMs required).
+//! Algorithm 1 asynchronously; and a shared [`BlockStore`] of per-block
+//! seqlock-style double buffers — the paper's "lock-free" property made
+//! literal: reads never block writes, writes never block reads, and no
+//! operation touches more than one z_j, so updates to different blocks
+//! proceed fully in parallel (contrast `baselines::locked_admm`, which
+//! serializes through one global model lock as all prior asynchronous
+//! ADMMs required).  Worker pushes ride pooled buffers ([`PushPool`])
+//! that server shards recycle, so the steady-state push path performs no
+//! heap allocation.
 
 mod block_store;
+mod bufpool;
 mod compute;
 mod delay;
 mod driver;
@@ -20,10 +24,11 @@ mod server;
 mod topology;
 mod worker;
 
-pub use block_store::BlockStore;
+pub use block_store::{BlockStore, RwBlockStore};
+pub use bufpool::PushPool;
 pub use compute::{make_compute, NativeCompute, WorkerCompute, XlaCompute};
 pub use delay::DelayPolicy;
-pub use driver::{run_async, TrainReport};
+pub use driver::{push_inflight, run_async, TrainReport};
 pub use events::ObjSample;
 pub use messages::{PushMsg, ServerMsg};
 pub use server::{ProxBackend, ServerShard, ServerStats};

@@ -6,6 +6,13 @@
 //! z̃_j = prox( (γ z̃_j + Σ_i w̃_{i,j}) / (γ + Σ_i ρ_i) ), and publishes
 //! the dirty copy immediately — workers never wait for an epoch barrier.
 //! The w̃ running sum makes each update O(db), independent of |𝒩(j)|.
+//!
+//! Hot-path notes: the shard is the ONLY writer of its blocks, so it
+//! keeps its own authoritative copy of each owned z̃_j (`z_cache`) and
+//! never reads a block back from the store — `handle_push` touches the
+//! store once for the version (staleness stat) and once for the write.
+//! Pushed w buffers are pooled: after the update the shard sends each
+//! buffer home on the message's recycle channel instead of freeing it.
 
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
@@ -83,7 +90,10 @@ pub struct ServerShard {
     gamma: f32,
     problem: Problem,
     store: Arc<BlockStore>,
-    z_scratch: Vec<f32>,
+    /// Authoritative z̃_j per owned block — this shard is the sole writer
+    /// of its blocks, so the cache always equals the store's content and
+    /// `handle_push` never copies a block out of the store.
+    z_cache: Vec<Vec<f32>>,
     z_new: Vec<f32>,
     pub stats: ServerStats,
 }
@@ -105,6 +115,7 @@ impl ServerShard {
         let mut contributed = Vec::with_capacity(blocks.len());
         let mut denom = Vec::with_capacity(blocks.len());
         let mut worker_slot = Vec::with_capacity(blocks.len());
+        let mut z_cache = Vec::with_capacity(blocks.len());
         for (l, &j) in blocks.iter().enumerate() {
             local_of_block[j] = Some(l);
             let degree = topo.workers_of_block[j].len();
@@ -119,6 +130,10 @@ impl ServerShard {
                 slots[w] = s;
             }
             worker_slot.push(slots);
+            // One-time pull so a non-zero store initialization is honored.
+            let mut z0 = vec![0.0f32; db];
+            store.read_into(j, &mut z0);
+            z_cache.push(z0);
         }
         ServerShard {
             id,
@@ -132,7 +147,7 @@ impl ServerShard {
             gamma,
             problem,
             store,
-            z_scratch: vec![0.0; db],
+            z_cache,
             z_new: vec![0.0; db],
             stats: ServerStats::default(),
         }
@@ -152,12 +167,14 @@ impl ServerShard {
         }
         old.copy_from_slice(&msg.w);
 
-        // z̃_j update + publish.
-        let cur_version = self.store.read_into(msg.block, &mut self.z_scratch);
+        // z̃_j update + publish.  The cached z̃ is authoritative (sole
+        // writer), so only the version is read from the store — no block
+        // copy that the prox would overwrite anyway.
+        let cur_version = self.store.version(msg.block);
         let (gamma, denom) = (self.gamma, self.denom[l]);
         let (lambda, clip) = (self.problem.lambda, self.problem.clip);
         prox.apply(
-            &self.z_scratch,
+            &self.z_cache[l],
             &self.w_sum[l],
             gamma,
             denom,
@@ -166,6 +183,7 @@ impl ServerShard {
             &mut self.z_new,
         )?;
         self.store.write(msg.block, &self.z_new);
+        std::mem::swap(&mut self.z_cache[l], &mut self.z_new);
 
         // Stats + round accounting.
         self.stats.pushes += 1;
@@ -183,11 +201,23 @@ impl ServerShard {
         Ok(())
     }
 
-    /// Blocking server loop; returns stats at shutdown.
+    /// Blocking server loop; returns stats at shutdown.  Pooled push
+    /// buffers are returned to their owning worker after each update.
     pub fn run(mut self, rx: Receiver<ServerMsg>, prox: ProxBackend) -> Result<ServerStats> {
         while let Ok(msg) = rx.recv() {
             match msg {
-                ServerMsg::Push(p) => self.handle_push(&p, &prox)?,
+                ServerMsg::Push(p) => {
+                    let applied = self.handle_push(&p, &prox);
+                    // Recycle BEFORE propagating any error: destroying
+                    // pooled buffers on the error path could strand the
+                    // owning worker in `PushPool::acquire` instead of
+                    // letting it observe the closed channel.  (A worker
+                    // that already exited just drops the send.)
+                    if let Some(home) = p.recycle {
+                        let _ = home.send(p.w);
+                    }
+                    applied?;
+                }
                 ServerMsg::Shutdown => break,
             }
         }
@@ -227,6 +257,7 @@ mod tests {
             worker_epoch: 0,
             z_version_used: 0,
             sent_at: std::time::Instant::now(),
+            recycle: None,
         }
     }
 
@@ -255,6 +286,34 @@ mod tests {
             assert!((v - z_expect).abs() < 1e-6, "{v} vs {z_expect}");
         }
         assert_eq!(srv.stats.pushes, 2);
+    }
+
+    #[test]
+    fn z_cache_tracks_store_content() {
+        // The shard's cached z̃ must stay identical to what the store
+        // publishes, push after push (sole-writer invariant).
+        let (topo, store, p) = setup();
+        let mut srv = ServerShard::new(0, &topo, store.clone(), p, 10.0, 0.5);
+        let j = srv.owned_blocks()[0];
+        let w = topo.workers_of_block[j][0];
+        for k in 0..5 {
+            srv.handle_push(&push(w, j, vec![k as f32; 4]), &ProxBackend::Native).unwrap();
+            let l = srv.local_of_block[j].unwrap();
+            let mut out = vec![0.0f32; 4];
+            store.read_into(j, &mut out);
+            assert_eq!(out, srv.z_cache[l], "push {k}: cache diverged from store");
+        }
+        assert_eq!(store.version(j), 5);
+    }
+
+    #[test]
+    fn nonzero_store_initialization_is_honored() {
+        let (topo, store, p) = setup();
+        let j0 = topo.blocks_of_server[0][0];
+        store.write(j0, &[0.25; 4]);
+        let srv = ServerShard::new(0, &topo, store, p, 10.0, 0.5);
+        let l = srv.local_of_block[j0].unwrap();
+        assert_eq!(srv.z_cache[l], vec![0.25; 4]);
     }
 
     #[test]
@@ -302,5 +361,24 @@ mod tests {
         m.z_version_used = 0;
         srv.handle_push(&m, &ProxBackend::Native).unwrap();
         assert_eq!(srv.stats.max_staleness, 3);
+    }
+
+    #[test]
+    fn run_loop_recycles_pooled_buffers() {
+        use std::sync::mpsc::{channel, sync_channel};
+        let (topo, store, p) = setup();
+        let srv = ServerShard::new(0, &topo, store, p, 10.0, 0.0);
+        let j = srv.owned_blocks()[0];
+        let w = topo.workers_of_block[j][0];
+        let (tx, rx) = sync_channel::<ServerMsg>(4);
+        let (home, inbox) = channel::<Vec<f32>>();
+        let mut msg = push(w, j, vec![0.5; 4]);
+        msg.recycle = Some(home);
+        tx.send(ServerMsg::Push(msg)).unwrap();
+        tx.send(ServerMsg::Shutdown).unwrap();
+        let stats = srv.run(rx, ProxBackend::Native).unwrap();
+        assert_eq!(stats.pushes, 1);
+        let returned = inbox.try_recv().expect("buffer not recycled");
+        assert_eq!(returned, vec![0.5; 4]);
     }
 }

@@ -3,7 +3,10 @@
 //! Per local epoch t: select a block slot (uniform or cyclic), refresh
 //! the cached z̃ per the delay policy, compute the fused step via the
 //! configured backend, push w to the owning server shard, and advance.
-//! No allocation happens inside the loop — all buffers are pre-sized.
+//! No allocation happens inside the loop: all scratch is pre-sized, and
+//! the pushed w buffer comes from a [`PushPool`] that the server shard
+//! recycles after applying the update — the steady-state push path is
+//! malloc-free end to end.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::SyncSender;
@@ -11,6 +14,7 @@ use std::sync::mpsc::SyncSender;
 use anyhow::Result;
 
 use super::block_store::BlockStore;
+use super::bufpool::PushPool;
 use super::compute::WorkerCompute;
 use super::delay::DelayPolicy;
 use super::messages::{PushMsg, ServerMsg};
@@ -28,6 +32,9 @@ pub struct WorkerStats {
     /// Number of forced refreshes from bound enforcement.
     pub forced_refreshes: usize,
     pub last_loss: f32,
+    /// Push buffers ever allocated by this worker's pool — bounded by the
+    /// pool cap (≈ push channel capacity), NOT by `epochs`.
+    pub pool_high_water: usize,
 }
 
 pub struct WorkerCtx<'a> {
@@ -47,8 +54,9 @@ pub struct WorkerCtx<'a> {
     progress: &'a AtomicUsize,
     /// Version of z̃ currently cached per slot.
     z_versions: Vec<u64>,
+    /// Recycled push buffers (w rides to the server and comes back).
+    pool: PushPool,
     // scratch
-    w: Vec<f32>,
     y_new: Vec<f32>,
     x_new: Vec<f32>,
     pub stats: WorkerStats,
@@ -69,6 +77,7 @@ impl<'a> WorkerCtx<'a> {
         enforce_delay: bool,
         seed: u64,
         progress: &'a AtomicUsize,
+        pool_cap: usize,
     ) -> Self {
         let db = shard.block_size;
         // Algorithm 1 lines 1-2: pull z⁰, x⁰ = z⁰, y⁰ = 0.
@@ -92,7 +101,7 @@ impl<'a> WorkerCtx<'a> {
             rng: Rng::new(seed),
             progress,
             z_versions,
-            w: vec![0.0; db],
+            pool: PushPool::new(db, pool_cap),
             y_new: vec![0.0; db],
             x_new: vec![0.0; db],
             stats: WorkerStats::default(),
@@ -145,15 +154,17 @@ impl<'a> WorkerCtx<'a> {
                 .max_staleness
                 .max(self.store.version(j).saturating_sub(used_version));
 
-            // Eqs. 11/12/9 via the backend.
+            // Eqs. 11/12/9 via the backend, straight into a pooled push
+            // buffer (no per-epoch clone on the send below).
             let db = self.shard.block_size;
             let (lo, hi) = (slot * db, (slot + 1) * db);
+            let mut w_buf = self.pool.acquire();
             let loss = compute.step(
                 &self.state.z_local,
                 &self.state.y[lo..hi],
                 slot,
                 self.rho,
-                &mut self.w,
+                &mut w_buf,
                 &mut self.y_new,
                 &mut self.x_new,
             )?;
@@ -162,17 +173,19 @@ impl<'a> WorkerCtx<'a> {
             self.state.last_loss = loss;
             self.stats.last_loss = loss;
 
-            // Push w to the owning server shard (with injected latency).
+            // Push w to the owning server shard (with injected latency);
+            // the shard returns the buffer on the pool's recycle channel.
             self.policy.sleep_net(&mut self.rng);
             let server = self.topo.server_of_block[j];
             self.senders[server]
                 .send(ServerMsg::Push(PushMsg {
                     worker: self.shard.worker_id,
                     block: j,
-                    w: self.w.clone(),
+                    w: w_buf,
                     worker_epoch: t,
                     z_version_used: used_version,
                     sent_at: std::time::Instant::now(),
+                    recycle: Some(self.pool.recycler()),
                 }))
                 .map_err(|_| anyhow::anyhow!("server {server} hung up"))?;
 
@@ -180,6 +193,7 @@ impl<'a> WorkerCtx<'a> {
             self.stats.epochs = t + 1;
             self.progress.store(t + 1, Ordering::Release);
         }
+        self.stats.pool_high_water = self.pool.high_water();
         Ok(self.stats.clone())
     }
 

@@ -8,7 +8,7 @@
 //! `n_slots` are zero padding.
 
 use super::dataset::Dataset;
-use crate::sparse::CsrMatrix;
+use crate::sparse::{BlockSliceIndex, CsrMatrix};
 
 #[derive(Clone, Debug)]
 pub struct WorkerShard {
@@ -22,6 +22,10 @@ pub struct WorkerShard {
     /// `a_packed.cols() == active_blocks.len() * block_size`.
     pub a_packed: CsrMatrix,
     pub block_size: usize,
+    /// Per-(slot, row) nonzero ranges of `a_packed`, built once here so
+    /// the block-gradient kernel iterates exactly the in-block nonzeros
+    /// instead of binary-searching every row per step.
+    pub slices: BlockSliceIndex,
 }
 
 impl WorkerShard {
@@ -73,6 +77,7 @@ impl WorkerShard {
             }
         }
         let a_packed = slice.remap_cols(&map, active.len() * g.block_size);
+        let slices = a_packed.block_slices(g.block_size);
 
         WorkerShard {
             worker_id,
@@ -81,6 +86,7 @@ impl WorkerShard {
             active_blocks: active,
             a_packed,
             block_size: g.block_size,
+            slices,
         }
     }
 
@@ -217,6 +223,18 @@ mod tests {
     fn forced_blocks_must_cover_data() {
         let ds = toy_dataset();
         let _ = WorkerShard::from_rows(0, &ds, 0, 3, Some(vec![0])); // row 0 touches block 1
+    }
+
+    #[test]
+    fn shard_slice_index_matches_packed_matrix() {
+        let ds = toy_dataset();
+        let shards = partition_even(&ds, 2);
+        for s in &shards {
+            assert_eq!(s.slices.n_blocks(), s.n_slots());
+            assert_eq!(s.slices.block_size(), s.block_size);
+            let covered: usize = (0..s.n_slots()).map(|b| s.slices.block_nnz(b)).sum();
+            assert_eq!(covered, s.a_packed.nnz());
+        }
     }
 
     #[test]

@@ -13,8 +13,11 @@
 //! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the fused
 //!   margin + block-gradient hot-spot and the proximal update.
 //!
-//! See `DESIGN.md` for the system inventory and the experiment index, and
-//! `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `DESIGN.md` (repo root) for the system inventory, the hot-path
+//! mechanisms (seqlock block store, push-buffer pool, block-slice CSR
+//! index) and the environment-driven design decisions, and
+//! `EXPERIMENTS.md` (repo root) for the experiment index and
+//! paper-vs-measured results, tracked over time via `BENCH_hotpath.json`.
 
 pub mod admm;
 pub mod baselines;

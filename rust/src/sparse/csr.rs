@@ -30,21 +30,37 @@ impl CsrMatrix {
         (&self.indices[a..b], &self.values[a..b])
     }
 
-    /// y = A x.
+    /// y = A x.  The inner dot product runs four independent
+    /// accumulators so LLVM keeps separate FMA chains in flight (the
+    /// single-accumulator form serializes on the add latency).
     pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
         for r in 0..self.rows {
             let (idx, vals) = self.row(r);
-            let mut acc = 0.0f32;
-            for (&j, &v) in idx.iter().zip(vals) {
-                acc += v * x[j as usize];
+            let n = idx.len();
+            let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            let mut k = 0;
+            while k + 4 <= n {
+                a0 += vals[k] * x[idx[k] as usize];
+                a1 += vals[k + 1] * x[idx[k + 1] as usize];
+                a2 += vals[k + 2] * x[idx[k + 2] as usize];
+                a3 += vals[k + 3] * x[idx[k + 3] as usize];
+                k += 4;
+            }
+            let mut acc = (a0 + a1) + (a2 + a3);
+            while k < n {
+                acc += vals[k] * x[idx[k] as usize];
+                k += 1;
             }
             y[r] = acc;
         }
     }
 
-    /// g += A^T s (accumulating; caller zeroes g when needed).
+    /// g += A^T s (accumulating; caller zeroes g when needed).  4-wide
+    /// unrolled scatter; accumulation order per target element is
+    /// unchanged (row order, then within-row order), so results stay
+    /// bit-identical with the block-sliced kernel.
     pub fn tmatvec_acc(&self, s: &[f32], g: &mut [f32]) {
         assert_eq!(s.len(), self.rows);
         assert_eq!(g.len(), self.cols);
@@ -54,16 +70,16 @@ impl CsrMatrix {
                 continue;
             }
             let (idx, vals) = self.row(r);
-            for (&j, &v) in idx.iter().zip(vals) {
-                g[j as usize] += v * sr;
-            }
+            scatter_acc(idx, vals, sr, 0, g);
         }
     }
 
     /// Like `tmatvec_acc` but only accumulating columns in
-    /// `[col_lo, col_hi)`, writing into `g[0..col_hi-col_lo]`.  This is
-    /// the native block-gradient kernel: indices are sorted per row, so a
-    /// binary search bounds the scan.
+    /// `[col_lo, col_hi)`, writing into `g[0..col_hi-col_lo]`.  Kept as
+    /// the index-free reference: per row it binary-searches for the
+    /// block start and scans to the block end — O(rows·log nnz_row +
+    /// nnz-in-range).  The hot path uses [`CsrMatrix::tmatvec_block_sliced`]
+    /// with a precomputed [`BlockSliceIndex`] instead.
     pub fn tmatvec_block_acc(&self, s: &[f32], col_lo: usize, col_hi: usize, g: &mut [f32]) {
         assert!(col_lo <= col_hi && col_hi <= self.cols);
         assert_eq!(g.len(), col_hi - col_lo);
@@ -75,13 +91,68 @@ impl CsrMatrix {
             }
             let (idx, vals) = self.row(r);
             let start = idx.partition_point(|&j| j < lo32);
-            for k in start..idx.len() {
-                let j = idx[k];
-                if j >= hi32 {
-                    break;
+            let end = start + idx[start..].partition_point(|&j| j < hi32);
+            scatter_acc(&idx[start..end], &vals[start..end], sr, lo32, g);
+        }
+    }
+
+    /// Build the per-(block, row) nonzero-range index for a matrix whose
+    /// columns are grouped into contiguous blocks of `block_size` (the
+    /// packed per-worker layout).  One pass over the nnz; built once at
+    /// shard construction.
+    pub fn block_slices(&self, block_size: usize) -> BlockSliceIndex {
+        assert!(block_size > 0, "block_size must be positive");
+        assert_eq!(
+            self.cols % block_size,
+            0,
+            "cols {} not a multiple of block_size {block_size}",
+            self.cols
+        );
+        assert!(self.nnz() <= u32::MAX as usize, "nnz exceeds u32 index range");
+        let n_blocks = self.cols / block_size;
+        let mut cuts = Vec::with_capacity(self.rows * (n_blocks + 1));
+        for r in 0..self.rows {
+            let (start, end) = (self.indptr[r], self.indptr[r + 1]);
+            let idx = &self.indices[start..end];
+            let mut k = 0usize;
+            for b in 0..n_blocks {
+                // Invariant: k = #indices in this row with column < b·db.
+                cuts.push((start + k) as u32);
+                let hi = ((b + 1) * block_size) as u32;
+                while k < idx.len() && idx[k] < hi {
+                    k += 1;
                 }
-                g[(j - lo32) as usize] += vals[k] * sr;
             }
+            cuts.push(end as u32);
+        }
+        BlockSliceIndex { n_blocks, block_size, rows: self.rows, cuts }
+    }
+
+    /// Block-gradient kernel over a precomputed [`BlockSliceIndex`]:
+    /// `g += (A^T s)[block·db .. (block+1)·db]` as a tight loop over
+    /// exactly the in-block nonzeros — no per-row binary search, no scan
+    /// past the block end.
+    pub fn tmatvec_block_sliced(
+        &self,
+        s: &[f32],
+        index: &BlockSliceIndex,
+        block: usize,
+        g: &mut [f32],
+    ) {
+        assert_eq!(s.len(), self.rows);
+        assert_eq!(index.rows, self.rows, "index built for a different matrix");
+        assert!(block < index.n_blocks);
+        assert_eq!(g.len(), index.block_size);
+        let lo = (block * index.block_size) as u32;
+        let stride = index.n_blocks + 1;
+        for r in 0..self.rows {
+            let sr = s[r];
+            if sr == 0.0 {
+                continue;
+            }
+            let a = index.cuts[r * stride + block] as usize;
+            let b = index.cuts[r * stride + block + 1] as usize;
+            scatter_acc(&self.indices[a..b], &self.values[a..b], sr, lo, g);
         }
     }
 
@@ -162,6 +233,75 @@ impl CsrMatrix {
         (0..self.rows)
             .map(|r| self.row(r).1.iter().map(|v| v * v).sum())
             .collect()
+    }
+}
+
+/// `g[idx[k] - base] += vals[k] * sr`, 4-wide unrolled.  Element order is
+/// preserved (pure unroll), so callers composing it see identical f32
+/// results to the naive loop.
+#[inline]
+fn scatter_acc(idx: &[u32], vals: &[f32], sr: f32, base: u32, g: &mut [f32]) {
+    let n = idx.len();
+    let mut k = 0;
+    while k + 4 <= n {
+        g[(idx[k] - base) as usize] += vals[k] * sr;
+        g[(idx[k + 1] - base) as usize] += vals[k + 1] * sr;
+        g[(idx[k + 2] - base) as usize] += vals[k + 2] * sr;
+        g[(idx[k + 3] - base) as usize] += vals[k + 3] * sr;
+        k += 4;
+    }
+    while k < n {
+        g[(idx[k] - base) as usize] += vals[k] * sr;
+        k += 1;
+    }
+}
+
+/// Per-(block, row) nonzero ranges of a packed CSR matrix whose columns
+/// form `n_blocks` contiguous blocks of `block_size` — the precomputed
+/// index behind [`CsrMatrix::tmatvec_block_sliced`].
+///
+/// Layout: `cuts` has `rows * (n_blocks + 1)` entries;
+/// `cuts[r*(n_blocks+1) + b]` is the absolute nnz offset where block b's
+/// entries begin in row r, and `cuts[r*(n_blocks+1) + n_blocks]` is the
+/// row end — so block b of row r spans `cuts[..b] .. cuts[..b+1]`.
+/// Offsets are `u32` (the builder caps matrices at u32 nnz), keeping the
+/// index at 4·rows·(n_blocks+1) bytes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockSliceIndex {
+    n_blocks: usize,
+    block_size: usize,
+    rows: usize,
+    cuts: Vec<u32>,
+}
+
+impl BlockSliceIndex {
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Nonzeros of `block` within row `r` as an absolute `[start, end)`
+    /// range into the matrix's nnz arrays.
+    pub fn row_range(&self, r: usize, block: usize) -> (usize, usize) {
+        let stride = self.n_blocks + 1;
+        (self.cuts[r * stride + block] as usize, self.cuts[r * stride + block + 1] as usize)
+    }
+
+    /// Total nonzeros falling inside `block` (index-only statistic).
+    pub fn block_nnz(&self, block: usize) -> usize {
+        (0..self.rows)
+            .map(|r| {
+                let (a, b) = self.row_range(r, block);
+                b - a
+            })
+            .sum()
     }
 }
 
@@ -269,6 +409,65 @@ mod tests {
                 assert!((g - full[lo + k]).abs() < 1e-5);
             }
         }
+    }
+
+    #[test]
+    fn block_slices_cover_every_nonzero_exactly_once() {
+        let mut rng = Rng::new(7);
+        let (a, _) = random_csr(&mut rng, 33, 24, 0.3);
+        for db in [4usize, 8, 12, 24] {
+            let ix = a.block_slices(db);
+            assert_eq!(ix.n_blocks(), 24 / db);
+            assert_eq!(ix.rows(), 33);
+            let covered: usize = (0..ix.n_blocks()).map(|b| ix.block_nnz(b)).sum();
+            assert_eq!(covered, a.nnz(), "db={db}");
+            // Ranges tile each row in order.
+            for r in 0..33 {
+                let (row_lo, _) = ix.row_range(r, 0);
+                let (_, row_hi) = ix.row_range(r, ix.n_blocks() - 1);
+                let mut expect = row_lo;
+                for b in 0..ix.n_blocks() {
+                    let (lo, hi) = ix.row_range(r, b);
+                    assert_eq!(lo, expect);
+                    assert!(hi >= lo);
+                    expect = hi;
+                }
+                assert_eq!(expect, row_hi);
+            }
+        }
+    }
+
+    #[test]
+    fn tmatvec_block_sliced_matches_scan_kernel_exactly() {
+        let mut rng = Rng::new(8);
+        let (a, _) = random_csr(&mut rng, 40, 32, 0.25);
+        let s: Vec<f32> = (0..40).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let db = 8;
+        let ix = a.block_slices(db);
+        for b in 0..4 {
+            let mut scan = vec![0.0f32; db];
+            a.tmatvec_block_acc(&s, b * db, (b + 1) * db, &mut scan);
+            let mut sliced = vec![0.0f32; db];
+            a.tmatvec_block_sliced(&s, &ix, b, &mut sliced);
+            // Same accumulation order => bit-identical, not just close.
+            assert_eq!(scan, sliced, "block {b}");
+        }
+    }
+
+    #[test]
+    fn block_slices_handle_empty_rows_and_blocks() {
+        let mut b = CsrBuilder::new(3, 8);
+        b.push(0, 1, 1.0); // row 1 empty; block 1 (cols 4..8) only row 2
+        b.push(2, 6, 2.0);
+        let m = b.build();
+        let ix = m.block_slices(4);
+        assert_eq!(ix.block_nnz(0), 1);
+        assert_eq!(ix.block_nnz(1), 1);
+        assert_eq!(ix.row_range(1, 0), ix.row_range(1, 1)); // empty row
+        let s = [1.0f32, 1.0, 3.0];
+        let mut g = vec![0.0f32; 4];
+        m.tmatvec_block_sliced(&s, &ix, 1, &mut g);
+        assert_eq!(g, vec![0.0, 0.0, 6.0, 0.0]);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! startup — see `data::partition`.
 
 mod csr;
-pub use csr::{CsrBuilder, CsrMatrix};
+pub use csr::{BlockSliceIndex, CsrBuilder, CsrMatrix};
 
 /// Dense reference ops used by tests and small utilities.
 pub mod dense {

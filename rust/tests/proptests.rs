@@ -2,7 +2,7 @@
 //! §8), driven by the in-tree seeded property harness.
 
 use asybadmm::admm::{gather_packed, prox_l1_box, soft_threshold};
-use asybadmm::coordinator::{BlockStore, Topology};
+use asybadmm::coordinator::{BlockStore, RwBlockStore, Topology};
 use asybadmm::data::{gen_partitioned, BlockGeometry, Dataset, LossKind, SynthSpec};
 use asybadmm::sparse::{dense, CsrBuilder, CsrMatrix};
 use asybadmm::testutil::forall;
@@ -236,6 +236,116 @@ fn prop_sparse_matches_dense() {
             for (u, v) in g.iter().zip(&gd) {
                 if (u - v).abs() > 1e-3 {
                     return Err(format!("tmatvec {u} vs {v}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (f2) The block-slice index kernel equals the dense reference A^T s
+/// restricted to [col_lo, col_hi) for random CSR matrices and random
+/// block boundaries, and is bit-identical to the partition_point scan.
+#[test]
+fn prop_block_slice_kernel_matches_dense_reference() {
+    forall(
+        "block-slices",
+        30,
+        |rng| {
+            let db = 1 + rng.below(10);
+            let n_blocks = 1 + rng.below(7);
+            let rows = 1 + rng.below(40);
+            let cols = n_blocks * db;
+            let mut b = CsrBuilder::new(rows, cols);
+            let mut d = vec![0.0f32; rows * cols];
+            for r in 0..rows {
+                for c in 0..cols {
+                    if rng.bernoulli(0.25) {
+                        let v = rng.normal_f32(0.0, 1.0);
+                        b.push(r, c, v);
+                        d[r * cols + c] = v;
+                    }
+                }
+            }
+            let s: Vec<f32> = (0..rows).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            (b.build(), d, rows, db, n_blocks, s)
+        },
+        |(a, d, rows, db, n_blocks, s): &(CsrMatrix, Vec<f32>, usize, usize, usize, Vec<f32>)| {
+            let ix = a.block_slices(*db);
+            if ix.n_blocks() != *n_blocks || ix.rows() != *rows {
+                return Err("index shape mismatch".into());
+            }
+            let covered: usize = (0..*n_blocks).map(|b| ix.block_nnz(b)).sum();
+            if covered != a.nnz() {
+                return Err(format!("index covers {covered} of {} nnz", a.nnz()));
+            }
+            let gd = dense::tmatvec(d, *rows, n_blocks * db, s);
+            for blk in 0..*n_blocks {
+                let (lo, hi) = (blk * db, (blk + 1) * db);
+                let mut g = vec![0.0f32; *db];
+                a.tmatvec_block_sliced(s, &ix, blk, &mut g);
+                for (k, v) in g.iter().enumerate() {
+                    if (v - gd[lo + k]).abs() > 1e-3 {
+                        return Err(format!(
+                            "block {blk} elem {k}: sliced {v} vs dense {}",
+                            gd[lo + k]
+                        ));
+                    }
+                }
+                // The index-free scan accumulates in the same order, so
+                // the two kernels must agree exactly, not just closely.
+                let mut g_scan = vec![0.0f32; *db];
+                a.tmatvec_block_acc(s, lo, hi, &mut g_scan);
+                if g != g_scan {
+                    return Err(format!("block {blk}: sliced != scan kernel"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (c2) The seqlock store is sequentially indistinguishable from the
+/// RwLock reference store under random write/update/read interleavings
+/// (differential oracle for the double-buffer + version protocol).
+#[test]
+fn prop_seqlock_store_matches_rwlock_reference() {
+    forall(
+        "seqlock-vs-rwlock",
+        20,
+        |rng| (1 + rng.below(5), 1 + rng.below(12), 5 + rng.below(60), rng.next_u64()),
+        |&(blocks, db, ops, seed)| {
+            let seq = BlockStore::new(blocks, db);
+            let rw = RwBlockStore::new(blocks, db);
+            let mut rng = Rng::new(seed);
+            let (mut a, mut b) = (vec![0.0f32; db], vec![0.0f32; db]);
+            for op in 0..ops {
+                let j = rng.below(blocks);
+                match rng.below(3) {
+                    0 => {
+                        let data: Vec<f32> = (0..db).map(|_| rng.f32()).collect();
+                        let (va, vb) = (seq.write(j, &data), rw.write(j, &data));
+                        if va != vb {
+                            return Err(format!("op {op}: write versions {va} vs {vb}"));
+                        }
+                    }
+                    1 => {
+                        let delta = rng.normal_f32(0.0, 1.0);
+                        let f = |z: &mut [f32]| z.iter_mut().for_each(|x| *x += delta);
+                        let (va, vb) = (seq.update_with(j, f), rw.update_with(j, f));
+                        if va != vb {
+                            return Err(format!("op {op}: update versions {va} vs {vb}"));
+                        }
+                    }
+                    _ => {
+                        let (va, vb) = (seq.read_into(j, &mut a), rw.read_into(j, &mut b));
+                        if va != vb || a != b {
+                            return Err(format!("op {op}: read diverged (v {va} vs {vb})"));
+                        }
+                    }
+                }
+                if seq.version(j) != rw.version(j) {
+                    return Err(format!("op {op}: version() diverged"));
                 }
             }
             Ok(())
