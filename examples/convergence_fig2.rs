@@ -14,11 +14,35 @@
 use std::path::Path;
 
 use asybadmm::config::{BlockSelection, Config};
+use asybadmm::coordinator::{Algo, Observer, Progress, Session};
 use asybadmm::data::gen_virtual_partitioned;
 use asybadmm::problem::Problem;
 use asybadmm::report::write_file;
 use asybadmm::runtime::Manifest;
-use asybadmm::sim::{calibrate_native, calibrate_xla, run_sim};
+use asybadmm::sim::{calibrate_native, calibrate_xla};
+
+/// Streams each watermark sample straight into the two Fig. 2 CSVs —
+/// an `Observer` on the DES path (the objective is computed once per
+/// sample and shared with the built-in sampler).
+struct CsvTap<'a> {
+    p: usize,
+    n_blocks: usize,
+    fig2a: &'a mut String,
+    fig2b: &'a mut String,
+}
+
+impl Observer for CsvTap<'_> {
+    fn on_sample(&mut self, s: &Progress<'_>) {
+        let obj = s.objective().total();
+        self.fig2a.push_str(&format!(
+            "{},{:.2},{:.8}\n",
+            self.p,
+            s.epoch as f64 / self.n_blocks as f64,
+            obj
+        ));
+        self.fig2b.push_str(&format!("{},{:.6},{:.8}\n", self.p, s.time_s, obj));
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
@@ -66,16 +90,28 @@ fn main() -> anyhow::Result<()> {
         let mut cfg = base.clone();
         cfg.n_workers = p;
         let (ds, shards) = gen_virtual_partitioned(&cfg.synth_spec(), 32, p);
-        let r = run_sim(&cfg, &ds, &shards, &cost)?;
+        let r = Session::builder(&cfg)
+            .dataset(&ds, &shards)
+            .algo(Algo::Sim(cost))
+            .observer(CsvTap {
+                p,
+                n_blocks: base.n_blocks,
+                fig2a: &mut fig2a,
+                fig2b: &mut fig2b,
+            })
+            .run()?;
+        let sx = r.sim.as_ref().expect("Algo::Sim reports sim extras");
         println!(
             "p={p:>2}: {} -> {:.6} in {:.1} virtual s ({} pushes, max queue {})",
             r.samples.first().map(|s| format!("{:.6}", s.objective)).unwrap_or_default(),
             r.final_objective.total(),
-            r.virtual_time_s,
-            r.pushes,
-            r.max_queue
+            sx.virtual_time_s,
+            r.total_pushes(),
+            sx.max_queue
         );
-        for s in &r.samples {
+        // The observer streamed the watermark rows; append the
+        // final-state row (it lives only in `samples`).
+        if let Some(s) = r.samples.last() {
             fig2a.push_str(&format!(
                 "{p},{:.2},{:.8}\n",
                 s.epoch as f64 / base.n_blocks as f64,

@@ -18,7 +18,7 @@
 use std::path::Path;
 
 use asybadmm::config::Config;
-use asybadmm::coordinator::run_async;
+use asybadmm::coordinator::Session;
 use asybadmm::data::gen_partitioned;
 use asybadmm::report::write_file;
 
@@ -50,7 +50,7 @@ fn main() -> anyhow::Result<()> {
             let mut cfg = base.clone();
             cfg.gamma = g;
             cfg.pull_hold = h;
-            let r = run_async(&cfg, &ds, &shards)?;
+            let r = Session::builder(&cfg).dataset(&ds, &shards).run()?;
             let obj = r.final_objective.total();
             print!("{obj:>12.6}");
             csv.push_str(&format!("{g},{h},{obj:.8},{}\n", r.max_staleness()));

@@ -6,7 +6,7 @@
 //!     cargo run --release --example lasso
 
 use asybadmm::config::Config;
-use asybadmm::coordinator::run_async;
+use asybadmm::coordinator::Session;
 use asybadmm::data::{gen_partitioned, LossKind};
 
 fn main() -> anyhow::Result<()> {
@@ -27,7 +27,7 @@ fn main() -> anyhow::Result<()> {
         cfg.lambda
     );
 
-    let report = run_async(&cfg, &ds, &shards)?;
+    let report = Session::builder(&cfg).dataset(&ds, &shards).run()?;
     for s in &report.samples {
         println!("  epoch {:>5}  obj {:.6}", s.epoch, s.objective);
     }
@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
         c.lambda = lam;
         c.epochs = 300;
         c.log_every = 1000;
-        let r = run_async(&c, &ds, &shards)?;
+        let r = Session::builder(&c).dataset(&ds, &shards).run()?;
         let nnz = r.z_final.iter().filter(|v| v.abs() > 1e-6).count();
         println!("{:>10.1e} {:>12.6} {:>8}", lam, r.final_objective.total(), nnz);
     }

@@ -1,15 +1,42 @@
 //! Quickstart: train sparse logistic regression with block-wise
-//! asynchronous ADMM on a small synthetic dataset, native backend.
+//! asynchronous ADMM on a small synthetic dataset, native backend,
+//! through the `Session` builder API.
 //!
 //!     cargo run --release --example quickstart
+//!
+//! Shown here:
+//!   * `Session::builder(&cfg).dataset(..).run()` — the one entry point
+//!     for every execution path (async runtime, baselines, DES);
+//!   * a custom `Observer` streaming live progress (the same hook the
+//!     built-in objective sampler uses);
+//!   * an explicit `Transport` choice — the lock-free per-worker SPSC
+//!     ring instead of the default bounded-mpsc channel.
 //!
 //! For the full three-layer path (JAX/Pallas-compiled XLA artifacts on
 //! the hot path), run `make artifacts` first and see
 //! `examples/sparse_logreg_e2e.rs`.
 
-use asybadmm::config::Config;
-use asybadmm::coordinator::run_async;
+use asybadmm::config::{Config, TransportKind};
+use asybadmm::coordinator::{make_transport, push_inflight, Observer, Progress, Session};
 use asybadmm::data::gen_partitioned;
+
+/// Live progress printer: `on_sample` fires whenever the minimum worker
+/// epoch crosses a `log_every` watermark, with a lazily-evaluated view
+/// of the consensus iterate.
+struct LiveLog;
+
+impl Observer for LiveLog {
+    fn on_sample(&mut self, p: &Progress<'_>) {
+        let obj = p.objective();
+        println!(
+            "  [live] epoch {:>5}  t={:>7.3}s  obj {:.6}  (data {:.6})",
+            p.epoch,
+            p.time_s,
+            obj.total(),
+            obj.data_loss
+        );
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     // 1. Configure: 2k samples, 16 blocks x 64 features, 4 workers,
@@ -31,10 +58,22 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // 3. Train asynchronously (Algorithm 1).
-    let report = run_async(&cfg, &ds, &shards)?;
+    // 3. Train asynchronously (Algorithm 1).  The transport line is
+    //    optional — the default comes from `cfg.transport` (settable on
+    //    the CLI with `--set transport=mpsc|ring`); it is spelled out
+    //    here to show where the queueing discipline plugs in.
+    let report = Session::builder(&cfg)
+        .dataset(&ds, &shards)
+        .transport(make_transport(
+            TransportKind::SpscRing,
+            cfg.n_workers,
+            cfg.n_servers,
+            push_inflight(cfg.n_workers),
+        ))
+        .observer(LiveLog)
+        .run()?;
 
-    // 4. Inspect.
+    // 4. Inspect the unified report.
     println!("\n{:>8} {:>12} {:>12}", "epoch", "objective", "time(s)");
     for s in &report.samples {
         println!("{:>8} {:>12.6} {:>12.4}", s.epoch, s.objective, s.time_s);

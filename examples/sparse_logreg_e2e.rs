@@ -16,7 +16,7 @@
 use std::path::Path;
 
 use asybadmm::config::{Backend, Config};
-use asybadmm::coordinator::run_async;
+use asybadmm::coordinator::Session;
 use asybadmm::data::gen_partitioned;
 use asybadmm::report::{run_record, write_file, write_trace_csv};
 
@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
         cfg.block_size
     );
 
-    let report = run_async(&cfg, &ds, &shards)?;
+    let report = Session::builder(&cfg).dataset(&ds, &shards).run()?;
 
     println!("\nloss curve (objective = mean logistic loss + l1):");
     for s in &report.samples {

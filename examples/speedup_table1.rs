@@ -26,11 +26,12 @@
 use std::path::Path;
 
 use asybadmm::config::{BlockSelection, Config};
+use asybadmm::coordinator::{Algo, Session};
 use asybadmm::data::gen_virtual_partitioned;
 use asybadmm::problem::Problem;
 use asybadmm::report::{write_file, SpeedupTable};
 use asybadmm::runtime::Manifest;
-use asybadmm::sim::{calibrate_native, calibrate_xla, run_sim, CostModel};
+use asybadmm::sim::{calibrate_native, calibrate_xla, CostModel};
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
@@ -91,10 +92,14 @@ fn main() -> anyhow::Result<()> {
         let mut cfg = base.clone();
         cfg.n_workers = p;
         let (ds, shards) = gen_virtual_partitioned(&cfg.synth_spec(), 32, p);
-        let r = run_sim(&cfg, &ds, &shards, &cost)?;
+        let r = Session::builder(&cfg)
+            .dataset(&ds, &shards)
+            .algo(Algo::Sim(cost))
+            .run()?;
+        let sx = r.sim.as_ref().expect("Algo::Sim reports sim extras");
         let ts: Vec<f64> = ks_cycles
             .iter()
-            .map(|&k| r.time_to_epoch[k * base.n_blocks])
+            .map(|&k| sx.time_to_epoch[k * base.n_blocks])
             .collect();
         println!(
             "p={p:>2}: t(k=20)={:.1}s t(k=50)={:.1}s t(k=100)={:.1}s (virtual), final obj {:.5}",

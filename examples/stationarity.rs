@@ -9,7 +9,7 @@
 //!     cargo run --release --example stationarity
 
 use asybadmm::config::Config;
-use asybadmm::coordinator::run_async;
+use asybadmm::coordinator::Session;
 use asybadmm::data::gen_partitioned;
 
 fn main() -> anyhow::Result<()> {
@@ -27,7 +27,7 @@ fn main() -> anyhow::Result<()> {
     for &t in &budgets {
         let mut cfg = base.clone();
         cfg.epochs = t;
-        let r = run_async(&cfg, &ds, &shards)?;
+        let r = Session::builder(&cfg).dataset(&ds, &shards).run()?;
         println!(
             "{t:>8} {:>14.6e} {:>14.6e} {:>12.6}",
             r.stationarity,

@@ -4,8 +4,9 @@
 //! reach a given objective sooner in (virtual) time.
 
 use asybadmm::config::Config;
+use asybadmm::coordinator::{Algo, Session};
 use asybadmm::data::gen_virtual_partitioned;
-use asybadmm::sim::{run_sim, CostModel};
+use asybadmm::sim::CostModel;
 
 fn main() {
     let quick = std::env::var("BENCH_QUICK").as_deref() == Ok("1");
@@ -30,7 +31,11 @@ fn main() {
         let mut cfg = base.clone();
         cfg.n_workers = p;
         let (ds, shards) = gen_virtual_partitioned(&cfg.synth_spec(), 32, p);
-        let r = run_sim(&cfg, &ds, &shards, &cost).unwrap();
+        let r = Session::builder(&cfg)
+            .dataset(&ds, &shards)
+            .algo(Algo::Sim(cost))
+            .run()
+            .unwrap();
         let first = r.samples.first().unwrap().objective;
         let target = first - 0.5 * (first - r.final_objective.total());
         let t_half = r
@@ -38,7 +43,7 @@ fn main() {
             .iter()
             .find(|s| s.objective <= target)
             .map(|s| s.time_s)
-            .unwrap_or(r.virtual_time_s);
+            .unwrap_or(r.elapsed_s);
         println!(
             "p={p:>2}: obj {first:.5} -> {:.5}, half-way at {t_half:.2} virtual s",
             r.final_objective.total()

@@ -2,15 +2,19 @@
 //! single-global-lock full-vector design of prior asynchronous ADMMs —
 //! the motivating claim of §1.
 //!
-//! Three measurements:
+//! Four measurements:
 //!  1. store-level read throughput: the seqlock double-buffer BlockStore
 //!     vs the RwLock copy-under-lock baseline under 8 concurrent readers
 //!     + 1 writer per block (the hot-path gate: seqlock must win ≥ 2×),
-//!  2. threaded wall-clock throughput (iterations/s) of run_async vs
-//!     run_locked_admm at identical budgets (on a multi-core host the
-//!     gap widens with p; on a 1-2 core machine it mostly shows
-//!     overhead parity), and
-//!  3. the DES with per-block servers vs ONE server shard with service
+//!  2. raw transport enqueue/drain throughput: the per-worker SPSC ring
+//!     transport vs the shared bounded-mpsc channel, 4 producers → 1
+//!     draining server, pooled buffers (the `ring_vs_mpsc_enqueue` gate
+//!     in BENCH_hotpath.json),
+//!  3. threaded wall-clock throughput (iterations/s) of the async
+//!     session (under both transports) vs run_locked_admm at identical
+//!     budgets (on a multi-core host the gap widens with p; on a 1-2
+//!     core machine it mostly shows overhead parity), and
+//!  4. the DES with per-block servers vs ONE server shard with service
 //!     time scaled by |N(i)| (full-vector application) — the
 //!     architecture-level serialization cost, core-count independent.
 //!
@@ -22,8 +26,10 @@ use std::time::Duration;
 
 use asybadmm::baselines::run_locked_admm;
 use asybadmm::bench::{emit_hotpath_json, harness_from_env, json_requested, BenchResult};
-use asybadmm::config::Config;
-use asybadmm::coordinator::{run_async, BlockStore, RwBlockStore};
+use asybadmm::config::{Config, TransportKind};
+use asybadmm::coordinator::{
+    make_transport, push_inflight, BlockStore, PushMsg, PushPool, RwBlockStore, Session,
+};
 use asybadmm::data::gen_partitioned;
 use asybadmm::sim::{run_sim, CostModel};
 
@@ -92,6 +98,43 @@ fn read_throughput<S: Store>(
     total.load(Ordering::Relaxed) as f64 / dur.as_secs_f64()
 }
 
+/// Raw transport throughput: `workers` producer threads blast pooled
+/// pushes at one server endpoint that drains and recycles them — the
+/// enqueue/dequeue path in isolation (no ADMM math, no allocation in
+/// steady state).
+fn push_throughput(kind: TransportKind, workers: usize, per_worker: usize, db: usize) -> f64 {
+    let transport = make_transport(kind, workers, 1, push_inflight(workers));
+    let total = workers * per_worker;
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let mut tx = transport.connect_worker(w);
+            scope.spawn(move || {
+                let mut pool = PushPool::new(db, 32);
+                for i in 0..per_worker {
+                    let buf = pool.acquire();
+                    let msg = PushMsg {
+                        worker: w,
+                        block: 0,
+                        w: buf,
+                        worker_epoch: i,
+                        z_version_used: 0,
+                        sent_at: std::time::Instant::now(),
+                        recycle: Some(pool.recycler()),
+                    };
+                    tx.send(0, msg).unwrap();
+                }
+            });
+        }
+        let mut rx = transport.connect_server(0);
+        for _ in 0..total {
+            let mut msg = rx.recv().expect("transport ended early");
+            msg.recycle_now();
+        }
+    });
+    total as f64 / t0.elapsed().as_secs_f64()
+}
+
 /// Record an externally-timed measurement (seconds per op) so it lands
 /// in the harness's CSV/JSON alongside closure-timed benches.
 fn record(h: &mut asybadmm::bench::Harness, name: &str, per_op_s: f64) {
@@ -131,7 +174,23 @@ fn main() {
         seq_rps, rw_rps
     );
 
-    // 2. Wall-clock (threaded).
+    // 2. Raw transport enqueue/drain: per-worker SPSC rings vs the
+    //    shared bounded-mpsc channel (ROADMAP "lock-free server queues").
+    let msgs = if quick { 2_000 } else { 20_000 };
+    let mpsc_rate = push_throughput(TransportKind::Mpsc, 4, msgs, 256);
+    let ring_rate = push_throughput(TransportKind::SpscRing, 4, msgs, 256);
+    let enqueue_ratio = ring_rate / mpsc_rate.max(1.0);
+    record(&mut h, "mpsc transport push (4w->1s, db=256)", 1.0 / mpsc_rate.max(1.0));
+    record(&mut h, "ring transport push (4w->1s, db=256)", 1.0 / ring_rate.max(1.0));
+    println!(
+        "\ntransport pushes (4 producers -> 1 draining server, db=256):\n\
+         \x20 mpsc {:>10.0} pushes/s\n\
+         \x20 ring {:>10.0} pushes/s\n\
+         \x20 -> ring/mpsc = {enqueue_ratio:.2}x  (gate; <1 expected only on 1-core hosts)",
+        mpsc_rate, ring_rate
+    );
+
+    // 3. Wall-clock (threaded), async session under both transports.
     let mut cfg = Config::small();
     cfg.samples = if quick { 512 } else { 2048 };
     cfg.epochs = if quick { 100 } else { 400 };
@@ -139,9 +198,15 @@ fn main() {
     let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
 
     let t0 = std::time::Instant::now();
-    let r_free = run_async(&cfg, &ds, &shards).unwrap();
+    let r_free = Session::builder(&cfg).dataset(&ds, &shards).run().unwrap();
     let t_free = t0.elapsed().as_secs_f64();
     let block_updates_free = cfg.epochs * cfg.n_workers;
+
+    let mut cfg_ring = cfg.clone();
+    cfg_ring.transport = TransportKind::SpscRing;
+    let t0 = std::time::Instant::now();
+    let r_ring = Session::builder(&cfg_ring).dataset(&ds, &shards).run().unwrap();
+    let t_ring = t0.elapsed().as_secs_f64();
 
     // The locked baseline does full-vector epochs (|N(i)| block updates
     // per iteration): match total block updates.
@@ -153,13 +218,20 @@ fn main() {
     let block_updates_locked = cfg_locked.epochs * cfg.n_workers * cfg.blocks_per_worker;
 
     let free_rate = block_updates_free as f64 / t_free;
+    let ring_threaded_rate = block_updates_free as f64 / t_ring;
     let locked_rate = block_updates_locked as f64 / t_locked;
-    record(&mut h, "threaded lock-free block-update", 1.0 / free_rate.max(1.0));
+    record(&mut h, "threaded lock-free block-update (mpsc)", 1.0 / free_rate.max(1.0));
+    record(&mut h, "threaded lock-free block-update (ring)", 1.0 / ring_threaded_rate.max(1.0));
     record(&mut h, "threaded global-lock block-update", 1.0 / locked_rate.max(1.0));
     println!(
-        "threaded  lock-free : {:>8.0} block-updates/s (obj {:.5})",
+        "threaded  lock-free (mpsc): {:>8.0} block-updates/s (obj {:.5})",
         free_rate,
         r_free.final_objective.total()
+    );
+    println!(
+        "threaded  lock-free (ring): {:>8.0} block-updates/s (obj {:.5})",
+        ring_threaded_rate,
+        r_ring.final_objective.total()
     );
     println!(
         "threaded  global-lock: {:>8.0} block-updates/s (obj {:.5})",
@@ -167,7 +239,7 @@ fn main() {
         r_locked.final_objective.total()
     );
 
-    // 3. Architectural serialization via DES: multi-server block-wise
+    // 4. Architectural serialization via DES: multi-server block-wise
     //    vs single server whose service time covers a full-vector apply.
     println!("\nDES (architecture-level, virtual time to k=50):");
     let k = 50;
@@ -223,7 +295,11 @@ fn main() {
                 ("seqlock_reads_per_s", seq_rps),
                 ("rwlock_reads_per_s", rw_rps),
                 ("seqlock_vs_rwlock", ratio),
+                ("mpsc_push_per_s", mpsc_rate),
+                ("ring_push_per_s", ring_rate),
+                ("ring_vs_mpsc_enqueue", enqueue_ratio),
                 ("threaded_lockfree_updates_per_s", free_rate),
+                ("threaded_ring_updates_per_s", ring_threaded_rate),
                 ("threaded_globallock_updates_per_s", locked_rate),
                 ("des_gap_p32", des_gap_p32),
             ],

@@ -4,9 +4,10 @@
 //! recorded in EXPERIMENTS.md.
 
 use asybadmm::config::Config;
+use asybadmm::coordinator::{Algo, Session};
 use asybadmm::data::gen_virtual_partitioned;
 use asybadmm::report::SpeedupTable;
-use asybadmm::sim::{run_sim, CostModel};
+use asybadmm::sim::CostModel;
 
 fn main() {
     let quick = std::env::var("BENCH_QUICK").as_deref() == Ok("1");
@@ -37,8 +38,13 @@ fn main() {
         let mut cfg = base.clone();
         cfg.n_workers = p;
         let (ds, shards) = gen_virtual_partitioned(&cfg.synth_spec(), 32, p);
-        let r = run_sim(&cfg, &ds, &shards, &cost).unwrap();
-        rows.push((p, ks.iter().map(|&k| r.time_to_epoch[k]).collect::<Vec<_>>()));
+        let r = Session::builder(&cfg)
+            .dataset(&ds, &shards)
+            .algo(Algo::Sim(cost))
+            .run()
+            .unwrap();
+        let sx = r.sim.as_ref().expect("Algo::Sim reports sim extras");
+        rows.push((p, ks.iter().map(|&k| sx.time_to_epoch[k]).collect::<Vec<_>>()));
     }
     let table = SpeedupTable { ks, rows };
     println!("{}", table.to_markdown());

@@ -9,6 +9,10 @@
 //!   updates replace (paper §1), and the E4 ablation quantifies the gap.
 //! * [`hogwild_sgd`] — lock-free asynchronous proximal SGD (HOGWILD!-
 //!   style), the gradient-method alternative mentioned in §1.
+//!
+//! All three are also reachable through the unified entry point:
+//! `Session::builder(&cfg).dataset(..).algo(Algo::SyncAdmm | ..).run()`
+//! returns the same `TrainReport` shape as the async runtime.
 
 mod hogwild;
 mod locked_admm;

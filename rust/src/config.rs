@@ -36,6 +36,35 @@ impl Backend {
     }
 }
 
+/// Which push transport carries worker→server messages
+/// (see `coordinator/transport.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// One bounded `std::sync::mpsc::sync_channel` per server shard —
+    /// simple, but all workers serialize on the channel's internal lock.
+    Mpsc,
+    /// Per-(worker, server) SPSC rings with atomic head/tail — no
+    /// shared queue lock anywhere on the push path.
+    SpscRing,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "mpsc" => Ok(TransportKind::Mpsc),
+            "ring" => Ok(TransportKind::SpscRing),
+            other => anyhow::bail!("unknown transport {other:?} (mpsc|ring)"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TransportKind::Mpsc => "mpsc",
+            TransportKind::SpscRing => "ring",
+        }
+    }
+}
+
 /// Block selection rule on workers (paper uses uniform random; cyclic is
 /// the variant mentioned for the experiments).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -101,6 +130,8 @@ pub struct Config {
 
     // -- execution ---------------------------------------------------------
     pub backend: Backend,
+    /// Worker→server push queueing discipline (`mpsc` | `ring`).
+    pub transport: TransportKind,
     pub artifacts_dir: PathBuf,
     /// Rows per AOT chunk; must match an artifact shape set.
     pub m_chunk: usize,
@@ -145,6 +176,7 @@ impl Default for Config {
             max_delay: 16,
             enforce_delay_bound: false,
             backend: Backend::Native,
+            transport: TransportKind::Mpsc,
             artifacts_dir: PathBuf::from("artifacts"),
             m_chunk: 2048,
             d_pad: 4096,
@@ -197,6 +229,40 @@ impl Config {
         }
     }
 
+    /// Every key `apply_kv` accepts, for discoverability in error
+    /// messages and `--help` text.  Keep in sync with the match below.
+    pub const KEYS: &'static [&'static str] = &[
+        "loss",
+        "lambda",
+        "clip",
+        "samples",
+        "n_blocks",
+        "block_size",
+        "nnz_per_row",
+        "blocks_per_worker",
+        "shared_blocks",
+        "zipf_s",
+        "noise",
+        "data_path",
+        "n_workers",
+        "n_servers",
+        "rho",
+        "gamma",
+        "epochs",
+        "selection",
+        "max_delay",
+        "enforce_delay_bound",
+        "backend",
+        "transport",
+        "artifacts_dir",
+        "m_chunk",
+        "d_pad",
+        "net_delay_mean_ms",
+        "pull_hold",
+        "seed",
+        "log_every",
+    ];
+
     pub fn apply_kv(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
         let v = value.trim().trim_matches('"');
         match key.trim() {
@@ -221,6 +287,7 @@ impl Config {
             "max_delay" => self.max_delay = v.parse()?,
             "enforce_delay_bound" => self.enforce_delay_bound = v.parse()?,
             "backend" => self.backend = Backend::parse(v)?,
+            "transport" => self.transport = TransportKind::parse(v)?,
             "artifacts_dir" => self.artifacts_dir = PathBuf::from(v),
             "m_chunk" => self.m_chunk = v.parse()?,
             "d_pad" => self.d_pad = v.parse()?,
@@ -228,7 +295,10 @@ impl Config {
             "pull_hold" => self.pull_hold = v.parse()?,
             "seed" => self.seed = v.parse()?,
             "log_every" => self.log_every = v.parse()?,
-            other => anyhow::bail!("unknown config key {other:?}"),
+            other => anyhow::bail!(
+                "unknown config key {other:?}; valid keys: {}",
+                Self::KEYS.join(", ")
+            ),
         }
         Ok(())
     }
@@ -291,7 +361,7 @@ impl Config {
     /// One-line summary for report headers.
     pub fn summary(&self) -> String {
         format!(
-            "loss={} m={} M={} db={} p={} servers={} rho={} gamma={} lambda={} T={} sel={} backend={} seed={}",
+            "loss={} m={} M={} db={} p={} servers={} rho={} gamma={} lambda={} T={} sel={} backend={} transport={} seed={}",
             self.loss.as_str(),
             self.samples,
             self.n_blocks,
@@ -304,6 +374,7 @@ impl Config {
             self.epochs,
             self.selection.as_str(),
             self.backend.as_str(),
+            self.transport.as_str(),
             self.seed
         )
     }
@@ -346,12 +417,29 @@ mod tests {
         c.apply_kv("gamma", "0.5").unwrap();
         c.apply_kv("backend", "xla").unwrap();
         c.apply_kv("selection", "cyclic").unwrap();
+        c.apply_kv("transport", "ring").unwrap();
         assert_eq!(c.n_workers, 16);
         assert_eq!(c.gamma, 0.5);
         assert_eq!(c.backend, Backend::Xla);
         assert_eq!(c.selection, BlockSelection::Cyclic);
+        assert_eq!(c.transport, TransportKind::SpscRing);
+        c.apply_kv("transport", "mpsc").unwrap();
+        assert_eq!(c.transport, TransportKind::Mpsc);
+        assert!(c.apply_kv("transport", "carrier-pigeon").is_err());
         assert!(c.apply_kv("nope", "1").is_err());
         assert!(c.apply_kv("n_workers", "abc").is_err());
+    }
+
+    #[test]
+    fn unknown_key_error_lists_valid_keys() {
+        let mut c = Config::default();
+        let err = c.apply_kv("n_wokers", "4").unwrap_err().to_string();
+        assert!(err.contains("unknown config key"), "{err}");
+        // The error is self-documenting: every accepted key is listed.
+        for key in Config::KEYS {
+            assert!(err.contains(key), "error does not mention {key:?}: {err}");
+        }
+        assert!(err.contains("transport"), "{err}");
     }
 
     #[test]

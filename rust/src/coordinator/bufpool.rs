@@ -12,11 +12,11 @@
 //! 3. after `handle_push` the server shard sends the buffer home on the
 //!    message's recycle channel instead of dropping it.
 //!
-//! The pool cap is sized from the push channel capacity (bounded
-//! in-flight pushes, driver.rs), so the number of live buffers — and the
-//! pool's high-water mark — is bounded by the channel depth, not by the
-//! number of epochs.  `acquire` blocking at the cap is the same
-//! backpressure the bounded channel already provides.
+//! The pool cap is sized from the transport's in-flight push budget
+//! (`transport::push_inflight`, see session.rs), so the number of live
+//! buffers — and the pool's high-water mark — is bounded by the queue
+//! depth, not by the number of epochs.  `acquire` blocking at the cap is
+//! the same backpressure the bounded transport already provides.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 

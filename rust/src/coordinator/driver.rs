@@ -1,335 +1,42 @@
-//! Launcher/driver: wires store, topology, server shards, workers, and a
-//! monitor thread into one training run and returns a [`TrainReport`].
+//! Deprecated launcher shim.
+//!
+//! The 270-line monolith that used to live here — channel wiring,
+//! thread spawning, the busy-wait monitor loop, stats collection — was
+//! decomposed into [`super::session`] (the `Session` builder +
+//! `Observer` hooks) and [`super::transport`] (the pluggable push
+//! queueing).  `run_async` survives for one PR as a thin shim so
+//! out-of-tree callers get a deprecation pointer instead of a break.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use anyhow::Result;
 
-use anyhow::{Context, Result};
-
-use super::block_store::BlockStore;
-use super::compute::make_compute;
-use super::delay::DelayPolicy;
-use super::events::ObjSample;
-use super::messages::ServerMsg;
-use super::server::{ProxBackend, ServerShard, ServerStats};
-use super::topology::Topology;
-use super::worker::{WorkerCtx, WorkerStats};
-use crate::admm::{
-    check_theorem1, consensus_gap, objective_at_z, stationarity_residual, Objective,
-};
-use crate::config::{Backend, Config};
+use super::session::{Session, TrainReport};
+use crate::config::Config;
 use crate::data::{Dataset, WorkerShard};
-use crate::info;
-use crate::problem::Problem;
-use crate::runtime::{Manifest, ServerProxXla};
-
-#[derive(Debug)]
-pub struct TrainReport {
-    pub samples: Vec<ObjSample>,
-    pub final_objective: Objective,
-    pub z_final: Vec<f32>,
-    pub elapsed_s: f64,
-    pub epochs: usize,
-    pub worker_stats: Vec<WorkerStats>,
-    pub server_stats: Vec<ServerStats>,
-    /// Paper Eq. 14 residual at the final iterate.
-    pub stationarity: f64,
-    pub consensus_max: f64,
-    /// Strict Theorem-1 feasibility of the hyper-parameters used.
-    pub theorem1_feasible: bool,
-}
-
-impl TrainReport {
-    pub fn total_pushes(&self) -> usize {
-        self.server_stats.iter().map(|s| s.pushes).sum()
-    }
-
-    pub fn max_staleness(&self) -> u64 {
-        self.worker_stats
-            .iter()
-            .map(|w| w.max_staleness)
-            .chain(self.server_stats.iter().map(|s| s.max_staleness))
-            .max()
-            .unwrap_or(0)
-    }
-}
-
-/// Capacity of each server shard's bounded push channel for `n_workers`
-/// workers.  Public so tests can assert the push-buffer pools' high-water
-/// marks against the actual in-flight bound.
-pub fn push_inflight(n_workers: usize) -> usize {
-    (2 * n_workers).max(8)
-}
 
 /// Run block-wise asynchronous ADMM (Algorithm 1) with the threaded
 /// parameter-server runtime.
+#[deprecated(
+    note = "use Session::builder(&cfg).dataset(&ds, &shards).run() — \
+            it also selects transports, observers and baseline algos"
+)]
 pub fn run_async(cfg: &Config, ds: &Dataset, shards: &[WorkerShard]) -> Result<TrainReport> {
-    cfg.validate()?;
-    anyhow::ensure!(shards.len() == cfg.n_workers, "shards/workers mismatch");
-    let problem = Problem::new(cfg.loss, cfg.lambda, cfg.clip);
-    // Reported objective: paper Eq. 22's global mean (weight 1/m);
-    // each worker's f_i is its LOCAL mean (weight 1/m_i), which keeps
-    // per-iteration progress p-independent (DESIGN.md "objective
-    // scaling").
-    let weight = 1.0 / ds.samples() as f32;
-    let topo = Topology::build(shards, cfg.n_blocks, cfg.n_servers);
-    let store = Arc::new(BlockStore::new(cfg.n_blocks, cfg.block_size));
-    let policy = DelayPolicy { net_mean_ms: cfg.net_delay_mean_ms, pull_hold: cfg.pull_hold.max(1) };
-
-    // Theorem-1 feasibility report (logged; the paper itself runs with
-    // infeasible-but-working γ=0.01, as do the defaults here).
-    let shard_refs: Vec<&WorkerShard> = shards.iter().collect();
-    let t1 = check_theorem1(
-        &shard_refs,
-        &problem,
-        cfg.n_blocks,
-        cfg.rho as f64,
-        cfg.gamma as f64,
-        cfg.max_delay,
-    );
-    info!(
-        "driver",
-        "theorem1: min_alpha={:.3e} min_beta={:.3e} feasible={} (strict bound; paper runs gamma=0.01 anyway)",
-        t1.min_alpha,
-        t1.min_beta,
-        t1.feasible
-    );
-
-    let manifest = match cfg.backend {
-        Backend::Xla => Some(Manifest::load(&cfg.artifacts_dir)?),
-        Backend::Native => None,
-    };
-
-    // Bounded channels provide backpressure (ps-lite style bounded
-    // in-flight pushes): without it a fast worker can run all its epochs
-    // against a starved server queue, i.e. unbounded effective delay,
-    // violating Assumption 3 and stalling convergence.
-    let inflight = push_inflight(cfg.n_workers);
-    // The push-buffer pool never needs more buffers than can be in
-    // flight at once: the channel depth, one in service, one in the
-    // worker's hands, plus slack for recycle-channel latency.
-    let pool_cap = inflight + 4;
-    let mut server_txs = Vec::new();
-    let mut server_rxs = Vec::new();
-    for _ in 0..cfg.n_servers {
-        let (tx, rx) = mpsc::sync_channel::<ServerMsg>(inflight);
-        server_txs.push(tx);
-        server_rxs.push(rx);
-    }
-    let progress: Vec<AtomicUsize> = (0..cfg.n_workers).map(|_| AtomicUsize::new(0)).collect();
-    let worker_results: Mutex<Vec<Option<(WorkerStats, Vec<f32>, Vec<f32>)>>> =
-        Mutex::new((0..cfg.n_workers).map(|_| None).collect());
-    let server_results: Mutex<Vec<Option<ServerStats>>> =
-        Mutex::new((0..cfg.n_servers).map(|_| None).collect());
-
-    let start = Instant::now();
-    let mut samples: Vec<ObjSample> = Vec::new();
-
-    std::thread::scope(|scope| -> Result<()> {
-        // -- server shards -------------------------------------------------
-        for (sid, rx) in server_rxs.drain(..).enumerate() {
-            let topo = &topo;
-            let store = store.clone();
-            let manifest = manifest.as_ref();
-            let server_results = &server_results;
-            scope.spawn(move || {
-                let prox = match manifest {
-                    None => ProxBackend::Native,
-                    Some(m) => match ServerProxXla::load(m, cfg.block_size) {
-                        Ok(p) => ProxBackend::Xla(p),
-                        Err(e) => {
-                            eprintln!("server {sid}: XLA prox unavailable ({e:#}); native fallback");
-                            ProxBackend::Native
-                        }
-                    },
-                };
-                let shard = ServerShard::new(sid, topo, store, problem, cfg.rho, cfg.gamma);
-                let stats = shard.run(rx, prox).expect("server loop failed");
-                server_results.lock().unwrap()[sid] = Some(stats);
-            });
-        }
-
-        // -- workers ---------------------------------------------------------
-        for shard in shards {
-            let wid = shard.worker_id;
-            let topo = &topo;
-            let store = &store;
-            let txs = &server_txs;
-            let progress = &progress[wid];
-            let manifest = manifest.as_ref();
-            let worker_results = &worker_results;
-            let seed = cfg.seed ^ (0x9E37 + wid as u64 * 0x1000_0000_01B3);
-            let local_weight = 1.0 / shard.samples().max(1) as f32;
-            scope.spawn(move || {
-                let mut compute = make_compute(
-                    cfg.backend,
-                    shard,
-                    problem,
-                    local_weight,
-                    manifest,
-                    cfg.m_chunk,
-                    cfg.d_pad,
-                )
-                .expect("construct worker compute backend");
-                let mut ctx = WorkerCtx::new(
-                    shard,
-                    topo,
-                    store,
-                    txs,
-                    policy,
-                    cfg.selection,
-                    cfg.rho,
-                    cfg.epochs,
-                    cfg.max_delay,
-                    cfg.enforce_delay_bound,
-                    seed,
-                    progress,
-                    pool_cap,
-                );
-                let stats = ctx.run(compute.as_mut()).expect("worker loop failed");
-                let (x, y) = ctx.into_state();
-                worker_results.lock().unwrap()[wid] = Some((stats, x, y));
-            });
-        }
-
-        // -- monitor (this thread) --------------------------------------------
-        let log_every = cfg.log_every.max(1);
-        let mut next_epoch = 0usize;
-        loop {
-            let min_epoch =
-                progress.iter().map(|p| p.load(Ordering::Acquire)).min().unwrap_or(0);
-            if min_epoch >= next_epoch {
-                let z = store.snapshot();
-                let obj = objective_at_z(shards, &problem, weight, &z);
-                samples.push(ObjSample {
-                    time_s: start.elapsed().as_secs_f64(),
-                    epoch: min_epoch,
-                    objective: obj.total(),
-                    data_loss: obj.data_loss,
-                    consensus_max: 0.0,
-                });
-                next_epoch = next_epoch.max(min_epoch) + log_every;
-            }
-            if min_epoch >= cfg.epochs {
-                break;
-            }
-            std::thread::sleep(std::time::Duration::from_micros(200));
-        }
-        // workers are done (or finishing); ask servers to drain & exit.
-        // The scope joins everything on exit.
-        for tx in &server_txs {
-            let _ = tx.send(ServerMsg::Shutdown);
-        }
-        Ok(())
-    })?;
-    let elapsed_s = start.elapsed().as_secs_f64();
-
-    // -- final metrics ---------------------------------------------------
-    let z_final = store.snapshot();
-    let final_objective = objective_at_z(shards, &problem, weight, &z_final);
-    let collected = worker_results.into_inner().unwrap();
-    let mut worker_stats = Vec::with_capacity(cfg.n_workers);
-    let mut xs = Vec::with_capacity(cfg.n_workers);
-    let mut ys = Vec::with_capacity(cfg.n_workers);
-    for r in collected {
-        let (stats, x, y) = r.context("worker did not report")?;
-        worker_stats.push(stats);
-        xs.push(x);
-        ys.push(y);
-    }
-    let server_stats: Vec<ServerStats> = server_results
-        .into_inner()
-        .unwrap()
-        .into_iter()
-        .map(|s| s.unwrap_or_default())
-        .collect();
-    let stationarity = stationarity_residual(shards, &problem, cfg.rho, &xs, &ys, &z_final);
-    let (consensus_max, _) = consensus_gap(shards, &xs, &z_final);
-
-    // Ensure the last sample reflects the final state.
-    samples.push(ObjSample {
-        time_s: elapsed_s,
-        epoch: cfg.epochs,
-        objective: final_objective.total(),
-        data_loss: final_objective.data_loss,
-        consensus_max,
-    });
-
-    Ok(TrainReport {
-        samples,
-        final_objective,
-        z_final,
-        elapsed_s,
-        epochs: cfg.epochs,
-        worker_stats,
-        server_stats,
-        stationarity,
-        consensus_max,
-        theorem1_feasible: t1.feasible,
-    })
+    Session::builder(cfg).dataset(ds, shards).run()
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)]
     use super::*;
     use crate::data::gen_partitioned;
 
     #[test]
-    fn async_native_training_decreases_objective() {
+    fn deprecated_shim_still_trains() {
         let mut cfg = Config::tiny_test();
-        cfg.epochs = 240; // one random block per epoch => ~60 full passes
+        cfg.epochs = 120;
         let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
         let report = run_async(&cfg, &ds, &shards).unwrap();
-
         let first = report.samples.first().unwrap().objective;
-        let last = report.final_objective.total();
-        assert!(
-            last < first * 0.9,
-            "objective should drop: {first} -> {last}"
-        );
-        assert!(report.total_pushes() >= cfg.epochs * cfg.n_workers);
-        assert!(report.consensus_max.is_finite());
+        assert!(report.final_objective.total() < first);
         assert_eq!(report.worker_stats.len(), cfg.n_workers);
-    }
-
-    #[test]
-    fn push_pool_high_water_bounded_by_channel_capacity_not_epochs() {
-        // The no-allocation-per-epoch invariant: buffers allocated on the
-        // push path are bounded by the in-flight channel capacity, not by
-        // the number of epochs run.
-        let mut cfg = Config::tiny_test();
-        cfg.epochs = 400;
-        let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
-        let report = run_async(&cfg, &ds, &shards).unwrap();
-        let bound = push_inflight(cfg.n_workers) + 4;
-        for w in &report.worker_stats {
-            assert!(w.pool_high_water >= 1, "pool never used");
-            assert!(
-                w.pool_high_water <= bound,
-                "pool allocated {} buffers (bound {bound}, epochs {})",
-                w.pool_high_water,
-                cfg.epochs
-            );
-            assert!(w.pool_high_water < cfg.epochs / 8, "allocation scaled with epochs");
-        }
-    }
-
-    #[test]
-    fn delay_enforcement_caps_staleness() {
-        let mut cfg = Config::tiny_test();
-        cfg.epochs = 40;
-        cfg.max_delay = 2;
-        cfg.enforce_delay_bound = true;
-        let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
-        let report = run_async(&cfg, &ds, &shards).unwrap();
-        for w in &report.worker_stats {
-            assert!(
-                w.max_staleness <= 2 + 1, // one concurrent write can land mid-step
-                "staleness {} exceeds bound",
-                w.max_staleness
-            );
-        }
     }
 }

@@ -1,10 +1,16 @@
 //! Worker → server push protocol (Algorithm 1 line 7 / server line 2).
+//!
+//! [`PushMsg`] is the *what* of the protocol; the *how* (queueing,
+//! backpressure, shutdown) lives behind the
+//! [`super::transport::Transport`] trait.
 
 use std::sync::mpsc::Sender;
 
 /// w_{i,j} push (Eq. 9).  `worker_epoch` and `z_version_used` implement
 //  the staleness accounting for Assumption 3.
-#[derive(Clone, Debug)]
+// Not `Clone`: each message owns one pooled buffer and one recycle
+// ticket for it; a clone would return two buffers for one acquire.
+#[derive(Debug)]
 pub struct PushMsg {
     pub worker: usize,
     pub block: usize,
@@ -23,8 +29,23 @@ pub struct PushMsg {
     pub recycle: Option<Sender<Vec<f32>>>,
 }
 
-pub enum ServerMsg {
-    Push(PushMsg),
-    /// Drain and exit (sent by the driver once all workers joined).
-    Shutdown,
+impl PushMsg {
+    /// Send the pooled buffer home (the normal post-`handle_push` path).
+    /// Idempotent: the return address is taken on first use.
+    pub fn recycle_now(&mut self) {
+        if let Some(home) = self.recycle.take() {
+            // A pool whose worker already exited just ignores the send.
+            let _ = home.send(std::mem::take(&mut self.w));
+        }
+    }
+}
+
+/// A destroyed message still returns its buffer: transports and error
+/// paths can drop queued messages without stranding the owning worker
+/// in `PushPool::acquire` (the pool keeps its own sender alive, so a
+/// lost buffer would block `acquire` forever, not error).
+impl Drop for PushMsg {
+    fn drop(&mut self) {
+        self.recycle_now();
+    }
 }

@@ -12,6 +12,13 @@
 //! ADMMs required).  Worker pushes ride pooled buffers ([`PushPool`])
 //! that server shards recycle, so the steady-state push path performs no
 //! heap allocation.
+//!
+//! The public surface is the [`Session`] builder (`session.rs`):
+//! dataset + algorithm + [`Transport`] + [`Observer`]s in, unified
+//! [`TrainReport`] out.  The push queueing discipline is pluggable
+//! behind [`Transport`] (`transport.rs`): the bounded-mpsc original
+//! and the lock-free per-worker SPSC ring.  `driver.rs` holds only the
+//! deprecated `run_async` shim.
 
 mod block_store;
 mod bufpool;
@@ -21,16 +28,26 @@ mod driver;
 mod events;
 mod messages;
 mod server;
+mod session;
 mod topology;
+pub(crate) mod transport;
 mod worker;
 
 pub use block_store::{BlockStore, RwBlockStore};
 pub use bufpool::PushPool;
 pub use compute::{make_compute, NativeCompute, WorkerCompute, XlaCompute};
 pub use delay::DelayPolicy;
-pub use driver::{push_inflight, run_async, TrainReport};
+#[allow(deprecated)]
+pub use driver::run_async;
 pub use events::ObjSample;
-pub use messages::{PushMsg, ServerMsg};
+pub use messages::PushMsg;
 pub use server::{ProxBackend, ServerShard, ServerStats};
+pub use session::{
+    Algo, MonitorGate, Observer, Progress, Session, SessionBuilder, SimExtras, TrainReport,
+};
 pub use topology::Topology;
+pub use transport::{
+    make_transport, push_inflight, MpscTransport, PushReceiver, PushSender, SpscRingTransport,
+    Transport,
+};
 pub use worker::{WorkerCtx, WorkerStats};

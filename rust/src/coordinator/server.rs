@@ -14,14 +14,14 @@
 //! Pushed w buffers are pooled: after the update the shard sends each
 //! buffer home on the message's recycle channel instead of freeing it.
 
-use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use super::block_store::BlockStore;
-use super::messages::{PushMsg, ServerMsg};
+use super::messages::PushMsg;
 use super::topology::Topology;
+use super::transport::PushReceiver;
 use crate::admm::prox_l1_box;
 use crate::problem::Problem;
 use crate::runtime::ServerProxXla;
@@ -201,25 +201,18 @@ impl ServerShard {
         Ok(())
     }
 
-    /// Blocking server loop; returns stats at shutdown.  Pooled push
-    /// buffers are returned to their owning worker after each update.
-    pub fn run(mut self, rx: Receiver<ServerMsg>, prox: ProxBackend) -> Result<ServerStats> {
-        while let Ok(msg) = rx.recv() {
-            match msg {
-                ServerMsg::Push(p) => {
-                    let applied = self.handle_push(&p, &prox);
-                    // Recycle BEFORE propagating any error: destroying
-                    // pooled buffers on the error path could strand the
-                    // owning worker in `PushPool::acquire` instead of
-                    // letting it observe the closed channel.  (A worker
-                    // that already exited just drops the send.)
-                    if let Some(home) = p.recycle {
-                        let _ = home.send(p.w);
-                    }
-                    applied?;
-                }
-                ServerMsg::Shutdown => break,
-            }
+    /// Blocking server loop; drains the transport endpoint until it
+    /// reports shutdown, then returns stats.  Pooled push buffers are
+    /// returned to their owning worker after each update.
+    pub fn run(mut self, mut rx: Box<dyn PushReceiver>, prox: ProxBackend) -> Result<ServerStats> {
+        while let Some(mut p) = rx.recv() {
+            let applied = self.handle_push(&p, &prox);
+            // Send the buffer home before propagating any error; any
+            // message destroyed elsewhere (transport teardown, error
+            // unwinding) recycles via `PushMsg::drop`, so pooled
+            // buffers can never be stranded.
+            p.recycle_now();
+            applied?;
         }
         Ok(self.stats)
     }
@@ -364,21 +357,28 @@ mod tests {
     }
 
     #[test]
-    fn run_loop_recycles_pooled_buffers() {
-        use std::sync::mpsc::{channel, sync_channel};
-        let (topo, store, p) = setup();
-        let srv = ServerShard::new(0, &topo, store, p, 10.0, 0.0);
-        let j = srv.owned_blocks()[0];
-        let w = topo.workers_of_block[j][0];
-        let (tx, rx) = sync_channel::<ServerMsg>(4);
-        let (home, inbox) = channel::<Vec<f32>>();
-        let mut msg = push(w, j, vec![0.5; 4]);
-        msg.recycle = Some(home);
-        tx.send(ServerMsg::Push(msg)).unwrap();
-        tx.send(ServerMsg::Shutdown).unwrap();
-        let stats = srv.run(rx, ProxBackend::Native).unwrap();
-        assert_eq!(stats.pushes, 1);
-        let returned = inbox.try_recv().expect("buffer not recycled");
-        assert_eq!(returned, vec![0.5; 4]);
+    fn run_loop_recycles_pooled_buffers_with_either_transport() {
+        use crate::config::TransportKind;
+        use crate::coordinator::transport::{make_transport, Transport};
+        use std::sync::mpsc::channel;
+        for kind in [TransportKind::Mpsc, TransportKind::SpscRing] {
+            let (topo, store, p) = setup();
+            let srv = ServerShard::new(0, &topo, store, p, 10.0, 0.0);
+            let j = srv.owned_blocks()[0];
+            let w = topo.workers_of_block[j][0];
+            let transport: Box<dyn Transport> =
+                make_transport(kind, topo.n_workers, topo.n_servers, 4);
+            let (home, inbox) = channel::<Vec<f32>>();
+            let mut msg = push(w, j, vec![0.5; 4]);
+            msg.recycle = Some(home);
+            let mut tx = transport.connect_worker(w);
+            tx.send(0, msg).unwrap();
+            drop(tx);
+            transport.shutdown();
+            let stats = srv.run(transport.connect_server(0), ProxBackend::Native).unwrap();
+            assert_eq!(stats.pushes, 1, "{kind:?}");
+            let returned = inbox.try_recv().expect("buffer not recycled");
+            assert_eq!(returned, vec![0.5; 4], "{kind:?}");
+        }
     }
 }

@@ -1,0 +1,812 @@
+//! The public training API: a [`Session`] builder over every execution
+//! path, a pluggable [`super::transport::Transport`], and an
+//! [`Observer`] hook replacing the old hardwired monitor loop.
+//!
+//! One surface for every way this repo can run Algorithm 1 (or a
+//! baseline against it):
+//!
+//! ```text
+//! Session::builder(&cfg)
+//!     .dataset(&ds, &shards)
+//!     .transport(make_transport(TransportKind::SpscRing, ...))  // optional
+//!     .observer(MyObserver)                                     // optional
+//!     .algo(Algo::AsyncAdmm)                                    // default
+//!     .run()? -> TrainReport
+//! ```
+//!
+//! * **Algo::AsyncAdmm** — the threaded parameter-server runtime
+//!   (paper Fig. 1 / Algorithm 1), with the push path behind the
+//!   chosen transport.
+//! * **Algo::SyncAdmm / LockedAdmm / HogwildSgd** — the §3.1 barrier
+//!   baseline and the two prior-art asynchronous designs, unified into
+//!   the same [`TrainReport`] (their extra fields are empty/NaN).
+//! * **Algo::Sim** — the discrete-event cluster simulation of the
+//!   async runtime under a calibrated [`CostModel`]; DES-only results
+//!   land in [`TrainReport::sim`].
+//!
+//! The monitor is no longer a busy-wait poll: the session's own thread
+//! parks ([`MonitorGate`]) and workers unpark it when the minimum
+//! epoch crosses the next sampling watermark.  Objective sampling is
+//! itself just the built-in observer; user observers see the exact
+//! same [`Progress`] views (threaded and DES paths alike).
+
+use std::cell::OnceCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::block_store::BlockStore;
+use super::compute::make_compute;
+use super::delay::DelayPolicy;
+use super::events::ObjSample;
+use super::server::{ProxBackend, ServerShard, ServerStats};
+use super::topology::Topology;
+use super::transport::{make_transport, push_inflight, Transport};
+use super::worker::{WorkerCtx, WorkerStats};
+use crate::admm::{
+    check_theorem1, consensus_gap, objective_at_z, stationarity_residual, Objective,
+};
+use crate::baselines::BaselineReport;
+use crate::config::{Backend, Config};
+use crate::data::{Dataset, WorkerShard};
+use crate::info;
+use crate::problem::Problem;
+use crate::runtime::{Manifest, ServerProxXla};
+use crate::sim::CostModel;
+
+/// Which algorithm a [`Session`] executes.
+#[derive(Clone, Copy, Debug)]
+pub enum Algo {
+    /// Block-wise asynchronous ADMM (Algorithm 1) on the threaded
+    /// parameter-server runtime.  The default.
+    AsyncAdmm,
+    /// Synchronous block-wise ADMM (paper §3.1): the epoch-barrier
+    /// correctness anchor.
+    SyncAdmm,
+    /// Prior-art asynchronous full-vector ADMM behind one global lock
+    /// (Zhang-Kwok '14 / Hong '17 style; the E4 ablation baseline).
+    LockedAdmm,
+    /// HOGWILD!-style asynchronous proximal SGD with this step size.
+    HogwildSgd { step_size: f32 },
+    /// Discrete-event simulation of `AsyncAdmm` under a cost model
+    /// (virtual time; real numerics).  Fills [`TrainReport::sim`].
+    Sim(CostModel),
+}
+
+/// DES-only results (virtual-time scaling study outputs).
+#[derive(Clone, Debug)]
+pub struct SimExtras {
+    /// Total virtual seconds simulated.
+    pub virtual_time_s: f64,
+    /// Virtual time when the min worker epoch first reached k, for
+    /// every k ≤ epochs.
+    pub time_to_epoch: Vec<f64>,
+    /// Max server queue length observed (contention indicator).
+    pub max_queue: usize,
+}
+
+/// Unified result of any [`Session`] run.
+#[derive(Debug)]
+pub struct TrainReport {
+    pub samples: Vec<ObjSample>,
+    pub final_objective: Objective,
+    pub z_final: Vec<f32>,
+    /// Wall-clock seconds (virtual seconds for [`Algo::Sim`]).
+    pub elapsed_s: f64,
+    pub epochs: usize,
+    /// Per-worker stats (threaded async path; empty for baselines/DES).
+    pub worker_stats: Vec<WorkerStats>,
+    /// Per-server stats (threaded async path; the DES reports one
+    /// synthetic entry carrying its total push count).
+    pub server_stats: Vec<ServerStats>,
+    /// Paper Eq. 14 residual at the final iterate (NaN where the local
+    /// x/y iterates are not collected — baselines and the DES).
+    pub stationarity: f64,
+    /// max ‖x_ij − z_j‖ at the end (NaN where unavailable, see above).
+    pub consensus_max: f64,
+    /// Strict Theorem-1 feasibility of the hyper-parameters used
+    /// (threaded async path only; false elsewhere).
+    pub theorem1_feasible: bool,
+    /// Present iff the run was [`Algo::Sim`].
+    pub sim: Option<SimExtras>,
+}
+
+impl TrainReport {
+    pub fn total_pushes(&self) -> usize {
+        self.server_stats.iter().map(|s| s.pushes).sum()
+    }
+
+    pub fn max_staleness(&self) -> u64 {
+        self.worker_stats
+            .iter()
+            .map(|w| w.max_staleness)
+            .chain(self.server_stats.iter().map(|s| s.max_staleness))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Observer
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+enum ZSource<'a> {
+    Store(&'a BlockStore),
+    Dense(&'a [f32]),
+}
+
+/// A point-in-time view of a run, handed to [`Observer::on_sample`].
+/// Snapshot and objective are computed lazily and cached, so a sampler
+/// plus N user observers cost one objective evaluation, not N + 1.
+pub struct Progress<'a> {
+    /// Minimum local epoch across workers at this sample.
+    pub epoch: usize,
+    /// Wall-clock (threaded) or virtual (DES) seconds since start.
+    pub time_s: f64,
+    z: ZSource<'a>,
+    shards: &'a [WorkerShard],
+    problem: &'a Problem,
+    weight: f32,
+    cached_z: OnceCell<Vec<f32>>,
+    cached_obj: OnceCell<Objective>,
+}
+
+impl<'a> Progress<'a> {
+    pub(crate) fn new_store(
+        epoch: usize,
+        time_s: f64,
+        store: &'a BlockStore,
+        shards: &'a [WorkerShard],
+        problem: &'a Problem,
+        weight: f32,
+    ) -> Self {
+        Progress {
+            epoch,
+            time_s,
+            z: ZSource::Store(store),
+            shards,
+            problem,
+            weight,
+            cached_z: OnceCell::new(),
+            cached_obj: OnceCell::new(),
+        }
+    }
+
+    pub(crate) fn new_dense(
+        epoch: usize,
+        time_s: f64,
+        z: &'a [f32],
+        shards: &'a [WorkerShard],
+        problem: &'a Problem,
+        weight: f32,
+    ) -> Self {
+        Progress {
+            epoch,
+            time_s,
+            z: ZSource::Dense(z),
+            shards,
+            problem,
+            weight,
+            cached_z: OnceCell::new(),
+            cached_obj: OnceCell::new(),
+        }
+    }
+
+    /// The consensus iterate z at this sample (snapshotted once).
+    pub fn z(&self) -> &[f32] {
+        match self.z {
+            ZSource::Dense(z) => z,
+            ZSource::Store(store) => self.cached_z.get_or_init(|| store.snapshot()),
+        }
+    }
+
+    /// Paper Eq. 22 objective at [`Progress::z`] (computed once).
+    pub fn objective(&self) -> Objective {
+        *self
+            .cached_obj
+            .get_or_init(|| objective_at_z(self.shards, self.problem, self.weight, self.z()))
+    }
+
+    /// This progress point as a telemetry row.
+    pub fn sample(&self) -> ObjSample {
+        let obj = self.objective();
+        ObjSample {
+            time_s: self.time_s,
+            epoch: self.epoch,
+            objective: obj.total(),
+            data_loss: obj.data_loss,
+            consensus_max: 0.0,
+        }
+    }
+}
+
+/// Run telemetry hook.  Registered via [`SessionBuilder::observer`];
+/// the built-in objective sampler is one of these too.
+pub trait Observer: Send {
+    /// Called at every sampling point — when the minimum worker epoch
+    /// crosses a `cfg.log_every` watermark (including epoch 0) — on
+    /// the threaded async and DES paths.  Baseline algos sample
+    /// internally and only fire [`Observer::on_complete`].
+    fn on_sample(&mut self, progress: &Progress<'_>);
+
+    /// Called once with the final report, after all threads joined.
+    fn on_complete(&mut self, _report: &TrainReport) {}
+}
+
+/// The built-in observer: objective sampling into
+/// [`TrainReport::samples`] (formerly hardwired into the monitor loop).
+#[derive(Default)]
+struct ObjectiveSampler {
+    samples: Vec<ObjSample>,
+}
+
+impl Observer for ObjectiveSampler {
+    fn on_sample(&mut self, progress: &Progress<'_>) {
+        self.samples.push(progress.sample());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Monitor wakeup
+// ---------------------------------------------------------------------------
+
+/// Park/unpark coordination between workers and the monitor thread.
+///
+/// The monitor parks instead of busy-polling; it publishes the next
+/// min-epoch it cares about (`wake_at`, monotone non-decreasing) and
+/// every worker at or beyond that watermark unparks it after finishing
+/// an epoch.  `unpark` on an already-running thread just sets the park
+/// token, so notifications coalesce; a park timeout bounds the damage
+/// of any missed edge.
+pub struct MonitorGate {
+    wake_at: AtomicUsize,
+    monitor: std::thread::Thread,
+}
+
+impl MonitorGate {
+    fn new() -> Self {
+        MonitorGate { wake_at: AtomicUsize::new(0), monitor: std::thread::current() }
+    }
+
+    /// Worker side: epoch `completed` just finished.
+    pub fn notify_epoch(&self, completed: usize) {
+        if completed >= self.wake_at.load(Ordering::Relaxed) {
+            self.monitor.unpark();
+        }
+    }
+
+    /// Monitor side: sleep until progress may have crossed `epoch`.
+    fn park_until(&self, epoch: usize) {
+        self.wake_at.store(epoch, Ordering::Release);
+        std::thread::park_timeout(Duration::from_millis(5));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Session builder
+// ---------------------------------------------------------------------------
+
+/// Entry point for every training run; see the module docs.
+pub struct Session;
+
+impl Session {
+    pub fn builder(cfg: &Config) -> SessionBuilder<'_> {
+        SessionBuilder {
+            cfg,
+            data: None,
+            transport: None,
+            observers: Vec::new(),
+            algo: Algo::AsyncAdmm,
+        }
+    }
+}
+
+pub struct SessionBuilder<'a> {
+    cfg: &'a Config,
+    data: Option<(&'a Dataset, &'a [WorkerShard])>,
+    transport: Option<Box<dyn Transport>>,
+    observers: Vec<Box<dyn Observer + 'a>>,
+    algo: Algo,
+}
+
+impl<'a> SessionBuilder<'a> {
+    /// The dataset and its per-worker shards (required).
+    pub fn dataset(mut self, ds: &'a Dataset, shards: &'a [WorkerShard]) -> Self {
+        self.data = Some((ds, shards));
+        self
+    }
+
+    /// Override the push transport (default: built from
+    /// `cfg.transport` — `--set transport=mpsc|ring`).  Only the
+    /// threaded [`Algo::AsyncAdmm`] path moves real messages.
+    pub fn transport(mut self, transport: Box<dyn Transport>) -> Self {
+        self.transport = Some(transport);
+        self
+    }
+
+    /// Register a telemetry observer (repeatable).
+    pub fn observer(mut self, obs: impl Observer + 'a) -> Self {
+        self.observers.push(Box::new(obs));
+        self
+    }
+
+    /// Select the algorithm (default [`Algo::AsyncAdmm`]).
+    pub fn algo(mut self, algo: Algo) -> Self {
+        self.algo = algo;
+        self
+    }
+
+    pub fn run(mut self) -> Result<TrainReport> {
+        let (ds, shards) = self
+            .data
+            .context("Session has no dataset: call .dataset(&ds, &shards)")?;
+        let cfg = self.cfg;
+        let report = match self.algo {
+            Algo::AsyncAdmm => {
+                let transport = self.transport.take().unwrap_or_else(|| {
+                    make_transport(
+                        cfg.transport,
+                        cfg.n_workers,
+                        cfg.n_servers,
+                        push_inflight(cfg.n_workers),
+                    )
+                });
+                run_threaded(cfg, ds, shards, transport, &mut self.observers)?
+            }
+            Algo::SyncAdmm => {
+                from_baseline(crate::baselines::run_sync_admm(cfg, ds, shards)?)
+            }
+            Algo::LockedAdmm => {
+                from_baseline(crate::baselines::run_locked_admm(cfg, ds, shards)?)
+            }
+            Algo::HogwildSgd { step_size } => {
+                from_baseline(crate::baselines::run_hogwild_sgd(cfg, ds, shards, step_size)?)
+            }
+            Algo::Sim(cost) => {
+                let r = crate::sim::run_sim_observed(cfg, ds, shards, &cost, &mut self.observers)?;
+                TrainReport {
+                    samples: r.samples,
+                    final_objective: r.final_objective,
+                    z_final: r.z_final,
+                    elapsed_s: r.virtual_time_s,
+                    epochs: r.epochs,
+                    worker_stats: Vec::new(),
+                    // One synthetic entry so `total_pushes()` is uniform
+                    // across execution paths.
+                    server_stats: vec![ServerStats { pushes: r.pushes, ..Default::default() }],
+                    stationarity: f64::NAN,
+                    consensus_max: f64::NAN,
+                    theorem1_feasible: false,
+                    sim: Some(SimExtras {
+                        virtual_time_s: r.virtual_time_s,
+                        time_to_epoch: r.time_to_epoch,
+                        max_queue: r.max_queue,
+                    }),
+                }
+            }
+        };
+        for obs in self.observers.iter_mut() {
+            obs.on_complete(&report);
+        }
+        Ok(report)
+    }
+}
+
+/// Baselines collect their own samples; lift them into the unified
+/// report shape (no per-thread stats, no stationarity collection).
+fn from_baseline(r: BaselineReport) -> TrainReport {
+    TrainReport {
+        samples: r.samples,
+        final_objective: r.final_objective,
+        z_final: r.z_final,
+        elapsed_s: r.elapsed_s,
+        epochs: r.epochs,
+        worker_stats: Vec::new(),
+        server_stats: Vec::new(),
+        stationarity: f64::NAN,
+        consensus_max: f64::NAN,
+        theorem1_feasible: false,
+        sim: None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threaded async runtime (Algorithm 1)
+// ---------------------------------------------------------------------------
+
+fn run_threaded<'o>(
+    cfg: &Config,
+    ds: &Dataset,
+    shards: &[WorkerShard],
+    transport: Box<dyn Transport>,
+    observers: &mut [Box<dyn Observer + 'o>],
+) -> Result<TrainReport> {
+    cfg.validate()?;
+    anyhow::ensure!(shards.len() == cfg.n_workers, "shards/workers mismatch");
+    let problem = Problem::new(cfg.loss, cfg.lambda, cfg.clip);
+    // Reported objective: paper Eq. 22's global mean (weight 1/m);
+    // each worker's f_i is its LOCAL mean (weight 1/m_i), which keeps
+    // per-iteration progress p-independent (DESIGN.md "objective
+    // scaling").
+    let weight = 1.0 / ds.samples() as f32;
+    let topo = Topology::build(shards, cfg.n_blocks, cfg.n_servers);
+    let store = Arc::new(BlockStore::new(cfg.n_blocks, cfg.block_size));
+    let policy =
+        DelayPolicy { net_mean_ms: cfg.net_delay_mean_ms, pull_hold: cfg.pull_hold.max(1) };
+
+    // Theorem-1 feasibility report (logged; the paper itself runs with
+    // infeasible-but-working γ=0.01, as do the defaults here).
+    let shard_refs: Vec<&WorkerShard> = shards.iter().collect();
+    let t1 = check_theorem1(
+        &shard_refs,
+        &problem,
+        cfg.n_blocks,
+        cfg.rho as f64,
+        cfg.gamma as f64,
+        cfg.max_delay,
+    );
+    info!(
+        "session",
+        "theorem1: min_alpha={:.3e} min_beta={:.3e} feasible={} (strict bound; paper runs gamma=0.01 anyway); transport={}",
+        t1.min_alpha,
+        t1.min_beta,
+        t1.feasible,
+        transport.name()
+    );
+
+    let manifest = match cfg.backend {
+        Backend::Xla => Some(Manifest::load(&cfg.artifacts_dir)?),
+        Backend::Native => None,
+    };
+
+    // The push-buffer pool never needs more buffers than can be in
+    // flight at once under the global in-flight budget, plus slack for
+    // recycle-channel latency.  (A transport whose own bound is larger
+    // just sees pool backpressure a little earlier — same contract.)
+    let pool_cap = push_inflight(cfg.n_workers) + 4;
+
+    let progress: Vec<AtomicUsize> = (0..cfg.n_workers).map(|_| AtomicUsize::new(0)).collect();
+    let gate = MonitorGate::new();
+    let worker_results: Mutex<Vec<Option<(WorkerStats, Vec<f32>, Vec<f32>)>>> =
+        Mutex::new((0..cfg.n_workers).map(|_| None).collect());
+    let server_results: Mutex<Vec<Option<ServerStats>>> =
+        Mutex::new((0..cfg.n_servers).map(|_| None).collect());
+
+    let start = Instant::now();
+    let mut sampler = ObjectiveSampler::default();
+
+    std::thread::scope(|scope| -> Result<()> {
+        let mut server_handles = Vec::with_capacity(cfg.n_servers);
+        let mut worker_handles = Vec::with_capacity(cfg.n_workers);
+        // -- server shards -------------------------------------------------
+        for sid in 0..cfg.n_servers {
+            let rx = transport.connect_server(sid);
+            let topo = &topo;
+            let store = store.clone();
+            let manifest = manifest.as_ref();
+            let server_results = &server_results;
+            server_handles.push(scope.spawn(move || {
+                let prox = match manifest {
+                    None => ProxBackend::Native,
+                    Some(m) => match ServerProxXla::load(m, cfg.block_size) {
+                        Ok(p) => ProxBackend::Xla(p),
+                        Err(e) => {
+                            eprintln!("server {sid}: XLA prox unavailable ({e:#}); native fallback");
+                            ProxBackend::Native
+                        }
+                    },
+                };
+                let shard = ServerShard::new(sid, topo, store, problem, cfg.rho, cfg.gamma);
+                let stats = shard.run(rx, prox).expect("server loop failed");
+                server_results.lock().unwrap()[sid] = Some(stats);
+            }));
+        }
+
+        // -- workers ---------------------------------------------------------
+        for shard in shards {
+            let wid = shard.worker_id;
+            let tx = transport.connect_worker(wid);
+            let topo = &topo;
+            let store = &store;
+            let progress = &progress[wid];
+            let gate = &gate;
+            let manifest = manifest.as_ref();
+            let worker_results = &worker_results;
+            let seed = cfg.seed ^ (0x9E37 + wid as u64 * 0x1000_0000_01B3);
+            let local_weight = 1.0 / shard.samples().max(1) as f32;
+            worker_handles.push(scope.spawn(move || {
+                let mut compute = make_compute(
+                    cfg.backend,
+                    shard,
+                    problem,
+                    local_weight,
+                    manifest,
+                    cfg.m_chunk,
+                    cfg.d_pad,
+                )
+                .expect("construct worker compute backend");
+                let mut ctx = WorkerCtx::new(
+                    shard,
+                    topo,
+                    store,
+                    tx,
+                    policy,
+                    cfg.selection,
+                    cfg.rho,
+                    cfg.epochs,
+                    cfg.max_delay,
+                    cfg.enforce_delay_bound,
+                    seed,
+                    progress,
+                    gate,
+                    pool_cap,
+                );
+                let stats = ctx.run(compute.as_mut()).expect("worker loop failed");
+                let (x, y) = ctx.into_state();
+                worker_results.lock().unwrap()[wid] = Some((stats, x, y));
+            }));
+        }
+
+        // -- monitor (this thread, parked between samples) -------------------
+        let log_every = cfg.log_every.max(1);
+        let mut next_epoch = 0usize;
+        loop {
+            let min_epoch =
+                progress.iter().map(|p| p.load(Ordering::Acquire)).min().unwrap_or(0);
+            // Samples at `epoch == cfg.epochs` are the final-state row
+            // appended after the join below — never emitted here, so no
+            // sample ever lands past the configured budget.
+            if min_epoch >= next_epoch && min_epoch < cfg.epochs {
+                let prog = Progress::new_store(
+                    min_epoch,
+                    start.elapsed().as_secs_f64(),
+                    &store,
+                    shards,
+                    &problem,
+                    weight,
+                );
+                sampler.on_sample(&prog);
+                for obs in observers.iter_mut() {
+                    obs.on_sample(&prog);
+                }
+                next_epoch = next_epoch.max(min_epoch) + log_every;
+            }
+            if min_epoch >= cfg.epochs {
+                break;
+            }
+            // Liveness: a server exiting before shutdown, or a worker
+            // exiting below its epoch budget, died on a panic.  Stop
+            // monitoring and shut the transport down so the remaining
+            // threads fail their sends / drain out, and the scope join
+            // re-raises the original panic — instead of parking here
+            // forever on progress that will never come.
+            let thread_died = server_handles.iter().any(|h| h.is_finished())
+                || worker_handles.iter().enumerate().any(|(i, h)| {
+                    h.is_finished() && progress[i].load(Ordering::Acquire) < cfg.epochs
+                });
+            if thread_died {
+                break;
+            }
+            gate.park_until(next_epoch.min(cfg.epochs));
+        }
+        // Workers are done (or finishing); signal the transport so the
+        // server shards drain their queues and exit.  The scope joins
+        // everything on exit.
+        transport.shutdown();
+        Ok(())
+    })?;
+    let elapsed_s = start.elapsed().as_secs_f64();
+
+    // -- final metrics ---------------------------------------------------
+    let z_final = store.snapshot();
+    let final_objective = objective_at_z(shards, &problem, weight, &z_final);
+    let collected = worker_results.into_inner().unwrap();
+    let mut worker_stats = Vec::with_capacity(cfg.n_workers);
+    let mut xs = Vec::with_capacity(cfg.n_workers);
+    let mut ys = Vec::with_capacity(cfg.n_workers);
+    for r in collected {
+        let (stats, x, y) = r.context("worker did not report")?;
+        worker_stats.push(stats);
+        xs.push(x);
+        ys.push(y);
+    }
+    // A dead server shard is a hard error, exactly like the worker path
+    // (stats silently defaulting to zero would corrupt push accounting).
+    let mut server_stats = Vec::with_capacity(cfg.n_servers);
+    for (sid, s) in server_results.into_inner().unwrap().into_iter().enumerate() {
+        server_stats.push(s.with_context(|| format!("server shard {sid} did not report"))?);
+    }
+    let stationarity = stationarity_residual(shards, &problem, cfg.rho, &xs, &ys, &z_final);
+    let (consensus_max, _) = consensus_gap(shards, &xs, &z_final);
+
+    // Ensure the last sample reflects the final state.
+    let mut samples = sampler.samples;
+    samples.push(ObjSample {
+        time_s: elapsed_s,
+        epoch: cfg.epochs,
+        objective: final_objective.total(),
+        data_loss: final_objective.data_loss,
+        consensus_max,
+    });
+    debug_assert!(
+        samples.iter().all(|s| s.epoch <= cfg.epochs),
+        "monitor emitted a sample past the epoch budget"
+    );
+
+    Ok(TrainReport {
+        samples,
+        final_objective,
+        z_final,
+        elapsed_s,
+        epochs: cfg.epochs,
+        worker_stats,
+        server_stats,
+        stationarity,
+        consensus_max,
+        theorem1_feasible: t1.feasible,
+        sim: None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TransportKind;
+    use crate::data::gen_partitioned;
+
+    fn train(cfg: &Config, ds: &Dataset, shards: &[WorkerShard]) -> TrainReport {
+        Session::builder(cfg).dataset(ds, shards).run().unwrap()
+    }
+
+    #[test]
+    fn async_native_training_decreases_objective() {
+        let mut cfg = Config::tiny_test();
+        cfg.epochs = 240; // one random block per epoch => ~60 full passes
+        let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+        let report = train(&cfg, &ds, &shards);
+
+        let first = report.samples.first().unwrap().objective;
+        let last = report.final_objective.total();
+        assert!(
+            last < first * 0.9,
+            "objective should drop: {first} -> {last}"
+        );
+        assert!(report.total_pushes() >= cfg.epochs * cfg.n_workers);
+        assert!(report.consensus_max.is_finite());
+        assert_eq!(report.worker_stats.len(), cfg.n_workers);
+        assert_eq!(report.server_stats.len(), cfg.n_servers);
+    }
+
+    #[test]
+    fn push_pool_high_water_bounded_by_channel_capacity_not_epochs() {
+        // The no-allocation-per-epoch invariant: buffers allocated on the
+        // push path are bounded by the in-flight capacity, not by the
+        // number of epochs run — under BOTH transports.
+        for kind in [TransportKind::Mpsc, TransportKind::SpscRing] {
+            let mut cfg = Config::tiny_test();
+            cfg.epochs = 400;
+            cfg.transport = kind;
+            let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+            let report = train(&cfg, &ds, &shards);
+            let bound = push_inflight(cfg.n_workers) + 4;
+            for w in &report.worker_stats {
+                assert!(w.pool_high_water >= 1, "{kind:?}: pool never used");
+                assert!(
+                    w.pool_high_water <= bound,
+                    "{kind:?}: pool allocated {} buffers (bound {bound}, epochs {})",
+                    w.pool_high_water,
+                    cfg.epochs
+                );
+                assert!(
+                    w.pool_high_water < cfg.epochs / 8,
+                    "{kind:?}: allocation scaled with epochs"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn delay_enforcement_caps_staleness() {
+        let mut cfg = Config::tiny_test();
+        cfg.epochs = 40;
+        cfg.max_delay = 2;
+        cfg.enforce_delay_bound = true;
+        let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+        let report = train(&cfg, &ds, &shards);
+        for w in &report.worker_stats {
+            assert!(
+                w.max_staleness <= 2 + 1, // one concurrent write can land mid-step
+                "staleness {} exceeds bound",
+                w.max_staleness
+            );
+        }
+    }
+
+    #[test]
+    fn no_sample_emitted_past_epoch_budget() {
+        // The monitor must not spin out an extra sampling interval after
+        // the run finishes: every sample's epoch is ≤ the budget and the
+        // final-state row appears exactly once.
+        let mut cfg = Config::tiny_test();
+        cfg.epochs = 37; // not a multiple of log_every
+        cfg.log_every = 5;
+        let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+        let report = train(&cfg, &ds, &shards);
+        assert!(report.samples.iter().all(|s| s.epoch <= cfg.epochs));
+        let at_budget =
+            report.samples.iter().filter(|s| s.epoch == cfg.epochs).count();
+        assert_eq!(at_budget, 1, "final sample duplicated or missing");
+        // epochs are non-decreasing
+        for w in report.samples.windows(2) {
+            assert!(w[1].epoch >= w[0].epoch);
+        }
+    }
+
+    #[test]
+    fn observers_see_samples_and_completion() {
+        struct Spy<'a> {
+            samples: &'a mut Vec<(usize, f64)>,
+            completed: &'a mut bool,
+        }
+        impl Observer for Spy<'_> {
+            fn on_sample(&mut self, p: &Progress<'_>) {
+                assert!(!p.z().is_empty(), "empty z snapshot");
+                self.samples.push((p.epoch, p.objective().total()));
+            }
+            fn on_complete(&mut self, report: &TrainReport) {
+                *self.completed = true;
+                assert!(report.final_objective.total().is_finite());
+            }
+        }
+        let mut cfg = Config::tiny_test();
+        cfg.epochs = 60;
+        cfg.log_every = 10;
+        let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+        let mut seen = Vec::new();
+        let mut completed = false;
+        let report = Session::builder(&cfg)
+            .dataset(&ds, &shards)
+            .observer(Spy { samples: &mut seen, completed: &mut completed })
+            .run()
+            .unwrap();
+        assert!(completed, "on_complete not fired");
+        assert!(!seen.is_empty(), "observer saw no samples");
+        // The observer saw exactly the built-in sampler's rows (minus the
+        // appended final-state row).
+        assert_eq!(seen.len(), report.samples.len() - 1);
+        for ((e, o), s) in seen.iter().zip(&report.samples) {
+            assert_eq!(*e, s.epoch);
+            assert!((o - s.objective).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn missing_dataset_is_a_clear_error() {
+        let cfg = Config::tiny_test();
+        let err = Session::builder(&cfg).run().unwrap_err();
+        assert!(format!("{err:#}").contains("dataset"), "{err:#}");
+    }
+
+    #[test]
+    fn baseline_algos_run_through_the_session_surface() {
+        let mut cfg = Config::tiny_test();
+        cfg.epochs = 60;
+        cfg.gamma = 0.0;
+        let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+        for algo in [Algo::SyncAdmm, Algo::LockedAdmm, Algo::HogwildSgd { step_size: 0.5 }] {
+            let r = Session::builder(&cfg).dataset(&ds, &shards).algo(algo).run().unwrap();
+            // log(2) is the logistic objective at z = 0: every method
+            // must at least not diverge from the start point here.
+            assert!(
+                r.final_objective.total() < 0.72,
+                "{algo:?} diverged: {}",
+                r.final_objective.total()
+            );
+            assert!(r.sim.is_none());
+            assert!(r.stationarity.is_nan());
+        }
+    }
+}

@@ -1,0 +1,661 @@
+//! Pluggable worker→server push transport.
+//!
+//! The paper's Fig. 1 runtime is defined by *what* travels (a
+//! [`PushMsg`] per block update) and *how* it queues at the server
+//! shards.  This module makes the "how" a first-class [`Transport`]
+//! trait so queueing disciplines are one-file implementations instead
+//! of driver rewrites:
+//!
+//! * [`MpscTransport`] — the original design: one bounded
+//!   `std::sync::mpsc::sync_channel` per server shard.  Correct and
+//!   simple, but every enqueue from every worker serializes on that
+//!   channel's internal mutex — the last serialization point left on
+//!   the push path after the seqlock store removed the read side's.
+//! * [`SpscRingTransport`] — one array-backed single-producer
+//!   single-consumer ring per (worker, server) pair with atomic
+//!   head/tail indices.  No shared queue lock exists anywhere: a
+//!   worker's enqueue touches only its own ring, and a server shard
+//!   round-robin-drains its workers' rings.  This realizes the
+//!   ROADMAP's "per-worker SPSC rings" item.
+//!
+//! ## Contract (what the conformance tests assert for every impl)
+//!
+//! * **Per-worker FIFO**: pushes from one worker to one server are
+//!   received in send order.  (Cross-worker ordering is unspecified —
+//!   Algorithm 1 only needs per-edge order for its staleness
+//!   accounting.)
+//! * **Bounded in-flight**: at most [`Transport::inflight_bound`]
+//!   pushes from one worker to one server may be un-received before
+//!   `send` blocks.  This is the ps-lite-style backpressure the
+//!   convergence analysis leans on: without it a fast worker can run
+//!   its whole epoch budget against a starved queue, i.e. unbounded
+//!   effective delay, violating Assumption 3.
+//! * **Shutdown drains**: after [`Transport::shutdown`] (called once
+//!   all workers finished and dropped their senders), each receiver
+//!   yields every message still queued and only then returns `None`.
+//! * **Endpoints are single-take**: `connect_worker(w)` and
+//!   `connect_server(s)` may each be called at most once per index
+//!   (the ring transport's soundness depends on the single-producer /
+//!   single-consumer discipline; both impls enforce it).
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::messages::PushMsg;
+use crate::config::TransportKind;
+
+/// Capacity of each server shard's bounded push queue for `n_workers`
+/// workers.  Public so tests can assert the push-buffer pools' high-water
+/// marks against the actual in-flight bound.
+pub fn push_inflight(n_workers: usize) -> usize {
+    (2 * n_workers).max(8)
+}
+
+/// A queueing discipline for worker→server pushes.  Shared by reference
+/// across the run's thread scope; endpoints move into their threads.
+pub trait Transport: Send + Sync {
+    /// Human-readable name (logs, benches, BENCH_hotpath.json keys).
+    fn name(&self) -> &'static str;
+
+    /// The sending endpoint for `worker`.  At most one call per worker.
+    fn connect_worker(&self, worker: usize) -> Box<dyn PushSender>;
+
+    /// The receiving endpoint for `server`.  At most one call per server.
+    fn connect_server(&self, server: usize) -> Box<dyn PushReceiver>;
+
+    /// Max pushes one worker can have in flight to one server before
+    /// [`PushSender::send`] blocks (the backpressure bound).
+    fn inflight_bound(&self) -> usize;
+
+    /// Signal end-of-stream.  Receivers drain what is queued and then
+    /// return `None`.  Call only after every worker endpoint is dropped
+    /// (the session does this once all workers joined).
+    fn shutdown(&self);
+}
+
+/// Worker-side endpoint: blocking bounded enqueue to any server shard.
+pub trait PushSender: Send {
+    fn send(&mut self, server: usize, msg: PushMsg) -> Result<()>;
+}
+
+/// Server-side endpoint: blocking dequeue; `None` = shut down and drained.
+pub trait PushReceiver: Send {
+    fn recv(&mut self) -> Option<PushMsg>;
+}
+
+/// Construct the configured transport for a run.
+pub fn make_transport(
+    kind: TransportKind,
+    n_workers: usize,
+    n_servers: usize,
+    inflight: usize,
+) -> Box<dyn Transport> {
+    match kind {
+        TransportKind::Mpsc => Box::new(MpscTransport::new(n_workers, n_servers, inflight)),
+        TransportKind::SpscRing => {
+            // Match the mpsc per-server budget: each of the worker's
+            // rings holds its share of the channel capacity.
+            let ring_cap = inflight.div_ceil(n_workers.max(1)).max(2);
+            Box::new(SpscRingTransport::new(n_workers, n_servers, ring_cap))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MpscTransport
+// ---------------------------------------------------------------------------
+
+/// One bounded `sync_channel` per server shard (the original driver
+/// wiring, extracted).  All workers share a server's channel, so every
+/// enqueue takes that channel's internal lock.
+pub struct MpscTransport {
+    /// Root senders; dropped on `shutdown` so receivers observe
+    /// disconnect once worker clones are gone too.
+    txs: Mutex<Vec<Option<SyncSender<PushMsg>>>>,
+    rxs: Mutex<Vec<Option<Receiver<PushMsg>>>>,
+    worker_taken: Mutex<Vec<bool>>,
+    inflight: usize,
+}
+
+impl MpscTransport {
+    pub fn new(n_workers: usize, n_servers: usize, inflight: usize) -> Self {
+        let mut txs = Vec::with_capacity(n_servers);
+        let mut rxs = Vec::with_capacity(n_servers);
+        for _ in 0..n_servers {
+            let (tx, rx) = sync_channel::<PushMsg>(inflight.max(1));
+            txs.push(Some(tx));
+            rxs.push(Some(rx));
+        }
+        MpscTransport {
+            txs: Mutex::new(txs),
+            rxs: Mutex::new(rxs),
+            worker_taken: Mutex::new(vec![false; n_workers]),
+            inflight: inflight.max(1),
+        }
+    }
+}
+
+impl Transport for MpscTransport {
+    fn name(&self) -> &'static str {
+        "mpsc"
+    }
+
+    fn connect_worker(&self, worker: usize) -> Box<dyn PushSender> {
+        let mut taken = self.worker_taken.lock().unwrap();
+        assert!(!taken[worker], "worker {worker} endpoint already taken");
+        taken[worker] = true;
+        let txs: Vec<SyncSender<PushMsg>> = self
+            .txs
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|t| t.as_ref().expect("transport already shut down").clone())
+            .collect();
+        Box::new(MpscSender { txs })
+    }
+
+    fn connect_server(&self, server: usize) -> Box<dyn PushReceiver> {
+        let rx = self.rxs.lock().unwrap()[server]
+            .take()
+            .unwrap_or_else(|| panic!("server {server} endpoint already taken"));
+        Box::new(MpscReceiver { rx })
+    }
+
+    fn inflight_bound(&self) -> usize {
+        self.inflight
+    }
+
+    fn shutdown(&self) {
+        self.txs.lock().unwrap().iter_mut().for_each(|t| drop(t.take()));
+    }
+}
+
+struct MpscSender {
+    txs: Vec<SyncSender<PushMsg>>,
+}
+
+impl PushSender for MpscSender {
+    fn send(&mut self, server: usize, msg: PushMsg) -> Result<()> {
+        self.txs[server]
+            .send(msg)
+            .map_err(|_| anyhow::anyhow!("server {server} hung up"))
+    }
+}
+
+struct MpscReceiver {
+    rx: Receiver<PushMsg>,
+}
+
+impl PushReceiver for MpscReceiver {
+    fn recv(&mut self) -> Option<PushMsg> {
+        // Err = all senders dropped (workers done + transport shut down)
+        // AND the buffer is empty: exactly the drain-then-exit contract.
+        self.rx.recv().ok()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SpscRingTransport
+// ---------------------------------------------------------------------------
+
+/// One single-producer single-consumer slot ring.
+///
+/// `head`/`tail` are monotonically increasing operation counters
+/// (message `n` lives in slot `n % cap`); `tail - head` is the queue
+/// length, full at `cap`.  The producer owns `tail`, the consumer owns
+/// `head`; each reads the other's index with `Acquire` and publishes
+/// its own with `Release`, so slot hand-off is properly ordered.
+///
+/// The slot cells are `Mutex<Option<PushMsg>>`, but the SPSC
+/// discipline makes every lock acquisition **uncontended by
+/// construction**: the producer only touches slot `tail % cap` after
+/// observing `tail - head < cap` (the consumer is done with it), and
+/// the consumer only touches slot `head % cap` after observing
+/// `head < tail` (the producer has published it).  An uncontended lock
+/// is a single CAS each way — the point is that, unlike the mpsc
+/// channel, no cell is ever shared between two workers or two shards,
+/// so nothing on the push path serializes across threads.  (Kept over
+/// an `UnsafeCell` ring to preserve the crate's no-`unsafe` property;
+/// see DESIGN.md §2.1 for the same choice in the seqlock store.)
+struct Ring {
+    head: AtomicUsize,
+    tail: AtomicUsize,
+    slots: Vec<Mutex<Option<PushMsg>>>,
+}
+
+impl Ring {
+    fn new(cap: usize) -> Self {
+        Ring {
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            slots: (0..cap.max(1)).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+
+    /// Producer side; returns the message back if the ring is full.
+    fn try_push(&self, msg: PushMsg) -> std::result::Result<(), PushMsg> {
+        let tail = self.tail.load(Ordering::Relaxed); // producer-owned
+        if tail - self.head.load(Ordering::Acquire) == self.slots.len() {
+            return Err(msg);
+        }
+        *self.slots[tail % self.slots.len()].lock().unwrap() = Some(msg);
+        self.tail.store(tail + 1, Ordering::Release);
+        Ok(())
+    }
+
+    /// Consumer side; `None` = empty.
+    fn try_pop(&self) -> Option<PushMsg> {
+        let head = self.head.load(Ordering::Relaxed); // consumer-owned
+        if self.tail.load(Ordering::Acquire) == head {
+            return None;
+        }
+        let msg = self.slots[head % self.slots.len()].lock().unwrap().take();
+        self.head.store(head + 1, Ordering::Release);
+        debug_assert!(msg.is_some(), "published slot was empty");
+        msg
+    }
+}
+
+struct RingShared {
+    /// `rings[worker][server]`.
+    rings: Vec<Vec<Ring>>,
+    shutdown: AtomicBool,
+    /// Per-server "receiver is gone" flags: set when a [`RingReceiver`]
+    /// drops (normal exit after drain, or a server thread unwinding on
+    /// error), so senders fail loudly like mpsc's disconnect instead of
+    /// spinning on a full ring nobody will ever drain.
+    closed: Vec<AtomicBool>,
+}
+
+/// Per-(worker, server) SPSC rings; servers round-robin-drain their
+/// workers' rings.  No queue lock is shared between any two threads.
+pub struct SpscRingTransport {
+    shared: Arc<RingShared>,
+    worker_taken: Mutex<Vec<bool>>,
+    server_taken: Mutex<Vec<bool>>,
+    ring_cap: usize,
+}
+
+impl SpscRingTransport {
+    pub fn new(n_workers: usize, n_servers: usize, ring_cap: usize) -> Self {
+        let rings = (0..n_workers)
+            .map(|_| (0..n_servers).map(|_| Ring::new(ring_cap)).collect())
+            .collect();
+        let closed = (0..n_servers).map(|_| AtomicBool::new(false)).collect();
+        SpscRingTransport {
+            shared: Arc::new(RingShared { rings, shutdown: AtomicBool::new(false), closed }),
+            worker_taken: Mutex::new(vec![false; n_workers]),
+            server_taken: Mutex::new(vec![false; n_servers]),
+            ring_cap: ring_cap.max(1),
+        }
+    }
+}
+
+impl Transport for SpscRingTransport {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn connect_worker(&self, worker: usize) -> Box<dyn PushSender> {
+        let mut taken = self.worker_taken.lock().unwrap();
+        assert!(!taken[worker], "worker {worker} endpoint already taken (SPSC)");
+        taken[worker] = true;
+        Box::new(RingSender { shared: self.shared.clone(), worker })
+    }
+
+    fn connect_server(&self, server: usize) -> Box<dyn PushReceiver> {
+        let mut taken = self.server_taken.lock().unwrap();
+        assert!(!taken[server], "server {server} endpoint already taken (SPSC)");
+        taken[server] = true;
+        Box::new(RingReceiver { shared: self.shared.clone(), server, cursor: 0 })
+    }
+
+    fn inflight_bound(&self) -> usize {
+        self.ring_cap
+    }
+
+    fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+    }
+}
+
+struct RingSender {
+    shared: Arc<RingShared>,
+    worker: usize,
+}
+
+impl PushSender for RingSender {
+    fn send(&mut self, server: usize, msg: PushMsg) -> Result<()> {
+        let ring = &self.shared.rings[self.worker][server];
+        let mut msg = msg;
+        let mut spins = 0u32;
+        loop {
+            // Disconnect detection, matching mpsc semantics: a dropped
+            // receiver fails the send (the rejected `msg` recycles its
+            // pooled buffer on drop).
+            anyhow::ensure!(
+                !self.shared.closed[server].load(Ordering::Acquire),
+                "server {server} hung up"
+            );
+            match ring.try_push(msg) {
+                Ok(()) => return Ok(()),
+                Err(back) => {
+                    // Ring full: the bounded-in-flight backpressure.
+                    anyhow::ensure!(
+                        !self.shared.shutdown.load(Ordering::Relaxed),
+                        "transport shut down with pushes still in flight to server {server}"
+                    );
+                    msg = back;
+                    spins += 1;
+                    if spins < 64 {
+                        std::hint::spin_loop();
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+            }
+        }
+    }
+}
+
+struct RingReceiver {
+    shared: Arc<RingShared>,
+    server: usize,
+    /// Round-robin fairness cursor over worker rings.
+    cursor: usize,
+}
+
+impl PushReceiver for RingReceiver {
+    fn recv(&mut self) -> Option<PushMsg> {
+        let n_workers = self.shared.rings.len();
+        let mut idle = 0u32;
+        loop {
+            // Observe shutdown BEFORE the sweep: producers stop before
+            // `shutdown()` is called, so one clean sweep after seeing
+            // the flag proves the rings are drained.
+            let shutting_down = self.shared.shutdown.load(Ordering::Acquire);
+            for k in 0..n_workers {
+                let w = (self.cursor + k) % n_workers;
+                if let Some(msg) = self.shared.rings[w][self.server].try_pop() {
+                    self.cursor = (w + 1) % n_workers;
+                    return Some(msg);
+                }
+            }
+            if shutting_down {
+                return None;
+            }
+            // Empty but live: back off gently (dedicated server thread).
+            idle += 1;
+            if idle < 16 {
+                std::hint::spin_loop();
+            } else if idle < 256 {
+                std::thread::yield_now();
+            } else {
+                std::thread::sleep(Duration::from_micros(50));
+            }
+        }
+    }
+}
+
+impl Drop for RingReceiver {
+    fn drop(&mut self) {
+        // Close this server's lane first so producers stop feeding it,
+        // then destroy anything still queued — each dropped message
+        // sends its pooled buffer home (`PushMsg::drop`), so a server
+        // dying mid-queue cannot strand a worker in `PushPool::acquire`.
+        self.shared.closed[self.server].store(true, Ordering::Release);
+        for w in 0..self.shared.rings.len() {
+            while self.shared.rings[w][self.server].try_pop().is_some() {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Conformance suite — every Transport impl must pass all of these.
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn msg(worker: usize, epoch: usize) -> PushMsg {
+        PushMsg {
+            worker,
+            block: 0,
+            w: vec![epoch as f32; 4],
+            worker_epoch: epoch,
+            z_version_used: 0,
+            sent_at: std::time::Instant::now(),
+            recycle: None,
+        }
+    }
+
+    /// Both transports, same shape, for every conformance check.
+    fn each_transport(n_workers: usize, n_servers: usize, f: impl Fn(Box<dyn Transport>)) {
+        f(Box::new(MpscTransport::new(n_workers, n_servers, 8)));
+        f(Box::new(SpscRingTransport::new(n_workers, n_servers, 8)));
+    }
+
+    #[test]
+    fn fifo_per_worker_single_stream() {
+        each_transport(1, 1, |t| {
+            let mut tx = t.connect_worker(0);
+            let mut rx = t.connect_server(0);
+            let h = std::thread::spawn({
+                let total = 100usize;
+                move || {
+                    for i in 0..total {
+                        tx.send(0, msg(0, i)).unwrap();
+                    }
+                }
+            });
+            for i in 0..100 {
+                let m = rx.recv().expect("stream ended early");
+                assert_eq!(m.worker_epoch, i, "[{}] out of order", t.name());
+                assert_eq!(m.w, vec![i as f32; 4], "[{}] payload torn", t.name());
+            }
+            h.join().unwrap();
+            t.shutdown();
+            assert!(rx.recv().is_none(), "[{}] not drained-empty after shutdown", t.name());
+        });
+    }
+
+    #[test]
+    fn fifo_per_worker_under_interleaving() {
+        let (n_workers, per_worker) = (3usize, 50usize);
+        each_transport(n_workers, 1, |t| {
+            std::thread::scope(|s| {
+                for w in 0..n_workers {
+                    let mut tx = t.connect_worker(w);
+                    s.spawn(move || {
+                        for i in 0..per_worker {
+                            tx.send(0, msg(w, i)).unwrap();
+                        }
+                    });
+                }
+                let mut rx = t.connect_server(0);
+                let mut next = vec![0usize; n_workers];
+                for _ in 0..n_workers * per_worker {
+                    let m = rx.recv().expect("stream ended early");
+                    assert_eq!(
+                        m.worker_epoch,
+                        next[m.worker],
+                        "[{}] worker {} reordered",
+                        t.name(),
+                        m.worker
+                    );
+                    next[m.worker] += 1;
+                }
+                assert!(next.iter().all(|&n| n == per_worker));
+            });
+        });
+    }
+
+    #[test]
+    fn send_blocks_at_inflight_bound() {
+        each_transport(1, 1, |t| {
+            let bound = t.inflight_bound();
+            let sent = Arc::new(AtomicUsize::new(0));
+            let mut tx = t.connect_worker(0);
+            let h = std::thread::spawn({
+                let sent = sent.clone();
+                move || {
+                    for i in 0..bound + 3 {
+                        tx.send(0, msg(0, i)).unwrap();
+                        sent.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            });
+            // Nothing is receiving: the sender must stall exactly at the
+            // advertised bound (backpressure), not run ahead of it.
+            std::thread::sleep(Duration::from_millis(100));
+            assert_eq!(
+                sent.load(Ordering::SeqCst),
+                bound,
+                "[{}] in-flight bound not enforced",
+                t.name()
+            );
+            let mut rx = t.connect_server(0);
+            for i in 0..bound + 3 {
+                assert_eq!(rx.recv().expect("ended early").worker_epoch, i);
+            }
+            h.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn shutdown_drains_queued_messages() {
+        each_transport(1, 2, |t| {
+            let mut tx = t.connect_worker(0);
+            for i in 0..5 {
+                tx.send(1, msg(0, i)).unwrap();
+            }
+            drop(tx); // worker done
+            t.shutdown();
+            // Everything enqueued before shutdown must still come out,
+            // in order, on the right server; the untouched server is
+            // immediately drained-empty.
+            let mut rx1 = t.connect_server(1);
+            for i in 0..5 {
+                assert_eq!(
+                    rx1.recv().expect("lost on shutdown").worker_epoch,
+                    i,
+                    "[{}] drain reordered",
+                    t.name()
+                );
+            }
+            assert!(rx1.recv().is_none());
+            let mut rx0 = t.connect_server(0);
+            assert!(rx0.recv().is_none(), "[{}] phantom message", t.name());
+        });
+    }
+
+    #[test]
+    fn routes_by_server_index() {
+        each_transport(2, 2, |t| {
+            let mut tx0 = t.connect_worker(0);
+            let mut tx1 = t.connect_worker(1);
+            tx0.send(0, msg(0, 10)).unwrap();
+            tx1.send(1, msg(1, 20)).unwrap();
+            drop((tx0, tx1));
+            t.shutdown();
+            let mut rx0 = t.connect_server(0);
+            let mut rx1 = t.connect_server(1);
+            let a = rx0.recv().unwrap();
+            assert_eq!((a.worker, a.worker_epoch), (0, 10));
+            let b = rx1.recv().unwrap();
+            assert_eq!((b.worker, b.worker_epoch), (1, 20));
+            assert!(rx0.recv().is_none() && rx1.recv().is_none());
+        });
+    }
+
+    #[test]
+    fn recycle_channel_rides_through_intact() {
+        // The pooled-buffer return path: the recycle sender must survive
+        // the trip so the consumer can send the buffer home.
+        each_transport(1, 1, |t| {
+            let (home, inbox) = std::sync::mpsc::channel::<Vec<f32>>();
+            let mut tx = t.connect_worker(0);
+            for i in 0..4 {
+                let mut m = msg(0, i);
+                m.recycle = Some(home.clone());
+                tx.send(0, m).unwrap();
+            }
+            drop(tx);
+            t.shutdown();
+            let mut rx = t.connect_server(0);
+            while let Some(mut m) = rx.recv() {
+                m.recycle_now();
+            }
+            let returned: Vec<Vec<f32>> = inbox.try_iter().collect();
+            assert_eq!(returned.len(), 4, "[{}] buffers lost", t.name());
+        });
+    }
+
+    #[test]
+    fn sender_errors_when_server_endpoint_is_gone() {
+        // mpsc semantics for every transport: a dead server shard must
+        // fail the worker's send loudly, never let it spin forever.
+        each_transport(1, 1, |t| {
+            let mut tx = t.connect_worker(0);
+            drop(t.connect_server(0));
+            let mut failed = false;
+            for i in 0..t.inflight_bound() + 2 {
+                if tx.send(0, msg(0, i)).is_err() {
+                    failed = true;
+                    break;
+                }
+            }
+            assert!(failed, "[{}] send kept succeeding after server went away", t.name());
+        });
+    }
+
+    #[test]
+    fn dropped_queued_messages_still_recycle_their_buffers() {
+        // A server dying with messages still queued must not destroy
+        // the pooled buffers riding in them — the owning worker would
+        // block in PushPool::acquire forever.
+        each_transport(1, 1, |t| {
+            let name = t.name();
+            let (home, inbox) = std::sync::mpsc::channel::<Vec<f32>>();
+            let mut tx = t.connect_worker(0);
+            for i in 0..4 {
+                let mut m = msg(0, i);
+                m.recycle = Some(home.clone());
+                tx.send(0, m).unwrap();
+            }
+            drop(tx);
+            drop(t.connect_server(0)); // server dies without draining
+            drop(t); // full teardown must not lose buffers either
+            assert_eq!(
+                inbox.try_iter().count(),
+                4,
+                "[{name}] queued buffers lost on teardown"
+            );
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "endpoint already taken")]
+    fn ring_rejects_double_producer() {
+        let t = SpscRingTransport::new(2, 1, 4);
+        let _a = t.connect_worker(1);
+        let _b = t.connect_worker(1);
+    }
+
+    #[test]
+    fn make_transport_honors_kind_and_budget() {
+        let m = make_transport(TransportKind::Mpsc, 4, 2, 8);
+        assert_eq!(m.name(), "mpsc");
+        assert_eq!(m.inflight_bound(), 8);
+        let r = make_transport(TransportKind::SpscRing, 4, 2, 8);
+        assert_eq!(r.name(), "ring");
+        // 8 in flight per server, split over 4 workers' rings.
+        assert_eq!(r.inflight_bound(), 2);
+    }
+}

@@ -9,7 +9,6 @@
 //! malloc-free end to end.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::SyncSender;
 
 use anyhow::Result;
 
@@ -17,8 +16,10 @@ use super::block_store::BlockStore;
 use super::bufpool::PushPool;
 use super::compute::WorkerCompute;
 use super::delay::DelayPolicy;
-use super::messages::{PushMsg, ServerMsg};
+use super::messages::PushMsg;
+use super::session::MonitorGate;
 use super::topology::Topology;
+use super::transport::PushSender;
 use crate::admm::WorkerState;
 use crate::config::BlockSelection;
 use crate::data::WorkerShard;
@@ -41,7 +42,7 @@ pub struct WorkerCtx<'a> {
     pub shard: &'a WorkerShard,
     topo: &'a Topology,
     store: &'a BlockStore,
-    senders: &'a [SyncSender<ServerMsg>],
+    sender: Box<dyn PushSender>,
     state: WorkerState,
     policy: DelayPolicy,
     selection: BlockSelection,
@@ -52,6 +53,8 @@ pub struct WorkerCtx<'a> {
     rng: Rng,
     /// Published progress for the monitor thread.
     progress: &'a AtomicUsize,
+    /// Wakes the parked monitor when progress crosses its watermark.
+    gate: &'a MonitorGate,
     /// Version of z̃ currently cached per slot.
     z_versions: Vec<u64>,
     /// Recycled push buffers (w rides to the server and comes back).
@@ -68,7 +71,7 @@ impl<'a> WorkerCtx<'a> {
         shard: &'a WorkerShard,
         topo: &'a Topology,
         store: &'a BlockStore,
-        senders: &'a [SyncSender<ServerMsg>],
+        sender: Box<dyn PushSender>,
         policy: DelayPolicy,
         selection: BlockSelection,
         rho: f32,
@@ -77,6 +80,7 @@ impl<'a> WorkerCtx<'a> {
         enforce_delay: bool,
         seed: u64,
         progress: &'a AtomicUsize,
+        gate: &'a MonitorGate,
         pool_cap: usize,
     ) -> Self {
         let db = shard.block_size;
@@ -90,7 +94,7 @@ impl<'a> WorkerCtx<'a> {
             shard,
             topo,
             store,
-            senders,
+            sender,
             state: WorkerState::init_from_z(z0),
             policy,
             selection,
@@ -100,6 +104,7 @@ impl<'a> WorkerCtx<'a> {
             enforce_delay,
             rng: Rng::new(seed),
             progress,
+            gate,
             z_versions,
             pool: PushPool::new(db, pool_cap),
             y_new: vec![0.0; db],
@@ -177,21 +182,21 @@ impl<'a> WorkerCtx<'a> {
             // the shard returns the buffer on the pool's recycle channel.
             self.policy.sleep_net(&mut self.rng);
             let server = self.topo.server_of_block[j];
-            self.senders[server]
-                .send(ServerMsg::Push(PushMsg {
-                    worker: self.shard.worker_id,
-                    block: j,
-                    w: w_buf,
-                    worker_epoch: t,
-                    z_version_used: used_version,
-                    sent_at: std::time::Instant::now(),
-                    recycle: Some(self.pool.recycler()),
-                }))
-                .map_err(|_| anyhow::anyhow!("server {server} hung up"))?;
+            let push = PushMsg {
+                worker: self.shard.worker_id,
+                block: j,
+                w: w_buf,
+                worker_epoch: t,
+                z_version_used: used_version,
+                sent_at: std::time::Instant::now(),
+                recycle: Some(self.pool.recycler()),
+            };
+            self.sender.send(server, push)?;
 
             self.state.epoch = t + 1;
             self.stats.epochs = t + 1;
             self.progress.store(t + 1, Ordering::Release);
+            self.gate.notify_epoch(t + 1);
         }
         self.stats.pool_high_water = self.pool.high_water();
         Ok(self.stats.clone())

@@ -13,11 +13,43 @@
 //! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the fused
 //!   margin + block-gradient hot-spot and the proximal update.
 //!
+//! ## Training API
+//!
+//! Every execution path — the threaded async runtime, the three
+//! baselines, and the discrete-event simulator — runs through one
+//! [`coordinator::Session`] builder and returns one
+//! [`coordinator::TrainReport`]:
+//!
+//! ```no_run
+//! # fn main() -> anyhow::Result<()> {
+//! use asybadmm::config::Config;
+//! use asybadmm::coordinator::Session;
+//! use asybadmm::data::gen_partitioned;
+//!
+//! let cfg = Config::small();
+//! let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+//! let report = Session::builder(&cfg).dataset(&ds, &shards).run()?;
+//! println!("objective {:.6}", report.final_objective.total());
+//! # Ok(()) }
+//! ```
+//!
+//! Three optional builder knobs:
+//! * `.transport(..)` — the worker→server push queueing discipline
+//!   ([`coordinator::Transport`]): the bounded-mpsc original or the
+//!   lock-free per-worker SPSC ring (`--set transport=mpsc|ring` on the
+//!   CLI).
+//! * `.observer(..)` — run telemetry hooks ([`coordinator::Observer`]);
+//!   objective sampling is itself the built-in observer.
+//! * `.algo(..)` — [`coordinator::Algo`]: `AsyncAdmm` (default),
+//!   `SyncAdmm`, `LockedAdmm`, `HogwildSgd`, or `Sim` (virtual-time DES
+//!   scaling study; extras in `TrainReport::sim`).
+//!
 //! See `DESIGN.md` (repo root) for the system inventory, the hot-path
 //! mechanisms (seqlock block store, push-buffer pool, block-slice CSR
-//! index) and the environment-driven design decisions, and
-//! `EXPERIMENTS.md` (repo root) for the experiment index and
-//! paper-vs-measured results, tracked over time via `BENCH_hotpath.json`.
+//! index, SPSC ring transport) and the environment-driven design
+//! decisions, and `EXPERIMENTS.md` (repo root) for the experiment index
+//! and paper-vs-measured results, tracked over time via
+//! `BENCH_hotpath.json`.
 
 pub mod admm;
 pub mod baselines;

@@ -16,14 +16,13 @@ use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
-use asybadmm::baselines::run_sync_admm;
 use asybadmm::config::Config;
-use asybadmm::coordinator::run_async;
+use asybadmm::coordinator::{Algo, Session};
 use asybadmm::data::{gen_partitioned, load_libsvm, partition_even, Dataset, WorkerShard};
 use asybadmm::problem::Problem;
 use asybadmm::report::{write_file, write_trace_csv, Checkpoint};
 use asybadmm::runtime::Manifest;
-use asybadmm::sim::{calibrate_native, run_sim};
+use asybadmm::sim::calibrate_native;
 use asybadmm::util::cli::{Args, Parsed};
 
 fn main() {
@@ -80,7 +79,13 @@ fn run(cmd: &str, argv: &[String]) -> i32 {
 
 fn config_args(a: Args) -> Args {
     a.opt("config", "", "config file (TOML-subset key = value)")
-        .opt("set", "", "comma-separated key=value config overrides")
+        .opt(
+            "set",
+            "",
+            "comma-separated key=value config overrides (e.g. \
+             transport=mpsc|ring, backend=native|xla, n_workers=8; an \
+             unknown key lists all valid keys)",
+        )
 }
 
 fn build_config(p: &Parsed) -> Result<Config> {
@@ -132,7 +137,7 @@ fn cmd_train(argv: &[String], use_sim: bool) -> Result<()> {
         ds.a.nnz()
     );
 
-    let (samples, final_obj, elapsed, extra, z_final) = if use_sim {
+    let report = if use_sim {
         let problem = Problem::new(cfg.loss, cfg.lambda, cfg.clip);
         let cost = calibrate_native(&ds, &shards, problem);
         println!(
@@ -141,20 +146,27 @@ fn cmd_train(argv: &[String], use_sim: bool) -> Result<()> {
             cost.server_service_s * 1e6,
             cost.net_mean_s * 1e6
         );
-        let r = run_sim(&cfg, &ds, &shards, &cost)?;
-        let extra = format!("virtual_time={:.3}s pushes={} max_queue={}", r.virtual_time_s, r.pushes, r.max_queue);
-        (r.samples, r.final_objective, r.virtual_time_s, extra, r.z_final)
+        Session::builder(&cfg).dataset(&ds, &shards).algo(Algo::Sim(cost)).run()?
     } else {
-        let r = run_async(&cfg, &ds, &shards)?;
-        let extra = format!(
-            "pushes={} max_staleness={} stationarity={:.3e} consensus_max={:.3e}",
-            r.total_pushes(),
-            r.max_staleness(),
-            r.stationarity,
-            r.consensus_max
-        );
-        (r.samples, r.final_objective, r.elapsed_s, extra, r.z_final)
+        Session::builder(&cfg).dataset(&ds, &shards).run()?
     };
+    let extra = match &report.sim {
+        Some(sx) => format!(
+            "virtual_time={:.3}s pushes={} max_queue={}",
+            sx.virtual_time_s,
+            report.total_pushes(),
+            sx.max_queue
+        ),
+        None => format!(
+            "pushes={} max_staleness={} stationarity={:.3e} consensus_max={:.3e}",
+            report.total_pushes(),
+            report.max_staleness(),
+            report.stationarity,
+            report.consensus_max
+        ),
+    };
+    let (samples, final_obj, elapsed, z_final) =
+        (report.samples, report.final_objective, report.elapsed_s, report.z_final);
 
     for s in &samples {
         println!(
@@ -196,7 +208,7 @@ fn cmd_sync(argv: &[String]) -> Result<()> {
     let cfg = build_config(&p)?;
     let (ds, shards) = load_data(&cfg)?;
     println!("# {}", cfg.summary());
-    let r = run_sync_admm(&cfg, &ds, &shards)?;
+    let r = Session::builder(&cfg).dataset(&ds, &shards).algo(Algo::SyncAdmm).run()?;
     for s in &r.samples {
         println!("epoch {:>6}  obj {:.6}", s.epoch, s.objective);
     }

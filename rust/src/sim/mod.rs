@@ -27,7 +27,7 @@ use anyhow::Result;
 
 use crate::admm::{objective_at_z, prox_l1_box, worker_update, NativeEngine, Objective};
 use crate::config::{BlockSelection, Config};
-use crate::coordinator::{ObjSample, Topology};
+use crate::coordinator::{ObjSample, Observer, Progress, Topology};
 use crate::data::{Dataset, WorkerShard};
 use crate::problem::Problem;
 use crate::util::rng::Rng;
@@ -291,11 +291,28 @@ pub struct SimReport {
 }
 
 /// Run Algorithm 1 under the DES with the given cost model.
+///
+/// Prefer `Session::builder(cfg).dataset(..).algo(Algo::Sim(cost)).run()`
+/// for the unified `TrainReport` surface; this remains the raw entry.
 pub fn run_sim(
     cfg: &Config,
     ds: &Dataset,
     shards: &[WorkerShard],
     cost: &CostModel,
+) -> Result<SimReport> {
+    run_sim_observed(cfg, ds, shards, cost, &mut [])
+}
+
+/// [`run_sim`] with [`Observer`] hooks: each watermark sample also
+/// fires `on_sample` with a virtual-time [`Progress`] view, exactly
+/// mirroring the threaded runtime's monitor (the final-state row is
+/// appended to `samples` only).  This is what `Algo::Sim` calls.
+pub fn run_sim_observed(
+    cfg: &Config,
+    ds: &Dataset,
+    shards: &[WorkerShard],
+    cost: &CostModel,
+    observers: &mut [Box<dyn Observer + '_>],
 ) -> Result<SimReport> {
     cfg.validate()?;
     let problem = Problem::new(cfg.loss, cfg.lambda, cfg.clip);
@@ -443,15 +460,16 @@ pub fn run_sim(
                     recorded_min_epoch += 1;
                     time_to_epoch[recorded_min_epoch] = t;
                 }
-                if min_epoch >= next_sample {
-                    let obj = objective_at_z(shards, &problem, weight, &z);
-                    samples.push(ObjSample {
-                        time_s: t,
-                        epoch: min_epoch,
-                        objective: obj.total(),
-                        data_loss: obj.data_loss,
-                        consensus_max: 0.0,
-                    });
+                // Samples at `epoch == cfg.epochs` are the final-state
+                // row appended after the loop, matching the threaded
+                // monitor's no-sample-past-budget contract.
+                if min_epoch >= next_sample && min_epoch < cfg.epochs {
+                    let prog =
+                        Progress::new_dense(min_epoch, t, &z, shards, &problem, weight);
+                    samples.push(prog.sample());
+                    for obs in observers.iter_mut() {
+                        obs.on_sample(&prog);
+                    }
                     next_sample = next_sample.max(min_epoch) + log_every;
                 }
             }
@@ -584,6 +602,38 @@ mod tests {
         let speedup = times[0] / times[1];
         assert!(speedup > 2.0, "4-worker speedup only {speedup:.2}");
         assert!(speedup <= 4.5, "superlinear? {speedup:.2}");
+    }
+
+    #[test]
+    fn sim_observers_mirror_the_sample_stream() {
+        struct Tap<'a> {
+            rows: &'a mut Vec<(usize, f64)>,
+        }
+        impl Observer for Tap<'_> {
+            fn on_sample(&mut self, p: &Progress<'_>) {
+                self.rows.push((p.epoch, p.objective().total()));
+            }
+        }
+        let mut cfg = Config::tiny_test();
+        cfg.epochs = 40;
+        let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+        let mut rows = Vec::new();
+        let mut obs: Vec<Box<dyn Observer + '_>> = vec![Box::new(Tap { rows: &mut rows })];
+        let r = run_sim_observed(&cfg, &ds, &shards, &tiny_cost(), &mut obs).unwrap();
+        drop(obs);
+        // The observer saw exactly the watermark samples (the final-state
+        // row is appended to `samples` only), with identical objectives.
+        assert_eq!(rows.len(), r.samples.len() - 1);
+        for ((e, o), s) in rows.iter().zip(&r.samples) {
+            assert_eq!(*e, s.epoch);
+            assert!((o - s.objective).abs() < 1e-12);
+        }
+        assert!(r.samples.iter().all(|s| s.epoch <= cfg.epochs));
+        assert_eq!(
+            r.samples.iter().filter(|s| s.epoch == cfg.epochs).count(),
+            1,
+            "final sample duplicated"
+        );
     }
 
     #[test]

@@ -3,9 +3,8 @@
 
 use std::io::Write;
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
-
-use once_cell::sync::Lazy;
 
 #[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
 #[repr(u8)]
@@ -18,7 +17,8 @@ pub enum Level {
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(255);
-static START: Lazy<Instant> = Lazy::new(Instant::now);
+// std-only lazy init (the offline build has no `once_cell`).
+static START: OnceLock<Instant> = OnceLock::new();
 
 fn level() -> u8 {
     let l = LEVEL.load(Ordering::Relaxed);
@@ -45,7 +45,7 @@ pub fn log(l: Level, target: &str, msg: std::fmt::Arguments<'_>) {
     if (l as u8) > level() {
         return;
     }
-    let t = START.elapsed().as_secs_f64();
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
     let tag = match l {
         Level::Error => "ERROR",
         Level::Warn => "WARN ",

@@ -177,10 +177,11 @@ fn full_training_run_xla_vs_native_same_seed() {
     cfg.artifacts_dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
 
-    let r_native = asybadmm::coordinator::run_async(&cfg, &ds, &shards).unwrap();
+    use asybadmm::coordinator::Session;
+    let r_native = Session::builder(&cfg).dataset(&ds, &shards).run().unwrap();
     let mut cfg_x = cfg.clone();
     cfg_x.backend = asybadmm::config::Backend::Xla;
-    let r_xla = asybadmm::coordinator::run_async(&cfg_x, &ds, &shards).unwrap();
+    let r_xla = Session::builder(&cfg_x).dataset(&ds, &shards).run().unwrap();
 
     let (a, b) = (r_native.final_objective.total(), r_xla.final_objective.total());
     assert!(
