@@ -69,6 +69,7 @@ fn main() -> anyhow::Result<()> {
             cfg.n_workers,
             cfg.n_servers,
             push_inflight(cfg.n_workers),
+            cfg.batch,
         ))
         .observer(LiveLog)
         .run()?;

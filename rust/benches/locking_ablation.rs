@@ -103,7 +103,7 @@ fn read_throughput<S: Store>(
 /// enqueue/dequeue path in isolation (no ADMM math, no allocation in
 /// steady state).
 fn push_throughput(kind: TransportKind, workers: usize, per_worker: usize, db: usize) -> f64 {
-    let transport = make_transport(kind, workers, 1, push_inflight(workers));
+    let transport = make_transport(kind, workers, 1, push_inflight(workers), 1);
     let total = workers * per_worker;
     let t0 = std::time::Instant::now();
     std::thread::scope(|scope| {

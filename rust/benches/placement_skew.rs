@@ -1,0 +1,219 @@
+//! Placement + drain-policy scaling under a Zipf-skewed block workload.
+//!
+//! The synthetic workload's hot shared blocks have low indices, so the
+//! default contiguous placement concentrates the whole Zipf head on
+//! shard 0 — the server-side serialization this PR's placement/drain
+//! layer exists to break.  Three measurements:
+//!
+//!  1. **Static skew**: max/mean shard load (load = Σ |𝒩(j)| over owned
+//!     blocks) under contiguous vs hash vs degree placement — the
+//!     `degree_vs_contiguous_skew` gate (how much better the
+//!     degree-aware packing balances the hot head).
+//!  2. **Enqueue-to-apply throughput**: workers blast pooled pushes
+//!     routed by the placement while server threads drain under
+//!     `owned` vs `steal` — the `steal_vs_owned_drain` gate
+//!     (`placement=degree drain=steal` vs `placement=contiguous
+//!     drain=owned`; on a 1-core host expect ≈1, on multi-core > 1).
+//!  3. **Batched ring slots**: the same pipeline at `batch=8` vs
+//!     `batch=1` (`ring_batch_amortization`) — per-slot atomics
+//!     amortized over whole w-block batches.
+//!
+//!     cargo bench --bench placement_skew [-- --json]
+//!     BENCH_QUICK=1 cargo bench --bench placement_skew -- --json
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use asybadmm::bench::{emit_hotpath_json, harness_from_env, json_requested, BenchResult};
+use asybadmm::config::{DrainKind, PlacementKind, TransportKind};
+use asybadmm::coordinator::{
+    load_imbalance, make_placement, make_transport, push_inflight, run_server, BlockStore,
+    ProxBackend, PushMsg, PushPool, ServerShard, ShardRt, Topology,
+};
+use asybadmm::data::{gen_partitioned, BlockGeometry, LossKind, SynthSpec, WorkerShard};
+use asybadmm::problem::Problem;
+
+const N_BLOCKS: usize = 16;
+const DB: usize = 256;
+const N_SERVERS: usize = 4;
+const N_WORKERS: usize = 4;
+
+fn zipf_shards() -> Vec<WorkerShard> {
+    let spec = SynthSpec {
+        samples: 64,
+        geometry: BlockGeometry::new(N_BLOCKS, DB),
+        nnz_per_row: 8,
+        blocks_per_worker: 8,
+        // Hot head: 4 low-index blocks shared by every worker.
+        shared_blocks: 4,
+        ..Default::default()
+    };
+    gen_partitioned(&spec, N_WORKERS).1
+}
+
+/// End-to-end enqueue-to-apply throughput (pushes/s): producers route
+/// by the placement's block→shard map; server threads drain under
+/// `drain`, applying the real Eq. 13 update per push.
+fn drain_throughput(
+    shards: &[WorkerShard],
+    placement: PlacementKind,
+    drain: DrainKind,
+    batch: usize,
+    per_worker: usize,
+) -> f64 {
+    let topo =
+        Topology::build_with(shards, N_BLOCKS, N_SERVERS, make_placement(placement).as_ref());
+    let store = Arc::new(BlockStore::new(N_BLOCKS, DB));
+    let problem = Problem::new(LossKind::Logistic, 1e-5, 1e4);
+    let transport = make_transport(
+        TransportKind::SpscRing,
+        N_WORKERS,
+        N_SERVERS,
+        push_inflight(N_WORKERS),
+        batch,
+    );
+    let rts: Vec<ShardRt> = (0..N_SERVERS)
+        .map(|sid| {
+            let shard = ServerShard::new(sid, &topo, store.clone(), problem, 4.0, 0.01);
+            ShardRt::new(shard, transport.as_ref())
+        })
+        .collect();
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        let mut producers = Vec::new();
+        for shard in shards {
+            let w = shard.worker_id;
+            let mut tx = transport.connect_worker(w);
+            let topo = &topo;
+            let active = &shard.active_blocks;
+            producers.push(scope.spawn(move || {
+                let mut pool = PushPool::new(DB, 64);
+                for i in 0..per_worker {
+                    let j = active[i % active.len()];
+                    let msg = PushMsg {
+                        worker: w,
+                        block: j,
+                        w: pool.acquire(),
+                        worker_epoch: i,
+                        z_version_used: 0,
+                        sent_at: Instant::now(),
+                        recycle: Some(pool.recycler()),
+                    };
+                    tx.send(topo.server_of_block[j], msg).unwrap();
+                }
+                tx.flush().unwrap();
+            }));
+        }
+        let rts_ref = &rts;
+        for sid in 0..N_SERVERS {
+            scope.spawn(move || {
+                run_server(rts_ref, sid, drain, &ProxBackend::Native).unwrap();
+            });
+        }
+        for p in producers {
+            p.join().unwrap();
+        }
+        transport.shutdown();
+    });
+    let applied: usize = rts.iter().map(|rt| rt.shard.stats().pushes).sum();
+    assert_eq!(applied, N_WORKERS * per_worker, "pushes lost in the drain pipeline");
+    applied as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// Record an externally-timed measurement (seconds per op) so it lands
+/// in the harness's CSV/JSON alongside closure-timed benches.
+fn record(h: &mut asybadmm::bench::Harness, name: &str, per_op_s: f64) {
+    h.results.push(BenchResult {
+        name: name.to_string(),
+        samples: vec![per_op_s],
+        mean_s: per_op_s,
+        std_s: 0.0,
+        p50_s: per_op_s,
+        p95_s: per_op_s,
+    });
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").as_deref() == Ok("1");
+    let mut h = harness_from_env();
+    println!("== placement + drain policy under Zipf-hot blocks ==");
+
+    let shards = zipf_shards();
+
+    // 1. Static shard-load skew per placement.
+    let base = Topology::build(&shards, N_BLOCKS, N_SERVERS);
+    let degree: Vec<usize> = (0..N_BLOCKS).map(|j| base.degree_of_block(j)).collect();
+    let imbalance = |kind: PlacementKind| -> f64 {
+        let t = Topology::build_with(
+            &shards,
+            N_BLOCKS,
+            N_SERVERS,
+            make_placement(kind).as_ref(),
+        );
+        load_imbalance(&t.server_of_block, &degree, N_SERVERS)
+    };
+    let imb_contig = imbalance(PlacementKind::Contiguous);
+    let imb_hash = imbalance(PlacementKind::Hash);
+    let imb_degree = imbalance(PlacementKind::Degree);
+    let skew_ratio = imb_contig / imb_degree.max(1e-12);
+    println!(
+        "shard load imbalance (max/mean; 1.0 = balanced):\n\
+         \x20 contiguous {imb_contig:.3}\n\
+         \x20 hash       {imb_hash:.3}\n\
+         \x20 degree     {imb_degree:.3}\n\
+         \x20 -> contiguous/degree = {skew_ratio:.2}x  (gate: > 1.0)"
+    );
+
+    // 2. Enqueue-to-apply throughput: the ISSUE's headline comparison.
+    let per_worker = if quick { 2_000 } else { 20_000 };
+    // Warm (thread spawn, page faults).
+    drain_throughput(&shards, PlacementKind::Contiguous, DrainKind::Owned, 1, 500);
+    let owned_rate =
+        drain_throughput(&shards, PlacementKind::Contiguous, DrainKind::Owned, 1, per_worker);
+    let steal_rate =
+        drain_throughput(&shards, PlacementKind::Degree, DrainKind::Steal, 1, per_worker);
+    let steal_ratio = steal_rate / owned_rate.max(1.0);
+    record(&mut h, "contiguous+owned enqueue-to-apply", 1.0 / owned_rate.max(1.0));
+    record(&mut h, "degree+steal enqueue-to-apply", 1.0 / steal_rate.max(1.0));
+    println!(
+        "\nenqueue-to-apply ({N_WORKERS} workers -> {N_SERVERS} shards, db={DB}):\n\
+         \x20 contiguous+owned {owned_rate:>10.0} pushes/s\n\
+         \x20 degree+steal     {steal_rate:>10.0} pushes/s\n\
+         \x20 -> degree+steal / contiguous+owned = {steal_ratio:.2}x \
+         (gate; <1 expected only on 1-core hosts)"
+    );
+
+    // 3. Batched ring slots at the same shape.
+    let batch1 =
+        drain_throughput(&shards, PlacementKind::Degree, DrainKind::Owned, 1, per_worker);
+    let batch8 =
+        drain_throughput(&shards, PlacementKind::Degree, DrainKind::Owned, 8, per_worker);
+    let batch_ratio = batch8 / batch1.max(1.0);
+    record(&mut h, "ring batch=1 enqueue-to-apply", 1.0 / batch1.max(1.0));
+    record(&mut h, "ring batch=8 enqueue-to-apply", 1.0 / batch8.max(1.0));
+    println!(
+        "\nbatched ring slots (degree+owned):\n\
+         \x20 batch=1 {batch1:>10.0} pushes/s\n\
+         \x20 batch=8 {batch8:>10.0} pushes/s\n\
+         \x20 -> batch amortization = {batch_ratio:.2}x"
+    );
+
+    println!("\n{}", h.csv());
+
+    if json_requested() {
+        emit_hotpath_json(
+            "placement_skew",
+            &h,
+            &[
+                ("contiguous_imbalance", imb_contig),
+                ("hash_imbalance", imb_hash),
+                ("degree_imbalance", imb_degree),
+                ("degree_vs_contiguous_skew", skew_ratio),
+                ("owned_drain_push_per_s", owned_rate),
+                ("steal_drain_push_per_s", steal_rate),
+                ("steal_vs_owned_drain", steal_ratio),
+                ("ring_batch_amortization", batch_ratio),
+            ],
+        );
+    }
+}

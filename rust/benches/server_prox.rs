@@ -5,22 +5,73 @@
 //! steady-state handle path allocates nothing, and the bench measures
 //! exactly that path.
 //!
+//! The 4-wide unrolled prox / w̃-sum paths (ROADMAP "SIMD prox") are
+//! **gated bit-identical** against their scalar references here: the
+//! bench asserts exact `to_bits` equality over randomized inputs before
+//! timing, then records the unrolled-vs-scalar speedups
+//! (`prox_unrolled_vs_scalar`, `wsum_unrolled_vs_scalar`) in
+//! BENCH_hotpath.json.
+//!
 //!     cargo bench --bench server_prox [-- --json]
 
 use std::path::Path;
 use std::sync::Arc;
 
-use asybadmm::admm::prox_l1_box;
+use asybadmm::admm::{add_assign_diff, add_assign_diff_scalar, prox_l1_box, prox_l1_box_scalar};
 use asybadmm::bench::{emit_hotpath_json, harness_from_env, json_requested};
 use asybadmm::coordinator::{BlockStore, PushMsg, ServerShard, Topology};
 use asybadmm::data::{gen_partitioned, BlockGeometry, LossKind, SynthSpec};
 use asybadmm::problem::Problem;
 use asybadmm::runtime::{Manifest, ServerProxXla};
+use asybadmm::util::rng::Rng;
+
+/// Bit-identity gate: the unrolled kernels must compute the exact same
+/// f32 expression per element as the scalar references — not just agree
+/// approximately.  Panics on the first divergent bit pattern.
+fn assert_bit_identical(db: usize) {
+    let mut rng = Rng::new(0xB17);
+    for rep in 0..50 {
+        let zt: Vec<f32> = (0..db).map(|_| rng.normal_f32(0.0, 3.0)).collect();
+        let ws: Vec<f32> = (0..db).map(|_| rng.normal_f32(0.0, 3.0)).collect();
+        let (gamma, denom) = (rng.f32(), 0.1 + rng.f32() * 20.0);
+        let (lambda, clip) = (rng.f32(), 0.5 + rng.f32() * 4.0);
+        let mut fast = vec![0.0f32; db];
+        let mut slow = vec![0.0f32; db];
+        prox_l1_box(&zt, &ws, gamma, denom, lambda, clip, &mut fast);
+        prox_l1_box_scalar(&zt, &ws, gamma, denom, lambda, clip, &mut slow);
+        for (k, (a, b)) in fast.iter().zip(&slow).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "prox diverged from scalar at rep {rep} elem {k}: {a} vs {b}"
+            );
+        }
+        let base: Vec<f32> = (0..db).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+        let (mut s_fast, mut s_slow) = (base.clone(), base);
+        add_assign_diff(&mut s_fast, &zt, &ws);
+        add_assign_diff_scalar(&mut s_slow, &zt, &ws);
+        for (k, (a, b)) in s_fast.iter().zip(&s_slow).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "w-sum diverged from scalar at rep {rep} elem {k}: {a} vs {b}"
+            );
+        }
+    }
+}
 
 fn main() {
     let mut h = harness_from_env();
     println!("== server prox / push service (lower is better) ==");
 
+    for db in [64usize, 512] {
+        assert_bit_identical(db);
+    }
+    assert_bit_identical(257); // odd length: remainder lanes covered
+    println!("bit-identity gate: unrolled prox / w-sum == scalar (PASS)");
+
+    let mut prox_ratio = 1.0;
+    let mut wsum_ratio = 1.0;
     for db in [64usize, 512] {
         let zt = vec![0.1f32; db];
         let ws = vec![0.2f32; db];
@@ -29,7 +80,30 @@ fn main() {
             prox_l1_box(&zt, &ws, 0.01, 16.0, 1e-5, 1e4, &mut out);
         });
         println!("  -> {:.1} Melem/s", db as f64 / r.mean_s / 1e6);
+        let unrolled_s = r.mean_s;
+        let r = h.bench(&format!("scalar prox_l1_box db={db}"), || {
+            prox_l1_box_scalar(&zt, &ws, 0.01, 16.0, 1e-5, 1e4, &mut out);
+        });
+        if db == 512 {
+            prox_ratio = r.mean_s / unrolled_s.max(1e-12);
+        }
+
+        let mut sum = vec![0.3f32; db];
+        let r = h.bench(&format!("unrolled w-sum update db={db}"), || {
+            add_assign_diff(&mut sum, &zt, &ws);
+        });
+        let unrolled_s = r.mean_s;
+        let r = h.bench(&format!("scalar   w-sum update db={db}"), || {
+            add_assign_diff_scalar(&mut sum, &zt, &ws);
+        });
+        if db == 512 {
+            wsum_ratio = r.mean_s / unrolled_s.max(1e-12);
+        }
     }
+    println!(
+        "unrolled speedup at db=512: prox {prox_ratio:.2}x, w-sum {wsum_ratio:.2}x \
+         (>= 1.0 expected; exact gain is ISA/LLVM dependent)"
+    );
 
     // Full push handling (w̃ bookkeeping + prox + seqlock store publish).
     let spec = SynthSpec {
@@ -44,7 +118,7 @@ fn main() {
     let topo = Topology::build(&shards, 8, 1);
     let store = Arc::new(BlockStore::new(8, 64));
     let problem = Problem::new(LossKind::Logistic, 1e-5, 1e4);
-    let mut srv = ServerShard::new(0, &topo, store, problem, 4.0, 0.01);
+    let srv = ServerShard::new(0, &topo, store, problem, 4.0, 0.01);
     let block = srv.owned_blocks()[0];
     let worker = topo.workers_of_block[block][0];
     let msg = PushMsg {
@@ -78,6 +152,13 @@ fn main() {
     println!("\n{}", h.csv());
 
     if json_requested() {
-        emit_hotpath_json("server_prox", &h, &[]);
+        emit_hotpath_json(
+            "server_prox",
+            &h,
+            &[
+                ("prox_unrolled_vs_scalar", prox_ratio),
+                ("wsum_unrolled_vs_scalar", wsum_ratio),
+            ],
+        );
     }
 }

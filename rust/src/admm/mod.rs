@@ -13,5 +13,7 @@ mod state;
 pub use metrics::{consensus_gap, gather_packed, objective_at_z, stationarity_residual, Objective};
 pub use native::{worker_update, NativeEngine};
 pub use penalty::{check_theorem1, estimate_block_lipschitz, suggest_gamma, Theorem1Report};
-pub use prox::{prox_l1_box, soft_threshold};
+pub use prox::{
+    add_assign_diff, add_assign_diff_scalar, prox_l1_box, prox_l1_box_scalar, soft_threshold,
+};
 pub use state::WorkerState;

@@ -7,13 +7,36 @@
 //! ```
 //!
 //! with h = λ‖·‖₁ + box(C), whose prox is soft-threshold then clip.
+//!
+//! The hot entry points ([`prox_l1_box`], [`add_assign_diff`]) run
+//! 4-wide unrolled inner loops (ROADMAP "SIMD prox"): `chunks_exact(4)`
+//! bodies with no cross-lane dependence, which LLVM turns into packed
+//! SSE/NEON ops.  Both operators are purely element-wise, so the
+//! unrolled forms compute exactly the same f32 expression per element as
+//! the `_scalar` references — the `server_prox` bench gates on
+//! bit-identity, not approximate agreement.
 
 #[inline]
 pub fn soft_threshold(v: f32, thr: f32) -> f32 {
     v.signum() * (v.abs() - thr).max(0.0)
 }
 
+/// One element of Eq. 13: `clip(soft((γ z̃ + w) / denom, λ/denom), ±C)`.
+/// Single source of truth for both the scalar and unrolled paths (so
+/// bit-identity between them is by construction, and stays that way).
+/// The division is kept (not strength-reduced to a reciprocal multiply)
+/// so results are bit-identical to the pre-unrolled implementation too;
+/// `divps` vectorizes the same way.
+#[inline(always)]
+fn prox_elem(zt: f32, ws: f32, gamma: f32, denom: f32, thr: f32, clip: f32) -> f32 {
+    let v = (gamma * zt + ws) / denom;
+    soft_threshold(v, thr).clamp(-clip, clip)
+}
+
 /// In-place Eq. 13: `z[k] = clip(soft((γ z̃[k] + w_sum[k]) / denom, λ/denom), ±C)`.
+///
+/// 4-wide unrolled hot path; [`prox_l1_box_scalar`] is the plain-loop
+/// reference it must match bit for bit.
 pub fn prox_l1_box(
     z_tilde: &[f32],
     w_sum: &[f32],
@@ -27,9 +50,77 @@ pub fn prox_l1_box(
     debug_assert_eq!(z_tilde.len(), out.len());
     debug_assert!(denom > 0.0);
     let thr = lambda / denom;
+    let mut o4 = out.chunks_exact_mut(4);
+    let mut z4 = z_tilde.chunks_exact(4);
+    let mut w4 = w_sum.chunks_exact(4);
+    for ((o, zt), ws) in (&mut o4).zip(&mut z4).zip(&mut w4) {
+        o[0] = prox_elem(zt[0], ws[0], gamma, denom, thr, clip);
+        o[1] = prox_elem(zt[1], ws[1], gamma, denom, thr, clip);
+        o[2] = prox_elem(zt[2], ws[2], gamma, denom, thr, clip);
+        o[3] = prox_elem(zt[3], ws[3], gamma, denom, thr, clip);
+    }
+    for ((o, &zt), &ws) in o4
+        .into_remainder()
+        .iter_mut()
+        .zip(z4.remainder())
+        .zip(w4.remainder())
+    {
+        *o = prox_elem(zt, ws, gamma, denom, thr, clip);
+    }
+}
+
+/// Plain-loop reference for [`prox_l1_box`]; the `server_prox` bench
+/// asserts the unrolled path is bit-identical to this one.
+pub fn prox_l1_box_scalar(
+    z_tilde: &[f32],
+    w_sum: &[f32],
+    gamma: f32,
+    denom: f32,
+    lambda: f32,
+    clip: f32,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(z_tilde.len(), w_sum.len());
+    debug_assert_eq!(z_tilde.len(), out.len());
+    debug_assert!(denom > 0.0);
+    let thr = lambda / denom;
     for ((o, &zt), &ws) in out.iter_mut().zip(z_tilde).zip(w_sum) {
-        let v = (gamma * zt + ws) / denom;
-        *o = soft_threshold(v, thr).clamp(-clip, clip);
+        *o = prox_elem(zt, ws, gamma, denom, thr, clip);
+    }
+}
+
+/// The server's w̃-sum maintenance (Eq. 13 incremental form):
+/// `sum[k] += new[k] - old[k]`, 4-wide unrolled.  Element-wise with no
+/// reduction, so unrolling cannot reorder any f32 addition —
+/// [`add_assign_diff_scalar`] is bit-identical by construction.
+pub fn add_assign_diff(sum: &mut [f32], new: &[f32], old: &[f32]) {
+    debug_assert_eq!(sum.len(), new.len());
+    debug_assert_eq!(sum.len(), old.len());
+    let mut s4 = sum.chunks_exact_mut(4);
+    let mut n4 = new.chunks_exact(4);
+    let mut o4 = old.chunks_exact(4);
+    for ((s, n), o) in (&mut s4).zip(&mut n4).zip(&mut o4) {
+        s[0] += n[0] - o[0];
+        s[1] += n[1] - o[1];
+        s[2] += n[2] - o[2];
+        s[3] += n[3] - o[3];
+    }
+    for ((s, &n), &o) in s4
+        .into_remainder()
+        .iter_mut()
+        .zip(n4.remainder())
+        .zip(o4.remainder())
+    {
+        *s += n - o;
+    }
+}
+
+/// Plain-loop reference for [`add_assign_diff`].
+pub fn add_assign_diff_scalar(sum: &mut [f32], new: &[f32], old: &[f32]) {
+    debug_assert_eq!(sum.len(), new.len());
+    debug_assert_eq!(sum.len(), old.len());
+    for ((s, &n), &o) in sum.iter_mut().zip(new).zip(old) {
+        *s += n - o;
     }
 }
 
@@ -68,6 +159,49 @@ mod tests {
         let mut out = [0.0f32; 1];
         prox_l1_box(&[2.0], &[4.0], 0.5, 2.5, 0.0, 100.0, &mut out);
         assert!((out[0] - 2.0).abs() < 1e-6); // (1 + 4)/2.5
+    }
+
+    #[test]
+    fn unrolled_prox_bit_identical_to_scalar_all_lengths() {
+        // Cover every remainder length 0..3 and both sides of the
+        // threshold/clip, across many random vectors.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(7);
+        for db in [1usize, 2, 3, 4, 5, 7, 8, 15, 16, 64, 257] {
+            for _ in 0..20 {
+                let zt: Vec<f32> = (0..db).map(|_| rng.normal_f32(0.0, 3.0)).collect();
+                let ws: Vec<f32> = (0..db).map(|_| rng.normal_f32(0.0, 3.0)).collect();
+                let gamma = rng.f32() * 2.0;
+                let denom = 0.1 + rng.f32() * 20.0;
+                let lambda = rng.f32();
+                let clip = 0.5 + rng.f32() * 4.0;
+                let mut fast = vec![0.0f32; db];
+                let mut slow = vec![0.0f32; db];
+                prox_l1_box(&zt, &ws, gamma, denom, lambda, clip, &mut fast);
+                prox_l1_box_scalar(&zt, &ws, gamma, denom, lambda, clip, &mut slow);
+                for (a, b) in fast.iter().zip(&slow) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "db={db}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unrolled_add_assign_diff_bit_identical_to_scalar() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(11);
+        for db in [1usize, 3, 4, 6, 8, 13, 64] {
+            let base: Vec<f32> = (0..db).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+            let new: Vec<f32> = (0..db).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+            let old: Vec<f32> = (0..db).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+            let mut fast = base.clone();
+            let mut slow = base.clone();
+            add_assign_diff(&mut fast, &new, &old);
+            add_assign_diff_scalar(&mut slow, &new, &old);
+            for (a, b) in fast.iter().zip(&slow) {
+                assert_eq!(a.to_bits(), b.to_bits(), "db={db}");
+            }
+        }
     }
 
     #[test]

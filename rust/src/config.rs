@@ -65,6 +65,75 @@ impl TransportKind {
     }
 }
 
+/// Block→server-shard placement policy
+/// (see `coordinator/placement.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementKind {
+    /// Equal contiguous block-id ranges per shard (the default; load-
+    /// blind, so the Zipf-hot low-index blocks all land on shard 0).
+    Contiguous,
+    /// Block j → shard j mod S — the pre-placement-layer hard-coded
+    /// assignment, kept selectable for continuity.
+    RoundRobin,
+    /// Multiplicative hash of the block id — production-PS key spread.
+    Hash,
+    /// Greedy largest-degree-first packing by |𝒩(j)| so hot blocks land
+    /// on distinct shards.
+    Degree,
+}
+
+impl PlacementKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "contiguous" => Ok(PlacementKind::Contiguous),
+            "roundrobin" => Ok(PlacementKind::RoundRobin),
+            "hash" => Ok(PlacementKind::Hash),
+            "degree" => Ok(PlacementKind::Degree),
+            other => {
+                anyhow::bail!("unknown placement {other:?} (contiguous|roundrobin|hash|degree)")
+            }
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PlacementKind::Contiguous => "contiguous",
+            PlacementKind::RoundRobin => "roundrobin",
+            PlacementKind::Hash => "hash",
+            PlacementKind::Degree => "degree",
+        }
+    }
+}
+
+/// Server-thread queue-draining policy (see `coordinator/sched.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DrainKind {
+    /// Each server thread drains only its own shard's lanes (the
+    /// original behavior).
+    Owned,
+    /// A thread whose own lanes run dry CAS-claims pending lanes of a
+    /// busier shard and drains them — whole lanes, never single
+    /// messages, so per-(worker, block) FIFO is preserved.
+    Steal,
+}
+
+impl DrainKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "owned" => Ok(DrainKind::Owned),
+            "steal" => Ok(DrainKind::Steal),
+            other => anyhow::bail!("unknown drain policy {other:?} (owned|steal)"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DrainKind::Owned => "owned",
+            DrainKind::Steal => "steal",
+        }
+    }
+}
+
 /// Block selection rule on workers (paper uses uniform random; cyclic is
 /// the variant mentioned for the experiments).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -114,6 +183,8 @@ pub struct Config {
     // -- topology ----------------------------------------------------------
     pub n_workers: usize,
     pub n_servers: usize,
+    /// Block→shard placement policy (`contiguous` | `hash` | `degree`).
+    pub placement: PlacementKind,
 
     // -- algorithm ---------------------------------------------------------
     /// Penalty ρ_i (paper experiment: 100, uniform across workers).
@@ -132,6 +203,12 @@ pub struct Config {
     pub backend: Backend,
     /// Worker→server push queueing discipline (`mpsc` | `ring`).
     pub transport: TransportKind,
+    /// Server-thread drain policy (`owned` | `steal`).
+    pub drain: DrainKind,
+    /// Max w-blocks coalesced per transport slot (1 = unbatched).  The
+    /// ring transport packs whole [`PushMsg`] batches into one slot to
+    /// amortize per-message overhead when workers own many blocks.
+    pub batch: usize,
     pub artifacts_dir: PathBuf,
     /// Rows per AOT chunk; must match an artifact shape set.
     pub m_chunk: usize,
@@ -164,6 +241,7 @@ impl Default for Config {
             data_path: None,
             n_workers: 4,
             n_servers: 2,
+            placement: PlacementKind::Contiguous,
             // Paper uses rho=100 with *unweighted* per-sample losses; this
             // repo weights by 1/m (Eq. 22's mean), which rescales the
             // block Lipschitz constants by 1/m, so the equivalent
@@ -177,6 +255,8 @@ impl Default for Config {
             enforce_delay_bound: false,
             backend: Backend::Native,
             transport: TransportKind::Mpsc,
+            drain: DrainKind::Owned,
+            batch: 1,
             artifacts_dir: PathBuf::from("artifacts"),
             m_chunk: 2048,
             d_pad: 4096,
@@ -246,6 +326,9 @@ impl Config {
         "data_path",
         "n_workers",
         "n_servers",
+        "placement",
+        "drain",
+        "batch",
         "rho",
         "gamma",
         "epochs",
@@ -280,6 +363,9 @@ impl Config {
             "data_path" => self.data_path = Some(PathBuf::from(v)),
             "n_workers" => self.n_workers = v.parse()?,
             "n_servers" => self.n_servers = v.parse()?,
+            "placement" => self.placement = PlacementKind::parse(v)?,
+            "drain" => self.drain = DrainKind::parse(v)?,
+            "batch" => self.batch = v.parse()?,
             "rho" => self.rho = v.parse()?,
             "gamma" => self.gamma = v.parse()?,
             "epochs" => self.epochs = v.parse()?,
@@ -330,6 +416,13 @@ impl Config {
             self.n_servers,
             self.n_blocks
         );
+        // Upper bound is a sanity ceiling: ring slots and the push pool
+        // pre-allocate per-batch capacity, so a fat-fingered
+        // `batch=1000000000` would OOM at startup instead of erroring.
+        anyhow::ensure!(
+            (1..=1024).contains(&self.batch),
+            "batch must be in [1, 1024]"
+        );
         anyhow::ensure!(self.rho > 0.0, "rho must be positive");
         anyhow::ensure!(self.gamma >= 0.0, "gamma must be non-negative");
         anyhow::ensure!(self.lambda >= 0.0, "lambda must be non-negative");
@@ -361,7 +454,7 @@ impl Config {
     /// One-line summary for report headers.
     pub fn summary(&self) -> String {
         format!(
-            "loss={} m={} M={} db={} p={} servers={} rho={} gamma={} lambda={} T={} sel={} backend={} transport={} seed={}",
+            "loss={} m={} M={} db={} p={} servers={} rho={} gamma={} lambda={} T={} sel={} backend={} transport={} placement={} drain={} batch={} seed={}",
             self.loss.as_str(),
             self.samples,
             self.n_blocks,
@@ -375,6 +468,9 @@ impl Config {
             self.selection.as_str(),
             self.backend.as_str(),
             self.transport.as_str(),
+            self.placement.as_str(),
+            self.drain.as_str(),
+            self.batch,
             self.seed
         )
     }
@@ -425,6 +521,22 @@ mod tests {
         assert_eq!(c.transport, TransportKind::SpscRing);
         c.apply_kv("transport", "mpsc").unwrap();
         assert_eq!(c.transport, TransportKind::Mpsc);
+        c.apply_kv("placement", "degree").unwrap();
+        c.apply_kv("drain", "steal").unwrap();
+        c.apply_kv("batch", "4").unwrap();
+        assert_eq!(c.placement, PlacementKind::Degree);
+        assert_eq!(c.drain, DrainKind::Steal);
+        assert_eq!(c.batch, 4);
+        c.apply_kv("placement", "hash").unwrap();
+        assert_eq!(c.placement, PlacementKind::Hash);
+        c.apply_kv("placement", "roundrobin").unwrap();
+        assert_eq!(c.placement, PlacementKind::RoundRobin);
+        c.apply_kv("placement", "contiguous").unwrap();
+        c.apply_kv("drain", "owned").unwrap();
+        assert_eq!(c.placement, PlacementKind::Contiguous);
+        assert_eq!(c.drain, DrainKind::Owned);
+        assert!(c.apply_kv("placement", "astrology").is_err());
+        assert!(c.apply_kv("drain", "never").is_err());
         assert!(c.apply_kv("transport", "carrier-pigeon").is_err());
         assert!(c.apply_kv("nope", "1").is_err());
         assert!(c.apply_kv("n_workers", "abc").is_err());
@@ -472,6 +584,14 @@ mod tests {
         let mut c = Config::default();
         c.blocks_per_worker = c.n_blocks + 1;
         assert!(c.validate().is_err());
+
+        let mut c = Config::default();
+        c.batch = 0;
+        assert!(c.validate().is_err());
+        c.batch = 1025;
+        assert!(c.validate().is_err());
+        c.batch = 1024;
+        assert!(c.validate().is_ok());
 
         let mut c = Config::default();
         c.blocks_per_worker = 9; // 9 * 512 > 4096: only the XLA backend cares

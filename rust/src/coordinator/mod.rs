@@ -15,18 +15,26 @@
 //!
 //! The public surface is the [`Session`] builder (`session.rs`):
 //! dataset + algorithm + [`Transport`] + [`Observer`]s in, unified
-//! [`TrainReport`] out.  The push queueing discipline is pluggable
-//! behind [`Transport`] (`transport.rs`): the bounded-mpsc original
-//! and the lock-free per-worker SPSC ring.  `driver.rs` holds only the
-//! deprecated `run_async` shim.
+//! [`TrainReport`] out.  Three server-side policies are pluggable:
+//!
+//! * **queueing** behind [`Transport`] (`transport.rs`): the bounded
+//!   mpsc original and the lock-free per-worker SPSC ring, both with
+//!   batched slots (`--set transport=mpsc|ring batch=N`);
+//! * **block placement** behind [`Placement`] (`placement.rs`): which
+//!   shard owns each z_j (`--set placement=contiguous|hash|degree`);
+//! * **queue draining** behind [`crate::config::DrainKind`]
+//!   (`sched.rs`): each server thread services only its own shard's
+//!   lanes, or CAS-claims and steals whole pending lanes of busier
+//!   shards (`--set drain=owned|steal`).
 
 mod block_store;
 mod bufpool;
 mod compute;
 mod delay;
-mod driver;
 mod events;
 mod messages;
+mod placement;
+mod sched;
 mod server;
 mod session;
 mod topology;
@@ -37,10 +45,13 @@ pub use block_store::{BlockStore, RwBlockStore};
 pub use bufpool::PushPool;
 pub use compute::{make_compute, NativeCompute, WorkerCompute, XlaCompute};
 pub use delay::DelayPolicy;
-#[allow(deprecated)]
-pub use driver::run_async;
 pub use events::ObjSample;
 pub use messages::PushMsg;
+pub use placement::{
+    load_imbalance, make_placement, ContiguousPlacement, DegreePlacement, HashPlacement,
+    Placement, RoundRobinPlacement,
+};
+pub use sched::{run_server, ShardRt};
 pub use server::{ProxBackend, ServerShard, ServerStats};
 pub use session::{
     Algo, MonitorGate, Observer, Progress, Session, SessionBuilder, SimExtras, TrainReport,
@@ -48,6 +59,6 @@ pub use session::{
 pub use topology::Topology;
 pub use transport::{
     make_transport, push_inflight, MpscTransport, PushReceiver, PushSender, SpscRingTransport,
-    Transport,
+    Transport, TryRecv,
 };
 pub use worker::{WorkerCtx, WorkerStats};

@@ -1,0 +1,486 @@
+//! Server-thread drain scheduling: who services which inbound queue.
+//!
+//! The transport exposes each server shard's inbound stream as one or
+//! more independently drainable **lanes**
+//! ([`Transport::connect_server_lanes`]): per-(worker, shard) SPSC
+//! rings for the ring transport, one lane total for mpsc.  This module
+//! decides which server *thread* drains which lane:
+//!
+//! * [`DrainKind::Owned`] — each thread drains only its own shard's
+//!   lanes (the pre-PR-4 behavior, round-robin over lanes).
+//! * [`DrainKind::Steal`] — a thread whose own lanes run dry CAS-claims
+//!   pending lanes of busier shards and drains those.  Stealing moves
+//!   **whole lanes, never single messages**: a lane is a per-worker
+//!   FIFO sub-stream, and exclusive sequential access to it (the
+//!   claim) preserves per-(worker, block) delivery order no matter
+//!   which thread drains — the invariant Algorithm 1's staleness
+//!   accounting needs.
+//!
+//! ## Why stealing is safe (the ownership handoff)
+//!
+//! Two layers cooperate:
+//!
+//! 1. **Lane claim** (`AtomicBool` CAS, here): at most one thread
+//!    drains a lane at any time, so the SPSC ring's single-consumer
+//!    discipline holds even as the consumer *role* migrates between
+//!    threads.  The claim's release(store)/acquire(CAS) pair carries
+//!    the receiver's internal cursor across threads.
+//! 2. **Block write lease** (`server.rs`): applying a push takes the
+//!    target block's mutex for the whole read-modify-write + store
+//!    publish, so a thief and the owner draining two different lanes
+//!    into the same hot block never interleave an update.
+//!
+//! Budgeted drains (at most [`DRAIN_BUDGET`] messages per claim) bound
+//! how long a thief holds someone else's lane, so the owner coming
+//! back never starves behind its own queue.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use super::server::{ProxBackend, ServerShard};
+use super::transport::{Backoff, PushReceiver, Transport, TryRecv};
+use crate::config::DrainKind;
+
+/// Messages drained per successful lane claim before the claim is
+/// released (fairness bound; see module docs).
+const DRAIN_BUDGET: usize = 64;
+
+/// One independently drainable inbound lane of a server shard.
+struct Lane {
+    /// Exclusive drain claim; CAS-acquired, store-released.
+    claim: AtomicBool,
+    /// Terminal: the lane reported end-of-stream (shutdown + drained).
+    done: AtomicBool,
+    /// The receiving endpoint; `None` once [`ShardRt::close_lanes`]
+    /// force-closed it.  The claim already serializes access; the
+    /// mutex exists because `Box<dyn PushReceiver>` is `Send` but not
+    /// `Sync`, and its (uncontended) lock doubles as a second
+    /// happens-before edge for the receiver's cursor state.
+    rx: Mutex<Option<Box<dyn PushReceiver>>>,
+}
+
+impl Lane {
+    fn new(rx: Box<dyn PushReceiver>) -> Self {
+        Lane {
+            claim: AtomicBool::new(false),
+            done: AtomicBool::new(false),
+            rx: Mutex::new(Some(rx)),
+        }
+    }
+
+    fn try_claim(&self) -> bool {
+        self.claim
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_ok()
+    }
+
+    fn release(&self) {
+        self.claim.store(false, Ordering::Release);
+    }
+
+    fn is_done(&self) -> bool {
+        self.done.load(Ordering::Acquire)
+    }
+}
+
+/// A server shard plus its claimable inbound lanes — everything a
+/// server thread (its own, or a stealing neighbor) needs to service it.
+pub struct ShardRt {
+    pub shard: ServerShard,
+    lanes: Vec<Lane>,
+}
+
+impl ShardRt {
+    /// Take shard `shard.id`'s receiver lanes from the transport.
+    /// Single-take, like `connect_server`.
+    pub fn new(shard: ServerShard, transport: &dyn Transport) -> Self {
+        let lanes =
+            transport.connect_server_lanes(shard.id).into_iter().map(Lane::new).collect();
+        ShardRt { shard, lanes }
+    }
+
+    fn all_done(&self) -> bool {
+        self.lanes.iter().all(Lane::is_done)
+    }
+
+    /// Force-close every lane: drop the receivers — disconnecting
+    /// their channels/rings so senders blocked on this shard fail
+    /// loudly — and mark the lanes terminal so steal-mode peers stop
+    /// waiting on them.  The session monitor calls this for a shard
+    /// whose thread died, restoring the pre-sched behavior where a
+    /// panicking server thread dropped its receiver on unwind (the
+    /// receivers now live here, outliving the thread).  Poison-
+    /// tolerant: the dead thread may have panicked holding a lane.
+    pub fn close_lanes(&self) {
+        for lane in &self.lanes {
+            let mut rx =
+                lane.rx.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            drop(rx.take());
+            lane.done.store(true, Ordering::Release);
+        }
+    }
+}
+
+/// Drain up to `budget` messages from a claimed lane into `shard`.
+/// Returns how many were applied.  The caller holds the claim.
+fn drain_claimed(
+    shard: &ServerShard,
+    lane: &Lane,
+    prox: &ProxBackend,
+    budget: usize,
+) -> Result<usize> {
+    let mut rx = lane.rx.lock().unwrap();
+    let Some(rx) = rx.as_mut() else {
+        // Force-closed (dead-shard teardown): terminal.
+        lane.done.store(true, Ordering::Release);
+        return Ok(0);
+    };
+    let mut applied = 0usize;
+    while applied < budget {
+        match rx.try_recv() {
+            TryRecv::Msg(mut msg) => {
+                let r = shard.handle_push(&msg, prox);
+                // Buffer goes home before any error propagates
+                // (`PushMsg::drop` would also recycle, but do it
+                // eagerly on the happy path).
+                msg.recycle_now();
+                r?;
+                applied += 1;
+            }
+            TryRecv::Empty => break,
+            TryRecv::Done => {
+                lane.done.store(true, Ordering::Release);
+                break;
+            }
+        }
+    }
+    Ok(applied)
+}
+
+/// Sweep `rt`'s lanes once, claiming and draining each available lane.
+/// Returns messages applied.
+fn sweep(rt: &ShardRt, prox: &ProxBackend) -> Result<usize> {
+    let mut applied = 0usize;
+    for lane in &rt.lanes {
+        if lane.is_done() || !lane.try_claim() {
+            continue;
+        }
+        // Release the claim before propagating any error so other
+        // threads are not wedged out of a lane nobody holds.
+        let r = drain_claimed(&rt.shard, lane, prox, DRAIN_BUDGET);
+        lane.release();
+        applied += r?;
+    }
+    Ok(applied)
+}
+
+/// The server-thread main loop for shard `sid` under drain policy
+/// `drain`.  Returns once this thread's exit condition holds: all own
+/// lanes terminal for [`DrainKind::Owned`]; all lanes of *every* shard
+/// terminal for [`DrainKind::Steal`] (a thief keeps helping busier
+/// shards after its own queues close).
+///
+/// Call with the same `rts` slice from every server thread; `sid`
+/// indexes this thread's own shard.
+pub fn run_server(
+    rts: &[ShardRt],
+    sid: usize,
+    drain: DrainKind,
+    prox: &ProxBackend,
+) -> Result<()> {
+    let own = &rts[sid];
+    // Fast path: `owned` with a single lane (the mpsc shape) is the
+    // plain blocking server loop — no polling, no idle wakeups, same
+    // CPU profile as the pre-sched design.
+    if matches!(drain, DrainKind::Owned) && own.lanes.len() == 1 {
+        let lane = &own.lanes[0];
+        if lane.try_claim() {
+            let mut guard = lane.rx.lock().unwrap();
+            if let Some(rx) = guard.as_mut() {
+                while let Some(mut msg) = rx.recv() {
+                    let r = own.shard.handle_push(&msg, prox);
+                    msg.recycle_now();
+                    r?;
+                }
+            }
+            lane.done.store(true, Ordering::Release);
+            // The claim is deliberately not released: the lane is
+            // terminal and nobody else should ever drain it.
+        }
+        return Ok(());
+    }
+    let mut backoff = Backoff::new();
+    loop {
+        // Own lanes first — the owner is the common case and keeps
+        // locality (its shard's z̃ caches are warm in this core).
+        let mut applied = sweep(own, prox)?;
+
+        match drain {
+            DrainKind::Owned => {
+                if own.all_done() {
+                    return Ok(());
+                }
+            }
+            DrainKind::Steal => {
+                if applied == 0 {
+                    // Own lanes dry: steal pending lanes of busier
+                    // shards, whole lanes at a time, starting after our
+                    // own index so thieves fan out over victims.
+                    for k in 1..rts.len() {
+                        applied += sweep(&rts[(sid + k) % rts.len()], prox)?;
+                    }
+                }
+                if rts.iter().all(ShardRt::all_done) {
+                    return Ok(());
+                }
+            }
+        }
+
+        if applied == 0 {
+            backoff.snooze();
+        } else {
+            backoff.reset();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::block_store::BlockStore;
+    use super::super::messages::PushMsg;
+    use super::super::topology::Topology;
+    use super::super::transport::make_transport;
+    use crate::config::TransportKind;
+    use crate::data::{gen_partitioned, BlockGeometry, LossKind, SynthSpec};
+    use crate::problem::Problem;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn setup(n_blocks: usize, n_servers: usize, workers: usize) -> (Topology, Arc<BlockStore>, Problem) {
+        let spec = SynthSpec {
+            samples: 8 * workers,
+            geometry: BlockGeometry::new(n_blocks, 4),
+            nnz_per_row: 3,
+            blocks_per_worker: n_blocks, // every worker touches every block
+            shared_blocks: n_blocks,
+            ..Default::default()
+        };
+        let (_, shards) = gen_partitioned(&spec, workers);
+        let topo = Topology::build(&shards, n_blocks, n_servers);
+        let store = Arc::new(BlockStore::new(n_blocks, 4));
+        (topo, store, Problem::new(LossKind::Logistic, 0.0, 1e4))
+    }
+
+    fn push(worker: usize, block: usize, epoch: usize) -> PushMsg {
+        PushMsg {
+            worker,
+            block,
+            w: vec![0.1; 4],
+            worker_epoch: epoch,
+            z_version_used: 0,
+            sent_at: std::time::Instant::now(),
+            recycle: None,
+        }
+    }
+
+    /// Send `per_worker` pushes per worker (routed by the topology),
+    /// run `n_servers` threads under `drain`, and return per-shard
+    /// push counts.
+    fn run_matrix(kind: TransportKind, drain: DrainKind, batch: usize) -> Vec<usize> {
+        let (n_blocks, n_servers, workers, per_worker) = (6usize, 2usize, 3usize, 40usize);
+        let (topo, store, problem) = setup(n_blocks, n_servers, workers);
+        let transport =
+            make_transport(kind, workers, n_servers, 8, batch);
+        let rts: Vec<ShardRt> = (0..n_servers)
+            .map(|sid| {
+                let shard = ServerShard::new(sid, &topo, store.clone(), problem, 2.0, 0.1);
+                ShardRt::new(shard, transport.as_ref())
+            })
+            .collect();
+        std::thread::scope(|scope| {
+            let mut producers = Vec::new();
+            for w in 0..workers {
+                let mut tx = transport.connect_worker(w);
+                let topo = &topo;
+                producers.push(scope.spawn(move || {
+                    for i in 0..per_worker {
+                        let j = topo.blocks_of_worker[w][i % topo.blocks_of_worker[w].len()];
+                        tx.send(topo.server_of_block[j], push(w, j, i)).unwrap();
+                    }
+                    tx.flush().unwrap();
+                }));
+            }
+            let rts_ref = &rts;
+            let mut servers = Vec::new();
+            for sid in 0..n_servers {
+                servers.push(scope.spawn(move || {
+                    run_server(rts_ref, sid, drain, &ProxBackend::Native).unwrap();
+                }));
+            }
+            for p in producers {
+                p.join().unwrap();
+            }
+            transport.shutdown();
+            for s in servers {
+                s.join().unwrap();
+            }
+        });
+        rts.iter().map(|rt| rt.shard.stats().pushes).collect()
+    }
+
+    #[test]
+    fn owned_and_steal_drain_everything_under_both_transports() {
+        for kind in [TransportKind::Mpsc, TransportKind::SpscRing] {
+            for drain in [DrainKind::Owned, DrainKind::Steal] {
+                for batch in [1usize, 4] {
+                    let per_shard = run_matrix(kind, drain, batch);
+                    let total: usize = per_shard.iter().sum();
+                    // 3 workers x 40 pushes, none lost, none duplicated.
+                    assert_eq!(
+                        total, 120,
+                        "{kind:?}/{drain:?}/batch={batch}: {per_shard:?}"
+                    );
+                    // Per-shard counts are placement-determined (every
+                    // push for a block lands on its owning shard, no
+                    // matter which thread drained it).
+                    assert!(
+                        per_shard.iter().all(|&c| c > 0),
+                        "{kind:?}/{drain:?}/batch={batch}: a shard applied nothing: {per_shard:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn steal_services_a_dead_owners_backlog() {
+        // Traffic is queued for BOTH shards but only shard 1's thread
+        // ever runs: under `steal` it must drain shard 0's backlog too
+        // (whole lanes, never splitting a per-worker stream) — any
+        // shard-0 push applied proves the writer role was stolen.
+        let (n_servers, workers, per_worker) = (2usize, 2usize, 30usize);
+        let spec = SynthSpec {
+            samples: 16,
+            geometry: BlockGeometry::new(4, 4),
+            nnz_per_row: 3,
+            blocks_per_worker: 4,
+            shared_blocks: 4,
+            ..Default::default()
+        };
+        let (_, shards) = gen_partitioned(&spec, workers);
+        let topo = Topology::build(&shards, 4, n_servers);
+        let store = Arc::new(BlockStore::new(4, 4));
+        let problem = Problem::new(LossKind::Logistic, 0.0, 1e4);
+        // Producers pre-fill the rings before any consumer runs: size
+        // the per-lane capacity to hold the whole backlog (inflight is
+        // split across workers' rings).
+        let transport =
+            make_transport(TransportKind::SpscRing, workers, n_servers, workers * per_worker, 1);
+        let rts: Vec<ShardRt> = (0..n_servers)
+            .map(|sid| {
+                let shard = ServerShard::new(sid, &topo, store.clone(), problem, 2.0, 0.1);
+                ShardRt::new(shard, transport.as_ref())
+            })
+            .collect();
+        // Only thread 1 runs; it owns shard 1 (whose lanes go Done
+        // immediately after shutdown) and must steal shard 0's backlog.
+        std::thread::scope(|scope| {
+            let mut producers = Vec::new();
+            for w in 0..workers {
+                let mut tx = transport.connect_worker(w);
+                let topo = &topo;
+                producers.push(scope.spawn(move || {
+                    for i in 0..per_worker {
+                        let j = i % 4;
+                        tx.send(topo.server_of_block[j], push(w, j, i)).unwrap();
+                    }
+                }));
+            }
+            for p in producers {
+                p.join().unwrap();
+            }
+            transport.shutdown();
+            let rts_ref = &rts;
+            scope
+                .spawn(move || run_server(rts_ref, 1, DrainKind::Steal, &ProxBackend::Native).unwrap())
+                .join()
+                .unwrap();
+        });
+        let shard0_pushes = rts[0].shard.stats().pushes;
+        let shard1_pushes = rts[1].shard.stats().pushes;
+        assert_eq!(
+            shard0_pushes + shard1_pushes,
+            workers * per_worker,
+            "stolen drain lost messages"
+        );
+        assert!(shard0_pushes > 0, "thief never drained the victim shard");
+    }
+
+    #[test]
+    fn close_lanes_unblocks_a_sender_to_a_dead_shard() {
+        // The dead-server teardown path: receivers live in ShardRt (not
+        // in the server thread), so when a shard's thread dies without
+        // draining, the monitor force-closes its lanes — and a worker
+        // blocked in send() on the full queue must fail loudly instead
+        // of hanging the join forever.
+        let (topo, store, problem) = setup(4, 1, 1);
+        let transport = make_transport(TransportKind::Mpsc, 1, 1, 2, 1); // tiny queue
+        let rts: Vec<ShardRt> = vec![ShardRt::new(
+            ServerShard::new(0, &topo, store, problem, 2.0, 0.1),
+            transport.as_ref(),
+        )];
+        std::thread::scope(|scope| {
+            let mut tx = transport.connect_worker(0);
+            let topo = &topo;
+            let h = scope.spawn(move || {
+                // Nobody drains shard 0: fill the queue, block, and
+                // count how many sends completed before the error.
+                let mut sent = 0usize;
+                loop {
+                    let j = topo.blocks_of_worker[0][sent % 4];
+                    if tx.send(0, push(0, j, sent)).is_err() {
+                        return sent;
+                    }
+                    sent += 1;
+                }
+            });
+            std::thread::sleep(Duration::from_millis(50)); // let it block
+            rts[0].close_lanes();
+            let sent = h.join().unwrap();
+            assert!(sent >= 2, "sender errored before filling the queue: {sent}");
+        });
+        // The closed lane reads as terminal to any drain loop.
+        run_server(&rts, 0, DrainKind::Owned, &ProxBackend::Native).unwrap();
+        assert_eq!(rts[0].shard.stats().pushes, 0);
+    }
+
+    #[test]
+    fn owned_thread_exits_without_touching_other_shards() {
+        // Under `owned`, a thread returns once ITS lanes are done even
+        // if another shard still has queued messages.
+        let (topo, store, problem) = setup(4, 2, 2);
+        let transport = make_transport(TransportKind::SpscRing, 2, 2, 8, 1);
+        let rts: Vec<ShardRt> = (0..2)
+            .map(|sid| {
+                let shard = ServerShard::new(sid, &topo, store.clone(), problem, 2.0, 0.1);
+                ShardRt::new(shard, transport.as_ref())
+            })
+            .collect();
+        let mut tx = transport.connect_worker(0);
+        // Queue traffic only for shard 1's blocks.
+        let j = topo.blocks_of_server[1][0];
+        tx.send(1, push(0, j, 0)).unwrap();
+        tx.flush().unwrap();
+        drop(tx);
+        drop(transport.connect_worker(1));
+        transport.shutdown();
+        run_server(&rts, 0, DrainKind::Owned, &ProxBackend::Native).unwrap();
+        assert_eq!(rts[0].shard.stats().pushes, 0);
+        // Shard 1's message is still queued, untouched by thread 0.
+        run_server(&rts, 1, DrainKind::Owned, &ProxBackend::Native).unwrap();
+        assert_eq!(rts[1].shard.stats().pushes, 1);
+    }
+}

@@ -41,6 +41,8 @@ use super::block_store::BlockStore;
 use super::compute::make_compute;
 use super::delay::DelayPolicy;
 use super::events::ObjSample;
+use super::placement::make_placement;
+use super::sched::{run_server, ShardRt};
 use super::server::{ProxBackend, ServerShard, ServerStats};
 use super::topology::Topology;
 use super::transport::{make_transport, push_inflight, Transport};
@@ -352,6 +354,7 @@ impl<'a> SessionBuilder<'a> {
                         cfg.n_workers,
                         cfg.n_servers,
                         push_inflight(cfg.n_workers),
+                        cfg.batch,
                     )
                 });
                 run_threaded(cfg, ds, shards, transport, &mut self.observers)?
@@ -432,7 +435,8 @@ fn run_threaded<'o>(
     // per-iteration progress p-independent (DESIGN.md "objective
     // scaling").
     let weight = 1.0 / ds.samples() as f32;
-    let topo = Topology::build(shards, cfg.n_blocks, cfg.n_servers);
+    let placement = make_placement(cfg.placement);
+    let topo = Topology::build_with(shards, cfg.n_blocks, cfg.n_servers, placement.as_ref());
     let store = Arc::new(BlockStore::new(cfg.n_blocks, cfg.block_size));
     let policy =
         DelayPolicy { net_mean_ms: cfg.net_delay_mean_ms, pull_hold: cfg.pull_hold.max(1) };
@@ -450,11 +454,14 @@ fn run_threaded<'o>(
     );
     info!(
         "session",
-        "theorem1: min_alpha={:.3e} min_beta={:.3e} feasible={} (strict bound; paper runs gamma=0.01 anyway); transport={}",
+        "theorem1: min_alpha={:.3e} min_beta={:.3e} feasible={} (strict bound; paper runs gamma=0.01 anyway); transport={} placement={} drain={} batch={}",
         t1.min_alpha,
         t1.min_beta,
         t1.feasible,
-        transport.name()
+        transport.name(),
+        cfg.placement.as_str(),
+        cfg.drain.as_str(),
+        cfg.batch
     );
 
     let manifest = match cfg.backend {
@@ -464,16 +471,30 @@ fn run_threaded<'o>(
 
     // The push-buffer pool never needs more buffers than can be in
     // flight at once under the global in-flight budget, plus slack for
-    // recycle-channel latency.  (A transport whose own bound is larger
-    // just sees pool backpressure a little earlier — same contract.)
-    let pool_cap = push_inflight(cfg.n_workers) + 4;
+    // recycle-channel latency, plus whatever the sender may hold in
+    // un-flushed per-server batches (a pool smaller than the batch
+    // residue could deadlock: every buffer parked in a pending batch
+    // that only a further acquire-and-send would flush).  (A transport
+    // whose own bound is larger just sees pool backpressure a little
+    // earlier — same contract.)
+    let pool_cap =
+        push_inflight(cfg.n_workers) + 4 + cfg.n_servers * cfg.batch.saturating_sub(1);
 
     let progress: Vec<AtomicUsize> = (0..cfg.n_workers).map(|_| AtomicUsize::new(0)).collect();
     let gate = MonitorGate::new();
     let worker_results: Mutex<Vec<Option<(WorkerStats, Vec<f32>, Vec<f32>)>>> =
         Mutex::new((0..cfg.n_workers).map(|_| None).collect());
-    let server_results: Mutex<Vec<Option<ServerStats>>> =
-        Mutex::new((0..cfg.n_servers).map(|_| None).collect());
+
+    // Server shard state + claimable lanes, built up front: with
+    // `drain=steal` any server thread may service any shard, so the
+    // shards are shared (`sched.rs` documents the ownership handoff).
+    let shard_rts: Vec<ShardRt> = (0..cfg.n_servers)
+        .map(|sid| {
+            let shard =
+                ServerShard::new(sid, &topo, store.clone(), problem, cfg.rho, cfg.gamma);
+            ShardRt::new(shard, transport.as_ref())
+        })
+        .collect();
 
     let start = Instant::now();
     let mut sampler = ObjectiveSampler::default();
@@ -481,13 +502,10 @@ fn run_threaded<'o>(
     std::thread::scope(|scope| -> Result<()> {
         let mut server_handles = Vec::with_capacity(cfg.n_servers);
         let mut worker_handles = Vec::with_capacity(cfg.n_workers);
-        // -- server shards -------------------------------------------------
+        // -- server threads ------------------------------------------------
         for sid in 0..cfg.n_servers {
-            let rx = transport.connect_server(sid);
-            let topo = &topo;
-            let store = store.clone();
             let manifest = manifest.as_ref();
-            let server_results = &server_results;
+            let shard_rts = &shard_rts;
             server_handles.push(scope.spawn(move || {
                 let prox = match manifest {
                     None => ProxBackend::Native,
@@ -499,9 +517,10 @@ fn run_threaded<'o>(
                         }
                     },
                 };
-                let shard = ServerShard::new(sid, topo, store, problem, cfg.rho, cfg.gamma);
-                let stats = shard.run(rx, prox).expect("server loop failed");
-                server_results.lock().unwrap()[sid] = Some(stats);
+                // A failing server loop panics the thread: the monitor's
+                // liveness check tears the run down and the scope join
+                // re-raises, so a dead shard stays a hard error.
+                run_server(shard_rts, sid, cfg.drain, &prox).expect("server loop failed");
             }));
         }
 
@@ -588,6 +607,17 @@ fn run_threaded<'o>(
                     h.is_finished() && progress[i].load(Ordering::Acquire) < cfg.epochs
                 });
             if thread_died {
+                // A dead server thread can no longer drop its receivers
+                // (they live in shard_rts, outliving the thread): force-
+                // close its lanes so workers blocked in send() fail
+                // loudly instead of hanging the scope join, and so
+                // steal-mode peers stop waiting on lanes that are never
+                // coming back.
+                for (sid, h) in server_handles.iter().enumerate() {
+                    if h.is_finished() {
+                        shard_rts[sid].close_lanes();
+                    }
+                }
                 break;
             }
             gate.park_until(next_epoch.min(cfg.epochs));
@@ -613,12 +643,11 @@ fn run_threaded<'o>(
         xs.push(x);
         ys.push(y);
     }
-    // A dead server shard is a hard error, exactly like the worker path
-    // (stats silently defaulting to zero would corrupt push accounting).
-    let mut server_stats = Vec::with_capacity(cfg.n_servers);
-    for (sid, s) in server_results.into_inner().unwrap().into_iter().enumerate() {
-        server_stats.push(s.with_context(|| format!("server shard {sid} did not report"))?);
-    }
+    // Per-shard stats live in the shared shard state (any thread may
+    // have applied them under `drain=steal`); a dead server thread is
+    // still a hard error — its panic re-raised at the scope join above.
+    let server_stats: Vec<ServerStats> =
+        shard_rts.iter().map(|rt| rt.shard.stats()).collect();
     let stationarity = stationarity_residual(shards, &problem, cfg.rho, &xs, &ys, &z_final);
     let (consensus_max, _) = consensus_gap(shards, &xs, &z_final);
 

@@ -2,11 +2,16 @@
 //! placement.
 //!
 //! 𝒩(i) = blocks worker i touches (from its shard's active set);
-//! 𝒩(j) = workers touching block j.  Blocks are placed on server shards
-//! round-robin, which balances both block count and — because the
-//! synthetic workload's hot shared blocks have low indices — spreads the
-//! hot blocks across shards like a production PS hash placement would.
+//! 𝒩(j) = workers touching block j.  The block→shard assignment is
+//! delegated to a [`Placement`] policy (`coordinator/placement.rs`):
+//! the default [`Topology::build`] uses `Placement::contiguous` — equal
+//! contiguous block-id ranges per shard, which balances block *count*
+//! but, because the synthetic workload's hot shared blocks have low
+//! indices, concentrates the Zipf head on shard 0.  `hash` spreads ids
+//! like a production PS key hash; `degree` packs by |𝒩(j)| so the hot
+//! head lands on distinct shards.  Use [`Topology::build_with`] to pick.
 
+use super::placement::{ContiguousPlacement, Placement};
 use crate::data::WorkerShard;
 
 #[derive(Clone, Debug)]
@@ -26,17 +31,23 @@ pub struct Topology {
 }
 
 impl Topology {
+    /// Build with the default contiguous placement.
     pub fn build(shards: &[WorkerShard], n_blocks: usize, n_servers: usize) -> Self {
+        Self::build_with(shards, n_blocks, n_servers, &ContiguousPlacement)
+    }
+
+    /// Build with an explicit block→shard [`Placement`] policy.
+    pub fn build_with(
+        shards: &[WorkerShard],
+        n_blocks: usize,
+        n_servers: usize,
+        placement: &dyn Placement,
+    ) -> Self {
         assert!(!shards.is_empty());
         let block_size = shards[0].block_size;
         let n_workers = shards.len();
 
-        let server_of_block: Vec<usize> = (0..n_blocks).map(|j| j % n_servers).collect();
-        let mut blocks_of_server = vec![Vec::new(); n_servers];
-        for (j, &s) in server_of_block.iter().enumerate() {
-            blocks_of_server[s].push(j);
-        }
-
+        // Adjacency first: placement policies may consult |𝒩(j)|.
         let mut workers_of_block = vec![Vec::new(); n_blocks];
         let mut blocks_of_worker = Vec::with_capacity(n_workers);
         for shard in shards {
@@ -45,6 +56,20 @@ impl Topology {
                 workers_of_block[j].push(shard.worker_id);
             }
             blocks_of_worker.push(shard.active_blocks.clone());
+        }
+        let degree: Vec<usize> = workers_of_block.iter().map(Vec::len).collect();
+
+        let server_of_block = placement.place(n_blocks, n_servers, &degree);
+        assert_eq!(
+            server_of_block.len(),
+            n_blocks,
+            "placement {:?} returned a partial map",
+            placement.name()
+        );
+        let mut blocks_of_server = vec![Vec::new(); n_servers];
+        for (j, &s) in server_of_block.iter().enumerate() {
+            assert!(s < n_servers, "placement {:?} placed block {j} on shard {s}", placement.name());
+            blocks_of_server[s].push(j);
         }
 
         Topology {
@@ -78,6 +103,7 @@ impl Topology {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::placement::{DegreePlacement, HashPlacement};
     use crate::data::{gen_partitioned, BlockGeometry, SynthSpec};
 
     fn shards() -> Vec<WorkerShard> {
@@ -93,17 +119,56 @@ mod tests {
     }
 
     #[test]
-    fn round_robin_placement_partitions_blocks() {
+    fn default_contiguous_placement_partitions_blocks() {
         let t = Topology::build(&shards(), 8, 3);
         let mut all: Vec<usize> = t.blocks_of_server.iter().flatten().copied().collect();
         all.sort_unstable();
         assert_eq!(all, (0..8).collect::<Vec<_>>());
-        assert_eq!(t.server_of_block[5], 5 % 3);
+        // Contiguous ranges: block 5 of 8 over 3 shards -> shard 5*3/8 = 1.
+        assert_eq!(t.server_of_block[5], 1);
+        assert!(t.server_of_block.windows(2).all(|w| w[0] <= w[1]), "not contiguous");
         for (s, blocks) in t.blocks_of_server.iter().enumerate() {
             for &j in blocks {
                 assert_eq!(t.server_of_block[j], s);
             }
         }
+    }
+
+    #[test]
+    fn every_placement_owns_each_block_exactly_once() {
+        for placement in
+            [&ContiguousPlacement as &dyn Placement, &HashPlacement, &DegreePlacement]
+        {
+            let t = Topology::build_with(&shards(), 8, 3, placement);
+            let mut all: Vec<usize> = t.blocks_of_server.iter().flatten().copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..8).collect::<Vec<_>>(), "{}", placement.name());
+            for (s, blocks) in t.blocks_of_server.iter().enumerate() {
+                for &j in blocks {
+                    assert_eq!(t.server_of_block[j], s, "{}", placement.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degree_placement_splits_hot_blocks_across_shards() {
+        // shared_blocks=1 -> block 0 is touched by all 4 workers; under
+        // degree placement the busiest shard must not also hoard the
+        // rest of the load.
+        let t = Topology::build_with(&shards(), 8, 2, &DegreePlacement);
+        let deg: Vec<usize> = (0..8).map(|j| t.degree_of_block(j)).collect();
+        let hot_shard = t.server_of_block[0];
+        let load = |s: usize| -> usize {
+            t.blocks_of_server[s].iter().map(|&j| deg[j]).sum()
+        };
+        let other = 1 - hot_shard;
+        assert!(
+            load(hot_shard) <= load(other) + deg[0],
+            "degree placement left the hot shard overloaded: {} vs {}",
+            load(hot_shard),
+            load(other)
+        );
     }
 
     #[test]

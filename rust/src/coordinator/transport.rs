@@ -15,31 +15,53 @@
 //!   single-consumer ring per (worker, server) pair with atomic
 //!   head/tail indices.  No shared queue lock exists anywhere: a
 //!   worker's enqueue touches only its own ring, and a server shard
-//!   round-robin-drains its workers' rings.  This realizes the
-//!   ROADMAP's "per-worker SPSC rings" item.
+//!   drains its workers' rings.  Each ring **slot holds a whole batch**
+//!   of up to `batch` messages (the `--set batch=…` knob): the sender
+//!   buffers per-server messages locally and swaps the full batch into
+//!   one slot, amortizing the per-slot atomics when workers own many
+//!   blocks.  The swap protocol is allocation-free in steady state —
+//!   batch `Vec`s circulate between producer, slots, and consumer, so
+//!   no shell is ever allocated after startup.
 //!
 //! ## Contract (what the conformance tests assert for every impl)
 //!
 //! * **Per-worker FIFO**: pushes from one worker to one server are
-//!   received in send order.  (Cross-worker ordering is unspecified —
-//!   Algorithm 1 only needs per-edge order for its staleness
-//!   accounting.)
+//!   received in send order — batching may *delay* messages (until the
+//!   batch fills, the sender flushes, or the sender drops) but never
+//!   reorders them.  (Cross-worker ordering is unspecified — Algorithm
+//!   1 only needs per-edge order for its staleness accounting.)
 //! * **Bounded in-flight**: at most [`Transport::inflight_bound`]
 //!   pushes from one worker to one server may be un-received before
 //!   `send` blocks.  This is the ps-lite-style backpressure the
 //!   convergence analysis leans on: without it a fast worker can run
 //!   its whole epoch budget against a starved queue, i.e. unbounded
 //!   effective delay, violating Assumption 3.
+//! * **Nothing left behind**: [`PushSender::flush`] delivers anything
+//!   batch-buffered; dropping a sender flushes best-effort.  Callers
+//!   that need the delivery *accounted* (the worker loop does, before
+//!   publishing its final epoch) call `flush` explicitly.
 //! * **Shutdown drains**: after [`Transport::shutdown`] (called once
 //!   all workers finished and dropped their senders), each receiver
-//!   yields every message still queued and only then returns `None`.
+//!   yields every message still queued and only then reports end of
+//!   stream.
 //! * **Endpoints are single-take**: `connect_worker(w)` and
-//!   `connect_server(s)` may each be called at most once per index
-//!   (the ring transport's soundness depends on the single-producer /
-//!   single-consumer discipline; both impls enforce it).
+//!   `connect_server(s)` / `connect_server_lanes(s)` may each be called
+//!   at most once per index (the ring transport's soundness depends on
+//!   the single-producer / single-consumer discipline; both impls
+//!   enforce it).
+//!
+//! ## Lanes (work-stealing units)
+//!
+//! [`Transport::connect_server_lanes`] exposes a server's inbound
+//! stream as one or more *independently drainable* lanes for
+//! `coordinator/sched.rs`: the ring transport returns one lane per
+//! worker (its natural SPSC granularity), the mpsc transport one lane
+//! total.  A lane preserves per-worker FIFO internally, so a scheduler
+//! that drains whole lanes under an exclusive claim — never single
+//! messages — preserves it globally.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -55,6 +77,46 @@ pub fn push_inflight(n_workers: usize) -> usize {
     (2 * n_workers).max(8)
 }
 
+/// Three-tier idle backoff for the polling loops (receivers and the
+/// `sched.rs` drain loop): spin briefly, then yield, then sleep 50 µs —
+/// the quantum that bounds how stale a shutdown/teardown signal can go
+/// unnoticed.  One place to tune instead of three hand-rolled ladders.
+pub(crate) struct Backoff {
+    idle: u32,
+}
+
+impl Backoff {
+    pub(crate) fn new() -> Self {
+        Backoff { idle: 0 }
+    }
+
+    pub(crate) fn reset(&mut self) {
+        self.idle = 0;
+    }
+
+    pub(crate) fn snooze(&mut self) {
+        self.idle += 1;
+        if self.idle < 16 {
+            std::hint::spin_loop();
+        } else if self.idle < 256 {
+            std::thread::yield_now();
+        } else {
+            std::thread::sleep(Duration::from_micros(50));
+        }
+    }
+}
+
+/// Result of a non-blocking receive attempt.
+#[derive(Debug)]
+pub enum TryRecv {
+    /// A message was dequeued.
+    Msg(PushMsg),
+    /// Nothing queued right now, but producers may still send.
+    Empty,
+    /// Shut down (or disconnected) and fully drained — terminal.
+    Done,
+}
+
 /// A queueing discipline for worker→server pushes.  Shared by reference
 /// across the run's thread scope; endpoints move into their threads.
 pub trait Transport: Send + Sync {
@@ -64,15 +126,28 @@ pub trait Transport: Send + Sync {
     /// The sending endpoint for `worker`.  At most one call per worker.
     fn connect_worker(&self, worker: usize) -> Box<dyn PushSender>;
 
-    /// The receiving endpoint for `server`.  At most one call per server.
+    /// The receiving endpoint for `server`.  At most one call per server
+    /// (shared with [`Transport::connect_server_lanes`]).
     fn connect_server(&self, server: usize) -> Box<dyn PushReceiver>;
 
-    /// Max pushes one worker can have in flight to one server before
-    /// [`PushSender::send`] blocks (the backpressure bound).
+    /// The same stream as [`Transport::connect_server`], but split into
+    /// independently drainable lanes (the work-stealing granularity of
+    /// `coordinator/sched.rs`).  Default: one lane, the blocking
+    /// endpoint.  Takes the same single-take slot as `connect_server`.
+    fn connect_server_lanes(&self, server: usize) -> Vec<Box<dyn PushReceiver>> {
+        vec![self.connect_server(server)]
+    }
+
+    /// How many consecutive [`PushSender::send`]s to one server are
+    /// guaranteed to complete, starting from an empty queue, before a
+    /// send may block — the backpressure bound.  (Batching shifts
+    /// *where* messages wait — sender buffer vs queue — but each impl
+    /// reports this same completed-sends-before-blocking quantity, and
+    /// the conformance suite asserts it exactly.)
     fn inflight_bound(&self) -> usize;
 
     /// Signal end-of-stream.  Receivers drain what is queued and then
-    /// return `None`.  Call only after every worker endpoint is dropped
+    /// report done.  Call only after every worker endpoint is dropped
     /// (the session does this once all workers joined).
     fn shutdown(&self);
 }
@@ -80,11 +155,22 @@ pub trait Transport: Send + Sync {
 /// Worker-side endpoint: blocking bounded enqueue to any server shard.
 pub trait PushSender: Send {
     fn send(&mut self, server: usize, msg: PushMsg) -> Result<()>;
+
+    /// Deliver anything locally batch-buffered.  No-op for unbatched
+    /// senders.  Dropping a sender flushes best-effort; call this when
+    /// delivery must be *confirmed* (e.g. before reporting completion).
+    fn flush(&mut self) -> Result<()> {
+        Ok(())
+    }
 }
 
-/// Server-side endpoint: blocking dequeue; `None` = shut down and drained.
+/// Server-side endpoint: blocking or polling dequeue.
 pub trait PushReceiver: Send {
+    /// Blocking dequeue; `None` = shut down and drained.
     fn recv(&mut self) -> Option<PushMsg>;
+
+    /// Non-blocking dequeue (work-stealing drain loops poll this).
+    fn try_recv(&mut self) -> TryRecv;
 }
 
 /// Construct the configured transport for a run.
@@ -93,14 +179,18 @@ pub fn make_transport(
     n_workers: usize,
     n_servers: usize,
     inflight: usize,
+    batch: usize,
 ) -> Box<dyn Transport> {
     match kind {
-        TransportKind::Mpsc => Box::new(MpscTransport::new(n_workers, n_servers, inflight)),
+        TransportKind::Mpsc => {
+            Box::new(MpscTransport::new(n_workers, n_servers, inflight, batch))
+        }
         TransportKind::SpscRing => {
             // Match the mpsc per-server budget: each of the worker's
-            // rings holds its share of the channel capacity.
+            // rings holds its share of the channel capacity (in slots;
+            // a slot carries up to `batch` messages).
             let ring_cap = inflight.div_ceil(n_workers.max(1)).max(2);
-            Box::new(SpscRingTransport::new(n_workers, n_servers, ring_cap))
+            Box::new(SpscRingTransport::new(n_workers, n_servers, ring_cap, batch))
         }
     }
 }
@@ -111,7 +201,10 @@ pub fn make_transport(
 
 /// One bounded `sync_channel` per server shard (the original driver
 /// wiring, extracted).  All workers share a server's channel, so every
-/// enqueue takes that channel's internal lock.
+/// enqueue takes that channel's internal lock.  `batch > 1` wraps each
+/// sender in a [`BatchingSender`], which buffers then forwards — same
+/// delivery semantics as the ring's batched slots, without the slot
+/// amortization (the channel is the bottleneck either way).
 pub struct MpscTransport {
     /// Root senders; dropped on `shutdown` so receivers observe
     /// disconnect once worker clones are gone too.
@@ -119,10 +212,11 @@ pub struct MpscTransport {
     rxs: Mutex<Vec<Option<Receiver<PushMsg>>>>,
     worker_taken: Mutex<Vec<bool>>,
     inflight: usize,
+    batch: usize,
 }
 
 impl MpscTransport {
-    pub fn new(n_workers: usize, n_servers: usize, inflight: usize) -> Self {
+    pub fn new(n_workers: usize, n_servers: usize, inflight: usize, batch: usize) -> Self {
         let mut txs = Vec::with_capacity(n_servers);
         let mut rxs = Vec::with_capacity(n_servers);
         for _ in 0..n_servers {
@@ -135,6 +229,7 @@ impl MpscTransport {
             rxs: Mutex::new(rxs),
             worker_taken: Mutex::new(vec![false; n_workers]),
             inflight: inflight.max(1),
+            batch: batch.max(1),
         }
     }
 }
@@ -155,7 +250,13 @@ impl Transport for MpscTransport {
             .iter()
             .map(|t| t.as_ref().expect("transport already shut down").clone())
             .collect();
-        Box::new(MpscSender { txs })
+        let n_servers = txs.len();
+        let inner = MpscSender { txs };
+        if self.batch > 1 {
+            Box::new(BatchingSender::new(inner, n_servers, self.batch))
+        } else {
+            Box::new(inner)
+        }
     }
 
     fn connect_server(&self, server: usize) -> Box<dyn PushReceiver> {
@@ -166,7 +267,13 @@ impl Transport for MpscTransport {
     }
 
     fn inflight_bound(&self) -> usize {
-        self.inflight
+        // Completed sends before one can block: buffering absorbs sends
+        // for free until a flush must push the (inflight+1)-th message
+        // into the full channel.  Flushes fire at multiples of `batch`,
+        // so that flush is triggered by send number
+        // ceil((inflight+1)/batch)·batch, and every send before it
+        // completed (batch=1 degenerates to plain `inflight`).
+        (self.inflight + 1).div_ceil(self.batch) * self.batch - 1
     }
 
     fn shutdown(&self) {
@@ -196,67 +303,154 @@ impl PushReceiver for MpscReceiver {
         // AND the buffer is empty: exactly the drain-then-exit contract.
         self.rx.recv().ok()
     }
+
+    fn try_recv(&mut self) -> TryRecv {
+        match self.rx.try_recv() {
+            Ok(msg) => TryRecv::Msg(msg),
+            Err(TryRecvError::Empty) => TryRecv::Empty,
+            Err(TryRecvError::Disconnected) => TryRecv::Done,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BatchingSender — sender-side batching for transports without native
+// batch slots (mpsc).
+// ---------------------------------------------------------------------------
+
+/// Buffers up to `batch` messages per server, then forwards them in
+/// order through the inner sender.  Per-worker FIFO is preserved (each
+/// server's buffer flushes front to back); a failed flush destroys the
+/// remaining buffered messages, which recycle their pooled buffers via
+/// `PushMsg::drop`.
+struct BatchingSender<S: PushSender> {
+    inner: S,
+    batch: usize,
+    pending: Vec<Vec<PushMsg>>,
+}
+
+impl<S: PushSender> BatchingSender<S> {
+    fn new(inner: S, n_servers: usize, batch: usize) -> Self {
+        BatchingSender {
+            inner,
+            batch: batch.max(1),
+            pending: (0..n_servers).map(|_| Vec::with_capacity(batch)).collect(),
+        }
+    }
+
+    fn flush_server(&mut self, server: usize) -> Result<()> {
+        for msg in self.pending[server].drain(..) {
+            self.inner.send(server, msg)?;
+        }
+        Ok(())
+    }
+}
+
+impl<S: PushSender> PushSender for BatchingSender<S> {
+    fn send(&mut self, server: usize, msg: PushMsg) -> Result<()> {
+        self.pending[server].push(msg);
+        if self.pending[server].len() >= self.batch {
+            self.flush_server(server)
+        } else {
+            Ok(())
+        }
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        for s in 0..self.pending.len() {
+            self.flush_server(s)?;
+        }
+        self.inner.flush()
+    }
+}
+
+impl<S: PushSender> Drop for BatchingSender<S> {
+    fn drop(&mut self) {
+        // Best-effort: a hung-up server just destroys the remainder
+        // (each destroyed message recycles its pooled buffer).
+        let _ = self.flush();
+    }
 }
 
 // ---------------------------------------------------------------------------
 // SpscRingTransport
 // ---------------------------------------------------------------------------
 
-/// One single-producer single-consumer slot ring.
+/// One single-producer single-consumer slot ring carrying message
+/// *batches*.
 ///
 /// `head`/`tail` are monotonically increasing operation counters
-/// (message `n` lives in slot `n % cap`); `tail - head` is the queue
+/// (batch `n` lives in slot `n % cap`); `tail - head` is the queue
 /// length, full at `cap`.  The producer owns `tail`, the consumer owns
 /// `head`; each reads the other's index with `Acquire` and publishes
 /// its own with `Release`, so slot hand-off is properly ordered.
+/// (With work-stealing the consumer *role* migrates between server
+/// threads, but `sched.rs`'s lane claim serializes it, and the claim's
+/// release/acquire pair carries the `head` updates across threads.)
 ///
-/// The slot cells are `Mutex<Option<PushMsg>>`, but the SPSC
-/// discipline makes every lock acquisition **uncontended by
-/// construction**: the producer only touches slot `tail % cap` after
-/// observing `tail - head < cap` (the consumer is done with it), and
-/// the consumer only touches slot `head % cap` after observing
-/// `head < tail` (the producer has published it).  An uncontended lock
-/// is a single CAS each way — the point is that, unlike the mpsc
-/// channel, no cell is ever shared between two workers or two shards,
-/// so nothing on the push path serializes across threads.  (Kept over
-/// an `UnsafeCell` ring to preserve the crate's no-`unsafe` property;
-/// see DESIGN.md §2.1 for the same choice in the seqlock store.)
+/// Each slot is a `Mutex<Vec<PushMsg>>` that is **swapped whole**:
+/// the producer exchanges its full pending batch for the slot's spent
+/// (empty) `Vec`, the consumer exchanges an empty scratch `Vec` for the
+/// slot's full one.  `Vec` shells therefore circulate — producer →
+/// slot → consumer → slot → producer — and the steady state allocates
+/// nothing.  The SPSC discipline makes every lock acquisition
+/// **uncontended by construction**: the producer only touches slot
+/// `tail % cap` after observing `tail - head < cap` (the consumer is
+/// done with it), and the consumer only touches slot `head % cap`
+/// after observing `head < tail` (the producer has published it).  An
+/// uncontended lock is a single CAS each way — the point is that,
+/// unlike the mpsc channel, no cell is ever shared between two workers
+/// or two shards, so nothing on the push path serializes across
+/// threads.  (Kept over an `UnsafeCell` ring to preserve the crate's
+/// no-`unsafe` property; see DESIGN.md §2.1 for the same choice in the
+/// seqlock store.)
 struct Ring {
     head: AtomicUsize,
     tail: AtomicUsize,
-    slots: Vec<Mutex<Option<PushMsg>>>,
+    slots: Vec<Mutex<Vec<PushMsg>>>,
 }
 
 impl Ring {
-    fn new(cap: usize) -> Self {
+    fn new(cap: usize, batch: usize) -> Self {
         Ring {
             head: AtomicUsize::new(0),
             tail: AtomicUsize::new(0),
-            slots: (0..cap.max(1)).map(|_| Mutex::new(None)).collect(),
+            slots: (0..cap.max(1)).map(|_| Mutex::new(Vec::with_capacity(batch))).collect(),
         }
     }
 
-    /// Producer side; returns the message back if the ring is full.
-    fn try_push(&self, msg: PushMsg) -> std::result::Result<(), PushMsg> {
+    /// Producer side: swap the non-empty `batch` into the tail slot.
+    /// On success `batch` comes back as the slot's previous spent
+    /// (empty, capacity-preserving) `Vec`; on a full ring `batch` is
+    /// untouched and `false` is returned.
+    fn try_push(&self, batch: &mut Vec<PushMsg>) -> bool {
+        debug_assert!(!batch.is_empty());
         let tail = self.tail.load(Ordering::Relaxed); // producer-owned
         if tail - self.head.load(Ordering::Acquire) == self.slots.len() {
-            return Err(msg);
+            return false;
         }
-        *self.slots[tail % self.slots.len()].lock().unwrap() = Some(msg);
+        let mut slot = self.slots[tail % self.slots.len()].lock().unwrap();
+        debug_assert!(slot.is_empty(), "unconsumed slot overwritten");
+        std::mem::swap(&mut *slot, batch);
+        drop(slot);
         self.tail.store(tail + 1, Ordering::Release);
-        Ok(())
+        true
     }
 
-    /// Consumer side; `None` = empty.
-    fn try_pop(&self) -> Option<PushMsg> {
-        let head = self.head.load(Ordering::Relaxed); // consumer-owned
+    /// Consumer side: swap the **empty** `into` with the head slot's
+    /// batch.  `false` = ring empty.
+    fn try_pop(&self, into: &mut Vec<PushMsg>) -> bool {
+        debug_assert!(into.is_empty());
+        let head = self.head.load(Ordering::Relaxed); // claim-serialized
         if self.tail.load(Ordering::Acquire) == head {
-            return None;
+            return false;
         }
-        let msg = self.slots[head % self.slots.len()].lock().unwrap().take();
+        let mut slot = self.slots[head % self.slots.len()].lock().unwrap();
+        std::mem::swap(&mut *slot, into);
+        drop(slot);
         self.head.store(head + 1, Ordering::Release);
-        debug_assert!(msg.is_some(), "published slot was empty");
-        msg
+        debug_assert!(!into.is_empty(), "published slot was empty");
+        true
     }
 }
 
@@ -264,26 +458,48 @@ struct RingShared {
     /// `rings[worker][server]`.
     rings: Vec<Vec<Ring>>,
     shutdown: AtomicBool,
-    /// Per-server "receiver is gone" flags: set when a [`RingReceiver`]
-    /// drops (normal exit after drain, or a server thread unwinding on
+    /// Per-server "receiver is gone" flags: set when a receiver drops
+    /// (normal exit after drain, or a server thread unwinding on
     /// error), so senders fail loudly like mpsc's disconnect instead of
     /// spinning on a full ring nobody will ever drain.
     closed: Vec<AtomicBool>,
 }
 
-/// Per-(worker, server) SPSC rings; servers round-robin-drain their
-/// workers' rings.  No queue lock is shared between any two threads.
+impl RingShared {
+    /// Close server `s` for producers and destroy anything still queued
+    /// in `worker`'s ring to it — each destroyed message sends its
+    /// pooled buffer home (`PushMsg::drop`), so a dead server cannot
+    /// strand a worker in `PushPool::acquire`.
+    fn close_and_drain(&self, worker: usize, server: usize) {
+        self.closed[server].store(true, Ordering::Release);
+        let mut scratch = Vec::new();
+        while self.rings[worker][server].try_pop(&mut scratch) {
+            scratch.clear(); // drop the batch; buffers recycle
+        }
+    }
+}
+
+/// Per-(worker, server) SPSC rings with batched slots; server shards
+/// drain their workers' rings (round-robin via [`connect_server`], or
+/// as independent lanes via [`connect_server_lanes`] for the
+/// work-stealing scheduler).  No queue lock is shared between any two
+/// threads.
+///
+/// [`connect_server`]: Transport::connect_server
+/// [`connect_server_lanes`]: Transport::connect_server_lanes
 pub struct SpscRingTransport {
     shared: Arc<RingShared>,
     worker_taken: Mutex<Vec<bool>>,
     server_taken: Mutex<Vec<bool>>,
     ring_cap: usize,
+    batch: usize,
 }
 
 impl SpscRingTransport {
-    pub fn new(n_workers: usize, n_servers: usize, ring_cap: usize) -> Self {
+    pub fn new(n_workers: usize, n_servers: usize, ring_cap: usize, batch: usize) -> Self {
+        let batch = batch.max(1);
         let rings = (0..n_workers)
-            .map(|_| (0..n_servers).map(|_| Ring::new(ring_cap)).collect())
+            .map(|_| (0..n_servers).map(|_| Ring::new(ring_cap, batch)).collect())
             .collect();
         let closed = (0..n_servers).map(|_| AtomicBool::new(false)).collect();
         SpscRingTransport {
@@ -291,7 +507,14 @@ impl SpscRingTransport {
             worker_taken: Mutex::new(vec![false; n_workers]),
             server_taken: Mutex::new(vec![false; n_servers]),
             ring_cap: ring_cap.max(1),
+            batch,
         }
+    }
+
+    fn take_server_slot(&self, server: usize) {
+        let mut taken = self.server_taken.lock().unwrap();
+        assert!(!taken[server], "server {server} endpoint already taken (SPSC)");
+        taken[server] = true;
     }
 }
 
@@ -304,18 +527,44 @@ impl Transport for SpscRingTransport {
         let mut taken = self.worker_taken.lock().unwrap();
         assert!(!taken[worker], "worker {worker} endpoint already taken (SPSC)");
         taken[worker] = true;
-        Box::new(RingSender { shared: self.shared.clone(), worker })
+        let n_servers = self.shared.closed.len();
+        Box::new(RingSender {
+            shared: self.shared.clone(),
+            worker,
+            batch: self.batch,
+            pending: (0..n_servers).map(|_| Vec::with_capacity(self.batch)).collect(),
+        })
     }
 
     fn connect_server(&self, server: usize) -> Box<dyn PushReceiver> {
-        let mut taken = self.server_taken.lock().unwrap();
-        assert!(!taken[server], "server {server} endpoint already taken (SPSC)");
-        taken[server] = true;
-        Box::new(RingReceiver { shared: self.shared.clone(), server, cursor: 0 })
+        self.take_server_slot(server);
+        Box::new(RingReceiver {
+            shared: self.shared.clone(),
+            server,
+            cursor: 0,
+            ready: Vec::with_capacity(self.batch),
+        })
+    }
+
+    fn connect_server_lanes(&self, server: usize) -> Vec<Box<dyn PushReceiver>> {
+        self.take_server_slot(server);
+        (0..self.shared.rings.len())
+            .map(|worker| {
+                Box::new(SingleRingReceiver {
+                    shared: self.shared.clone(),
+                    worker,
+                    server,
+                    ready: Vec::with_capacity(self.batch),
+                }) as Box<dyn PushReceiver>
+            })
+            .collect()
     }
 
     fn inflight_bound(&self) -> usize {
-        self.ring_cap
+        // `ring_cap` full slots of `batch` messages, plus what the
+        // sender can hold un-flushed before the next send forces a
+        // (blocking) flush.
+        self.ring_cap * self.batch + (self.batch - 1)
     }
 
     fn shutdown(&self) {
@@ -326,96 +575,214 @@ impl Transport for SpscRingTransport {
 struct RingSender {
     shared: Arc<RingShared>,
     worker: usize,
+    batch: usize,
+    /// Per-server batch under construction (each keeps capacity
+    /// `batch`; swapped whole into a ring slot on flush).
+    pending: Vec<Vec<PushMsg>>,
 }
 
-impl PushSender for RingSender {
-    fn send(&mut self, server: usize, msg: PushMsg) -> Result<()> {
+impl RingSender {
+    /// Swap the pending batch for `server` into its ring, spinning under
+    /// backpressure.  On error the un-flushed messages stay in
+    /// `pending` and are destroyed (→ recycled) when the sender drops.
+    fn flush_server(&mut self, server: usize) -> Result<()> {
+        if self.pending[server].is_empty() {
+            return Ok(());
+        }
         let ring = &self.shared.rings[self.worker][server];
-        let mut msg = msg;
         let mut spins = 0u32;
         loop {
             // Disconnect detection, matching mpsc semantics: a dropped
-            // receiver fails the send (the rejected `msg` recycles its
-            // pooled buffer on drop).
+            // receiver fails the send (rejected messages recycle their
+            // pooled buffers on drop).
             anyhow::ensure!(
                 !self.shared.closed[server].load(Ordering::Acquire),
                 "server {server} hung up"
             );
-            match ring.try_push(msg) {
-                Ok(()) => return Ok(()),
-                Err(back) => {
-                    // Ring full: the bounded-in-flight backpressure.
-                    anyhow::ensure!(
-                        !self.shared.shutdown.load(Ordering::Relaxed),
-                        "transport shut down with pushes still in flight to server {server}"
-                    );
-                    msg = back;
-                    spins += 1;
-                    if spins < 64 {
-                        std::hint::spin_loop();
-                    } else {
-                        std::thread::yield_now();
-                    }
-                }
+            if ring.try_push(&mut self.pending[server]) {
+                return Ok(());
+            }
+            // Ring full: the bounded-in-flight backpressure.
+            anyhow::ensure!(
+                !self.shared.shutdown.load(Ordering::Relaxed),
+                "transport shut down with pushes still in flight to server {server}"
+            );
+            spins += 1;
+            if spins < 64 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
             }
         }
     }
 }
 
+impl PushSender for RingSender {
+    fn send(&mut self, server: usize, msg: PushMsg) -> Result<()> {
+        anyhow::ensure!(
+            !self.shared.closed[server].load(Ordering::Acquire),
+            "server {server} hung up"
+        );
+        self.pending[server].push(msg);
+        if self.pending[server].len() >= self.batch {
+            self.flush_server(server)
+        } else {
+            Ok(())
+        }
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        for s in 0..self.pending.len() {
+            self.flush_server(s)?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for RingSender {
+    fn drop(&mut self) {
+        // Best-effort flush so normal teardown loses nothing; on a
+        // closed lane / shutdown the remainder is destroyed and its
+        // buffers recycle via `PushMsg::drop`.
+        let _ = self.flush();
+    }
+}
+
+/// Round-robin receiver over all of a server's worker rings (the
+/// single-endpoint [`Transport::connect_server`] view).
 struct RingReceiver {
     shared: Arc<RingShared>,
     server: usize,
     /// Round-robin fairness cursor over worker rings.
     cursor: usize,
+    /// Current batch, **reversed** so `pop()` yields FIFO order; its
+    /// shell is swapped back into a slot on the next refill.
+    ready: Vec<PushMsg>,
+}
+
+impl RingReceiver {
+    /// Refill `ready` (must be empty) from the next non-empty ring.
+    fn poll_rings(&mut self) -> bool {
+        let n_workers = self.shared.rings.len();
+        for k in 0..n_workers {
+            let w = (self.cursor + k) % n_workers;
+            if self.shared.rings[w][self.server].try_pop(&mut self.ready) {
+                self.ready.reverse(); // pop() from the back = send order
+                self.cursor = (w + 1) % n_workers;
+                return true;
+            }
+        }
+        false
+    }
 }
 
 impl PushReceiver for RingReceiver {
     fn recv(&mut self) -> Option<PushMsg> {
-        let n_workers = self.shared.rings.len();
-        let mut idle = 0u32;
+        let mut backoff = Backoff::new();
         loop {
-            // Observe shutdown BEFORE the sweep: producers stop before
-            // `shutdown()` is called, so one clean sweep after seeing
-            // the flag proves the rings are drained.
+            if let Some(msg) = self.ready.pop() {
+                return Some(msg);
+            }
+            // Observe shutdown BEFORE the sweep: producers stop (and
+            // flush) before `shutdown()` is called, so one clean sweep
+            // after seeing the flag proves the rings are drained.
             let shutting_down = self.shared.shutdown.load(Ordering::Acquire);
-            for k in 0..n_workers {
-                let w = (self.cursor + k) % n_workers;
-                if let Some(msg) = self.shared.rings[w][self.server].try_pop() {
-                    self.cursor = (w + 1) % n_workers;
-                    return Some(msg);
-                }
+            if self.poll_rings() {
+                continue;
             }
             if shutting_down {
                 return None;
             }
             // Empty but live: back off gently (dedicated server thread).
-            idle += 1;
-            if idle < 16 {
-                std::hint::spin_loop();
-            } else if idle < 256 {
-                std::thread::yield_now();
-            } else {
-                std::thread::sleep(Duration::from_micros(50));
-            }
+            backoff.snooze();
+        }
+    }
+
+    fn try_recv(&mut self) -> TryRecv {
+        if let Some(msg) = self.ready.pop() {
+            return TryRecv::Msg(msg);
+        }
+        let shutting_down = self.shared.shutdown.load(Ordering::Acquire);
+        if self.poll_rings() {
+            return TryRecv::Msg(self.ready.pop().expect("refilled batch empty"));
+        }
+        if shutting_down {
+            TryRecv::Done
+        } else {
+            TryRecv::Empty
         }
     }
 }
 
 impl Drop for RingReceiver {
     fn drop(&mut self) {
-        // Close this server's lane first so producers stop feeding it,
-        // then destroy anything still queued — each dropped message
-        // sends its pooled buffer home (`PushMsg::drop`), so a server
-        // dying mid-queue cannot strand a worker in `PushPool::acquire`.
-        self.shared.closed[self.server].store(true, Ordering::Release);
+        // Close this server's lanes first so producers stop feeding
+        // them, then destroy anything still queued (buffers recycle).
         for w in 0..self.shared.rings.len() {
-            while self.shared.rings[w][self.server].try_pop().is_some() {}
+            self.shared.close_and_drain(w, self.server);
         }
     }
 }
 
+/// One (worker, server) ring as an independently drainable lane — what
+/// [`Transport::connect_server_lanes`] hands the work-stealing
+/// scheduler.  SPSC soundness holds as long as at most one thread
+/// drains it at a time; `sched.rs`'s CAS lane claim enforces that.
+struct SingleRingReceiver {
+    shared: Arc<RingShared>,
+    worker: usize,
+    server: usize,
+    /// Current batch, reversed so `pop()` yields FIFO order.
+    ready: Vec<PushMsg>,
+}
+
+impl SingleRingReceiver {
+    fn poll_ring(&mut self) -> bool {
+        if self.shared.rings[self.worker][self.server].try_pop(&mut self.ready) {
+            self.ready.reverse();
+            return true;
+        }
+        false
+    }
+}
+
+impl PushReceiver for SingleRingReceiver {
+    fn recv(&mut self) -> Option<PushMsg> {
+        let mut backoff = Backoff::new();
+        loop {
+            match self.try_recv() {
+                TryRecv::Msg(m) => return Some(m),
+                TryRecv::Done => return None,
+                TryRecv::Empty => backoff.snooze(),
+            }
+        }
+    }
+
+    fn try_recv(&mut self) -> TryRecv {
+        if let Some(msg) = self.ready.pop() {
+            return TryRecv::Msg(msg);
+        }
+        let shutting_down = self.shared.shutdown.load(Ordering::Acquire);
+        if self.poll_ring() {
+            return TryRecv::Msg(self.ready.pop().expect("refilled batch empty"));
+        }
+        if shutting_down {
+            TryRecv::Done
+        } else {
+            TryRecv::Empty
+        }
+    }
+}
+
+impl Drop for SingleRingReceiver {
+    fn drop(&mut self) {
+        self.shared.close_and_drain(self.worker, self.server);
+    }
+}
+
 // ---------------------------------------------------------------------------
-// Conformance suite — every Transport impl must pass all of these.
+// Conformance suite — every Transport impl must pass all of these,
+// batched and unbatched.
 // ---------------------------------------------------------------------------
 
 #[cfg(test)]
@@ -435,10 +802,16 @@ mod tests {
         }
     }
 
-    /// Both transports, same shape, for every conformance check.
+    /// Both transports, batched and unbatched, same shape, for every
+    /// conformance check.  batch=2 covers the capacity-misaligned case
+    /// (8+1 not divisible by 2), batch=3 the aligned one.
     fn each_transport(n_workers: usize, n_servers: usize, f: impl Fn(Box<dyn Transport>)) {
-        f(Box::new(MpscTransport::new(n_workers, n_servers, 8)));
-        f(Box::new(SpscRingTransport::new(n_workers, n_servers, 8)));
+        f(Box::new(MpscTransport::new(n_workers, n_servers, 8, 1)));
+        f(Box::new(MpscTransport::new(n_workers, n_servers, 8, 2)));
+        f(Box::new(MpscTransport::new(n_workers, n_servers, 8, 3)));
+        f(Box::new(SpscRingTransport::new(n_workers, n_servers, 8, 1)));
+        f(Box::new(SpscRingTransport::new(n_workers, n_servers, 8, 2)));
+        f(Box::new(SpscRingTransport::new(n_workers, n_servers, 8, 3)));
     }
 
     #[test]
@@ -452,6 +825,7 @@ mod tests {
                     for i in 0..total {
                         tx.send(0, msg(0, i)).unwrap();
                     }
+                    // tx drops here: any partial batch flushes.
                 }
             });
             for i in 0..100 {
@@ -535,7 +909,7 @@ mod tests {
             for i in 0..5 {
                 tx.send(1, msg(0, i)).unwrap();
             }
-            drop(tx); // worker done
+            drop(tx); // worker done; partial batch flushes
             t.shutdown();
             // Everything enqueued before shutdown must still come out,
             // in order, on the right server; the untouched server is
@@ -552,6 +926,25 @@ mod tests {
             assert!(rx1.recv().is_none());
             let mut rx0 = t.connect_server(0);
             assert!(rx0.recv().is_none(), "[{}] phantom message", t.name());
+        });
+    }
+
+    #[test]
+    fn explicit_flush_delivers_partial_batches() {
+        // A flushed partial batch must be receivable WITHOUT dropping
+        // the sender — the worker loop relies on this before publishing
+        // its final epoch.
+        each_transport(1, 1, |t| {
+            let mut tx = t.connect_worker(0);
+            let mut rx = t.connect_server(0);
+            tx.send(0, msg(0, 0)).unwrap();
+            tx.flush().unwrap();
+            let m = rx.recv().expect("flushed message not delivered");
+            assert_eq!(m.worker_epoch, 0, "[{}]", t.name());
+            // Sender stays usable after a flush.
+            tx.send(0, msg(0, 1)).unwrap();
+            tx.flush().unwrap();
+            assert_eq!(rx.recv().unwrap().worker_epoch, 1, "[{}]", t.name());
         });
     }
 
@@ -641,21 +1034,99 @@ mod tests {
     }
 
     #[test]
+    fn server_lanes_partition_the_stream_per_worker() {
+        // The work-stealing granularity: every lane yields a per-worker
+        // FIFO sub-stream, and together the lanes cover everything.
+        each_transport(3, 1, |t| {
+            let mut txs: Vec<_> = (0..3).map(|w| t.connect_worker(w)).collect();
+            for i in 0..6 {
+                for (w, tx) in txs.iter_mut().enumerate() {
+                    tx.send(0, msg(w, i)).unwrap();
+                }
+            }
+            drop(txs);
+            t.shutdown();
+            let mut lanes = t.connect_server_lanes(0);
+            let mut next = vec![0usize; 3];
+            let mut total = 0usize;
+            for lane in lanes.iter_mut() {
+                let mut lane_worker: Option<usize> = None;
+                while let Some(m) = lane.recv() {
+                    if lanes_are_per_worker(t.name()) {
+                        // Ring lanes carry exactly one worker's stream.
+                        assert_eq!(*lane_worker.get_or_insert(m.worker), m.worker);
+                    }
+                    assert_eq!(m.worker_epoch, next[m.worker], "[{}] lane reordered", t.name());
+                    next[m.worker] += 1;
+                    total += 1;
+                }
+                match lane.try_recv() {
+                    TryRecv::Done => {}
+                    other => panic!("[{}] drained lane not Done: {other:?}", t.name()),
+                }
+            }
+            assert_eq!(total, 18, "[{}] lanes lost messages", t.name());
+        });
+    }
+
+    fn lanes_are_per_worker(name: &str) -> bool {
+        name == "ring"
+    }
+
+    #[test]
+    fn try_recv_reports_empty_then_done() {
+        each_transport(1, 1, |t| {
+            let mut tx = t.connect_worker(0);
+            let mut rx = t.connect_server(0);
+            assert!(matches!(rx.try_recv(), TryRecv::Empty), "[{}]", t.name());
+            tx.send(0, msg(0, 0)).unwrap();
+            tx.flush().unwrap();
+            // Spin: the message is already enqueued, so the first poll
+            // must surface it.
+            match rx.try_recv() {
+                TryRecv::Msg(m) => assert_eq!(m.worker_epoch, 0),
+                other => panic!("[{}] expected Msg, got {other:?}", t.name()),
+            }
+            assert!(matches!(rx.try_recv(), TryRecv::Empty), "[{}]", t.name());
+            drop(tx);
+            t.shutdown();
+            assert!(matches!(rx.try_recv(), TryRecv::Done), "[{}]", t.name());
+        });
+    }
+
+    #[test]
     #[should_panic(expected = "endpoint already taken")]
     fn ring_rejects_double_producer() {
-        let t = SpscRingTransport::new(2, 1, 4);
+        let t = SpscRingTransport::new(2, 1, 4, 1);
         let _a = t.connect_worker(1);
         let _b = t.connect_worker(1);
     }
 
     #[test]
+    #[should_panic(expected = "endpoint already taken")]
+    fn ring_rejects_lanes_after_single_endpoint() {
+        let t = SpscRingTransport::new(2, 1, 4, 1);
+        let _a = t.connect_server(0);
+        let _b = t.connect_server_lanes(0);
+    }
+
+    #[test]
     fn make_transport_honors_kind_and_budget() {
-        let m = make_transport(TransportKind::Mpsc, 4, 2, 8);
+        let m = make_transport(TransportKind::Mpsc, 4, 2, 8, 1);
         assert_eq!(m.name(), "mpsc");
         assert_eq!(m.inflight_bound(), 8);
-        let r = make_transport(TransportKind::SpscRing, 4, 2, 8);
+        let r = make_transport(TransportKind::SpscRing, 4, 2, 8, 1);
         assert_eq!(r.name(), "ring");
         // 8 in flight per server, split over 4 workers' rings.
         assert_eq!(r.inflight_bound(), 2);
+        // Batched: each of the 2 slots carries up to 3 messages, plus 2
+        // more can sit in the sender's pending buffer.
+        let rb = make_transport(TransportKind::SpscRing, 4, 2, 8, 3);
+        assert_eq!(rb.inflight_bound(), 2 * 3 + 2);
+        // Batched mpsc, capacity-misaligned: flushes land at multiples
+        // of 2, so sends 1..=9 complete (channel 8 + 1 buffered) and
+        // send 10's flush is the first that can block.
+        let mb = make_transport(TransportKind::Mpsc, 4, 2, 8, 2);
+        assert_eq!(mb.inflight_bound(), 9);
     }
 }

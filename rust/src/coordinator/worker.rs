@@ -193,6 +193,15 @@ impl<'a> WorkerCtx<'a> {
             };
             self.sender.send(server, push)?;
 
+            // Deliver anything still batch-buffered BEFORE publishing
+            // the final epoch: the monitor calls transport.shutdown()
+            // as soon as min-epoch reaches the budget, and the
+            // receivers' shutdown-drain proof assumes every producer
+            // has flushed by then.  Flushing after the store would race
+            // it and could strand the last (batch-1) pushes per server.
+            if t + 1 == self.epochs {
+                self.sender.flush()?;
+            }
             self.state.epoch = t + 1;
             self.stats.epochs = t + 1;
             self.progress.store(t + 1, Ordering::Release);

@@ -36,13 +36,20 @@
 //! Three optional builder knobs:
 //! * `.transport(..)` — the worker→server push queueing discipline
 //!   ([`coordinator::Transport`]): the bounded-mpsc original or the
-//!   lock-free per-worker SPSC ring (`--set transport=mpsc|ring` on the
+//!   lock-free per-worker SPSC ring, with up to `batch` w-blocks
+//!   coalesced per slot (`--set transport=mpsc|ring batch=N` on the
 //!   CLI).
 //! * `.observer(..)` — run telemetry hooks ([`coordinator::Observer`]);
 //!   objective sampling is itself the built-in observer.
 //! * `.algo(..)` — [`coordinator::Algo`]: `AsyncAdmm` (default),
 //!   `SyncAdmm`, `LockedAdmm`, `HogwildSgd`, or `Sim` (virtual-time DES
 //!   scaling study; extras in `TrainReport::sim`).
+//!
+//! Server-side policy knobs ride the config instead of the builder:
+//! `--set placement=contiguous|roundrobin|hash|degree` picks the
+//! block→shard map ([`coordinator::Placement`]) and
+//! `--set drain=owned|steal` the server-thread queue draining (work
+//! stealing; `coordinator/sched.rs`).
 //!
 //! See `DESIGN.md` (repo root) for the system inventory, the hot-path
 //! mechanisms (seqlock block store, push-buffer pool, block-slice CSR

@@ -83,8 +83,9 @@ fn config_args(a: Args) -> Args {
             "set",
             "",
             "comma-separated key=value config overrides (e.g. \
-             transport=mpsc|ring, backend=native|xla, n_workers=8; an \
-             unknown key lists all valid keys)",
+             transport=mpsc|ring, placement=contiguous|roundrobin|hash|degree, \
+             drain=owned|steal, batch=N, backend=native|xla, \
+             n_workers=8; an unknown key lists all valid keys)",
         )
 }
 

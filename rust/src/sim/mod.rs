@@ -27,7 +27,7 @@ use anyhow::Result;
 
 use crate::admm::{objective_at_z, prox_l1_box, worker_update, NativeEngine, Objective};
 use crate::config::{BlockSelection, Config};
-use crate::coordinator::{ObjSample, Observer, Progress, Topology};
+use crate::coordinator::{make_placement, ObjSample, Observer, Progress, Topology};
 use crate::data::{Dataset, WorkerShard};
 use crate::problem::Problem;
 use crate::util::rng::Rng;
@@ -317,7 +317,13 @@ pub fn run_sim_observed(
     cfg.validate()?;
     let problem = Problem::new(cfg.loss, cfg.lambda, cfg.clip);
     let weight = 1.0 / ds.samples() as f32;
-    let topo = Topology::build(shards, cfg.n_blocks, cfg.n_servers);
+    // Same block→shard placement as the threaded runtime, so the DES's
+    // per-server queue shapes (Table-1 contention) stay comparable with
+    // `--set placement=…` runs.  (The drain policy is not modeled: a
+    // DES server is a pure service station, and stealing only
+    // re-assigns which thread pays the service time.)
+    let placement = make_placement(cfg.placement);
+    let topo = Topology::build_with(shards, cfg.n_blocks, cfg.n_servers, placement.as_ref());
     let db = cfg.block_size;
     let d = cfg.n_blocks * db;
 

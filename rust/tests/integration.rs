@@ -3,7 +3,7 @@
 //! DES scaling shape, and data-pipeline round trips.
 
 use asybadmm::baselines::{run_hogwild_sgd, run_locked_admm, run_sync_admm};
-use asybadmm::config::{Backend, BlockSelection, Config, TransportKind};
+use asybadmm::config::{Backend, BlockSelection, Config, DrainKind, PlacementKind, TransportKind};
 use asybadmm::coordinator::{make_transport, push_inflight, Session, TrainReport};
 use asybadmm::data::{gen_partitioned, parse_libsvm, partition_even, Dataset, LossKind, WorkerShard};
 use asybadmm::problem::Problem;
@@ -300,6 +300,67 @@ fn transports_are_differentially_equivalent() {
 }
 
 #[test]
+fn placement_drain_transport_matrix_is_differentially_equivalent() {
+    // The scheduling layer must not change the algorithm: every
+    // placement × drain × transport combination performs exactly one
+    // push per worker epoch and lands in the same objective
+    // neighborhood.  (Which shard applies a push and in which
+    // interleaving is free; what is applied is not.)
+    let mut cfg = tiny(160);
+    cfg.batch = 2; // exercise batched slots + the worker's final flush
+    let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+    let mut objectives = Vec::new();
+    for placement in [PlacementKind::Contiguous, PlacementKind::Hash, PlacementKind::Degree] {
+        for drain in [DrainKind::Owned, DrainKind::Steal] {
+            for transport in [TransportKind::Mpsc, TransportKind::SpscRing] {
+                cfg.placement = placement;
+                cfg.drain = drain;
+                cfg.transport = transport;
+                let tag = format!("{placement:?}/{drain:?}/{transport:?}");
+                let r = Session::builder(&cfg).dataset(&ds, &shards).run().unwrap();
+                assert_eq!(
+                    r.total_pushes(),
+                    160 * shards.len(),
+                    "{tag}: push accounting broke"
+                );
+                let obj = r.final_objective.total();
+                assert!(obj.is_finite() && obj < 0.68, "{tag} did not converge: {obj}");
+                objectives.push((tag, obj));
+            }
+        }
+    }
+    let min = objectives.iter().map(|(_, o)| *o).fold(f64::INFINITY, f64::min);
+    let max = objectives.iter().map(|(_, o)| *o).fold(f64::NEG_INFINITY, f64::max);
+    assert!(
+        max - min < 0.08,
+        "combinations disagree beyond async noise: {objectives:?}"
+    );
+}
+
+#[test]
+fn degree_placement_spreads_pushes_across_shards() {
+    // Under contiguous placement the Zipf-hot low-index blocks all land
+    // on shard 0; degree placement must spread the applied-push load.
+    let mut cfg = tiny(200);
+    let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+    let spread = |placement: PlacementKind, cfg: &mut Config| {
+        cfg.placement = placement;
+        let r = Session::builder(cfg).dataset(&ds, &shards).run().unwrap();
+        let counts: Vec<usize> = r.server_stats.iter().map(|s| s.pushes).collect();
+        let max = *counts.iter().max().unwrap() as f64;
+        let mean = counts.iter().sum::<usize>() as f64 / counts.len() as f64;
+        (max / mean, counts)
+    };
+    let (contig_skew, contig_counts) = spread(PlacementKind::Contiguous, &mut cfg);
+    let (degree_skew, degree_counts) = spread(PlacementKind::Degree, &mut cfg);
+    assert!(
+        degree_skew <= contig_skew + 0.05,
+        "degree placement did not reduce applied-push skew: \
+         contiguous {contig_counts:?} ({contig_skew:.3}) vs degree {degree_counts:?} ({degree_skew:.3})"
+    );
+}
+
+#[test]
 fn explicit_transport_override_is_honored() {
     let cfg = tiny(80);
     let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
@@ -308,6 +369,7 @@ fn explicit_transport_override_is_honored() {
         cfg.n_workers,
         cfg.n_servers,
         push_inflight(cfg.n_workers),
+        1,
     );
     assert_eq!(transport.name(), "ring");
     let r = Session::builder(&cfg)

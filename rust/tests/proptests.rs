@@ -2,7 +2,11 @@
 //! §8), driven by the in-tree seeded property harness.
 
 use asybadmm::admm::{gather_packed, prox_l1_box, soft_threshold};
-use asybadmm::coordinator::{BlockStore, RwBlockStore, Topology};
+use asybadmm::config::PlacementKind;
+use asybadmm::coordinator::{
+    make_placement, BlockStore, MpscTransport, PushMsg, RwBlockStore, SpscRingTransport,
+    Topology, Transport, TryRecv,
+};
 use asybadmm::data::{gen_partitioned, BlockGeometry, Dataset, LossKind, SynthSpec};
 use asybadmm::sparse::{dense, CsrBuilder, CsrMatrix};
 use asybadmm::testutil::forall;
@@ -87,6 +91,187 @@ fn prop_topology_routing_is_total_and_unique() {
                         return Err("slot inverse broken".into());
                     }
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (b2) Placement invariants: under all three policies every block is
+/// owned by exactly one shard, the owner map and the per-shard block
+/// lists agree, and the bipartite adjacency
+/// (`workers_of_block`/`blocks_of_worker`) is mutually consistent and
+/// placement-independent.
+#[test]
+fn prop_placements_own_each_block_exactly_once() {
+    forall(
+        "placement-ownership",
+        25,
+        |rng| {
+            let (spec, workers) = random_spec(rng);
+            let servers = 1 + rng.below(spec.geometry.n_blocks);
+            (spec, workers, servers)
+        },
+        |(spec, workers, servers)| {
+            let (_, shards) = gen_partitioned(spec, *workers);
+            let n_blocks = spec.geometry.n_blocks;
+            let reference = Topology::build(&shards, n_blocks, *servers);
+            for kind in [
+                PlacementKind::Contiguous,
+                PlacementKind::RoundRobin,
+                PlacementKind::Hash,
+                PlacementKind::Degree,
+            ] {
+                let placement = make_placement(kind);
+                let topo =
+                    Topology::build_with(&shards, n_blocks, *servers, placement.as_ref());
+                // Each block owned exactly once: the per-shard lists
+                // tile 0..n_blocks and match the owner map.
+                let mut all: Vec<usize> =
+                    topo.blocks_of_server.iter().flatten().copied().collect();
+                all.sort_unstable();
+                if all != (0..n_blocks).collect::<Vec<_>>() {
+                    return Err(format!("{kind:?}: shard lists do not tile blocks: {all:?}"));
+                }
+                for (s, blocks) in topo.blocks_of_server.iter().enumerate() {
+                    for &j in blocks {
+                        if topo.server_of_block[j] != s {
+                            return Err(format!(
+                                "{kind:?}: block {j} listed on shard {s} but owned by {}",
+                                topo.server_of_block[j]
+                            ));
+                        }
+                    }
+                }
+                // Adjacency is a property of the data, not the placement.
+                if topo.workers_of_block != reference.workers_of_block
+                    || topo.blocks_of_worker != reference.blocks_of_worker
+                {
+                    return Err(format!("{kind:?}: placement changed the adjacency"));
+                }
+                for (i, blocks) in topo.blocks_of_worker.iter().enumerate() {
+                    for &j in blocks {
+                        if !topo.workers_of_block[j].contains(&i) {
+                            return Err(format!("{kind:?}: edge ({i},{j}) asymmetric"));
+                        }
+                    }
+                }
+                for (j, ws) in topo.workers_of_block.iter().enumerate() {
+                    for &i in ws {
+                        if !topo.blocks_of_worker[i].contains(&j) {
+                            return Err(format!("{kind:?}: edge ({i},{j}) one-way"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (b3) Lane-granular stealing preserves per-worker FIFO: draining a
+/// server's lanes in ANY interleaving — each lane accessed exclusively
+/// and sequentially, as `sched.rs`'s CAS lane claim guarantees, but
+/// switching lanes at arbitrary points like a thief would — delivers
+/// every (worker, server) sub-stream in send order.  Run against both
+/// transports, batched and unbatched.
+#[test]
+fn prop_lane_steal_preserves_per_worker_fifo() {
+    forall(
+        "lane-steal-fifo",
+        12,
+        |rng| {
+            let workers = 1 + rng.below(4);
+            let servers = 1 + rng.below(3);
+            let per_worker = 4 + rng.below(24);
+            let batch = 1 + rng.below(4);
+            let ring = rng.bernoulli(0.5);
+            (workers, servers, per_worker, batch, ring, rng.next_u64())
+        },
+        |&(workers, servers, per_worker, batch, ring, seed)| {
+            let transport: Box<dyn Transport> = if ring {
+                // Capacity sized for the full pre-filled backlog: the
+                // drain below is single-threaded.
+                Box::new(SpscRingTransport::new(workers, servers, per_worker, batch))
+            } else {
+                Box::new(MpscTransport::new(workers, servers, workers * per_worker, batch))
+            };
+            let mut rng = Rng::new(seed);
+            // sent[w][s] = epochs in send order.
+            let mut sent = vec![vec![Vec::<usize>::new(); servers]; workers];
+            let mut txs: Vec<_> = (0..workers).map(|w| transport.connect_worker(w)).collect();
+            for epoch in 0..per_worker {
+                for (w, tx) in txs.iter_mut().enumerate() {
+                    let s = rng.below(servers);
+                    let msg = PushMsg {
+                        worker: w,
+                        block: 0,
+                        w: vec![0.0; 2],
+                        worker_epoch: epoch,
+                        z_version_used: 0,
+                        sent_at: std::time::Instant::now(),
+                        recycle: None,
+                    };
+                    tx.send(s, msg).map_err(|e| format!("send failed: {e:#}"))?;
+                    sent[w][s].push(epoch);
+                }
+            }
+            for tx in txs.iter_mut() {
+                tx.flush().map_err(|e| format!("flush failed: {e:#}"))?;
+            }
+            drop(txs);
+            transport.shutdown();
+
+            // Per-server lanes, drained in a random interleaving.
+            let mut next = vec![vec![0usize; servers]; workers];
+            let mut received = 0usize;
+            let total = workers * per_worker;
+            let mut lanes: Vec<(usize, Box<dyn asybadmm::coordinator::PushReceiver>)> =
+                (0..servers)
+                    .flat_map(|s| {
+                        transport
+                            .connect_server_lanes(s)
+                            .into_iter()
+                            .map(move |l| (s, l))
+                    })
+                    .collect();
+            let mut done = vec![false; lanes.len()];
+            let mut safety = 0usize;
+            while received < total || !done.iter().all(|&d| d) {
+                safety += 1;
+                if safety > 100 * total + 10_000 {
+                    return Err(format!("drain did not terminate: {received}/{total}"));
+                }
+                let k = rng.below(lanes.len());
+                if done[k] {
+                    continue;
+                }
+                let budget = 1 + rng.below(4);
+                let (s, lane) = &mut lanes[k];
+                for _ in 0..budget {
+                    match lane.try_recv() {
+                        TryRecv::Msg(m) => {
+                            let expect_idx = next[m.worker][*s];
+                            let expected = sent[m.worker][*s].get(expect_idx).copied();
+                            if expected != Some(m.worker_epoch) {
+                                return Err(format!(
+                                    "worker {} server {s}: got epoch {} expected {:?}",
+                                    m.worker, m.worker_epoch, expected
+                                ));
+                            }
+                            next[m.worker][*s] += 1;
+                            received += 1;
+                        }
+                        TryRecv::Empty => break,
+                        TryRecv::Done => {
+                            done[k] = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            if received != total {
+                return Err(format!("received {received} of {total}"));
             }
             Ok(())
         },
