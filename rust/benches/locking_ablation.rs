@@ -119,7 +119,8 @@ fn push_throughput(kind: TransportKind, workers: usize, per_worker: usize, db: u
                         w: buf,
                         worker_epoch: i,
                         z_version_used: 0,
-                        sent_at: std::time::Instant::now(),
+                        block_seq: 0,
+                        sent_at: None,
                         recycle: Some(pool.recycler()),
                     };
                     tx.send(0, msg).unwrap();

@@ -1,9 +1,11 @@
-//! Placement + drain-policy scaling under a Zipf-skewed block workload.
+//! Placement + drain-policy + adaptive-runtime scaling under a
+//! Zipf-skewed block workload.
 //!
 //! The synthetic workload's hot shared blocks have low indices, so the
 //! default contiguous placement concentrates the whole Zipf head on
-//! shard 0 — the server-side serialization this PR's placement/drain
-//! layer exists to break.  Three measurements:
+//! shard 0 — the server-side serialization the placement/drain layer
+//! (PR 4) and the adaptive runtime (this PR) exist to break.  Five
+//! measurements:
 //!
 //!  1. **Static skew**: max/mean shard load (load = Σ |𝒩(j)| over owned
 //!     blocks) under contiguous vs hash vs degree placement — the
@@ -17,18 +19,30 @@
 //!  3. **Batched ring slots**: the same pipeline at `batch=8` vs
 //!     `batch=1` (`ring_batch_amortization`) — per-slot atomics
 //!     amortized over whole w-block batches.
+//!  4. **Dynamic re-placement**: the same pipeline starting from the
+//!     contiguous map with the runtime rebalancer migrating hot blocks
+//!     from observed rates — the `dynamic_vs_degree_skew` gate
+//!     (applied-push max/mean imbalance, dynamic / degree; ≤ ~1 means
+//!     the adaptive map matched or beat the static degree prior, and
+//!     it must be well below the contiguous baseline).
+//!  5. **Elastic server threads**: the same pipeline with
+//!     `2 × n_servers` pool threads vs the classic one-per-shard —
+//!     the `elastic_threads_throughput` gate (≈1 on 1-core CI hosts,
+//!     > 1 once cores exist to borrow).
 //!
 //!     cargo bench --bench placement_skew [-- --json]
 //!     BENCH_QUICK=1 cargo bench --bench placement_skew -- --json
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
 use asybadmm::bench::{emit_hotpath_json, harness_from_env, json_requested, BenchResult};
 use asybadmm::config::{DrainKind, PlacementKind, TransportKind};
 use asybadmm::coordinator::{
-    load_imbalance, make_placement, make_transport, push_inflight, run_server, BlockStore,
-    ProxBackend, PushMsg, PushPool, ServerShard, ShardRt, Topology,
+    load_imbalance, make_placement, make_transport, push_inflight, run_pool, run_server,
+    BlockMap, BlockStore, BlockTable, ProxBackend, PushMsg, PushPool, Rebalancer, ServerShard,
+    ShardRt, Topology,
 };
 use asybadmm::data::{gen_partitioned, BlockGeometry, LossKind, SynthSpec, WorkerShard};
 use asybadmm::problem::Problem;
@@ -51,20 +65,34 @@ fn zipf_shards() -> Vec<WorkerShard> {
     gen_partitioned(&spec, N_WORKERS).1
 }
 
-/// End-to-end enqueue-to-apply throughput (pushes/s): producers route
-/// by the placement's block→shard map; server threads drain under
-/// `drain`, applying the real Eq. 13 update per push.
-fn drain_throughput(
+struct PipelineResult {
+    rate: f64,
+    /// Applied pushes per shard (lane attribution).
+    per_shard: Vec<usize>,
+    migrations: usize,
+}
+
+/// End-to-end enqueue-to-apply pipeline: producers route by the live
+/// block→shard map (static for the static placements; rebalanced at
+/// runtime when `rebalance` is set) and stamp per-(worker, block)
+/// sequence numbers; `n_threads` server threads drain under `drain`
+/// (an elastic pool when `n_threads != N_SERVERS`), applying the real
+/// Eq. 13 update per push.
+fn drain_pipeline(
     shards: &[WorkerShard],
     placement: PlacementKind,
     drain: DrainKind,
     batch: usize,
     per_worker: usize,
-) -> f64 {
+    n_threads: usize,
+    rebalance: bool,
+) -> PipelineResult {
     let topo =
         Topology::build_with(shards, N_BLOCKS, N_SERVERS, make_placement(placement).as_ref());
     let store = Arc::new(BlockStore::new(N_BLOCKS, DB));
     let problem = Problem::new(LossKind::Logistic, 1e-5, 1e4);
+    let table = Arc::new(BlockTable::new(&topo, store, problem, 4.0, 0.01));
+    let map = Arc::new(BlockMap::new(&topo.server_of_block));
     let transport = make_transport(
         TransportKind::SpscRing,
         N_WORKERS,
@@ -74,50 +102,84 @@ fn drain_throughput(
     );
     let rts: Vec<ShardRt> = (0..N_SERVERS)
         .map(|sid| {
-            let shard = ServerShard::new(sid, &topo, store.clone(), problem, 4.0, 0.01);
+            let shard = ServerShard::with_table(sid, &topo, table.clone(), !rebalance);
             ShardRt::new(shard, transport.as_ref())
         })
         .collect();
+    let stop = AtomicBool::new(false);
     let t0 = Instant::now();
     std::thread::scope(|scope| {
         let mut producers = Vec::new();
         for shard in shards {
             let w = shard.worker_id;
             let mut tx = transport.connect_worker(w);
-            let topo = &topo;
+            let map = &map;
             let active = &shard.active_blocks;
             producers.push(scope.spawn(move || {
                 let mut pool = PushPool::new(DB, 64);
+                let mut seqs = vec![0u64; N_BLOCKS];
                 for i in 0..per_worker {
                     let j = active[i % active.len()];
+                    seqs[j] += 1;
                     let msg = PushMsg {
                         worker: w,
                         block: j,
                         w: pool.acquire(),
                         worker_epoch: i,
                         z_version_used: 0,
-                        sent_at: Instant::now(),
+                        block_seq: seqs[j],
+                        sent_at: None,
                         recycle: Some(pool.recycler()),
                     };
-                    tx.send(topo.server_of_block[j], msg).unwrap();
+                    tx.send(map.owner(j), msg).unwrap();
                 }
                 tx.flush().unwrap();
             }));
         }
-        let rts_ref = &rts;
-        for sid in 0..N_SERVERS {
+        if rebalance {
+            let mut rb = Rebalancer::new(map.clone(), table.clone(), N_SERVERS);
+            let stop = &stop;
             scope.spawn(move || {
-                run_server(rts_ref, sid, drain, &ProxBackend::Native).unwrap();
+                while !stop.load(Ordering::Acquire) {
+                    rb.scan();
+                    std::thread::sleep(std::time::Duration::from_micros(500));
+                }
+            });
+        }
+        let rts_ref = &rts;
+        for tid in 0..n_threads {
+            scope.spawn(move || {
+                if n_threads == N_SERVERS {
+                    run_server(rts_ref, tid, drain, &ProxBackend::Native).unwrap();
+                } else {
+                    run_pool(rts_ref, tid, &ProxBackend::Native).unwrap();
+                }
             });
         }
         for p in producers {
             p.join().unwrap();
         }
         transport.shutdown();
+        stop.store(true, Ordering::Release);
     });
-    let applied: usize = rts.iter().map(|rt| rt.shard.stats().pushes).sum();
+    let per_shard: Vec<usize> = rts.iter().map(|rt| rt.shard.stats().pushes).collect();
+    let applied: usize = per_shard.iter().sum();
     assert_eq!(applied, N_WORKERS * per_worker, "pushes lost in the drain pipeline");
-    applied as f64 / t0.elapsed().as_secs_f64()
+    PipelineResult {
+        rate: applied as f64 / t0.elapsed().as_secs_f64(),
+        per_shard,
+        migrations: map.migrations(),
+    }
+}
+
+/// Max/mean applied-push imbalance over the pipeline's shard counts.
+fn push_imbalance(per_shard: &[usize]) -> f64 {
+    let total: usize = per_shard.iter().sum();
+    if total == 0 {
+        return 1.0;
+    }
+    let mean = total as f64 / per_shard.len() as f64;
+    *per_shard.iter().max().unwrap() as f64 / mean
 }
 
 /// Record an externally-timed measurement (seconds per op) so it lands
@@ -136,7 +198,7 @@ fn record(h: &mut asybadmm::bench::Harness, name: &str, per_op_s: f64) {
 fn main() {
     let quick = std::env::var("BENCH_QUICK").as_deref() == Ok("1");
     let mut h = harness_from_env();
-    println!("== placement + drain policy under Zipf-hot blocks ==");
+    println!("== placement + drain + adaptive runtime under Zipf-hot blocks ==");
 
     let shards = zipf_shards();
 
@@ -164,38 +226,116 @@ fn main() {
          \x20 -> contiguous/degree = {skew_ratio:.2}x  (gate: > 1.0)"
     );
 
-    // 2. Enqueue-to-apply throughput: the ISSUE's headline comparison.
+    // 2. Enqueue-to-apply throughput: the drain-policy comparison.
     let per_worker = if quick { 2_000 } else { 20_000 };
     // Warm (thread spawn, page faults).
-    drain_throughput(&shards, PlacementKind::Contiguous, DrainKind::Owned, 1, 500);
-    let owned_rate =
-        drain_throughput(&shards, PlacementKind::Contiguous, DrainKind::Owned, 1, per_worker);
-    let steal_rate =
-        drain_throughput(&shards, PlacementKind::Degree, DrainKind::Steal, 1, per_worker);
-    let steal_ratio = steal_rate / owned_rate.max(1.0);
-    record(&mut h, "contiguous+owned enqueue-to-apply", 1.0 / owned_rate.max(1.0));
-    record(&mut h, "degree+steal enqueue-to-apply", 1.0 / steal_rate.max(1.0));
+    drain_pipeline(&shards, PlacementKind::Contiguous, DrainKind::Owned, 1, 500, N_SERVERS, false);
+    let owned = drain_pipeline(
+        &shards,
+        PlacementKind::Contiguous,
+        DrainKind::Owned,
+        1,
+        per_worker,
+        N_SERVERS,
+        false,
+    );
+    let steal = drain_pipeline(
+        &shards,
+        PlacementKind::Degree,
+        DrainKind::Steal,
+        1,
+        per_worker,
+        N_SERVERS,
+        false,
+    );
+    let steal_ratio = steal.rate / owned.rate.max(1.0);
+    record(&mut h, "contiguous+owned enqueue-to-apply", 1.0 / owned.rate.max(1.0));
+    record(&mut h, "degree+steal enqueue-to-apply", 1.0 / steal.rate.max(1.0));
     println!(
         "\nenqueue-to-apply ({N_WORKERS} workers -> {N_SERVERS} shards, db={DB}):\n\
-         \x20 contiguous+owned {owned_rate:>10.0} pushes/s\n\
-         \x20 degree+steal     {steal_rate:>10.0} pushes/s\n\
+         \x20 contiguous+owned {:>10.0} pushes/s\n\
+         \x20 degree+steal     {:>10.0} pushes/s\n\
          \x20 -> degree+steal / contiguous+owned = {steal_ratio:.2}x \
-         (gate; <1 expected only on 1-core hosts)"
+         (gate; <1 expected only on 1-core hosts)",
+        owned.rate, steal.rate
     );
 
     // 3. Batched ring slots at the same shape.
-    let batch1 =
-        drain_throughput(&shards, PlacementKind::Degree, DrainKind::Owned, 1, per_worker);
-    let batch8 =
-        drain_throughput(&shards, PlacementKind::Degree, DrainKind::Owned, 8, per_worker);
-    let batch_ratio = batch8 / batch1.max(1.0);
-    record(&mut h, "ring batch=1 enqueue-to-apply", 1.0 / batch1.max(1.0));
-    record(&mut h, "ring batch=8 enqueue-to-apply", 1.0 / batch8.max(1.0));
+    let batch1 = drain_pipeline(
+        &shards,
+        PlacementKind::Degree,
+        DrainKind::Owned,
+        1,
+        per_worker,
+        N_SERVERS,
+        false,
+    );
+    let batch8 = drain_pipeline(
+        &shards,
+        PlacementKind::Degree,
+        DrainKind::Owned,
+        8,
+        per_worker,
+        N_SERVERS,
+        false,
+    );
+    let batch_ratio = batch8.rate / batch1.rate.max(1.0);
+    record(&mut h, "ring batch=1 enqueue-to-apply", 1.0 / batch1.rate.max(1.0));
+    record(&mut h, "ring batch=8 enqueue-to-apply", 1.0 / batch8.rate.max(1.0));
     println!(
         "\nbatched ring slots (degree+owned):\n\
-         \x20 batch=1 {batch1:>10.0} pushes/s\n\
-         \x20 batch=8 {batch8:>10.0} pushes/s\n\
-         \x20 -> batch amortization = {batch_ratio:.2}x"
+         \x20 batch=1 {:>10.0} pushes/s\n\
+         \x20 batch=8 {:>10.0} pushes/s\n\
+         \x20 -> batch amortization = {batch_ratio:.2}x",
+        batch1.rate, batch8.rate
+    );
+
+    // 4. Dynamic re-placement: contiguous start + runtime rebalancer vs
+    //    the static maps, scored on APPLIED-push imbalance.
+    let dynamic = drain_pipeline(
+        &shards,
+        PlacementKind::Dynamic,
+        DrainKind::Owned,
+        1,
+        per_worker,
+        N_SERVERS,
+        true,
+    );
+    let contig_push_imb = push_imbalance(&owned.per_shard);
+    let degree_push_imb = push_imbalance(&batch1.per_shard);
+    let dynamic_push_imb = push_imbalance(&dynamic.per_shard);
+    let dyn_vs_degree = dynamic_push_imb / degree_push_imb.max(1e-12);
+    record(&mut h, "dynamic enqueue-to-apply", 1.0 / dynamic.rate.max(1.0));
+    println!(
+        "\ndynamic re-placement (contiguous start, rebalancer live, {} migrations):\n\
+         \x20 applied-push imbalance contiguous {contig_push_imb:.3} | degree \
+         {degree_push_imb:.3} | dynamic {dynamic_push_imb:.3}\n\
+         \x20 -> dynamic/degree = {dyn_vs_degree:.2}x  (gate: <= ~1, \
+         and dynamic must beat contiguous)",
+        dynamic.migrations
+    );
+
+    // 5. Elastic server threads: 2x pool vs one-per-shard.
+    let elastic = drain_pipeline(
+        &shards,
+        PlacementKind::Degree,
+        DrainKind::Owned,
+        1,
+        per_worker,
+        2 * N_SERVERS,
+        false,
+    );
+    let elastic_ratio = elastic.rate / batch1.rate.max(1.0);
+    record(&mut h, "elastic 2x-threads enqueue-to-apply", 1.0 / elastic.rate.max(1.0));
+    println!(
+        "\nelastic server threads (degree+pool):\n\
+         \x20 threads={}  {:>10.0} pushes/s\n\
+         \x20 threads={} {:>10.0} pushes/s\n\
+         \x20 -> elastic throughput = {elastic_ratio:.2}x (≈1 on 1-core hosts)",
+        N_SERVERS,
+        batch1.rate,
+        2 * N_SERVERS,
+        elastic.rate
     );
 
     println!("\n{}", h.csv());
@@ -209,10 +349,16 @@ fn main() {
                 ("hash_imbalance", imb_hash),
                 ("degree_imbalance", imb_degree),
                 ("degree_vs_contiguous_skew", skew_ratio),
-                ("owned_drain_push_per_s", owned_rate),
-                ("steal_drain_push_per_s", steal_rate),
+                ("owned_drain_push_per_s", owned.rate),
+                ("steal_drain_push_per_s", steal.rate),
                 ("steal_vs_owned_drain", steal_ratio),
                 ("ring_batch_amortization", batch_ratio),
+                ("contiguous_push_imbalance", contig_push_imb),
+                ("degree_push_imbalance", degree_push_imb),
+                ("dynamic_push_imbalance", dynamic_push_imb),
+                ("dynamic_vs_degree_skew", dyn_vs_degree),
+                ("dynamic_migrations", dynamic.migrations as f64),
+                ("elastic_threads_throughput", elastic_ratio),
             ],
         );
     }

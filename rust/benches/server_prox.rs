@@ -127,7 +127,8 @@ fn main() {
         w: vec![0.3f32; 64],
         worker_epoch: 0,
         z_version_used: 0,
-        sent_at: std::time::Instant::now(),
+        block_seq: 0,
+        sent_at: None,
         recycle: None,
     };
     h.bench("server handle_push (native, db=64)", || {

@@ -80,6 +80,10 @@ pub enum PlacementKind {
     /// Greedy largest-degree-first packing by |𝒩(j)| so hot blocks land
     /// on distinct shards.
     Degree,
+    /// Adaptive: start contiguous, then migrate hot blocks between
+    /// shards at runtime from observed applied-push rates
+    /// (`coordinator/rebalance.rs`; cadence = `rebalance_ms`).
+    Dynamic,
 }
 
 impl PlacementKind {
@@ -89,8 +93,11 @@ impl PlacementKind {
             "roundrobin" => Ok(PlacementKind::RoundRobin),
             "hash" => Ok(PlacementKind::Hash),
             "degree" => Ok(PlacementKind::Degree),
+            "dynamic" => Ok(PlacementKind::Dynamic),
             other => {
-                anyhow::bail!("unknown placement {other:?} (contiguous|roundrobin|hash|degree)")
+                anyhow::bail!(
+                    "unknown placement {other:?} (contiguous|roundrobin|hash|degree|dynamic)"
+                )
             }
         }
     }
@@ -101,6 +108,7 @@ impl PlacementKind {
             PlacementKind::RoundRobin => "roundrobin",
             PlacementKind::Hash => "hash",
             PlacementKind::Degree => "degree",
+            PlacementKind::Dynamic => "dynamic",
         }
     }
 }
@@ -183,7 +191,8 @@ pub struct Config {
     // -- topology ----------------------------------------------------------
     pub n_workers: usize,
     pub n_servers: usize,
-    /// Block→shard placement policy (`contiguous` | `hash` | `degree`).
+    /// Block→shard placement policy
+    /// (`contiguous` | `roundrobin` | `hash` | `degree` | `dynamic`).
     pub placement: PlacementKind,
 
     // -- algorithm ---------------------------------------------------------
@@ -205,6 +214,16 @@ pub struct Config {
     pub transport: TransportKind,
     /// Server-thread drain policy (`owned` | `steal`).
     pub drain: DrainKind,
+    /// Server threads servicing the shards' lanes.  0 (default) = one
+    /// thread per shard (the classic shape).  Any other value runs an
+    /// elastic pool: every thread services all shards' lanes (own-first
+    /// affinity), so oversubscribed shards borrow CPU and
+    /// `n_threads != n_servers` exercises the same code shape on 1-core
+    /// CI hosts as on many-core machines (`coordinator/sched.rs`).
+    pub server_threads: usize,
+    /// Milliseconds between dynamic-rebalance scans
+    /// (`placement=dynamic` only; 0 = scan on every monitor wakeup).
+    pub rebalance_ms: u64,
     /// Max w-blocks coalesced per transport slot (1 = unbatched).  The
     /// ring transport packs whole [`PushMsg`] batches into one slot to
     /// amortize per-message overhead when workers own many blocks.
@@ -256,6 +275,8 @@ impl Default for Config {
             backend: Backend::Native,
             transport: TransportKind::Mpsc,
             drain: DrainKind::Owned,
+            server_threads: 0,
+            rebalance_ms: 1,
             batch: 1,
             artifacts_dir: PathBuf::from("artifacts"),
             m_chunk: 2048,
@@ -328,6 +349,8 @@ impl Config {
         "n_servers",
         "placement",
         "drain",
+        "server_threads",
+        "rebalance_ms",
         "batch",
         "rho",
         "gamma",
@@ -365,6 +388,8 @@ impl Config {
             "n_servers" => self.n_servers = v.parse()?,
             "placement" => self.placement = PlacementKind::parse(v)?,
             "drain" => self.drain = DrainKind::parse(v)?,
+            "server_threads" => self.server_threads = v.parse()?,
+            "rebalance_ms" => self.rebalance_ms = v.parse()?,
             "batch" => self.batch = v.parse()?,
             "rho" => self.rho = v.parse()?,
             "gamma" => self.gamma = v.parse()?,
@@ -423,6 +448,12 @@ impl Config {
             (1..=1024).contains(&self.batch),
             "batch must be in [1, 1024]"
         );
+        // Same class of sanity ceiling as `batch`: an elastic pool of a
+        // million threads is a typo, not a deployment.
+        anyhow::ensure!(
+            self.server_threads <= 1024,
+            "server_threads must be <= 1024 (0 = one thread per shard)"
+        );
         anyhow::ensure!(self.rho > 0.0, "rho must be positive");
         anyhow::ensure!(self.gamma >= 0.0, "gamma must be non-negative");
         anyhow::ensure!(self.lambda >= 0.0, "lambda must be non-negative");
@@ -454,13 +485,14 @@ impl Config {
     /// One-line summary for report headers.
     pub fn summary(&self) -> String {
         format!(
-            "loss={} m={} M={} db={} p={} servers={} rho={} gamma={} lambda={} T={} sel={} backend={} transport={} placement={} drain={} batch={} seed={}",
+            "loss={} m={} M={} db={} p={} servers={} threads={} rho={} gamma={} lambda={} T={} sel={} backend={} transport={} placement={} rebalance_ms={} drain={} batch={} seed={}",
             self.loss.as_str(),
             self.samples,
             self.n_blocks,
             self.block_size,
             self.n_workers,
             self.n_servers,
+            self.server_threads,
             self.rho,
             self.gamma,
             self.lambda,
@@ -469,6 +501,7 @@ impl Config {
             self.backend.as_str(),
             self.transport.as_str(),
             self.placement.as_str(),
+            self.rebalance_ms,
             self.drain.as_str(),
             self.batch,
             self.seed
@@ -531,6 +564,12 @@ mod tests {
         assert_eq!(c.placement, PlacementKind::Hash);
         c.apply_kv("placement", "roundrobin").unwrap();
         assert_eq!(c.placement, PlacementKind::RoundRobin);
+        c.apply_kv("placement", "dynamic").unwrap();
+        assert_eq!(c.placement, PlacementKind::Dynamic);
+        c.apply_kv("server_threads", "3").unwrap();
+        assert_eq!(c.server_threads, 3);
+        c.apply_kv("rebalance_ms", "7").unwrap();
+        assert_eq!(c.rebalance_ms, 7);
         c.apply_kv("placement", "contiguous").unwrap();
         c.apply_kv("drain", "owned").unwrap();
         assert_eq!(c.placement, PlacementKind::Contiguous);
@@ -584,6 +623,14 @@ mod tests {
         let mut c = Config::default();
         c.blocks_per_worker = c.n_blocks + 1;
         assert!(c.validate().is_err());
+
+        let mut c = Config::default();
+        c.server_threads = 1025;
+        assert!(c.validate().is_err());
+        c.server_threads = 1024;
+        assert!(c.validate().is_ok());
+        c.server_threads = 1; // fewer threads than shards: elastic pool
+        assert!(c.validate().is_ok());
 
         let mut c = Config::default();
         c.batch = 0;

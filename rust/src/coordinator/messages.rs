@@ -5,11 +5,14 @@
 //! [`super::transport::Transport`] trait.
 
 use std::sync::mpsc::Sender;
+use std::time::Instant;
 
 /// w_{i,j} push (Eq. 9).  `worker_epoch` and `z_version_used` implement
 //  the staleness accounting for Assumption 3.
 // Not `Clone`: each message owns one pooled buffer and one recycle
 // ticket for it; a clone would return two buffers for one acquire.
+// (`detached` makes an explicitly unpooled copy for the rare deferral
+// path.)
 #[derive(Debug)]
 pub struct PushMsg {
     pub worker: usize,
@@ -22,8 +25,17 @@ pub struct PushMsg {
     pub worker_epoch: usize,
     /// BlockStore version of z̃_j the worker used to compute this w.
     pub z_version_used: u64,
-    /// Wall-clock send time (for queueing-delay stats).
-    pub sent_at: std::time::Instant,
+    /// 1-based per-(worker, block) send sequence number.  With dynamic
+    /// re-placement a worker's stream for one block can split across
+    /// two shards' lanes mid-migration; the server's seq-gated apply
+    /// (`coordinator/server.rs`) uses this to keep per-(worker, block)
+    /// application order exact.  `0` = unsequenced (tests/benches that
+    /// never migrate): applied immediately, no gating.
+    pub block_seq: u64,
+    /// Wall-clock send time for queueing-delay stats.  Sampled (the
+    /// worker stamps ~1 in 64 epochs) so the `Instant::now` syscall
+    /// stays out of the steady-state hot loop; `None` = unsampled.
+    pub sent_at: Option<Instant>,
     /// Return address of the worker's buffer pool; `None` means the
     /// buffer is unpooled and the server just drops it (tests, benches).
     pub recycle: Option<Sender<Vec<f32>>>,
@@ -36,6 +48,25 @@ impl PushMsg {
         if let Some(home) = self.recycle.take() {
             // A pool whose worker already exited just ignores the send.
             let _ = home.send(std::mem::take(&mut self.w));
+        }
+    }
+
+    /// An unpooled copy for the seq-gated deferral path: the original's
+    /// pooled buffer goes home immediately (the caller recycles as
+    /// usual), the copy waits under the block lease until its missing
+    /// predecessors arrive.  Deferral only happens in the short window
+    /// where a migration splits a (worker, block) stream across lanes,
+    /// so the clone is off the steady-state path.
+    pub fn detached(&self) -> PushMsg {
+        PushMsg {
+            worker: self.worker,
+            block: self.block,
+            w: self.w.clone(),
+            worker_epoch: self.worker_epoch,
+            z_version_used: self.z_version_used,
+            block_seq: self.block_seq,
+            sent_at: self.sent_at,
+            recycle: None,
         }
     }
 }

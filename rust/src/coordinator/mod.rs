@@ -21,11 +21,17 @@
 //!   mpsc original and the lock-free per-worker SPSC ring, both with
 //!   batched slots (`--set transport=mpsc|ring batch=N`);
 //! * **block placement** behind [`Placement`] (`placement.rs`): which
-//!   shard owns each z_j (`--set placement=contiguous|hash|degree`);
+//!   shard owns each z_j
+//!   (`--set placement=contiguous|hash|degree|dynamic`) — `dynamic`
+//!   adds a runtime [`Rebalancer`] (`rebalance.rs`) that migrates hot
+//!   blocks between shards from observed push rates through a
+//!   lock-free [`BlockMap`] workers re-read on every push;
 //! * **queue draining** behind [`crate::config::DrainKind`]
 //!   (`sched.rs`): each server thread services only its own shard's
 //!   lanes, or CAS-claims and steals whole pending lanes of busier
-//!   shards (`--set drain=owned|steal`).
+//!   shards (`--set drain=owned|steal`); `--set server_threads=N`
+//!   decouples the thread count from the shard count entirely (an
+//!   elastic pool over all shards' lanes).
 
 mod block_store;
 mod bufpool;
@@ -34,6 +40,7 @@ mod delay;
 mod events;
 mod messages;
 mod placement;
+mod rebalance;
 mod sched;
 mod server;
 mod session;
@@ -48,11 +55,15 @@ pub use delay::DelayPolicy;
 pub use events::ObjSample;
 pub use messages::PushMsg;
 pub use placement::{
-    load_imbalance, make_placement, ContiguousPlacement, DegreePlacement, HashPlacement,
-    Placement, RoundRobinPlacement,
+    load_imbalance, make_placement, ContiguousPlacement, DegreePlacement, DynamicPlacement,
+    HashPlacement, Placement, RoundRobinPlacement,
 };
-pub use sched::{run_server, ShardRt};
-pub use server::{ProxBackend, ServerShard, ServerStats};
+pub use rebalance::{
+    lpt_map, plan_rebalance, BlockMap, Rebalancer, REBALANCE_HYSTERESIS,
+    REBALANCE_MAX_MOVES, REBALANCE_MIN_DELTA,
+};
+pub use sched::{run_pool, run_server, ShardRt};
+pub use server::{BlockTable, ProxBackend, ServerShard, ServerStats};
 pub use session::{
     Algo, MonitorGate, Observer, Progress, Session, SessionBuilder, SimExtras, TrainReport,
 };

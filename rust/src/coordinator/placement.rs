@@ -27,8 +27,14 @@
 //!   degree, so the Zipf head lands on *distinct* shards.  |𝒩(j)| is a
 //!   static proxy for push traffic: every worker in 𝒩(j) pushes block j
 //!   equally often in expectation under uniform selection.
+//! * [`DynamicPlacement`] — the *initial* map of the adaptive runtime
+//!   (`coordinator/rebalance.rs`): deliberately the naive contiguous
+//!   layout, because the whole point of `placement=dynamic` is that
+//!   the rebalancer discovers the hot head from observed push rates at
+//!   runtime and migrates it off shard 0 — no static prior needed.
 //!
-//! Selection: `--set placement=contiguous|roundrobin|hash|degree`
+//! Selection:
+//! `--set placement=contiguous|roundrobin|hash|degree|dynamic`
 //! ([`crate::config::PlacementKind`]).  The drain-side counterpart (which
 //! *thread* services a shard's queues) is `coordinator/sched.rs`.
 
@@ -55,6 +61,23 @@ pub fn make_placement(kind: PlacementKind) -> Box<dyn Placement> {
         PlacementKind::RoundRobin => Box::new(RoundRobinPlacement),
         PlacementKind::Hash => Box::new(HashPlacement),
         PlacementKind::Degree => Box::new(DegreePlacement),
+        PlacementKind::Dynamic => Box::new(DynamicPlacement),
+    }
+}
+
+/// Initial map for `--set placement=dynamic`: contiguous ranges, i.e.
+/// the least-informed static start.  The runtime rebalancer
+/// (`coordinator/rebalance.rs`) owns the map from then on, migrating
+/// hot blocks between shards from observed applied-push rates.
+pub struct DynamicPlacement;
+
+impl Placement for DynamicPlacement {
+    fn name(&self) -> &'static str {
+        "dynamic"
+    }
+
+    fn place(&self, n_blocks: usize, n_servers: usize, degree: &[usize]) -> Vec<usize> {
+        ContiguousPlacement.place(n_blocks, n_servers, degree)
     }
 }
 
@@ -182,12 +205,24 @@ mod tests {
             PlacementKind::RoundRobin,
             PlacementKind::Hash,
             PlacementKind::Degree,
+            PlacementKind::Dynamic,
         ] {
             let p = make_placement(kind);
             let map = p.place(16, 3, &deg);
             assert_eq!(map.len(), 16, "{}", p.name());
             assert!(map.iter().all(|&s| s < 3), "{}", p.name());
         }
+    }
+
+    #[test]
+    fn dynamic_initial_map_is_contiguous() {
+        // The adaptive runtime starts from the naive layout on purpose
+        // (rebalance.rs module docs); the rebalancer does the rest.
+        let deg = zipf_degrees(8, 4);
+        assert_eq!(
+            DynamicPlacement.place(8, 3, &deg),
+            ContiguousPlacement.place(8, 3, &deg)
+        );
     }
 
     #[test]

@@ -1,0 +1,353 @@
+//! Dynamic block re-placement: migrate hot blocks between server
+//! shards at runtime from observed push rates.
+//!
+//! The static placements (`coordinator/placement.rs`) fix the
+//! block→shard map at `Topology::build` time; `degree` packs by the
+//! static proxy |𝒩(j)|.  Under a Zipf-hot head whose *realized* push
+//! rates drift from that prior, shard load imbalance serializes exactly
+//! the updates the paper parallelizes.  `--set placement=dynamic`
+//! starts from the naive contiguous map and adapts: a [`Rebalancer`]
+//! (driven from the session monitor thread) samples per-block
+//! applied-push counters from the shared
+//! [`super::server::BlockTable`], computes a greedy LPT re-map from the
+//! observed rates, and publishes the hottest diffs into the shared
+//! [`BlockMap`] that workers read on the push path.
+//!
+//! ## Why migration preserves the paper's assumptions
+//!
+//! Adaptive Consensus ADMM (Xu et al., 2017) shows runtime adaptation
+//! of ADMM internals is sound as long as per-block atomicity and
+//! bounded staleness survive; Chang et al.'s async analysis
+//! (arXiv:1509.02597) frames the staleness budget.  Three mechanisms
+//! carry those invariants across a migration, with **zero added locks
+//! on the steady-state hot path**:
+//!
+//! 1. **Routing** is one `Release`-written, `Acquire`-read atomic per
+//!    block ([`BlockMap::owner`]): workers re-read the owner on every
+//!    push — a single atomic load replacing the old static `Vec`
+//!    index.  No epoch of the map needs to be consistent across
+//!    blocks, so there is nothing to lock.
+//! 2. **State** never moves: all per-block server state lives in the
+//!    shared `BlockTable` behind per-block write leases, so the "new
+//!    owner" takes the same lease the old owner used — the handoff is
+//!    the mutex the apply path already holds.
+//! 3. **Order** is seq-gated: the in-flight tail of the old lane can
+//!    race the head of the new lane, so applies are gated on the
+//!    per-(worker, block) `block_seq` (`coordinator/server.rs`) —
+//!    early arrivals park until their predecessors land, preserving
+//!    per-edge FIFO (Assumption 3's accounting) exactly.
+//!
+//! The rebalancer itself runs on the monitor thread (no extra thread,
+//! no worker-visible synchronization): scan → delta counts → greedy
+//! LPT → hysteresis gate → bounded migration burst.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use super::placement::load_imbalance;
+use super::server::BlockTable;
+
+/// Default minimum applied pushes per window before a scan acts (the
+/// rate-noise floor).  Shared with the DES migration model so virtual
+/// and threaded runs react on the same signal.
+pub const REBALANCE_MIN_DELTA: usize = 32;
+/// Default improvement factor a target map must beat the current one
+/// by before migrating (churn damping).
+pub const REBALANCE_HYSTERESIS: f64 = 0.95;
+/// Default max blocks migrated per scan (bounded burst).
+pub const REBALANCE_MAX_MOVES: usize = 8;
+
+/// The live block→shard routing map: one atomic owner per block plus a
+/// version/migration ledger.  Readers (workers, every push) pay one
+/// `Acquire` load; the writer (the rebalancer) publishes owner changes
+/// with `Release` stores.  Per-block independence means no cross-entry
+/// consistency is needed — this is the lock-free "versioned map" of
+/// the migration protocol (module docs).
+pub struct BlockMap {
+    owner: Vec<AtomicUsize>,
+    version: AtomicU64,
+    migrations: AtomicUsize,
+}
+
+impl BlockMap {
+    /// A map seeded from a static placement's `server_of_block`.
+    pub fn new(owners: &[usize]) -> Self {
+        BlockMap {
+            owner: owners.iter().map(|&s| AtomicUsize::new(s)).collect(),
+            version: AtomicU64::new(0),
+            migrations: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.owner.len()
+    }
+
+    /// Current owner of block `j` — the worker push-path read.
+    #[inline]
+    pub fn owner(&self, j: usize) -> usize {
+        self.owner[j].load(Ordering::Acquire)
+    }
+
+    /// Publish a new owner for block `j`.  Returns whether the owner
+    /// actually changed (and was counted as a migration).
+    pub fn set_owner(&self, j: usize, s: usize) -> bool {
+        let old = self.owner[j].swap(s, Ordering::Release);
+        if old != s {
+            self.version.fetch_add(1, Ordering::Release);
+            self.migrations.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Monotone map version (bumped once per owner change).
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Total owner changes published so far.
+    pub fn migrations(&self) -> usize {
+        self.migrations.load(Ordering::Relaxed)
+    }
+
+    /// A point-in-time copy of the owner map.
+    pub fn snapshot(&self) -> Vec<usize> {
+        self.owner.iter().map(|a| a.load(Ordering::Acquire)).collect()
+    }
+}
+
+/// Greedy LPT (longest-processing-time) packing of `weight` into
+/// `n_servers` bins: heaviest blocks first, each to the lightest bin.
+/// Deterministic: ties break by block id, then block count, then shard
+/// id — the same discipline as the static `degree` placement, so a
+/// stationary workload converges to a stable map.  Shared by the
+/// threaded [`Rebalancer`] and the DES migration model (`crate::sim`).
+pub fn lpt_map(weight: &[usize], n_servers: usize) -> Vec<usize> {
+    let n = weight.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| weight[b].cmp(&weight[a]).then(a.cmp(&b)));
+    let mut load = vec![0usize; n_servers];
+    let mut count = vec![0usize; n_servers];
+    let mut map = vec![0usize; n];
+    for j in order {
+        let s = (0..n_servers)
+            .min_by_key(|&s| (load[s], count[s], s))
+            .expect("n_servers > 0");
+        map[j] = s;
+        load[s] += weight[j];
+        count[s] += 1;
+    }
+    map
+}
+
+/// Pure migration planning, shared verbatim by the threaded
+/// [`Rebalancer`] and the DES migration model (`crate::sim`) so both
+/// react identically to the same rate window: greedy-LPT re-pack of
+/// `delta`, gated on beating the current imbalance by `hysteresis`,
+/// returning at most `max_moves` `(block, new_owner)` moves sorted
+/// hottest-first.  Empty = keep the current map.  (The noise-floor /
+/// window bookkeeping stays with the callers, which own the counters.)
+pub fn plan_rebalance(
+    current: &[usize],
+    delta: &[usize],
+    n_servers: usize,
+    hysteresis: f64,
+    max_moves: usize,
+) -> Vec<(usize, usize)> {
+    if n_servers < 2 || current.is_empty() {
+        return Vec::new();
+    }
+    let cur_imb = load_imbalance(current, delta, n_servers);
+    let target = lpt_map(delta, n_servers);
+    let tgt_imb = load_imbalance(&target, delta, n_servers);
+    if tgt_imb >= cur_imb * hysteresis {
+        return Vec::new();
+    }
+    // Hottest mismatched blocks first, bounded per scan so one pass
+    // never floods the in-flight reorder window.
+    let mut diffs: Vec<usize> =
+        (0..current.len()).filter(|&j| target[j] != current[j]).collect();
+    diffs.sort_by(|&a, &b| delta[b].cmp(&delta[a]).then(a.cmp(&b)));
+    diffs.truncate(max_moves);
+    diffs.into_iter().map(|j| (j, target[j])).collect()
+}
+
+/// Samples per-block applied-push rates and migrates hot blocks toward
+/// a balanced map.  Owned and driven by one thread (the session
+/// monitor); everything it shares with workers/servers is the atomic
+/// [`BlockMap`] and the `BlockTable` counters it reads.
+pub struct Rebalancer {
+    map: Arc<BlockMap>,
+    table: Arc<BlockTable>,
+    n_servers: usize,
+    /// Counter snapshot at the last completed scan (rate window start).
+    last: Vec<usize>,
+    /// Minimum applied pushes per window before acting (noise floor).
+    pub min_delta: usize,
+    /// Act only if the LPT target beats the current imbalance by this
+    /// factor (churn damping; 0.95 = require a 5% improvement).
+    pub hysteresis: f64,
+    /// Max blocks migrated per scan (bounded burst; hottest first).
+    pub max_moves: usize,
+}
+
+impl Rebalancer {
+    pub fn new(map: Arc<BlockMap>, table: Arc<BlockTable>, n_servers: usize) -> Self {
+        let n = map.n_blocks();
+        Rebalancer {
+            map,
+            table,
+            n_servers,
+            last: vec![0; n],
+            min_delta: REBALANCE_MIN_DELTA,
+            hysteresis: REBALANCE_HYSTERESIS,
+            max_moves: REBALANCE_MAX_MOVES,
+        }
+    }
+
+    /// One sampling + migration pass; returns blocks migrated.  The
+    /// window accumulates across calls until `min_delta` pushes were
+    /// observed, so a fast caller cadence only sharpens reaction time.
+    pub fn scan(&mut self) -> usize {
+        let n = self.map.n_blocks();
+        if self.n_servers < 2 || n == 0 {
+            return 0;
+        }
+        let counts: Vec<usize> = (0..n).map(|j| self.table.push_count(j)).collect();
+        let delta: Vec<usize> =
+            counts.iter().zip(&self.last).map(|(c, l)| c.saturating_sub(*l)).collect();
+        let total: usize = delta.iter().sum();
+        if total < self.min_delta {
+            // Window too small to be signal; keep accumulating.
+            return 0;
+        }
+        self.last = counts;
+
+        let current = self.map.snapshot();
+        let mut moved = 0usize;
+        for (j, s) in
+            plan_rebalance(&current, &delta, self.n_servers, self.hysteresis, self.max_moves)
+        {
+            if self.map.set_owner(j, s) {
+                moved += 1;
+            }
+        }
+        moved
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::block_store::BlockStore;
+    use crate::coordinator::messages::PushMsg;
+    use crate::coordinator::server::ProxBackend;
+    use crate::coordinator::topology::Topology;
+    use crate::data::{gen_partitioned, BlockGeometry, LossKind, SynthSpec};
+    use crate::problem::Problem;
+
+    #[test]
+    fn block_map_tracks_versions_and_migrations() {
+        let m = BlockMap::new(&[0, 0, 1, 1]);
+        assert_eq!(m.n_blocks(), 4);
+        assert_eq!(m.owner(2), 1);
+        assert_eq!(m.version(), 0);
+        assert!(m.set_owner(0, 1));
+        assert!(!m.set_owner(0, 1), "no-op move counted");
+        assert!(m.set_owner(0, 0));
+        assert_eq!(m.version(), 2);
+        assert_eq!(m.migrations(), 2);
+        assert_eq!(m.snapshot(), vec![0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn lpt_map_balances_and_is_deterministic() {
+        // One hot block + uniform tail over 2 bins: the hot block gets
+        // its own-ish bin and the tail fills around it.
+        let w = vec![10usize, 1, 1, 1, 1, 1, 1, 1];
+        let a = lpt_map(&w, 2);
+        let b = lpt_map(&w, 2);
+        assert_eq!(a, b);
+        let imb = load_imbalance(&a, &w, 2);
+        assert!(imb <= 1.2, "LPT left imbalance {imb}");
+        // Hot block alone on a shard is the LPT signature here.
+        let hot = a[0];
+        let hot_load: usize =
+            (0..8).filter(|&j| a[j] == hot).map(|j| w[j]).sum();
+        assert!(hot_load <= 11, "hot shard overloaded: {hot_load}");
+    }
+
+    #[test]
+    fn rebalancer_migrates_a_contiguous_hot_head_toward_balance() {
+        // Every worker touches every block; the synthetic Zipf pushes
+        // below hammer the low-index head, all of which contiguous
+        // placement parks on shard 0.
+        let n_blocks = 8usize;
+        let spec = SynthSpec {
+            samples: 24,
+            geometry: BlockGeometry::new(n_blocks, 4),
+            nnz_per_row: 3,
+            blocks_per_worker: n_blocks,
+            shared_blocks: n_blocks,
+            ..Default::default()
+        };
+        let (_, shards) = gen_partitioned(&spec, 3);
+        let topo = Topology::build(&shards, n_blocks, 2);
+        let store = std::sync::Arc::new(BlockStore::new(n_blocks, 4));
+        let problem = Problem::new(LossKind::Logistic, 0.0, 1e4);
+        let table =
+            std::sync::Arc::new(BlockTable::new(&topo, store, problem, 2.0, 0.1));
+        let map = std::sync::Arc::new(BlockMap::new(&topo.server_of_block));
+        // Contiguous default: blocks 0..4 on shard 0.
+        assert_eq!(map.owner(0), 0);
+        assert_eq!(map.owner(1), 0);
+
+        let mut rb = Rebalancer::new(map.clone(), table.clone(), 2);
+        // Below the noise floor nothing moves.
+        assert_eq!(rb.scan(), 0);
+
+        // Zipf-ish traffic: block 0 ≫ block 1 ≫ tail, straight into the
+        // shared table (what the server drain loops do).
+        let mut seqs = vec![0u64; n_blocks];
+        let mut feed = |j: usize, times: usize| {
+            for _ in 0..times {
+                seqs[j] += 1;
+                let msg = PushMsg {
+                    worker: topo.workers_of_block[j][0],
+                    block: j,
+                    w: vec![0.1; 4],
+                    worker_epoch: 0,
+                    z_version_used: 0,
+                    block_seq: seqs[j],
+                    sent_at: None,
+                    recycle: None,
+                };
+                table.ingest(&msg, &ProxBackend::Native).unwrap();
+            }
+        };
+        feed(0, 60);
+        feed(1, 30);
+        for j in 2..n_blocks {
+            feed(j, 4);
+        }
+        let moved = rb.scan();
+        assert!(moved > 0, "rebalancer ignored a hot contiguous head");
+        assert!(map.migrations() >= moved);
+        // The two hottest blocks must no longer share a shard.
+        assert_ne!(map.owner(0), map.owner(1), "hot head not split: {:?}", map.snapshot());
+
+        // Stationary traffic: the map settles (hysteresis) instead of
+        // churning.
+        feed(0, 60);
+        feed(1, 30);
+        for j in 2..n_blocks {
+            feed(j, 4);
+        }
+        let before = map.snapshot();
+        rb.scan();
+        let after = map.snapshot();
+        assert_eq!(before, after, "map churned under a stationary load");
+    }
+}

@@ -33,6 +33,16 @@
 //! Budgeted drains (at most [`DRAIN_BUDGET`] messages per claim) bound
 //! how long a thief holds someone else's lane, so the owner coming
 //! back never starves behind its own queue.
+//!
+//! ## Elastic thread pool (`--set server_threads=N`)
+//!
+//! [`run_pool`] decouples thread count from shard count: when the
+//! session runs `N != n_servers` threads, every thread services every
+//! shard's lanes (own-first affinity at `tid % n_servers`), so
+//! oversubscribed shards borrow CPU from idle threads and a single
+//! thread can drain any number of shards.  The same lane-claim + block-
+//! lease machinery makes this safe — a pool thread is just a permanent
+//! "thief" with no shard of its own to favor beyond affinity.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
@@ -246,6 +256,33 @@ pub fn run_server(
     }
 }
 
+/// Elastic-pool thread main loop: thread `tid` of a pool whose size is
+/// decoupled from the shard count services EVERY shard's lanes,
+/// sweeping its affinity shard (`tid % n_servers`) first for locality.
+/// Returns once every lane of every shard is terminal (all producers
+/// flushed + shutdown observed, or lanes force-closed).
+///
+/// Call with the same `rts` slice from every pool thread; any `tid`
+/// works (only the sweep starting point depends on it).
+pub fn run_pool(rts: &[ShardRt], tid: usize, prox: &ProxBackend) -> Result<()> {
+    let n = rts.len();
+    let mut backoff = Backoff::new();
+    loop {
+        let mut applied = 0usize;
+        for k in 0..n {
+            applied += sweep(&rts[(tid + k) % n], prox)?;
+        }
+        if rts.iter().all(ShardRt::all_done) {
+            return Ok(());
+        }
+        if applied == 0 {
+            backoff.snooze();
+        } else {
+            backoff.reset();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -281,7 +318,8 @@ mod tests {
             w: vec![0.1; 4],
             worker_epoch: epoch,
             z_version_used: 0,
-            sent_at: std::time::Instant::now(),
+            block_seq: 0,
+            sent_at: None,
             recycle: None,
         }
     }
@@ -351,6 +389,68 @@ mod tests {
                         "{kind:?}/{drain:?}/batch={batch}: a shard applied nothing: {per_shard:?}"
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn elastic_pool_drains_everything_with_any_thread_count() {
+        // server_threads decoupled from shard count: 1 thread for 2
+        // shards (scarcity) and 3 threads for 2 shards (oversubscribed
+        // shards borrow CPU) must both drain every lane.
+        for kind in [TransportKind::Mpsc, TransportKind::SpscRing] {
+            for n_threads in [1usize, 3] {
+                let (n_blocks, n_servers, workers, per_worker) = (6usize, 2usize, 3usize, 40usize);
+                let (topo, store, problem) = setup(n_blocks, n_servers, workers);
+                let transport = make_transport(kind, workers, n_servers, 8, 1);
+                let rts: Vec<ShardRt> = (0..n_servers)
+                    .map(|sid| {
+                        let shard =
+                            ServerShard::new(sid, &topo, store.clone(), problem, 2.0, 0.1);
+                        ShardRt::new(shard, transport.as_ref())
+                    })
+                    .collect();
+                std::thread::scope(|scope| {
+                    let mut producers = Vec::new();
+                    for w in 0..workers {
+                        let mut tx = transport.connect_worker(w);
+                        let topo = &topo;
+                        producers.push(scope.spawn(move || {
+                            for i in 0..per_worker {
+                                let j = topo.blocks_of_worker[w]
+                                    [i % topo.blocks_of_worker[w].len()];
+                                tx.send(topo.server_of_block[j], push(w, j, i)).unwrap();
+                            }
+                            tx.flush().unwrap();
+                        }));
+                    }
+                    let rts_ref = &rts;
+                    let mut pool = Vec::new();
+                    for tid in 0..n_threads {
+                        pool.push(scope.spawn(move || {
+                            run_pool(rts_ref, tid, &ProxBackend::Native).unwrap();
+                        }));
+                    }
+                    for p in producers {
+                        p.join().unwrap();
+                    }
+                    transport.shutdown();
+                    for t in pool {
+                        t.join().unwrap();
+                    }
+                });
+                let per_shard: Vec<usize> =
+                    rts.iter().map(|rt| rt.shard.stats().pushes).collect();
+                let total: usize = per_shard.iter().sum();
+                assert_eq!(
+                    total,
+                    workers * per_worker,
+                    "{kind:?}/threads={n_threads}: {per_shard:?}"
+                );
+                assert!(
+                    per_shard.iter().all(|&c| c > 0),
+                    "{kind:?}/threads={n_threads}: a shard applied nothing: {per_shard:?}"
+                );
             }
         }
     }

@@ -7,31 +7,53 @@
 //! the dirty copy immediately — workers never wait for an epoch barrier.
 //! The w̃ running sum makes each update O(db), independent of |𝒩(j)|.
 //!
-//! ## Ownership / the block write lease
+//! ## Ownership / the block write lease / the [`BlockTable`]
 //!
 //! Through PR 3 the shard was the only *thread* ever applying pushes to
-//! its blocks, so "sole writer" was a static property.  With the
-//! work-stealing drain policy (`coordinator/sched.rs`) any server
-//! thread may drain a lane of this shard, so the writer role is handed
-//! off **explicitly**: all mutable per-block state (w̃ cache, running
-//! sum, z̃ cache, round accounting) lives in a per-block
-//! `Mutex<BlockState>` — the **block write lease**.  Holding the lease
-//! spans the whole read-modify-write, *including* the seqlock-store
-//! publish, so at any instant each block still has exactly one writer
-//! and the store's per-block writer serialization is never contended
-//! from here.  Without stealing the lease is uncontended by
-//! construction (one CAS each way); under stealing it is contended
-//! only when two drainers hit the *same block* at the same moment —
-//! per-block atomicity, which is all Hong's incremental async-ADMM
-//! analysis (arXiv:1412.6058) needs.
+//! its blocks, so "sole writer" was a static property.  Two later
+//! layers made the writer role explicitly mobile:
 //!
-//! Hot-path notes: the shard keeps an authoritative copy of each owned
-//! z̃_j (`z_cache` inside the lease) and never reads a block back from
-//! the store — `handle_push` touches the store once for the version
-//! (staleness stat) and once for the write.  The w̃-sum maintenance is
-//! the 4-wide unrolled [`add_assign_diff`].  Pushed w buffers are
-//! pooled: after the update the shard sends each buffer home on the
-//! message's recycle channel instead of freeing it.
+//! * the work-stealing drain policy (`coordinator/sched.rs`, PR 4):
+//!   any server thread may drain a lane of this shard;
+//! * dynamic re-placement (`coordinator/rebalance.rs`, this PR): the
+//!   *shard* owning a block may change at runtime, so a block's pushes
+//!   can arrive through two different shards' lanes mid-migration.
+//!
+//! All mutable per-block state (w̃ cache, running sum, z̃ cache, round
+//! accounting, seq gate) therefore lives in a [`BlockTable`] shared by
+//! every shard of a run: one `Mutex<BlockState>` per **global** block —
+//! the **block write lease**.  Holding the lease spans the whole
+//! read-modify-write, *including* the seqlock-store publish, so at any
+//! instant each block still has exactly one writer no matter which
+//! shard's lane (or which thread) delivered the push.  Without stealing
+//! or migration the lease is uncontended by construction (one CAS each
+//! way); contention requires two drainers on the *same block* at the
+//! same moment — per-block atomicity, which is all Hong's incremental
+//! async-ADMM analysis (arXiv:1412.6058) needs.
+//!
+//! ## Seq-gated application (migration safety)
+//!
+//! Per-(worker, block) FIFO is what Algorithm 1's staleness accounting
+//! assumes.  Lanes preserve it within one (worker, shard) stream, but a
+//! migration re-targets a worker's pushes for block j from shard A's
+//! lane to shard B's — and B's thread can reach its lane first.  Each
+//! worker therefore stamps a per-(worker, block) sequence number
+//! ([`super::messages::PushMsg::block_seq`]); under the lease, a push
+//! applies only when it is the *next* one for its (worker, block) edge.
+//! An early arrival parks (detached from its pooled buffer) in the
+//! block's `pending` list and is applied the moment its predecessor
+//! lands — the out-of-order window only exists while a migration's
+//! in-flight tail drains, so `pending` is empty in steady state and the
+//! gate costs one compare per apply.  `block_seq == 0` bypasses the
+//! gate (unsequenced test/bench traffic).
+//!
+//! Hot-path notes: the table keeps an authoritative copy of each z̃_j
+//! (`z_cache` inside the lease) and never reads a block back from the
+//! store — an apply touches the store once for the version (staleness
+//! stat) and once for the write.  The w̃-sum maintenance is the 4-wide
+//! unrolled [`add_assign_diff`].  Pushed w buffers are pooled: after
+//! the update the shard sends each buffer home on the message's recycle
+//! channel instead of freeing it.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -83,14 +105,15 @@ pub struct ServerStats {
     /// Max observed z-version staleness across handled pushes
     /// (Assumption 3 monitor).
     pub max_staleness: u64,
-    /// Max queueing delay (send → handle) in seconds.
+    /// Max queueing delay (send → handle) in seconds, over the sampled
+    /// (`sent_at = Some`) messages.
     pub max_queue_s: f64,
     /// Full z_j rounds completed (all of 𝒩(j) contributed since last
     /// round) — the paper's server line 5 epoch counter.
     pub rounds: usize,
 }
 
-/// All mutable state of one owned block, behind its write lease.
+/// All mutable state of one block, behind its write lease.
 struct BlockState {
     /// w̃_{i,j} cache, one vector per worker in 𝒩(j).
     w_tilde: Vec<Vec<f32>>,
@@ -106,48 +129,50 @@ struct BlockState {
     z_new: Vec<f32>,
     /// Full rounds completed on this block.
     rounds: usize,
+    /// Next expected `block_seq` per worker slot (seq gate; 1-based).
+    next_seq: Vec<u64>,
+    /// Early arrivals parked until their predecessors land (detached
+    /// copies; empty in steady state — see module docs).
+    pending: Vec<PushMsg>,
 }
 
-pub struct ServerShard {
-    pub id: usize,
-    /// Owned global block ids.
-    blocks: Vec<usize>,
-    /// local index of each global block (dense map).
-    local_of_block: Vec<Option<usize>>,
-    /// Per local block: the write lease over all of its mutable state.
+/// What one [`BlockTable::ingest`] call did (possibly draining parked
+/// predecessors' successors along the way).
+pub(crate) struct Ingested {
+    pub(crate) applied: usize,
+    pub(crate) max_staleness: u64,
+}
+
+/// Per-block server state for ALL consensus blocks of a run, shared by
+/// every [`ServerShard`] (module docs: the block write lease).  Also
+/// carries the per-block applied-push counters the dynamic rebalancer
+/// samples (`coordinator/rebalance.rs`).
+pub struct BlockTable {
     state: Vec<Mutex<BlockState>>,
-    /// γ + Σ_{i∈𝒩(j)} ρ_i per local block.
+    /// γ + Σ_{i∈𝒩(j)} ρ_i per block.
     denom: Vec<f32>,
-    /// worker id -> slot in w_tilde[local] (per local block).
+    /// worker id -> slot in w_tilde (per block; usize::MAX = not in 𝒩).
     worker_slot: Vec<Vec<usize>>,
+    /// Applied pushes per block (relaxed; the rebalancer's load signal).
+    push_count: Vec<AtomicUsize>,
     gamma: f32,
     problem: Problem,
     store: Arc<BlockStore>,
-    // -- stats (atomic: any server thread may apply to this shard) ------
-    pushes: AtomicUsize,
-    max_staleness: AtomicU64,
-    /// f64 bit pattern of the max queueing delay in seconds (fetch_max
-    /// on the bits is order-preserving for non-negative floats).
-    max_queue_s_bits: AtomicU64,
 }
 
-impl ServerShard {
+impl BlockTable {
     pub fn new(
-        id: usize,
         topo: &Topology,
         store: Arc<BlockStore>,
         problem: Problem,
         rho: f32,
         gamma: f32,
     ) -> Self {
-        let blocks = topo.blocks_of_server[id].clone();
         let db = topo.block_size;
-        let mut local_of_block = vec![None; topo.n_blocks];
-        let mut state = Vec::with_capacity(blocks.len());
-        let mut denom = Vec::with_capacity(blocks.len());
-        let mut worker_slot = Vec::with_capacity(blocks.len());
-        for (l, &j) in blocks.iter().enumerate() {
-            local_of_block[j] = Some(l);
+        let mut state = Vec::with_capacity(topo.n_blocks);
+        let mut denom = Vec::with_capacity(topo.n_blocks);
+        let mut worker_slot = Vec::with_capacity(topo.n_blocks);
+        for j in 0..topo.n_blocks {
             let degree = topo.workers_of_block[j].len();
             denom.push(gamma + rho * degree as f32);
             let mut slots = vec![usize::MAX; topo.n_workers];
@@ -167,88 +192,253 @@ impl ServerShard {
                 z_cache: z0,
                 z_new: vec![0.0; db],
                 rounds: 0,
+                next_seq: vec![1; degree],
+                pending: Vec::new(),
             }));
         }
-        ServerShard {
-            id,
-            blocks,
-            local_of_block,
+        BlockTable {
             state,
             denom,
             worker_slot,
+            push_count: (0..topo.n_blocks).map(|_| AtomicUsize::new(0)).collect(),
             gamma,
             problem,
             store,
+        }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.state.len()
+    }
+
+    /// Applied pushes on block `j` so far (the rebalancer's load
+    /// signal; relaxed read).
+    pub fn push_count(&self, j: usize) -> usize {
+        self.push_count[j].load(Ordering::Relaxed)
+    }
+
+    /// Diagnostic: messages parked behind a seq gap on block `j`
+    /// (0 in steady state; tests assert it returns to 0 after drain).
+    pub fn pending_len(&self, j: usize) -> usize {
+        self.state[j].lock().unwrap().pending.len()
+    }
+
+    /// Diagnostic: next expected per-(worker, block) sequence number
+    /// (1-based; `sent + 1` once every push from `worker` applied).
+    pub fn next_seq(&self, j: usize, worker: usize) -> u64 {
+        let slot = self.worker_slot[j][worker];
+        assert_ne!(slot, usize::MAX, "worker {worker} not in N({j})");
+        self.state[j].lock().unwrap().next_seq[slot]
+    }
+
+    /// Diagnostic: current cached w̃_{worker, j}.
+    pub fn w_tilde_of(&self, j: usize, worker: usize) -> Vec<f32> {
+        let slot = self.worker_slot[j][worker];
+        assert_ne!(slot, usize::MAX, "worker {worker} not in N({j})");
+        self.state[j].lock().unwrap().w_tilde[slot].clone()
+    }
+
+    /// Test/bench hook: current z̃ cache of block `j`.
+    pub fn z_cache_of(&self, j: usize) -> Vec<f32> {
+        self.state[j].lock().unwrap().z_cache.clone()
+    }
+
+    /// Apply one push under the block's write lease, seq-gated (module
+    /// docs).  Returns how many pushes were applied — 0 if this one
+    /// parked behind a seq gap, possibly > 1 if it unblocked parked
+    /// successors — and the max observed staleness among them.
+    pub(crate) fn ingest(&self, msg: &PushMsg, prox: &ProxBackend) -> Result<Ingested> {
+        let j = msg.block;
+        let slot = self.worker_slot[j][msg.worker];
+        debug_assert_ne!(slot, usize::MAX, "worker {} not in N({})", msg.worker, j);
+
+        // Take the block write lease for the whole read-modify-write +
+        // publish: this is the explicit writer-role handoff that makes
+        // work-stealing and migration safe (module docs).
+        let mut guard = self.state[j].lock().unwrap();
+        let st = &mut *guard;
+        let mut out = Ingested { applied: 0, max_staleness: 0 };
+        if msg.block_seq != 0 {
+            let expect = st.next_seq[slot];
+            if msg.block_seq > expect {
+                // Predecessors still in another lane (migration tail):
+                // park a detached copy; the caller recycles the pooled
+                // buffer as usual.
+                st.pending.push(msg.detached());
+                return Ok(out);
+            }
+            if msg.block_seq < expect {
+                // Transports never duplicate; tolerate in release.
+                debug_assert!(false, "duplicate push seq {} < {expect}", msg.block_seq);
+                return Ok(out);
+            }
+        }
+        let stale = self.apply_locked(st, j, slot, &msg.w, msg.z_version_used, prox)?;
+        if msg.block_seq != 0 {
+            st.next_seq[slot] += 1;
+        }
+        out.applied += 1;
+        out.max_staleness = out.max_staleness.max(stale);
+
+        // Drain any parked successor now unblocked (any worker of this
+        // block; each apply may unblock the next in its chain).
+        loop {
+            let next = st.pending.iter().position(|p| {
+                let s = self.worker_slot[j][p.worker];
+                p.block_seq == st.next_seq[s]
+            });
+            let Some(pos) = next else { break };
+            let parked = st.pending.swap_remove(pos);
+            let s = self.worker_slot[j][parked.worker];
+            let stale =
+                self.apply_locked(st, j, s, &parked.w, parked.z_version_used, prox)?;
+            st.next_seq[s] += 1;
+            out.applied += 1;
+            out.max_staleness = out.max_staleness.max(stale);
+        }
+        Ok(out)
+    }
+
+    /// The Eq. 13 incremental update + seqlock publish.  O(db).  Caller
+    /// holds block `j`'s lease.
+    fn apply_locked(
+        &self,
+        st: &mut BlockState,
+        j: usize,
+        slot: usize,
+        w: &[f32],
+        z_version_used: u64,
+        prox: &ProxBackend,
+    ) -> Result<u64> {
+        // w_sum += w_new - w̃_old; w̃ := w_new (4-wide unrolled).
+        add_assign_diff(&mut st.w_sum, w, &st.w_tilde[slot]);
+        st.w_tilde[slot].copy_from_slice(w);
+
+        // z̃_j update + publish.  The cached z̃ is authoritative
+        // (lease-holder is the sole writer), so only the version is
+        // read from the store — no block copy that the prox would
+        // overwrite anyway.
+        let cur_version = self.store.version(j);
+        prox.apply(
+            &st.z_cache,
+            &st.w_sum,
+            self.gamma,
+            self.denom[j],
+            self.problem.lambda,
+            self.problem.clip,
+            &mut st.z_new,
+        )?;
+        self.store.write(j, &st.z_new);
+        std::mem::swap(&mut st.z_cache, &mut st.z_new);
+
+        // Round accounting (inside the lease: per-block mutable state).
+        st.contributed[slot] = true;
+        if st.contributed.iter().all(|&c| c) {
+            st.contributed.iter_mut().for_each(|c| *c = false);
+            st.rounds += 1;
+        }
+
+        self.push_count[j].fetch_add(1, Ordering::Relaxed);
+        Ok(cur_version.saturating_sub(z_version_used))
+    }
+
+    fn rounds_of(&self, j: usize) -> usize {
+        self.state[j].lock().unwrap().rounds
+    }
+}
+
+pub struct ServerShard {
+    pub id: usize,
+    /// Blocks this shard owned at topology-build time (static stats
+    /// attribution; under dynamic re-placement the live owner is the
+    /// rebalancer's `BlockMap`).
+    owned: Vec<usize>,
+    owned_mask: Vec<bool>,
+    /// Reject pushes for blocks outside `owned` (static placements:
+    /// routing is fixed, a foreign push is a bug).  Dynamic placement
+    /// clears this — in-flight lane traffic legitimately lags the map.
+    strict: bool,
+    table: Arc<BlockTable>,
+    // -- stats (atomic: any server thread may apply to this shard) ------
+    pushes: AtomicUsize,
+    max_staleness: AtomicU64,
+    /// f64 bit pattern of the max queueing delay in seconds (fetch_max
+    /// on the bits is order-preserving for non-negative floats).
+    max_queue_s_bits: AtomicU64,
+}
+
+impl ServerShard {
+    /// Standalone shard with a private full [`BlockTable`] (tests,
+    /// benches, single-shard tools).  The session path shares one table
+    /// across shards via [`ServerShard::with_table`].
+    pub fn new(
+        id: usize,
+        topo: &Topology,
+        store: Arc<BlockStore>,
+        problem: Problem,
+        rho: f32,
+        gamma: f32,
+    ) -> Self {
+        let table = Arc::new(BlockTable::new(topo, store, problem, rho, gamma));
+        Self::with_table(id, topo, table, true)
+    }
+
+    /// A shard over a (usually shared) block table.  `strict` enforces
+    /// static routing (panic on foreign blocks); pass `false` under
+    /// dynamic re-placement.
+    pub fn with_table(id: usize, topo: &Topology, table: Arc<BlockTable>, strict: bool) -> Self {
+        let owned = topo.blocks_of_server[id].clone();
+        let mut owned_mask = vec![false; topo.n_blocks];
+        for &j in &owned {
+            owned_mask[j] = true;
+        }
+        ServerShard {
+            id,
+            owned,
+            owned_mask,
+            strict,
+            table,
             pushes: AtomicUsize::new(0),
             max_staleness: AtomicU64::new(0),
             max_queue_s_bits: AtomicU64::new(0),
         }
     }
 
-    /// Apply one push (Eq. 13 incremental form). O(db).  `&self`: any
-    /// server thread holding this block's lane claim may call it; the
-    /// per-block lease serializes concurrent appliers.
+    /// The (possibly shared) per-block state table.
+    pub fn table(&self) -> &Arc<BlockTable> {
+        &self.table
+    }
+
+    /// Apply one push (Eq. 13 incremental form, seq-gated). O(db).
+    /// `&self`: any server thread holding this block's lane claim may
+    /// call it; the per-block lease serializes concurrent appliers.
     pub fn handle_push(&self, msg: &PushMsg, prox: &ProxBackend) -> Result<()> {
-        let l = self.local_of_block[msg.block]
-            .unwrap_or_else(|| panic!("server {} got push for foreign block {}", self.id, msg.block));
-        let slot = self.worker_slot[l][msg.worker];
-        debug_assert_ne!(slot, usize::MAX, "worker {} not in N({})", msg.worker, msg.block);
-
-        {
-            // Take the block write lease for the whole read-modify-write
-            // + publish: this is the explicit writer-role handoff that
-            // makes work-stealing safe (module docs).
-            let mut st = self.state[l].lock().unwrap();
-            let st = &mut *st;
-
-            // w_sum += w_new - w̃_old; w̃ := w_new (4-wide unrolled).
-            add_assign_diff(&mut st.w_sum, &msg.w, &st.w_tilde[slot]);
-            st.w_tilde[slot].copy_from_slice(&msg.w);
-
-            // z̃_j update + publish.  The cached z̃ is authoritative
-            // (lease-holder is the sole writer), so only the version is
-            // read from the store — no block copy that the prox would
-            // overwrite anyway.
-            let cur_version = self.store.version(msg.block);
-            prox.apply(
-                &st.z_cache,
-                &st.w_sum,
-                self.gamma,
-                self.denom[l],
-                self.problem.lambda,
-                self.problem.clip,
-                &mut st.z_new,
-            )?;
-            self.store.write(msg.block, &st.z_new);
-            std::mem::swap(&mut st.z_cache, &mut st.z_new);
-
-            // Round accounting (inside the lease: `contributed` is
-            // per-block mutable state).
-            st.contributed[slot] = true;
-            if st.contributed.iter().all(|&c| c) {
-                st.contributed.iter_mut().for_each(|c| *c = false);
-                st.rounds += 1;
-            }
-
-            self.max_staleness
-                .fetch_max(cur_version.saturating_sub(msg.z_version_used), Ordering::Relaxed);
+        if self.strict && !self.owned_mask[msg.block] {
+            panic!("server {} got push for foreign block {}", self.id, msg.block);
         }
-
-        // Shard-level stats: plain atomics, no lease needed.
-        self.pushes.fetch_add(1, Ordering::Relaxed);
-        let queue_s = msg.sent_at.elapsed().as_secs_f64();
-        self.max_queue_s_bits.fetch_max(queue_s.to_bits(), Ordering::Relaxed);
+        let ingested = self.table.ingest(msg, prox)?;
+        if ingested.applied > 0 {
+            self.pushes.fetch_add(ingested.applied, Ordering::Relaxed);
+            self.max_staleness.fetch_max(ingested.max_staleness, Ordering::Relaxed);
+        }
+        if let Some(at) = msg.sent_at {
+            // Queue-delay histogram: only sampled messages carry a
+            // timestamp (the send-side syscall is 1-in-64 epochs).
+            let queue_s = at.elapsed().as_secs_f64();
+            self.max_queue_s_bits.fetch_max(queue_s.to_bits(), Ordering::Relaxed);
+        }
         Ok(())
     }
 
     /// Snapshot of this shard's counters (pushes/staleness/queue delay
-    /// are atomics; rounds are summed over the per-block leases).
+    /// are atomics; rounds are summed over the statically-owned blocks'
+    /// leases, so shard totals still partition the run's blocks).
     pub fn stats(&self) -> ServerStats {
         ServerStats {
             pushes: self.pushes.load(Ordering::Relaxed),
             max_staleness: self.max_staleness.load(Ordering::Relaxed),
             max_queue_s: f64::from_bits(self.max_queue_s_bits.load(Ordering::Relaxed)),
-            rounds: self.state.iter().map(|st| st.lock().unwrap().rounds).sum(),
+            rounds: self.owned.iter().map(|&j| self.table.rounds_of(j)).sum(),
         }
     }
 
@@ -271,14 +461,13 @@ impl ServerShard {
     }
 
     pub fn owned_blocks(&self) -> &[usize] {
-        &self.blocks
+        &self.owned
     }
 
     /// Test/bench hook: current z̃ cache of global block `j`.
     #[cfg(test)]
     pub(crate) fn z_cache_of(&self, j: usize) -> Vec<f32> {
-        let l = self.local_of_block[j].expect("foreign block");
-        self.state[l].lock().unwrap().z_cache.clone()
+        self.table.z_cache_of(j)
     }
 }
 
@@ -309,7 +498,8 @@ mod tests {
             w,
             worker_epoch: 0,
             z_version_used: 0,
-            sent_at: std::time::Instant::now(),
+            block_seq: 0,
+            sent_at: None,
             recycle: None,
         }
     }
@@ -400,6 +590,52 @@ mod tests {
     }
 
     #[test]
+    fn non_strict_shard_applies_foreign_blocks_via_shared_table() {
+        // The dynamic-placement shape: two shards over ONE table, the
+        // "wrong" shard receiving a block's push mid-migration.  The
+        // update must land in the shared state exactly once.
+        let (topo, store, p) = setup();
+        let table = Arc::new(BlockTable::new(&topo, store.clone(), p, 10.0, 0.5));
+        let s0 = ServerShard::with_table(0, &topo, table.clone(), false);
+        let s1 = ServerShard::with_table(1, &topo, table.clone(), false);
+        let foreign = (0..4).find(|j| topo.server_of_block[*j] == 1).unwrap();
+        let worker = topo.workers_of_block[foreign][0];
+        s0.handle_push(&push(worker, foreign, vec![1.0; 4]), &ProxBackend::Native).unwrap();
+        s1.handle_push(&push(worker, foreign, vec![2.0; 4]), &ProxBackend::Native).unwrap();
+        assert_eq!(s0.stats().pushes, 1);
+        assert_eq!(s1.stats().pushes, 1);
+        assert_eq!(table.push_count(foreign), 2);
+        assert_eq!(table.w_tilde_of(foreign, worker), vec![2.0; 4]);
+    }
+
+    #[test]
+    fn seq_gate_defers_early_arrivals_and_applies_in_order() {
+        // Simulate the migration race: seq 2 and 3 arrive (via the new
+        // owner's lane) before seq 1 (still in the old owner's lane).
+        let (topo, store, p) = setup();
+        let srv = ServerShard::new(0, &topo, store, p, 10.0, 0.5);
+        let j = srv.owned_blocks()[0];
+        let w = topo.workers_of_block[j][0];
+        let seq_push = |seq: u64, val: f32| {
+            let mut m = push(w, j, vec![val; 4]);
+            m.block_seq = seq;
+            m
+        };
+        srv.handle_push(&seq_push(2, 2.0), &ProxBackend::Native).unwrap();
+        srv.handle_push(&seq_push(3, 3.0), &ProxBackend::Native).unwrap();
+        // Nothing applied yet: both parked behind the missing seq 1.
+        assert_eq!(srv.stats().pushes, 0);
+        assert_eq!(srv.table().pending_len(j), 2);
+        // Seq 1 lands: the whole chain applies, in order.
+        srv.handle_push(&seq_push(1, 1.0), &ProxBackend::Native).unwrap();
+        assert_eq!(srv.stats().pushes, 3);
+        assert_eq!(srv.table().pending_len(j), 0);
+        assert_eq!(srv.table().next_seq(j, w), 4);
+        // Final w̃ is the LAST sent value — FIFO preserved.
+        assert_eq!(srv.table().w_tilde_of(j, w), vec![3.0; 4]);
+    }
+
+    #[test]
     fn staleness_tracked() {
         let (topo, store, p) = setup();
         let srv = ServerShard::new(0, &topo, store.clone(), p, 10.0, 0.0);
@@ -413,6 +649,22 @@ mod tests {
         m.z_version_used = 0;
         srv.handle_push(&m, &ProxBackend::Native).unwrap();
         assert_eq!(srv.stats().max_staleness, 3);
+    }
+
+    #[test]
+    fn sampled_sent_at_feeds_queue_delay_stat() {
+        let (topo, store, p) = setup();
+        let srv = ServerShard::new(0, &topo, store, p, 10.0, 0.0);
+        let j = srv.owned_blocks()[0];
+        let w = topo.workers_of_block[j][0];
+        // Unsampled messages leave the stat untouched.
+        srv.handle_push(&push(w, j, vec![0.1; 4]), &ProxBackend::Native).unwrap();
+        assert_eq!(srv.stats().max_queue_s, 0.0);
+        // A sampled message (sent_at = Some) updates it.
+        let mut m = push(w, j, vec![0.2; 4]);
+        m.sent_at = Some(std::time::Instant::now() - std::time::Duration::from_millis(5));
+        srv.handle_push(&m, &ProxBackend::Native).unwrap();
+        assert!(srv.stats().max_queue_s >= 4e-3, "{}", srv.stats().max_queue_s);
     }
 
     #[test]

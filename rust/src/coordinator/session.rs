@@ -42,8 +42,9 @@ use super::compute::make_compute;
 use super::delay::DelayPolicy;
 use super::events::ObjSample;
 use super::placement::make_placement;
-use super::sched::{run_server, ShardRt};
-use super::server::{ProxBackend, ServerShard, ServerStats};
+use super::rebalance::{BlockMap, Rebalancer};
+use super::sched::{run_pool, run_server, ShardRt};
+use super::server::{BlockTable, ProxBackend, ServerShard, ServerStats};
 use super::topology::Topology;
 use super::transport::{make_transport, push_inflight, Transport};
 use super::worker::{WorkerCtx, WorkerStats};
@@ -51,7 +52,7 @@ use crate::admm::{
     check_theorem1, consensus_gap, objective_at_z, stationarity_residual, Objective,
 };
 use crate::baselines::BaselineReport;
-use crate::config::{Backend, Config};
+use crate::config::{Backend, Config, PlacementKind};
 use crate::data::{Dataset, WorkerShard};
 use crate::info;
 use crate::problem::Problem;
@@ -111,6 +112,10 @@ pub struct TrainReport {
     /// Strict Theorem-1 feasibility of the hyper-parameters used
     /// (threaded async path only; false elsewhere).
     pub theorem1_feasible: bool,
+    /// Blocks migrated between shards at runtime (`placement=dynamic`
+    /// on the threaded and DES paths; 0 for static placements and
+    /// baselines).
+    pub migrations: usize,
     /// Present iff the run was [`Algo::Sim`].
     pub sim: Option<SimExtras>,
 }
@@ -383,6 +388,7 @@ impl<'a> SessionBuilder<'a> {
                     stationarity: f64::NAN,
                     consensus_max: f64::NAN,
                     theorem1_feasible: false,
+                    migrations: r.migrations,
                     sim: Some(SimExtras {
                         virtual_time_s: r.virtual_time_s,
                         time_to_epoch: r.time_to_epoch,
@@ -412,6 +418,7 @@ fn from_baseline(r: BaselineReport) -> TrainReport {
         stationarity: f64::NAN,
         consensus_max: f64::NAN,
         theorem1_feasible: false,
+        migrations: 0,
         sim: None,
     }
 }
@@ -452,16 +459,21 @@ fn run_threaded<'o>(
         cfg.gamma as f64,
         cfg.max_delay,
     );
+    // Elastic pool size: 0 = the classic one-thread-per-shard shape.
+    let n_threads = if cfg.server_threads == 0 { cfg.n_servers } else { cfg.server_threads };
+    let dynamic = cfg.placement == PlacementKind::Dynamic;
+
     info!(
         "session",
-        "theorem1: min_alpha={:.3e} min_beta={:.3e} feasible={} (strict bound; paper runs gamma=0.01 anyway); transport={} placement={} drain={} batch={}",
+        "theorem1: min_alpha={:.3e} min_beta={:.3e} feasible={} (strict bound; paper runs gamma=0.01 anyway); transport={} placement={} drain={} batch={} server_threads={}",
         t1.min_alpha,
         t1.min_beta,
         t1.feasible,
         transport.name(),
         cfg.placement.as_str(),
         cfg.drain.as_str(),
-        cfg.batch
+        cfg.batch,
+        n_threads
     );
 
     let manifest = match cfg.backend {
@@ -485,25 +497,43 @@ fn run_threaded<'o>(
     let worker_results: Mutex<Vec<Option<(WorkerStats, Vec<f32>, Vec<f32>)>>> =
         Mutex::new((0..cfg.n_workers).map(|_| None).collect());
 
-    // Server shard state + claimable lanes, built up front: with
-    // `drain=steal` any server thread may service any shard, so the
-    // shards are shared (`sched.rs` documents the ownership handoff).
+    // All per-block server state lives in ONE table shared by every
+    // shard (the block write leases): with `drain=steal` any server
+    // thread may service any shard, and with `placement=dynamic` a
+    // block's pushes may arrive through two shards' lanes mid-migration
+    // (`server.rs` documents the ownership handoff).
+    let table =
+        Arc::new(BlockTable::new(&topo, store.clone(), problem, cfg.rho, cfg.gamma));
+    // The live routing map workers read per push.  Static placements
+    // never touch it after this; `placement=dynamic` hands it to the
+    // rebalancer below.
+    let map = Arc::new(BlockMap::new(&topo.server_of_block));
     let shard_rts: Vec<ShardRt> = (0..cfg.n_servers)
         .map(|sid| {
-            let shard =
-                ServerShard::new(sid, &topo, store.clone(), problem, cfg.rho, cfg.gamma);
+            let shard = ServerShard::with_table(sid, &topo, table.clone(), !dynamic);
             ShardRt::new(shard, transport.as_ref())
         })
         .collect();
+
+    // Runtime re-placement: driven from the monitor thread's wakeups
+    // (no extra thread, no locks any worker or server ever sees).
+    let mut rebalancer = (dynamic && cfg.n_servers > 1)
+        .then(|| Rebalancer::new(map.clone(), table.clone(), cfg.n_servers));
+    let rebalance_every = Duration::from_millis(cfg.rebalance_ms);
+    let mut last_scan = Instant::now();
 
     let start = Instant::now();
     let mut sampler = ObjectiveSampler::default();
 
     std::thread::scope(|scope| -> Result<()> {
-        let mut server_handles = Vec::with_capacity(cfg.n_servers);
+        let mut server_handles = Vec::with_capacity(n_threads);
         let mut worker_handles = Vec::with_capacity(cfg.n_workers);
         // -- server threads ------------------------------------------------
-        for sid in 0..cfg.n_servers {
+        // The classic shape (`server_threads=0`) pins thread k to shard
+        // k under the configured drain policy; an elastic pool
+        // (`server_threads=N != n_servers`) runs N identical threads
+        // that each service every shard's lanes, own-affinity first.
+        for tid in 0..n_threads {
             let manifest = manifest.as_ref();
             let shard_rts = &shard_rts;
             server_handles.push(scope.spawn(move || {
@@ -512,7 +542,7 @@ fn run_threaded<'o>(
                     Some(m) => match ServerProxXla::load(m, cfg.block_size) {
                         Ok(p) => ProxBackend::Xla(p),
                         Err(e) => {
-                            eprintln!("server {sid}: XLA prox unavailable ({e:#}); native fallback");
+                            eprintln!("server thread {tid}: XLA prox unavailable ({e:#}); native fallback");
                             ProxBackend::Native
                         }
                     },
@@ -520,7 +550,11 @@ fn run_threaded<'o>(
                 // A failing server loop panics the thread: the monitor's
                 // liveness check tears the run down and the scope join
                 // re-raises, so a dead shard stays a hard error.
-                run_server(shard_rts, sid, cfg.drain, &prox).expect("server loop failed");
+                if n_threads == cfg.n_servers {
+                    run_server(shard_rts, tid, cfg.drain, &prox).expect("server loop failed");
+                } else {
+                    run_pool(shard_rts, tid, &prox).expect("server pool loop failed");
+                }
             }));
         }
 
@@ -528,7 +562,7 @@ fn run_threaded<'o>(
         for shard in shards {
             let wid = shard.worker_id;
             let tx = transport.connect_worker(wid);
-            let topo = &topo;
+            let router: &BlockMap = &map;
             let store = &store;
             let progress = &progress[wid];
             let gate = &gate;
@@ -549,8 +583,8 @@ fn run_threaded<'o>(
                 .expect("construct worker compute backend");
                 let mut ctx = WorkerCtx::new(
                     shard,
-                    topo,
                     store,
+                    router,
                     tx,
                     policy,
                     cfg.selection,
@@ -596,6 +630,15 @@ fn run_threaded<'o>(
             if min_epoch >= cfg.epochs {
                 break;
             }
+            // Dynamic re-placement rides the monitor's wakeups: sample
+            // the per-block applied-push counters and migrate hot
+            // blocks when the observed rates say the map is stale.
+            if let Some(rb) = rebalancer.as_mut() {
+                if last_scan.elapsed() >= rebalance_every {
+                    rb.scan();
+                    last_scan = Instant::now();
+                }
+            }
             // Liveness: a server exiting before shutdown, or a worker
             // exiting below its epoch budget, died on a panic.  Stop
             // monitoring and shut the transport down so the remaining
@@ -612,10 +655,18 @@ fn run_threaded<'o>(
                 // close its lanes so workers blocked in send() fail
                 // loudly instead of hanging the scope join, and so
                 // steal-mode peers stop waiting on lanes that are never
-                // coming back.
-                for (sid, h) in server_handles.iter().enumerate() {
-                    if h.is_finished() {
-                        shard_rts[sid].close_lanes();
+                // coming back.  Pool threads have no fixed shard — the
+                // run is doomed either way (the scope join re-raises
+                // the panic), so close every shard's lanes there.
+                if n_threads == cfg.n_servers {
+                    for (sid, h) in server_handles.iter().enumerate() {
+                        if h.is_finished() {
+                            shard_rts[sid].close_lanes();
+                        }
+                    }
+                } else {
+                    for rt in shard_rts.iter() {
+                        rt.close_lanes();
                     }
                 }
                 break;
@@ -676,6 +727,7 @@ fn run_threaded<'o>(
         stationarity,
         consensus_max,
         theorem1_feasible: t1.feasible,
+        migrations: map.migrations(),
         sim: None,
     })
 }
@@ -707,6 +759,39 @@ mod tests {
         assert!(report.consensus_max.is_finite());
         assert_eq!(report.worker_stats.len(), cfg.n_workers);
         assert_eq!(report.server_stats.len(), cfg.n_servers);
+        // Static placement never migrates.
+        assert_eq!(report.migrations, 0);
+        // Version-gated pulls: blocks nobody touched since the last
+        // refresh skip the copy (a 240-epoch run always has some).
+        let skips: usize = report.worker_stats.iter().map(|w| w.pull_skips).sum();
+        assert!(skips > 0, "version gate never skipped a pull");
+    }
+
+    #[test]
+    fn elastic_pool_runs_with_decoupled_thread_count() {
+        // `server_threads != n_servers` must not change what is pushed
+        // or where the objective lands — 1 thread for 2 shards
+        // (scarcity) and 5 threads for 2 shards (oversubscription).
+        let (ds, shards) = {
+            let cfg = Config::tiny_test();
+            gen_partitioned(&cfg.synth_spec(), cfg.n_workers)
+        };
+        for threads in [1usize, 5] {
+            let mut cfg = Config::tiny_test();
+            cfg.epochs = 120;
+            cfg.server_threads = threads;
+            let report = train(&cfg, &ds, &shards);
+            assert_eq!(
+                report.total_pushes(),
+                cfg.epochs * cfg.n_workers,
+                "threads={threads}: push accounting broke"
+            );
+            assert!(
+                report.final_objective.total() < 0.68,
+                "threads={threads}: {}",
+                report.final_objective.total()
+            );
+        }
     }
 
     #[test]

@@ -797,7 +797,8 @@ mod tests {
             w: vec![epoch as f32; 4],
             worker_epoch: epoch,
             z_version_used: 0,
-            sent_at: std::time::Instant::now(),
+            block_seq: 0,
+            sent_at: None,
             recycle: None,
         }
     }

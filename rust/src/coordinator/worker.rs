@@ -7,8 +7,24 @@
 //! the pushed w buffer comes from a [`PushPool`] that the server shard
 //! recycles after applying the update — the steady-state push path is
 //! malloc-free end to end.
+//!
+//! Adaptive-runtime details on the push path (all lock-free):
+//!
+//! * the owning shard is re-read per push from the shared
+//!   [`BlockMap`] (one `Acquire` atomic load), so dynamic re-placement
+//!   re-targets a worker mid-run without any rendezvous;
+//! * each push carries a per-(worker, block) sequence number so the
+//!   server's seq-gated apply keeps per-edge FIFO exact across a
+//!   migration (`coordinator/server.rs`);
+//! * `z̃` refreshes are version-gated: a pull only re-copies blocks
+//!   whose store version advanced (one atomic read replaces a db-float
+//!   memcpy; skips counted in [`WorkerStats::pull_skips`]);
+//! * the `Instant::now` queue-delay timestamp is sampled 1-in-64 epochs
+//!   instead of taken every push — the syscall leaves the hot loop and
+//!   the latency stat stays statistically intact.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -17,13 +33,17 @@ use super::bufpool::PushPool;
 use super::compute::WorkerCompute;
 use super::delay::DelayPolicy;
 use super::messages::PushMsg;
+use super::rebalance::BlockMap;
 use super::session::MonitorGate;
-use super::topology::Topology;
 use super::transport::PushSender;
 use crate::admm::WorkerState;
 use crate::config::BlockSelection;
 use crate::data::WorkerShard;
 use crate::util::rng::Rng;
+
+/// Stamp `sent_at` on one epoch in this many (keeps the queue-delay
+/// histogram populated without a clock syscall per push).
+const SENT_AT_SAMPLE: usize = 64;
 
 #[derive(Clone, Debug, Default)]
 pub struct WorkerStats {
@@ -32,6 +52,9 @@ pub struct WorkerStats {
     pub max_staleness: u64,
     /// Number of forced refreshes from bound enforcement.
     pub forced_refreshes: usize,
+    /// Cached-block re-copies skipped because the store version had not
+    /// advanced since the last pull (the version-gated pull fast path).
+    pub pull_skips: usize,
     pub last_loss: f32,
     /// Push buffers ever allocated by this worker's pool — bounded by the
     /// pool cap (≈ push channel capacity), NOT by `epochs`.
@@ -40,8 +63,10 @@ pub struct WorkerStats {
 
 pub struct WorkerCtx<'a> {
     pub shard: &'a WorkerShard,
-    topo: &'a Topology,
     store: &'a BlockStore,
+    /// Live block→shard routing map (static placements never change it;
+    /// `placement=dynamic` migrates owners mid-run).
+    router: &'a BlockMap,
     sender: Box<dyn PushSender>,
     state: WorkerState,
     policy: DelayPolicy,
@@ -57,6 +82,17 @@ pub struct WorkerCtx<'a> {
     gate: &'a MonitorGate,
     /// Version of z̃ currently cached per slot.
     z_versions: Vec<u64>,
+    /// Per-slot (= per active block) push sequence counters; stamped
+    /// into [`PushMsg::block_seq`] for the server's migration-safe
+    /// ordering gate.
+    push_seq: Vec<u64>,
+    /// Last shard each slot's push was routed to (usize::MAX = never):
+    /// a change means the rebalancer migrated the block, and any
+    /// batch-buffered predecessors must be flushed to the OLD shard's
+    /// lane before the first push on the new route — otherwise a
+    /// never-filling partial batch could strand them until the final
+    /// flush while every successor parks at the new owner.
+    last_server: Vec<usize>,
     /// Recycled push buffers (w rides to the server and comes back).
     pool: PushPool,
     // scratch
@@ -69,8 +105,8 @@ pub struct WorkerCtx<'a> {
 impl<'a> WorkerCtx<'a> {
     pub fn new(
         shard: &'a WorkerShard,
-        topo: &'a Topology,
         store: &'a BlockStore,
+        router: &'a BlockMap,
         sender: Box<dyn PushSender>,
         policy: DelayPolicy,
         selection: BlockSelection,
@@ -92,8 +128,8 @@ impl<'a> WorkerCtx<'a> {
         }
         WorkerCtx {
             shard,
-            topo,
             store,
+            router,
             sender,
             state: WorkerState::init_from_z(z0),
             policy,
@@ -106,6 +142,8 @@ impl<'a> WorkerCtx<'a> {
             progress,
             gate,
             z_versions,
+            push_seq: vec![0u64; shard.n_slots()],
+            last_server: vec![usize::MAX; shard.n_slots()],
             pool: PushPool::new(db, pool_cap),
             y_new: vec![0.0; db],
             x_new: vec![0.0; db],
@@ -120,10 +158,16 @@ impl<'a> WorkerCtx<'a> {
         }
     }
 
-    /// Pull fresh z̃ for all slots (Algorithm 1 line 8).
+    /// Pull fresh z̃ for all slots (Algorithm 1 line 8), version-gated:
+    /// a slot whose block version has not advanced past the cached copy
+    /// skips the db-float memcpy (one atomic read instead).
     fn refresh_z(&mut self) {
         let db = self.shard.block_size;
         for (slot, &j) in self.shard.active_blocks.iter().enumerate() {
+            if self.store.version(j) == self.z_versions[slot] {
+                self.stats.pull_skips += 1;
+                continue;
+            }
             self.z_versions[slot] =
                 self.store.read_into(j, &mut self.state.z_local[slot * db..(slot + 1) * db]);
         }
@@ -180,15 +224,31 @@ impl<'a> WorkerCtx<'a> {
 
             // Push w to the owning server shard (with injected latency);
             // the shard returns the buffer on the pool's recycle channel.
+            // Ownership is re-read from the live map each push — under
+            // dynamic re-placement this is the migration re-target.
             self.policy.sleep_net(&mut self.rng);
-            let server = self.topo.server_of_block[j];
+            let server = self.router.owner(j);
+            if self.last_server[slot] != server {
+                // Migration re-target: deliver any batch-buffered
+                // predecessors for this edge to the old shard's lane
+                // NOW, so the server's seq-gate reorder window stays
+                // bounded by the in-flight budget instead of a partial
+                // batch that might never fill again.  Route changes
+                // are rare (one flush per migration observation).
+                if self.last_server[slot] != usize::MAX {
+                    self.sender.flush()?;
+                }
+                self.last_server[slot] = server;
+            }
+            self.push_seq[slot] += 1;
             let push = PushMsg {
                 worker: self.shard.worker_id,
                 block: j,
                 w: w_buf,
                 worker_epoch: t,
                 z_version_used: used_version,
-                sent_at: std::time::Instant::now(),
+                block_seq: self.push_seq[slot],
+                sent_at: (t % SENT_AT_SAMPLE == 0).then(Instant::now),
                 recycle: Some(self.pool.recycler()),
             };
             self.sender.send(server, push)?;

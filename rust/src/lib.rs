@@ -46,10 +46,14 @@
 //!   scaling study; extras in `TrainReport::sim`).
 //!
 //! Server-side policy knobs ride the config instead of the builder:
-//! `--set placement=contiguous|roundrobin|hash|degree` picks the
-//! block→shard map ([`coordinator::Placement`]) and
+//! `--set placement=contiguous|roundrobin|hash|degree|dynamic` picks
+//! the block→shard map ([`coordinator::Placement`]; `dynamic` starts
+//! contiguous and migrates hot blocks at runtime from observed push
+//! rates — [`coordinator::Rebalancer`], cadence `rebalance_ms`),
 //! `--set drain=owned|steal` the server-thread queue draining (work
-//! stealing; `coordinator/sched.rs`).
+//! stealing; `coordinator/sched.rs`), and `--set server_threads=N`
+//! decouples the server thread count from the shard count (an elastic
+//! pool servicing all shards' lanes; 0 = one thread per shard).
 //!
 //! See `DESIGN.md` (repo root) for the system inventory, the hot-path
 //! mechanisms (seqlock block store, push-buffer pool, block-slice CSR

@@ -83,8 +83,9 @@ fn config_args(a: Args) -> Args {
             "set",
             "",
             "comma-separated key=value config overrides (e.g. \
-             transport=mpsc|ring, placement=contiguous|roundrobin|hash|degree, \
-             drain=owned|steal, batch=N, backend=native|xla, \
+             transport=mpsc|ring, placement=contiguous|roundrobin|hash|degree|dynamic, \
+             drain=owned|steal, server_threads=N (0 = one per shard), \
+             rebalance_ms=MS, batch=N, backend=native|xla, \
              n_workers=8; an unknown key lists all valid keys)",
         )
 }
@@ -153,17 +154,19 @@ fn cmd_train(argv: &[String], use_sim: bool) -> Result<()> {
     };
     let extra = match &report.sim {
         Some(sx) => format!(
-            "virtual_time={:.3}s pushes={} max_queue={}",
+            "virtual_time={:.3}s pushes={} max_queue={} migrations={}",
             sx.virtual_time_s,
             report.total_pushes(),
-            sx.max_queue
+            sx.max_queue,
+            report.migrations
         ),
         None => format!(
-            "pushes={} max_staleness={} stationarity={:.3e} consensus_max={:.3e}",
+            "pushes={} max_staleness={} stationarity={:.3e} consensus_max={:.3e} migrations={}",
             report.total_pushes(),
             report.max_staleness(),
             report.stationarity,
-            report.consensus_max
+            report.consensus_max,
+            report.migrations
         ),
     };
     let (samples, final_obj, elapsed, z_final) =

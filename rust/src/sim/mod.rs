@@ -26,8 +26,11 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::admm::{objective_at_z, prox_l1_box, worker_update, NativeEngine, Objective};
-use crate::config::{BlockSelection, Config};
+use crate::config::{BlockSelection, Config, DrainKind, PlacementKind};
 use crate::coordinator::{make_placement, ObjSample, Observer, Progress, Topology};
+use crate::coordinator::{
+    plan_rebalance, REBALANCE_HYSTERESIS, REBALANCE_MAX_MOVES, REBALANCE_MIN_DELTA,
+};
 use crate::data::{Dataset, WorkerShard};
 use crate::problem::Problem;
 use crate::util::rng::Rng;
@@ -196,8 +199,13 @@ enum Ev {
     ComputeDone { worker: usize, slot: usize },
     /// A push reaches its server's inbox.
     Arrive { server: usize, push: SimPush },
-    /// Server finishes servicing the head-of-queue push.
-    ServiceDone { server: usize },
+    /// A server thread finishes servicing `push` (popped from the
+    /// queue when service started, so several can be in flight per
+    /// shard under the elastic/steal pool).
+    ServiceDone { server: usize, push: SimPush },
+    /// Dynamic re-placement scan (placement=dynamic only): re-map hot
+    /// blocks from the observed per-block service counts.
+    Rebalance,
 }
 
 #[derive(Debug)]
@@ -263,15 +271,24 @@ struct SimWorker<'a> {
     compute_s: f64,
 }
 
+/// One shard's inbound queue.  Mirroring the threaded runtime's shared
+/// `BlockTable`, the per-block numeric state lives in [`SimBlocks`]
+/// (global), so a dynamically migrated block keeps its w̃ cache no
+/// matter which station services it.
 struct SimServer {
     queue: VecDeque<SimPush>,
-    busy: bool,
-    /// w̃ cache + running sums per owned block (dense over global block
-    /// ids for simplicity; only owned blocks are touched).
+    /// Pushes currently being serviced by some pool thread (≤ 1 in the
+    /// classic one-thread-per-shard shape; up to the lane count —
+    /// one per worker — under the elastic/steal pool).
+    in_service: usize,
+}
+
+/// Per-block server state, dense over global block ids (the DES mirror
+/// of the threaded runtime's `BlockTable`).
+struct SimBlocks {
     w_tilde: Vec<Vec<Vec<f32>>>,
     w_sum: Vec<Vec<f32>>,
     denom: Vec<f32>,
-    local_of_block: Vec<Option<usize>>,
     worker_slot: Vec<Vec<usize>>,
 }
 
@@ -286,8 +303,11 @@ pub struct SimReport {
     pub z_final: Vec<f32>,
     /// Total pushes served.
     pub pushes: usize,
-    /// Max server queue length observed (contention indicator).
+    /// Max server backlog observed — queued plus in-service pushes
+    /// (contention indicator).
     pub max_queue: usize,
+    /// Blocks migrated between shards (`placement=dynamic` only).
+    pub migrations: usize,
 }
 
 /// Run Algorithm 1 under the DES with the given cost model.
@@ -343,36 +363,54 @@ pub fn run_sim_observed(
         })
         .collect();
 
-    let mut servers: Vec<SimServer> = (0..cfg.n_servers)
-        .map(|sid| {
-            let mut local_of_block = vec![None; cfg.n_blocks];
-            let mut w_tilde = Vec::new();
-            let mut w_sum = Vec::new();
-            let mut denom = Vec::new();
-            let mut worker_slot = Vec::new();
-            for (l, &j) in topo.blocks_of_server[sid].iter().enumerate() {
-                local_of_block[j] = Some(l);
-                let degree = topo.workers_of_block[j].len();
-                w_tilde.push(vec![vec![0.0f32; db]; degree]);
-                w_sum.push(vec![0.0f32; db]);
-                denom.push(cfg.gamma + cfg.rho * degree as f32);
-                let mut slots = vec![usize::MAX; topo.n_workers];
-                for (s, &w) in topo.workers_of_block[j].iter().enumerate() {
-                    slots[w] = s;
-                }
-                worker_slot.push(slots);
+    // Per-block numeric state, global (the DES mirror of the threaded
+    // runtime's shared BlockTable): migration only changes which
+    // station services a block, never where its w̃ cache lives.
+    let mut blocks = {
+        let mut w_tilde = Vec::with_capacity(cfg.n_blocks);
+        let mut w_sum = Vec::with_capacity(cfg.n_blocks);
+        let mut denom = Vec::with_capacity(cfg.n_blocks);
+        let mut worker_slot = Vec::with_capacity(cfg.n_blocks);
+        for j in 0..cfg.n_blocks {
+            let degree = topo.workers_of_block[j].len();
+            w_tilde.push(vec![vec![0.0f32; db]; degree]);
+            w_sum.push(vec![0.0f32; db]);
+            denom.push(cfg.gamma + cfg.rho * degree as f32);
+            let mut slots = vec![usize::MAX; topo.n_workers];
+            for (s, &w) in topo.workers_of_block[j].iter().enumerate() {
+                slots[w] = s;
             }
-            SimServer {
-                queue: VecDeque::new(),
-                busy: false,
-                w_tilde,
-                w_sum,
-                denom,
-                local_of_block,
-                worker_slot,
-            }
-        })
-        .collect();
+            worker_slot.push(slots);
+        }
+        SimBlocks { w_tilde, w_sum, denom, worker_slot }
+    };
+    let mut servers: Vec<SimServer> =
+        (0..cfg.n_servers).map(|_| SimServer { queue: VecDeque::new(), in_service: 0 }).collect();
+
+    // Elastic pool + drain model: the classic shape (server_threads=0,
+    // drain=owned) dedicates one thread per shard (at most one push in
+    // service per station, exactly the pre-pool DES).  A pool
+    // (`server_threads != n_servers` or `drain=steal`) shares
+    // `k_threads` threads across all stations: idle threads pick up any
+    // backlogged queue, and one shard can be serviced by several
+    // threads at once — capped at its lane count (one SPSC lane per
+    // worker), matching `coordinator/sched.rs`.
+    let k_threads = if cfg.server_threads == 0 { cfg.n_servers } else { cfg.server_threads };
+    let pool = k_threads != cfg.n_servers || matches!(cfg.drain, DrainKind::Steal);
+    let mut idle = k_threads;
+    let max_conc = if pool { cfg.n_workers.max(1) } else { 1 };
+
+    // Dynamic re-placement state (placement=dynamic): the routing map
+    // starts at the placement's initial (contiguous) assignment and is
+    // re-packed from observed service counts at Rebalance events, with
+    // the same noise floor / hysteresis / burst bound as the threaded
+    // Rebalancer.
+    let dynamic = cfg.placement == PlacementKind::Dynamic && cfg.n_servers > 1;
+    let mut server_of_block = topo.server_of_block.clone();
+    let mut served_per_block = vec![0usize; cfg.n_blocks];
+    let mut last_counts = vec![0usize; cfg.n_blocks];
+    let mut migrations = 0usize;
+    let rebalance_s = cfg.rebalance_ms.max(1) as f64 * 1e-3;
 
     let mut heap: BinaryHeap<Scheduled> = BinaryHeap::new();
     let mut seq = 0u64;
@@ -393,6 +431,28 @@ pub fn run_sim_observed(
 
     for w in 0..cfg.n_workers {
         push_ev(&mut heap, 0.0, Ev::PullDone { worker: w });
+    }
+    if dynamic {
+        push_ev(&mut heap, rebalance_s, Ev::Rebalance);
+    }
+
+    // Start servicing shard `s`'s backlog with whatever thread capacity
+    // the model grants it (see the pool comment above).
+    macro_rules! start_service {
+        ($heap:expr, $t:expr, $s:expr) => {{
+            let s = $s;
+            while servers[s].in_service < max_conc
+                && !servers[s].queue.is_empty()
+                && (!pool || idle > 0)
+            {
+                let push = servers[s].queue.pop_front().unwrap();
+                servers[s].in_service += 1;
+                if pool {
+                    idle -= 1;
+                }
+                push_ev($heap, $t + cost.server_service_s, Ev::ServiceDone { server: s, push });
+            }
+        }};
     }
 
     let log_every = cfg.log_every.max(1);
@@ -452,7 +512,9 @@ pub fn run_sim_observed(
                 wk.epoch += 1;
 
                 let j = wk.shard.active_blocks[slot];
-                let server = topo.server_of_block[j];
+                // Live routing map (re-packed at Rebalance events under
+                // placement=dynamic; static otherwise).
+                let server = server_of_block[j];
                 let push = SimPush { worker, block: j, w: w_new.clone() };
                 // Bounded in-flight (ps-lite / the threaded runtime's
                 // sync_channel): the worker's next pull completes only
@@ -480,47 +542,80 @@ pub fn run_sim_observed(
                 }
             }
             Ev::Arrive { server, push } => {
-                let srv = &mut servers[server];
-                srv.queue.push_back(push);
-                max_queue = max_queue.max(srv.queue.len());
-                if !srv.busy {
-                    srv.busy = true;
-                    push_ev(&mut heap, t + cost.server_service_s, Ev::ServiceDone { server });
+                servers[server].queue.push_back(push);
+                max_queue =
+                    max_queue.max(servers[server].queue.len() + servers[server].in_service);
+                start_service!(&mut heap, t, server);
+            }
+            Ev::ServiceDone { server, push } => {
+                // Eq. 13 on the global per-block state (shared-table
+                // mirror: which station serviced it does not matter).
+                let ws = blocks.worker_slot[push.block][push.worker];
+                debug_assert_ne!(ws, usize::MAX, "foreign worker in sim");
+                for ((acc, nv), ov) in blocks.w_sum[push.block]
+                    .iter_mut()
+                    .zip(&push.w)
+                    .zip(blocks.w_tilde[push.block][ws].iter())
+                {
+                    *acc += nv - ov;
+                }
+                blocks.w_tilde[push.block][ws].copy_from_slice(&push.w);
+                prox_l1_box(
+                    &z[push.block * db..(push.block + 1) * db],
+                    &blocks.w_sum[push.block],
+                    cfg.gamma,
+                    blocks.denom[push.block],
+                    problem.lambda,
+                    problem.clip,
+                    &mut z_out,
+                );
+                z[push.block * db..(push.block + 1) * db].copy_from_slice(&z_out);
+                pushes += 1;
+                served_per_block[push.block] += 1;
+                // Ack: worker pulls fresh z and starts its next
+                // iteration one network hop later.
+                push_ev(&mut heap, t + net(cost.net_mean_s), Ev::PullDone { worker: push.worker });
+
+                // Release the thread, keep this station hot, then (pool
+                // only) let the freed thread roam to other backlogs.
+                servers[server].in_service -= 1;
+                if pool {
+                    idle += 1;
+                }
+                start_service!(&mut heap, t, server);
+                if pool && idle > 0 {
+                    for k in 1..cfg.n_servers {
+                        start_service!(&mut heap, t, (server + k) % cfg.n_servers);
+                    }
                 }
             }
-            Ev::ServiceDone { server } => {
-                let srv = &mut servers[server];
-                if let Some(push) = srv.queue.pop_front() {
-                    let pushing_worker = push.worker;
-                    let l = srv.local_of_block[push.block].expect("foreign block in sim");
-                    let ws = srv.worker_slot[l][push.worker];
-                    for ((s, nv), ov) in srv.w_sum[l]
-                        .iter_mut()
-                        .zip(&push.w)
-                        .zip(srv.w_tilde[l][ws].iter())
-                    {
-                        *s += nv - ov;
+            Ev::Rebalance => {
+                let delta: Vec<usize> = served_per_block
+                    .iter()
+                    .zip(&last_counts)
+                    .map(|(c, l)| c.saturating_sub(*l))
+                    .collect();
+                let total: usize = delta.iter().sum();
+                if total >= REBALANCE_MIN_DELTA {
+                    last_counts.copy_from_slice(&served_per_block);
+                    // Same planner as the threaded Rebalancer, so the
+                    // DES reacts identically to the same rate window.
+                    for (j, s) in plan_rebalance(
+                        &server_of_block,
+                        &delta,
+                        cfg.n_servers,
+                        REBALANCE_HYSTERESIS,
+                        REBALANCE_MAX_MOVES,
+                    ) {
+                        server_of_block[j] = s;
+                        migrations += 1;
                     }
-                    srv.w_tilde[l][ws].copy_from_slice(&push.w);
-                    prox_l1_box(
-                        &z[push.block * db..(push.block + 1) * db],
-                        &srv.w_sum[l],
-                        cfg.gamma,
-                        srv.denom[l],
-                        problem.lambda,
-                        problem.clip,
-                        &mut z_out,
-                    );
-                    z[push.block * db..(push.block + 1) * db].copy_from_slice(&z_out);
-                    pushes += 1;
-                    // Ack: worker pulls fresh z and starts its next
-                    // iteration one network hop later.
-                    push_ev(&mut heap, t + net(cost.net_mean_s), Ev::PullDone { worker: pushing_worker });
                 }
-                if srv.queue.is_empty() {
-                    srv.busy = false;
-                } else {
-                    push_ev(&mut heap, t + cost.server_service_s, Ev::ServiceDone { server });
+                // Keep scanning while any worker still has epochs to
+                // run; once all budgets are spent the event chain ends
+                // and the heap drains naturally.
+                if workers.iter().any(|w| w.epoch < cfg.epochs) {
+                    push_ev(&mut heap, t + rebalance_s, Ev::Rebalance);
                 }
             }
         }
@@ -543,6 +638,7 @@ pub fn run_sim_observed(
         z_final: z,
         pushes,
         max_queue,
+        migrations,
     })
 }
 
@@ -639,6 +735,110 @@ mod tests {
             r.samples.iter().filter(|s| s.epoch == cfg.epochs).count(),
             1,
             "final sample duplicated"
+        );
+    }
+
+    #[test]
+    fn sim_dynamic_placement_migrates_and_converges() {
+        use crate::config::PlacementKind;
+        let mut cfg = Config::tiny_test();
+        cfg.epochs = 300;
+        cfg.placement = PlacementKind::Dynamic;
+        cfg.rebalance_ms = 1;
+        // Unambiguous Zipf head: 3 of 4 active blocks shared by every
+        // worker, all parked on shard 0 by the contiguous start.
+        cfg.shared_blocks = 3;
+        let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+        let r = run_sim(&cfg, &ds, &shards, &tiny_cost()).unwrap();
+        // The Zipf head starts contiguous on shard 0; the observed-rate
+        // re-pack must move something.
+        assert!(r.migrations > 0, "dynamic DES never migrated");
+        assert!(r.final_objective.total() < std::f64::consts::LN_2 * 0.95);
+        assert_eq!(r.pushes, cfg.epochs * cfg.n_workers);
+        // Determinism holds with migration in the loop too.
+        let r2 = run_sim(&cfg, &ds, &shards, &tiny_cost()).unwrap();
+        assert_eq!(r.z_final, r2.z_final);
+        assert_eq!(r.migrations, r2.migrations);
+    }
+
+    #[test]
+    fn sim_steal_pool_drains_a_hot_shard_faster() {
+        // ROADMAP item: predict the multi-core `steal_vs_owned_drain`
+        // gate shape.  Every worker's footprint is the shared head
+        // (blocks 0..4 of 8), which contiguous placement parks on shard
+        // 0 — under `owned` one station serializes all service; under
+        // `steal` idle threads service shard 0's other lanes.
+        use crate::config::DrainKind;
+        let mk = |drain: DrainKind| {
+            let mut cfg = Config::tiny_test();
+            cfg.epochs = 40;
+            cfg.n_workers = 4;
+            cfg.blocks_per_worker = 4;
+            cfg.shared_blocks = 4;
+            cfg.drain = drain;
+            cfg
+        };
+        // Service-dominated regime: the hot shard is the bottleneck.
+        let cost = CostModel {
+            compute_fixed_s: 1e-6,
+            compute_per_row_s: 0.0,
+            server_service_s: 1e-3,
+            net_mean_s: 0.0,
+            chunk_rows: 0,
+            per_chunk_s: 0.0,
+            compute_jitter: 0.0,
+        };
+        let cfg_owned = mk(DrainKind::Owned);
+        let (ds, shards) = gen_partitioned(&cfg_owned.synth_spec(), cfg_owned.n_workers);
+        let owned = run_sim(&cfg_owned, &ds, &shards, &cost).unwrap();
+        let steal = run_sim(&mk(DrainKind::Steal), &ds, &shards, &cost).unwrap();
+        assert_eq!(owned.pushes, steal.pushes);
+        let speedup = owned.virtual_time_s / steal.virtual_time_s;
+        assert!(
+            speedup > 1.3,
+            "steal pool did not relieve the hot shard: {speedup:.2}x \
+             (owned {:.4}s vs steal {:.4}s)",
+            owned.virtual_time_s,
+            steal.virtual_time_s
+        );
+    }
+
+    #[test]
+    fn sim_elastic_thread_scarcity_slows_service() {
+        // server_threads=1 over 2 shards halves the pool's service
+        // capacity in a service-dominated regime.
+        let cost = CostModel {
+            compute_fixed_s: 1e-6,
+            compute_per_row_s: 0.0,
+            server_service_s: 1e-3,
+            net_mean_s: 0.0,
+            chunk_rows: 0,
+            per_chunk_s: 0.0,
+            compute_jitter: 0.0,
+        };
+        let mk = |threads: usize| {
+            let mut cfg = Config::tiny_test();
+            cfg.epochs = 40;
+            cfg.n_workers = 4;
+            // Every worker touches every block: the push load splits
+            // 50/50 across the two shards deterministically, so the
+            // classic 2-thread shape genuinely runs 2x the service
+            // capacity of the 1-thread pool.
+            cfg.blocks_per_worker = 8;
+            cfg.shared_blocks = 8;
+            cfg.server_threads = threads;
+            cfg
+        };
+        let cfg2 = mk(2);
+        let (ds, shards) = gen_partitioned(&cfg2.synth_spec(), cfg2.n_workers);
+        let full = run_sim(&cfg2, &ds, &shards, &cost).unwrap();
+        let scarce = run_sim(&mk(1), &ds, &shards, &cost).unwrap();
+        assert_eq!(full.pushes, scarce.pushes);
+        assert!(
+            scarce.virtual_time_s > full.virtual_time_s * 1.1,
+            "1-thread pool not slower: {:.4}s vs {:.4}s",
+            scarce.virtual_time_s,
+            full.virtual_time_s
         );
     }
 

@@ -302,15 +302,22 @@ fn transports_are_differentially_equivalent() {
 #[test]
 fn placement_drain_transport_matrix_is_differentially_equivalent() {
     // The scheduling layer must not change the algorithm: every
-    // placement × drain × transport combination performs exactly one
-    // push per worker epoch and lands in the same objective
+    // placement × drain × transport combination — including the
+    // adaptive `dynamic` placement migrating blocks mid-run — performs
+    // exactly one push per worker epoch and lands in the same objective
     // neighborhood.  (Which shard applies a push and in which
     // interleaving is free; what is applied is not.)
     let mut cfg = tiny(160);
     cfg.batch = 2; // exercise batched slots + the worker's final flush
+    cfg.rebalance_ms = 0; // dynamic: scan on every monitor wakeup
     let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
     let mut objectives = Vec::new();
-    for placement in [PlacementKind::Contiguous, PlacementKind::Hash, PlacementKind::Degree] {
+    for placement in [
+        PlacementKind::Contiguous,
+        PlacementKind::Hash,
+        PlacementKind::Degree,
+        PlacementKind::Dynamic,
+    ] {
         for drain in [DrainKind::Owned, DrainKind::Steal] {
             for transport in [TransportKind::Mpsc, TransportKind::SpscRing] {
                 cfg.placement = placement;
@@ -334,6 +341,94 @@ fn placement_drain_transport_matrix_is_differentially_equivalent() {
     assert!(
         max - min < 0.08,
         "combinations disagree beyond async noise: {objectives:?}"
+    );
+}
+
+#[test]
+fn dynamic_placement_migrates_and_matches_static_objectives() {
+    // The adaptive runtime's differential gate: `placement=dynamic`
+    // must (a) actually migrate under a Zipf-skewed workload, (b) keep
+    // the exact push accounting of the static placements, (c) land in
+    // the same objective neighborhood, and (d) spread the applied-push
+    // load at least as well as the contiguous baseline it starts from.
+    let epochs = 1200usize;
+    let mut cfg = tiny(epochs);
+    cfg.rebalance_ms = 0; // scan on every monitor wakeup
+    // Decisively skewed workload: 3 of each worker's 4 active blocks
+    // are the shared low-index head, which the contiguous start parks
+    // on shard 0 (≥ 75% of the push rate) — the rebalancer has an
+    // unambiguous signal regardless of where the random tails land.
+    cfg.shared_blocks = 3;
+    let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+    let run_with = |placement: PlacementKind, cfg: &mut Config| {
+        cfg.placement = placement;
+        let r = Session::builder(cfg).dataset(&ds, &shards).run().unwrap();
+        let counts: Vec<usize> = r.server_stats.iter().map(|s| s.pushes).collect();
+        let max = *counts.iter().max().unwrap() as f64;
+        let mean = counts.iter().sum::<usize>() as f64 / counts.len() as f64;
+        (r, max / mean)
+    };
+    let (r_contig, contig_skew) = run_with(PlacementKind::Contiguous, &mut cfg);
+    let (r_degree, _) = run_with(PlacementKind::Degree, &mut cfg);
+    let (r_dyn, dyn_skew) = run_with(PlacementKind::Dynamic, &mut cfg);
+
+    assert_eq!(r_dyn.total_pushes(), epochs * shards.len(), "dynamic lost pushes");
+    assert_eq!(r_dyn.total_pushes(), r_degree.total_pushes());
+    assert_eq!(r_contig.migrations, 0, "static placement migrated");
+    assert!(r_dyn.migrations > 0, "no migrations under a Zipf-hot head");
+
+    let (od, og, oc) = (
+        r_dyn.final_objective.total(),
+        r_degree.final_objective.total(),
+        r_contig.final_objective.total(),
+    );
+    assert!(od.is_finite() && od < 0.66, "dynamic did not converge: {od}");
+    assert!((od - og).abs() < 0.08, "dynamic {od} vs degree {og}");
+    assert!((od - oc).abs() < 0.08, "dynamic {od} vs contiguous {oc}");
+
+    // Load balance: the whole point of adapting.  Attribution lags the
+    // migration (early pushes applied under the contiguous map), so
+    // allow slack — but dynamic must not end up worse than the naive
+    // static start it began from.
+    assert!(
+        dyn_skew <= contig_skew + 0.05,
+        "dynamic applied-push skew {dyn_skew:.3} worse than contiguous {contig_skew:.3}"
+    );
+}
+
+#[test]
+fn elastic_thread_pool_is_differentially_equivalent() {
+    // `server_threads != n_servers` (1 thread for 2 shards, and 3
+    // threads for 2 shards) across both transports and the adaptive
+    // placement: same pushes, same objective neighborhood.
+    let mut cfg = tiny(160);
+    cfg.rebalance_ms = 0;
+    let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+    let mut objectives = Vec::new();
+    for threads in [1usize, 3] {
+        for placement in [PlacementKind::Contiguous, PlacementKind::Dynamic] {
+            for transport in [TransportKind::Mpsc, TransportKind::SpscRing] {
+                cfg.server_threads = threads;
+                cfg.placement = placement;
+                cfg.transport = transport;
+                let tag = format!("threads={threads}/{placement:?}/{transport:?}");
+                let r = Session::builder(&cfg).dataset(&ds, &shards).run().unwrap();
+                assert_eq!(
+                    r.total_pushes(),
+                    160 * shards.len(),
+                    "{tag}: push accounting broke"
+                );
+                let obj = r.final_objective.total();
+                assert!(obj.is_finite() && obj < 0.68, "{tag} did not converge: {obj}");
+                objectives.push((tag, obj));
+            }
+        }
+    }
+    let min = objectives.iter().map(|(_, o)| *o).fold(f64::INFINITY, f64::min);
+    let max = objectives.iter().map(|(_, o)| *o).fold(f64::NEG_INFINITY, f64::max);
+    assert!(
+        max - min < 0.08,
+        "elastic combos disagree beyond async noise: {objectives:?}"
     );
 }
 

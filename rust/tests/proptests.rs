@@ -1,13 +1,16 @@
 //! Property-based tests on coordinator/substrate invariants (DESIGN.md
 //! §8), driven by the in-tree seeded property harness.
 
+use std::sync::Arc;
+
 use asybadmm::admm::{gather_packed, prox_l1_box, soft_threshold};
 use asybadmm::config::PlacementKind;
 use asybadmm::coordinator::{
-    make_placement, BlockStore, MpscTransport, PushMsg, RwBlockStore, SpscRingTransport,
-    Topology, Transport, TryRecv,
+    make_placement, BlockMap, BlockStore, BlockTable, MpscTransport, ProxBackend, PushMsg,
+    RwBlockStore, ServerShard, SpscRingTransport, Topology, Transport, TryRecv,
 };
 use asybadmm::data::{gen_partitioned, BlockGeometry, Dataset, LossKind, SynthSpec};
+use asybadmm::problem::Problem;
 use asybadmm::sparse::{dense, CsrBuilder, CsrMatrix};
 use asybadmm::testutil::forall;
 use asybadmm::util::rng::Rng;
@@ -209,7 +212,8 @@ fn prop_lane_steal_preserves_per_worker_fifo() {
                         w: vec![0.0; 2],
                         worker_epoch: epoch,
                         z_version_used: 0,
-                        sent_at: std::time::Instant::now(),
+                        block_seq: 0,
+                        sent_at: None,
                         recycle: None,
                     };
                     tx.send(s, msg).map_err(|e| format!("send failed: {e:#}"))?;
@@ -272,6 +276,188 @@ fn prop_lane_steal_preserves_per_worker_fifo() {
             }
             if received != total {
                 return Err(format!("received {received} of {total}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (b4) Migration safety: random interleavings of sends, owner-map
+/// migrations, and partial lane drains (the thief / new-owner shape —
+/// each lane accessed exclusively and sequentially, as the sched.rs
+/// lane claim guarantees) never lose or reorder a per-(worker, block)
+/// push sequence.  The server's seq gate parks early arrivals from the
+/// post-migration lane until the old lane's tail drains; by the end
+/// every push must have applied, in send order, with nothing left
+/// parked.
+#[test]
+fn prop_migration_preserves_per_worker_block_fifo() {
+    forall(
+        "migrate-fifo",
+        10,
+        |rng| {
+            let workers = 1 + rng.below(3);
+            let servers = 2 + rng.below(2);
+            let per_worker = 8 + rng.below(24);
+            let batch = 1 + rng.below(3);
+            let ring = rng.bernoulli(0.5);
+            (workers, servers, per_worker, batch, ring, rng.next_u64())
+        },
+        |&(workers, servers, per_worker, batch, ring, seed)| {
+            let (n_blocks, db) = (4usize, 4usize);
+            // Every worker touches every block so any (worker, block)
+            // edge is sendable.
+            let spec = SynthSpec {
+                samples: 8 * workers,
+                geometry: BlockGeometry::new(n_blocks, db),
+                nnz_per_row: 3,
+                blocks_per_worker: n_blocks,
+                shared_blocks: n_blocks,
+                ..Default::default()
+            };
+            let (_, data_shards) = gen_partitioned(&spec, workers);
+            let topo = Topology::build(&data_shards, n_blocks, servers);
+            let store = Arc::new(BlockStore::new(n_blocks, db));
+            let problem = Problem::new(LossKind::Logistic, 0.0, 1e4);
+            let table = Arc::new(BlockTable::new(&topo, store, problem, 2.0, 0.1));
+            let map = BlockMap::new(&topo.server_of_block);
+            // Non-strict shards over ONE shared table: the dynamic-
+            // placement runtime shape.
+            let shards: Vec<ServerShard> = (0..servers)
+                .map(|sid| ServerShard::with_table(sid, &topo, table.clone(), false))
+                .collect();
+            // Capacity sized so a single-threaded interleaving can
+            // never block in send().
+            let transport: Box<dyn Transport> = if ring {
+                Box::new(SpscRingTransport::new(workers, servers, workers * per_worker, batch))
+            } else {
+                Box::new(MpscTransport::new(workers, servers, workers * per_worker, batch))
+            };
+            let mut rng = Rng::new(seed);
+            let mut txs: Vec<_> =
+                (0..workers).map(|w| transport.connect_worker(w)).collect();
+            let mut lanes: Vec<(usize, Box<dyn asybadmm::coordinator::PushReceiver>)> =
+                (0..servers)
+                    .flat_map(|s| {
+                        transport
+                            .connect_server_lanes(s)
+                            .into_iter()
+                            .map(move |l| (s, l))
+                    })
+                    .collect();
+
+            let value = |w: usize, j: usize, s: u64| (w * 1000 + j * 100) as f32 + s as f32;
+            let mut seq = vec![vec![0u64; n_blocks]; workers];
+            let mut sent = vec![0usize; workers];
+            let total = workers * per_worker;
+            let mut sent_total = 0usize;
+            let mut safety = 0usize;
+            while sent_total < total {
+                safety += 1;
+                if safety > 200 * total + 10_000 {
+                    return Err("interleaving did not finish".into());
+                }
+                let dice = rng.below(5);
+                if dice == 0 {
+                    // Migrate a random block to a random shard.
+                    let j = rng.below(n_blocks);
+                    map.set_owner(j, rng.below(servers));
+                } else if dice <= 2 {
+                    // One worker sends its next push for a random
+                    // block, routed by the LIVE map.
+                    let w = rng.below(workers);
+                    if sent[w] < per_worker {
+                        let j = rng.below(n_blocks);
+                        seq[w][j] += 1;
+                        let msg = PushMsg {
+                            worker: w,
+                            block: j,
+                            w: vec![value(w, j, seq[w][j]); db],
+                            worker_epoch: sent[w],
+                            z_version_used: 0,
+                            block_seq: seq[w][j],
+                            sent_at: None,
+                            recycle: None,
+                        };
+                        txs[w]
+                            .send(map.owner(j), msg)
+                            .map_err(|e| format!("send failed: {e:#}"))?;
+                        sent[w] += 1;
+                        sent_total += 1;
+                    }
+                } else {
+                    // Drain a random lane a little, into ITS shard.
+                    let k = rng.below(lanes.len());
+                    let budget = 1 + rng.below(4);
+                    let (s, lane) = &mut lanes[k];
+                    for _ in 0..budget {
+                        match lane.try_recv() {
+                            TryRecv::Msg(m) => shards[*s]
+                                .handle_push(&m, &ProxBackend::Native)
+                                .map_err(|e| format!("apply failed: {e:#}"))?,
+                            _ => break,
+                        }
+                    }
+                }
+            }
+            for tx in txs.iter_mut() {
+                tx.flush().map_err(|e| format!("flush failed: {e:#}"))?;
+            }
+            drop(txs);
+            transport.shutdown();
+            let mut done = vec![false; lanes.len()];
+            let mut safety = 0usize;
+            while !done.iter().all(|&d| d) {
+                safety += 1;
+                if safety > 200 * total + 10_000 {
+                    return Err("final drain did not terminate".into());
+                }
+                let k = rng.below(lanes.len());
+                if done[k] {
+                    continue;
+                }
+                let (s, lane) = &mut lanes[k];
+                match lane.try_recv() {
+                    TryRecv::Msg(m) => shards[*s]
+                        .handle_push(&m, &ProxBackend::Native)
+                        .map_err(|e| format!("apply failed: {e:#}"))?,
+                    TryRecv::Done => done[k] = true,
+                    TryRecv::Empty => {}
+                }
+            }
+
+            // Nothing lost, nothing left parked, every (worker, block)
+            // chain applied through its full sequence, last write wins.
+            let applied: usize = shards.iter().map(|s| s.stats().pushes).sum();
+            if applied != total {
+                return Err(format!("applied {applied} of {total}"));
+            }
+            for j in 0..n_blocks {
+                if table.pending_len(j) != 0 {
+                    return Err(format!(
+                        "block {j}: {} parked pushes stranded",
+                        table.pending_len(j)
+                    ));
+                }
+                for w in 0..workers {
+                    if table.next_seq(j, w) != seq[w][j] + 1 {
+                        return Err(format!(
+                            "({w},{j}): next_seq {} != sent {} + 1",
+                            table.next_seq(j, w),
+                            seq[w][j]
+                        ));
+                    }
+                    if seq[w][j] > 0 {
+                        let wt = table.w_tilde_of(j, w);
+                        let expect = value(w, j, seq[w][j]);
+                        if wt[0] != expect {
+                            return Err(format!(
+                                "({w},{j}): final w̃ {} != last sent {expect}",
+                                wt[0]
+                            ));
+                        }
+                    }
+                }
             }
             Ok(())
         },
