@@ -142,6 +142,43 @@ impl DrainKind {
     }
 }
 
+/// What the session does when a worker thread dies mid-run
+/// (see `coordinator/fault.rs` and DESIGN.md §2.0.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailurePolicy {
+    /// Re-raise the worker's panic and tear the run down (the
+    /// historical behavior; default).
+    Die,
+    /// Retire the dead worker: drop its gap-blocked parked pushes,
+    /// freeze its dual contribution, finish on the survivors, and
+    /// record the event in `TrainReport::faults`.
+    Degrade,
+    /// Spawn a replacement on the same data partition: wait for the
+    /// dead worker's in-flight tail to drain, warm-start duals from the
+    /// server-side w̃ cache, and resume the per-(worker, block) seq
+    /// stream exactly where it stopped.
+    Restart,
+}
+
+impl FailurePolicy {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "die" => Ok(FailurePolicy::Die),
+            "degrade" => Ok(FailurePolicy::Degrade),
+            "restart" => Ok(FailurePolicy::Restart),
+            other => anyhow::bail!("unknown failure policy {other:?} (die|degrade|restart)"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FailurePolicy::Die => "die",
+            FailurePolicy::Degrade => "degrade",
+            FailurePolicy::Restart => "restart",
+        }
+    }
+}
+
 /// Block selection rule on workers (paper uses uniform random; cyclic is
 /// the variant mentioned for the experiments).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -241,6 +278,25 @@ pub struct Config {
     pub seed: u64,
     /// Log the objective every `log_every` epochs (0 = only at end).
     pub log_every: usize,
+
+    // -- robustness --------------------------------------------------------
+    /// Deterministic fault-injection spec, `;`-separated
+    /// (`crash:w<W>@<E>`, `stall:s<S>@<P>+<MS>ms`,
+    /// `sendfail:w<W>@<E>x<N>`); empty = no faults and the hooks cost
+    /// one branch (`coordinator/fault.rs`).
+    pub faults: String,
+    /// What a dead worker does to the run (`die` | `degrade` |
+    /// `restart`).
+    pub failure: FailurePolicy,
+    /// Watchdog: warn observers with a `Stalled` event when no worker
+    /// publishes progress for this many ms (0 = off).
+    pub stall_warn_ms: u64,
+    /// Write a v2 checkpoint from the monitor thread every this many
+    /// epochs of global progress (0 = off).
+    pub checkpoint_every: usize,
+    /// Where periodic checkpoints land (header file; `.bin` sidecar
+    /// beside it).
+    pub checkpoint_path: PathBuf,
 }
 
 impl Default for Config {
@@ -285,6 +341,11 @@ impl Default for Config {
             pull_hold: 1,
             seed: 42,
             log_every: 5,
+            faults: String::new(),
+            failure: FailurePolicy::Die,
+            stall_warn_ms: 0,
+            checkpoint_every: 0,
+            checkpoint_path: PathBuf::from("reports/auto.ckpt"),
         }
     }
 }
@@ -367,45 +428,68 @@ impl Config {
         "pull_hold",
         "seed",
         "log_every",
+        "faults",
+        "failure",
+        "stall_warn_ms",
+        "checkpoint_every",
+        "checkpoint_path",
     ];
 
     pub fn apply_kv(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
+        // Like unknown *keys*, an unrejectable *value* must say what
+        // would have been accepted: the enum `parse` impls list their
+        // variants, and scalar parses are wrapped so the error names
+        // the key and the offending value instead of a bare
+        // "invalid digit found in string".
+        fn scalar<T: std::str::FromStr>(key: &str, v: &str) -> anyhow::Result<T>
+        where
+            T::Err: std::error::Error + Send + Sync + 'static,
+        {
+            v.parse::<T>()
+                .with_context(|| format!("invalid value {v:?} for config key {key:?}"))
+        }
         let v = value.trim().trim_matches('"');
-        match key.trim() {
+        let key = key.trim();
+        match key {
             "loss" => self.loss = LossKind::parse(v)?,
-            "lambda" => self.lambda = v.parse()?,
-            "clip" => self.clip = v.parse()?,
-            "samples" => self.samples = v.parse()?,
-            "n_blocks" => self.n_blocks = v.parse()?,
-            "block_size" => self.block_size = v.parse()?,
-            "nnz_per_row" => self.nnz_per_row = v.parse()?,
-            "blocks_per_worker" => self.blocks_per_worker = v.parse()?,
-            "shared_blocks" => self.shared_blocks = v.parse()?,
-            "zipf_s" => self.zipf_s = v.parse()?,
-            "noise" => self.noise = v.parse()?,
+            "lambda" => self.lambda = scalar(key, v)?,
+            "clip" => self.clip = scalar(key, v)?,
+            "samples" => self.samples = scalar(key, v)?,
+            "n_blocks" => self.n_blocks = scalar(key, v)?,
+            "block_size" => self.block_size = scalar(key, v)?,
+            "nnz_per_row" => self.nnz_per_row = scalar(key, v)?,
+            "blocks_per_worker" => self.blocks_per_worker = scalar(key, v)?,
+            "shared_blocks" => self.shared_blocks = scalar(key, v)?,
+            "zipf_s" => self.zipf_s = scalar(key, v)?,
+            "noise" => self.noise = scalar(key, v)?,
             "data_path" => self.data_path = Some(PathBuf::from(v)),
-            "n_workers" => self.n_workers = v.parse()?,
-            "n_servers" => self.n_servers = v.parse()?,
+            "n_workers" => self.n_workers = scalar(key, v)?,
+            "n_servers" => self.n_servers = scalar(key, v)?,
             "placement" => self.placement = PlacementKind::parse(v)?,
             "drain" => self.drain = DrainKind::parse(v)?,
-            "server_threads" => self.server_threads = v.parse()?,
-            "rebalance_ms" => self.rebalance_ms = v.parse()?,
-            "batch" => self.batch = v.parse()?,
-            "rho" => self.rho = v.parse()?,
-            "gamma" => self.gamma = v.parse()?,
-            "epochs" => self.epochs = v.parse()?,
+            "server_threads" => self.server_threads = scalar(key, v)?,
+            "rebalance_ms" => self.rebalance_ms = scalar(key, v)?,
+            "batch" => self.batch = scalar(key, v)?,
+            "rho" => self.rho = scalar(key, v)?,
+            "gamma" => self.gamma = scalar(key, v)?,
+            "epochs" => self.epochs = scalar(key, v)?,
             "selection" => self.selection = BlockSelection::parse(v)?,
-            "max_delay" => self.max_delay = v.parse()?,
-            "enforce_delay_bound" => self.enforce_delay_bound = v.parse()?,
+            "max_delay" => self.max_delay = scalar(key, v)?,
+            "enforce_delay_bound" => self.enforce_delay_bound = scalar(key, v)?,
             "backend" => self.backend = Backend::parse(v)?,
             "transport" => self.transport = TransportKind::parse(v)?,
             "artifacts_dir" => self.artifacts_dir = PathBuf::from(v),
-            "m_chunk" => self.m_chunk = v.parse()?,
-            "d_pad" => self.d_pad = v.parse()?,
-            "net_delay_mean_ms" => self.net_delay_mean_ms = v.parse()?,
-            "pull_hold" => self.pull_hold = v.parse()?,
-            "seed" => self.seed = v.parse()?,
-            "log_every" => self.log_every = v.parse()?,
+            "m_chunk" => self.m_chunk = scalar(key, v)?,
+            "d_pad" => self.d_pad = scalar(key, v)?,
+            "net_delay_mean_ms" => self.net_delay_mean_ms = scalar(key, v)?,
+            "pull_hold" => self.pull_hold = scalar(key, v)?,
+            "seed" => self.seed = scalar(key, v)?,
+            "log_every" => self.log_every = scalar(key, v)?,
+            "faults" => self.faults = v.to_string(),
+            "failure" => self.failure = FailurePolicy::parse(v)?,
+            "stall_warn_ms" => self.stall_warn_ms = scalar(key, v)?,
+            "checkpoint_every" => self.checkpoint_every = scalar(key, v)?,
+            "checkpoint_path" => self.checkpoint_path = PathBuf::from(v),
             other => anyhow::bail!(
                 "unknown config key {other:?}; valid keys: {}",
                 Self::KEYS.join(", ")
@@ -479,11 +563,29 @@ impl Config {
                 self.d_pad
             );
         }
+        // Fail on a malformed fault spec at config time, not mid-run.
+        crate::coordinator::FaultPlan::parse(&self.faults)
+            .context("invalid value for config key \"faults\"")?;
         Ok(())
     }
 
-    /// One-line summary for report headers.
+    /// One-line summary for report headers.  Robustness knobs are
+    /// appended only when set, so fault-free summaries stay stable.
     pub fn summary(&self) -> String {
+        let mut s = self.summary_base();
+        if self.failure != FailurePolicy::Die {
+            s.push_str(&format!(" failure={}", self.failure.as_str()));
+        }
+        if !self.faults.is_empty() {
+            s.push_str(&format!(" faults={}", self.faults));
+        }
+        if self.checkpoint_every > 0 {
+            s.push_str(&format!(" checkpoint_every={}", self.checkpoint_every));
+        }
+        s
+    }
+
+    fn summary_base(&self) -> String {
         format!(
             "loss={} m={} M={} db={} p={} servers={} threads={} rho={} gamma={} lambda={} T={} sel={} backend={} transport={} placement={} rebalance_ms={} drain={} batch={} seed={}",
             self.loss.as_str(),
@@ -579,6 +681,49 @@ mod tests {
         assert!(c.apply_kv("transport", "carrier-pigeon").is_err());
         assert!(c.apply_kv("nope", "1").is_err());
         assert!(c.apply_kv("n_workers", "abc").is_err());
+        c.apply_kv("faults", "crash:w0@3").unwrap();
+        c.apply_kv("failure", "restart").unwrap();
+        c.apply_kv("stall_warn_ms", "250").unwrap();
+        c.apply_kv("checkpoint_every", "10").unwrap();
+        c.apply_kv("checkpoint_path", "/tmp/x.ckpt").unwrap();
+        assert_eq!(c.faults, "crash:w0@3");
+        assert_eq!(c.failure, FailurePolicy::Restart);
+        assert_eq!(c.stall_warn_ms, 250);
+        assert_eq!(c.checkpoint_every, 10);
+        assert_eq!(c.checkpoint_path, PathBuf::from("/tmp/x.ckpt"));
+        assert!(c.apply_kv("failure", "shrug").is_err());
+    }
+
+    #[test]
+    fn unknown_value_error_lists_valid_variants() {
+        // Parity with unknown *keys*: a bad enum value names every
+        // accepted variant, and a bad scalar names the key and value.
+        let mut c = Config::default();
+        let err = format!("{:#}", c.apply_kv("placement", "bogus").unwrap_err());
+        for v in ["contiguous", "roundrobin", "hash", "degree", "dynamic"] {
+            assert!(err.contains(v), "placement error omits {v:?}: {err}");
+        }
+        let err = format!("{:#}", c.apply_kv("failure", "bogus").unwrap_err());
+        for v in ["die", "degrade", "restart"] {
+            assert!(err.contains(v), "failure error omits {v:?}: {err}");
+        }
+        let err = format!("{:#}", c.apply_kv("loss", "bogus").unwrap_err());
+        for v in ["logistic", "squared"] {
+            assert!(err.contains(v), "loss error omits {v:?}: {err}");
+        }
+        let err = format!("{:#}", c.apply_kv("n_workers", "abc").unwrap_err());
+        assert!(err.contains("n_workers"), "scalar error omits the key: {err}");
+        assert!(err.contains("abc"), "scalar error omits the value: {err}");
+    }
+
+    #[test]
+    fn malformed_fault_spec_rejected_at_validate() {
+        let mut c = Config::default();
+        c.faults = "crash:w0@3".into();
+        c.validate().unwrap();
+        c.faults = "explode:w0@3".into();
+        let err = format!("{:#}", c.validate().unwrap_err());
+        assert!(err.contains("faults"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,324 @@
+//! Deterministic fault injection for the threaded runtime and the DES.
+//!
+//! A [`FaultPlan`] is parsed from `--set faults=SPEC` and consulted from
+//! hooks compiled into the worker loop (`coordinator/worker.rs`), the
+//! server apply path (`coordinator/server.rs`) and the DES
+//! (`crate::sim`).  The plan is *deterministic*: every fault names its
+//! victim and its trigger point (a local epoch or an applied-push
+//! count), so a chaos run replays exactly — the property the chaos
+//! proptests and the DES/threaded differential tests rely on.
+//!
+//! ## Spec grammar
+//!
+//! `--set` splits its argument list on commas, so fault entries are
+//! separated by `;`:
+//!
+//! ```text
+//! faults=crash:w1@5;stall:s0@100+25ms;sendfail:w2@4x3
+//! ```
+//!
+//! - `crash:w<W>@<E>` — worker `W` panics at the end of its local epoch
+//!   `E` (after that epoch's push was handed to the transport, so the
+//!   seq stream has no gap for recovery to bridge).
+//! - `stall:s<S>@<P>+<MS>ms` — server shard `S` sleeps `MS`
+//!   milliseconds, once, when its applied-push counter reaches `P`
+//!   (a deterministic straggler for the watchdog tests).
+//! - `sendfail:w<W>@<E>x<N>` — worker `W`'s push at epoch `E` suffers
+//!   `N` transient send failures before succeeding (modelled as bounded
+//!   retries; counted in `WorkerStats::send_retries`).
+//!
+//! Every hook is gated on [`FaultPlan::is_empty`] — a single branch on
+//! a pre-computed bool — so the default (no faults) hot path pays
+//! nothing measurable; `benches/fault_recovery.rs` keeps that honest.
+//!
+//! What a fault *did* is recorded as a [`FaultEvent`] in the plan's
+//! internal log; the session monitor drains the log each wakeup,
+//! forwards the events to observers ([`super::session::Observer::on_fault`])
+//! and accumulates them into `TrainReport::faults`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+/// Something that went wrong (or was injected) during a run, with
+/// enough identity to correlate against the `FaultPlan` that caused it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// A worker thread panicked (injected or organic) at `epoch`
+    /// completed epochs.
+    WorkerCrashed { worker: usize, epoch: usize },
+    /// Policy `degrade`: the crashed worker was retired, its parked
+    /// (gap-blocked) pushes dropped, and the run continued on the
+    /// survivors.
+    WorkerDegraded { worker: usize, epoch: usize, parked_dropped: usize },
+    /// Policy `restart`: a replacement worker took over at `epoch`
+    /// after the dead worker's in-flight tail drained.
+    WorkerRestarted { worker: usize, epoch: usize, attempt: usize },
+    /// A server shard slept `ms` after `after_pushes` applied pushes.
+    ServerStalled { server: usize, after_pushes: usize, ms: u64 },
+    /// Watchdog: no worker published progress for `waited_ms` while the
+    /// slowest live worker sat at `min_epoch` (`--set stall_warn_ms`).
+    Stalled { min_epoch: usize, waited_ms: u64 },
+}
+
+struct CrashEntry {
+    worker: usize,
+    at_epoch: usize,
+    fired: AtomicBool,
+}
+
+struct StallEntry {
+    server: usize,
+    after_pushes: usize,
+    ms: u64,
+    fired: AtomicBool,
+}
+
+struct SendFailEntry {
+    worker: usize,
+    at_epoch: usize,
+    count: usize,
+}
+
+/// A deterministic, shareable (`&self` hooks, atomics inside) schedule
+/// of injected faults.  See the module docs for the spec grammar.
+#[derive(Default)]
+pub struct FaultPlan {
+    crashes: Vec<CrashEntry>,
+    stalls: Vec<StallEntry>,
+    sendfails: Vec<SendFailEntry>,
+    log: Mutex<Vec<FaultEvent>>,
+}
+
+impl FaultPlan {
+    /// The empty plan: every hook short-circuits on one branch.
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Parse a `;`-separated spec (see module docs).  Whitespace around
+    /// entries is tolerated; an empty spec yields the empty plan.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut plan = FaultPlan::none();
+        for entry in spec.split(';').map(str::trim).filter(|e| !e.is_empty()) {
+            let (kind, rest) = entry
+                .split_once(':')
+                .with_context(|| format!("fault entry {entry:?}: expected kind:target"))?;
+            match kind {
+                "crash" => {
+                    let (w, e) = parse_at(rest, 'w')
+                        .with_context(|| format!("fault entry {entry:?} (crash:w<W>@<E>)"))?;
+                    plan.crashes.push(CrashEntry {
+                        worker: w,
+                        at_epoch: e,
+                        fired: AtomicBool::new(false),
+                    });
+                }
+                "stall" => {
+                    let (s, trigger) = parse_at_raw(rest, 's')
+                        .with_context(|| format!("fault entry {entry:?} (stall:s<S>@<P>+<MS>ms)"))?;
+                    let (pushes, ms) = trigger
+                        .split_once('+')
+                        .with_context(|| format!("fault entry {entry:?}: expected <P>+<MS>ms"))?;
+                    let ms = ms
+                        .strip_suffix("ms")
+                        .with_context(|| format!("fault entry {entry:?}: duration must end in ms"))?;
+                    plan.stalls.push(StallEntry {
+                        server: s,
+                        after_pushes: pushes
+                            .parse()
+                            .with_context(|| format!("fault entry {entry:?}: bad push count"))?,
+                        ms: ms
+                            .parse()
+                            .with_context(|| format!("fault entry {entry:?}: bad duration"))?,
+                        fired: AtomicBool::new(false),
+                    });
+                }
+                "sendfail" => {
+                    let (w, trigger) = parse_at_raw(rest, 'w')
+                        .with_context(|| format!("fault entry {entry:?} (sendfail:w<W>@<E>x<N>)"))?;
+                    let (epoch, count) = trigger
+                        .split_once('x')
+                        .with_context(|| format!("fault entry {entry:?}: expected <E>x<N>"))?;
+                    plan.sendfails.push(SendFailEntry {
+                        worker: w,
+                        at_epoch: epoch
+                            .parse()
+                            .with_context(|| format!("fault entry {entry:?}: bad epoch"))?,
+                        count: count
+                            .parse()
+                            .with_context(|| format!("fault entry {entry:?}: bad count"))?,
+                    });
+                }
+                other => bail!(
+                    "fault entry {entry:?}: unknown kind {other:?} (crash|stall|sendfail)"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// True when no faults are scheduled — the hot-path gate.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.crashes.is_empty() && self.stalls.is_empty() && self.sendfails.is_empty()
+    }
+
+    /// Worker hook: should `worker` crash now, having just completed
+    /// `epoch` epochs?  Fires each matching entry at most once, so a
+    /// restarted worker re-running the same epoch does not re-crash.
+    #[inline]
+    pub fn should_crash(&self, worker: usize, epoch: usize) -> bool {
+        if self.crashes.is_empty() {
+            return false;
+        }
+        for c in &self.crashes {
+            if c.worker == worker
+                && c.at_epoch == epoch
+                && !c.fired.swap(true, Ordering::AcqRel)
+            {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Worker hook: transient send failures to simulate for `worker`'s
+    /// push at local epoch `epoch` (0 almost always).
+    #[inline]
+    pub fn send_failures(&self, worker: usize, epoch: usize) -> usize {
+        if self.sendfails.is_empty() {
+            return 0;
+        }
+        self.sendfails
+            .iter()
+            .filter(|f| f.worker == worker && f.at_epoch == epoch)
+            .map(|f| f.count)
+            .sum()
+    }
+
+    /// Server hook: milliseconds shard `server` should sleep given its
+    /// applied-push count.  Fires each entry once and records the
+    /// [`FaultEvent::ServerStalled`] itself (the apply path has no
+    /// other channel to the monitor).
+    #[inline]
+    pub fn stall_ms(&self, server: usize, pushes: usize) -> Option<u64> {
+        if self.stalls.is_empty() {
+            return None;
+        }
+        for st in &self.stalls {
+            if st.server == server
+                && pushes >= st.after_pushes
+                && !st.fired.swap(true, Ordering::AcqRel)
+            {
+                self.record(FaultEvent::ServerStalled {
+                    server,
+                    after_pushes: st.after_pushes,
+                    ms: st.ms,
+                });
+                return Some(st.ms);
+            }
+        }
+        None
+    }
+
+    /// Append an event to the plan's log (drained by the monitor).
+    pub fn record(&self, ev: FaultEvent) {
+        self.log.lock().unwrap().push(ev);
+    }
+
+    /// Drain and return all events logged since the last call.
+    pub fn take_events(&self) -> Vec<FaultEvent> {
+        std::mem::take(&mut *self.log.lock().unwrap())
+    }
+}
+
+/// Parse `"<prefix><N>@<M>"` into `(N, M)`.
+fn parse_at(s: &str, prefix: char) -> Result<(usize, usize)> {
+    let (id, rest) = parse_at_raw(s, prefix)?;
+    Ok((id, rest.parse().context("bad trigger number")?))
+}
+
+/// Parse `"<prefix><N>@<rest>"` into `(N, rest)`.
+fn parse_at_raw(s: &str, prefix: char) -> Result<(usize, &str)> {
+    let s = s
+        .strip_prefix(prefix)
+        .with_context(|| format!("target must start with {prefix:?}"))?;
+    let (id, rest) = s.split_once('@').context("expected <id>@<trigger>")?;
+    Ok((id.parse().context("bad target id")?, rest))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_whitespace_specs_yield_the_empty_plan() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ;  ; ").unwrap().is_empty());
+        assert!(FaultPlan::none().is_empty());
+    }
+
+    #[test]
+    fn parses_all_three_kinds() {
+        let p = FaultPlan::parse("crash:w1@5; stall:s0@100+25ms ;sendfail:w2@4x3").unwrap();
+        assert!(!p.is_empty());
+        assert!(!p.should_crash(1, 4));
+        assert!(!p.should_crash(0, 5));
+        assert!(p.should_crash(1, 5));
+        assert!(!p.should_crash(1, 5), "crash entry refired");
+        assert_eq!(p.send_failures(2, 4), 3);
+        assert_eq!(p.send_failures(2, 5), 0);
+        assert_eq!(p.stall_ms(0, 99), None);
+        assert_eq!(p.stall_ms(1, 200), None);
+        assert_eq!(p.stall_ms(0, 100), Some(25));
+        assert_eq!(p.stall_ms(0, 200), None, "stall entry refired");
+        // The stall recorded its own event.
+        let evs = p.take_events();
+        assert_eq!(
+            evs,
+            vec![FaultEvent::ServerStalled { server: 0, after_pushes: 100, ms: 25 }]
+        );
+        assert!(p.take_events().is_empty(), "take_events did not drain");
+    }
+
+    #[test]
+    fn rejects_malformed_specs_with_context() {
+        for bad in [
+            "crash",
+            "crash:x1@5",
+            "crash:w1",
+            "crash:w1@x",
+            "stall:s0@100",
+            "stall:s0@100+25",
+            "sendfail:w2@4",
+            "explode:w0@1",
+        ] {
+            let err = FaultPlan::parse(bad).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("fault entry"),
+                "error for {bad:?} lacks context: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn hooks_on_the_empty_plan_are_inert() {
+        let p = FaultPlan::none();
+        assert!(!p.should_crash(0, 0));
+        assert_eq!(p.send_failures(0, 0), 0);
+        assert_eq!(p.stall_ms(0, usize::MAX), None);
+    }
+
+    #[test]
+    fn record_and_drain_are_fifo() {
+        let p = FaultPlan::none();
+        p.record(FaultEvent::WorkerCrashed { worker: 3, epoch: 7 });
+        p.record(FaultEvent::WorkerRestarted { worker: 3, epoch: 7, attempt: 1 });
+        let evs = p.take_events();
+        assert_eq!(evs.len(), 2);
+        assert!(matches!(evs[0], FaultEvent::WorkerCrashed { worker: 3, epoch: 7 }));
+    }
+}

@@ -38,6 +38,7 @@ mod bufpool;
 mod compute;
 mod delay;
 mod events;
+mod fault;
 mod messages;
 mod placement;
 mod rebalance;
@@ -53,6 +54,7 @@ pub use bufpool::PushPool;
 pub use compute::{make_compute, NativeCompute, WorkerCompute, XlaCompute};
 pub use delay::DelayPolicy;
 pub use events::ObjSample;
+pub use fault::{FaultEvent, FaultPlan};
 pub use messages::PushMsg;
 pub use placement::{
     load_imbalance, make_placement, ContiguousPlacement, DegreePlacement, DynamicPlacement,

@@ -116,6 +116,16 @@ impl BlockMap {
     pub fn snapshot(&self) -> Vec<usize> {
         self.owner.iter().map(|a| a.load(Ordering::Acquire)).collect()
     }
+
+    /// Restore owners wholesale from a checkpoint snapshot *without*
+    /// counting migrations or bumping the version: a resumed run starts
+    /// from the saved placement as if it had been the initial one.
+    pub fn reset_owners(&self, owners: &[usize]) {
+        assert_eq!(owners.len(), self.owner.len(), "owner map geometry mismatch");
+        for (a, &s) in self.owner.iter().zip(owners) {
+            a.store(s, Ordering::Release);
+        }
+    }
 }
 
 /// Greedy LPT (longest-processing-time) packing of `weight` into
@@ -195,12 +205,18 @@ pub struct Rebalancer {
 
 impl Rebalancer {
     pub fn new(map: Arc<BlockMap>, table: Arc<BlockTable>, n_servers: usize) -> Self {
+        // Baseline the first rate window on the table's CURRENT
+        // counters (0 on a fresh run): a checkpoint-resumed table
+        // arrives with its counters pre-seeded, and treating that
+        // history as one window's delta would trigger a spurious
+        // migration burst at the first scan.
         let n = map.n_blocks();
+        let last = (0..n).map(|j| table.push_count(j)).collect();
         Rebalancer {
             map,
             table,
             n_servers,
-            last: vec![0; n],
+            last,
             min_delta: REBALANCE_MIN_DELTA,
             hysteresis: REBALANCE_HYSTERESIS,
             max_moves: REBALANCE_MAX_MOVES,
@@ -260,6 +276,17 @@ mod tests {
         assert_eq!(m.version(), 2);
         assert_eq!(m.migrations(), 2);
         assert_eq!(m.snapshot(), vec![0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn reset_owners_restores_a_snapshot_without_counting_migrations() {
+        let m = BlockMap::new(&[0, 0, 1, 1]);
+        m.set_owner(0, 1);
+        let (v, mig) = (m.version(), m.migrations());
+        m.reset_owners(&[1, 1, 0, 0]);
+        assert_eq!(m.snapshot(), vec![1, 1, 0, 0]);
+        assert_eq!(m.version(), v, "resume must not look like churn");
+        assert_eq!(m.migrations(), mig);
     }
 
     #[test]

@@ -61,6 +61,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use super::block_store::BlockStore;
+use super::fault::FaultPlan;
 use super::messages::PushMsg;
 use super::topology::Topology;
 use super::transport::PushReceiver;
@@ -268,7 +269,11 @@ impl BlockTable {
                 return Ok(out);
             }
             if msg.block_seq < expect {
-                // Transports never duplicate; tolerate in release.
+                // Transports never duplicate, and worker restart
+                // (`FailurePolicy::Restart`) resumes the seq stream from
+                // the crashed worker's send ledger *after* the in-flight
+                // tail drained — so a stale seq here is a bug, not an
+                // expected replay.  Tolerate in release.
                 debug_assert!(false, "duplicate push seq {} < {expect}", msg.block_seq);
                 return Ok(out);
             }
@@ -345,6 +350,33 @@ impl BlockTable {
     fn rounds_of(&self, j: usize) -> usize {
         self.state[j].lock().unwrap().rounds
     }
+
+    /// Drop every parked (seq-gapped) message from `worker` across all
+    /// blocks and return how many were discarded.  Used by the degrade
+    /// failure policy: a dead worker's seq gap would otherwise park its
+    /// in-flight successors forever.  Detached copies own no pooled
+    /// buffer, so dropping them strands nothing.
+    pub fn purge_worker_pending(&self, worker: usize) -> usize {
+        let mut dropped = 0;
+        for st in &self.state {
+            let mut st = st.lock().unwrap();
+            let before = st.pending.len();
+            st.pending.retain(|p| p.worker != worker);
+            dropped += before - st.pending.len();
+        }
+        dropped
+    }
+
+    /// Restore per-block applied-push counters from a checkpoint so the
+    /// dynamic rebalancer's load signal resumes where it left off
+    /// instead of re-learning from zero.  `counts.len()` must equal
+    /// `n_blocks`.
+    pub fn seed_push_counts(&self, counts: &[usize]) {
+        assert_eq!(counts.len(), self.push_count.len(), "push_counts geometry mismatch");
+        for (c, &v) in self.push_count.iter().zip(counts) {
+            c.store(v, Ordering::Relaxed);
+        }
+    }
 }
 
 pub struct ServerShard {
@@ -359,6 +391,9 @@ pub struct ServerShard {
     /// clears this — in-flight lane traffic legitimately lags the map.
     strict: bool,
     table: Arc<BlockTable>,
+    /// Injected fault plan (`--set faults=...`); `None` on every path
+    /// that doesn't opt in, so the hot path pays one branch.
+    faults: Option<Arc<FaultPlan>>,
     // -- stats (atomic: any server thread may apply to this shard) ------
     pushes: AtomicUsize,
     max_staleness: AtomicU64,
@@ -398,6 +433,7 @@ impl ServerShard {
             owned_mask,
             strict,
             table,
+            faults: None,
             pushes: AtomicUsize::new(0),
             max_staleness: AtomicU64::new(0),
             max_queue_s_bits: AtomicU64::new(0),
@@ -409,12 +445,24 @@ impl ServerShard {
         &self.table
     }
 
+    /// Attach a fault plan (`--set faults=stall:sS@P+MSms`).  Only the
+    /// session wires this, and only when the plan is non-empty.
+    pub fn set_faults(&mut self, plan: Arc<FaultPlan>) {
+        self.faults = Some(plan);
+    }
+
     /// Apply one push (Eq. 13 incremental form, seq-gated). O(db).
     /// `&self`: any server thread holding this block's lane claim may
     /// call it; the per-block lease serializes concurrent appliers.
     pub fn handle_push(&self, msg: &PushMsg, prox: &ProxBackend) -> Result<()> {
         if self.strict && !self.owned_mask[msg.block] {
             panic!("server {} got push for foreign block {}", self.id, msg.block);
+        }
+        if let Some(f) = &self.faults {
+            // Deterministic shard stall (fires once; see fault.rs).
+            if let Some(ms) = f.stall_ms(self.id, self.pushes.load(Ordering::Relaxed)) {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+            }
         }
         let ingested = self.table.ingest(msg, prox)?;
         if ingested.applied > 0 {
@@ -633,6 +681,66 @@ mod tests {
         assert_eq!(srv.table().next_seq(j, w), 4);
         // Final w̃ is the LAST sent value — FIFO preserved.
         assert_eq!(srv.table().w_tilde_of(j, w), vec![3.0; 4]);
+    }
+
+    #[test]
+    fn purge_worker_pending_drops_only_that_workers_parked_messages() {
+        let (topo, store, p) = setup();
+        let srv = ServerShard::new(0, &topo, store, p, 10.0, 0.5);
+        let j = srv.owned_blocks()[0];
+        let w = topo.workers_of_block[j][0];
+        let seq_push = |seq: u64, val: f32| {
+            let mut m = push(w, j, vec![val; 4]);
+            m.block_seq = seq;
+            m
+        };
+        // Seq 2 and 3 park behind the missing seq 1 (the dead worker's
+        // in-flight tail after a crash).
+        srv.handle_push(&seq_push(2, 2.0), &ProxBackend::Native).unwrap();
+        srv.handle_push(&seq_push(3, 3.0), &ProxBackend::Native).unwrap();
+        assert_eq!(srv.table().pending_len(j), 2);
+        assert_eq!(srv.table().purge_worker_pending(w), 2);
+        assert_eq!(srv.table().pending_len(j), 0);
+        // Idempotent once empty.
+        assert_eq!(srv.table().purge_worker_pending(w), 0);
+    }
+
+    #[test]
+    fn seed_push_counts_restores_rebalancer_load_signal() {
+        let (topo, store, p) = setup();
+        let srv = ServerShard::new(0, &topo, store, p, 10.0, 0.5);
+        let counts: Vec<usize> = (0..srv.table().n_blocks()).map(|j| 10 + j).collect();
+        srv.table().seed_push_counts(&counts);
+        for (j, &c) in counts.iter().enumerate() {
+            assert_eq!(srv.table().push_count(j), c);
+        }
+    }
+
+    #[test]
+    fn stall_fault_delays_the_shard_exactly_once() {
+        let plan = Arc::new(FaultPlan::parse("stall:s0@1+30ms").unwrap());
+        let (topo, store, p) = setup();
+        let mut srv = ServerShard::new(0, &topo, store, p, 10.0, 0.0);
+        srv.set_faults(plan.clone());
+        let j = srv.owned_blocks()[0];
+        let w = topo.workers_of_block[j][0];
+        // First push: 0 pushes seen so far, below the threshold.
+        srv.handle_push(&push(w, j, vec![0.1; 4]), &ProxBackend::Native).unwrap();
+        // Second push crosses `after_pushes=1` and stalls once.
+        let t0 = std::time::Instant::now();
+        srv.handle_push(&push(w, j, vec![0.2; 4]), &ProxBackend::Native).unwrap();
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(30));
+        // Third push: fired flag set, no further stall event.
+        srv.handle_push(&push(w, j, vec![0.3; 4]), &ProxBackend::Native).unwrap();
+        let evs = plan.take_events();
+        assert_eq!(
+            evs,
+            vec![crate::coordinator::FaultEvent::ServerStalled {
+                server: 0,
+                after_pushes: 1,
+                ms: 30
+            }]
+        );
     }
 
     #[test]

@@ -29,9 +29,25 @@
 //! epoch crosses the next sampling watermark.  Objective sampling is
 //! itself just the built-in observer; user observers see the exact
 //! same [`Progress`] views (threaded and DES paths alike).
+//!
+//! ## Failure model (DESIGN.md §2.0.3)
+//!
+//! A worker thread that panics mid-run — injected via `--set
+//! faults=crash:w0@50` or a genuine bug — is contained by a
+//! `catch_unwind` loop inside its own thread, and `--set
+//! failure=die|degrade|restart` decides what happens next: re-raise
+//! (the pre-fault-model behavior, default), retire the worker and
+//! complete on the survivors, or spawn a warm-started replacement that
+//! resumes the dead worker's seq stream.  The monitor doubles as the
+//! recovery plane: it drains [`FaultEvent`]s to observers, runs the
+//! no-progress stall watchdog (`--set stall_warn_ms=N`) and writes
+//! periodic v2 checkpoints (`--set checkpoint_every=N`) off the hot
+//! path; [`SessionBuilder::resume_from`] warm-starts a new run from
+//! one.
 
 use std::cell::OnceCell;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -41,6 +57,7 @@ use super::block_store::BlockStore;
 use super::compute::make_compute;
 use super::delay::DelayPolicy;
 use super::events::ObjSample;
+use super::fault::{FaultEvent, FaultPlan};
 use super::placement::make_placement;
 use super::rebalance::{BlockMap, Rebalancer};
 use super::sched::{run_pool, run_server, ShardRt};
@@ -52,10 +69,11 @@ use crate::admm::{
     check_theorem1, consensus_gap, objective_at_z, stationarity_residual, Objective,
 };
 use crate::baselines::BaselineReport;
-use crate::config::{Backend, Config, PlacementKind};
+use crate::config::{Backend, Config, FailurePolicy, PlacementKind};
 use crate::data::{Dataset, WorkerShard};
 use crate::info;
 use crate::problem::Problem;
+use crate::report::Checkpoint;
 use crate::runtime::{Manifest, ServerProxXla};
 use crate::sim::CostModel;
 
@@ -116,6 +134,10 @@ pub struct TrainReport {
     /// on the threaded and DES paths; 0 for static placements and
     /// baselines).
     pub migrations: usize,
+    /// Fault-model events (injected faults firing, degrade/restart
+    /// transitions, the stall watchdog) in recording order.  Empty on
+    /// fault-free runs and for the baselines.
+    pub faults: Vec<FaultEvent>,
     /// Present iff the run was [`Algo::Sim`].
     pub sim: Option<SimExtras>,
 }
@@ -241,6 +263,12 @@ pub trait Observer: Send {
 
     /// Called once with the final report, after all threads joined.
     fn on_complete(&mut self, _report: &TrainReport) {}
+
+    /// Called from the monitor thread, in recording order, for every
+    /// fault-model event: injected faults firing, worker degrade /
+    /// restart transitions, and the no-progress stall watchdog
+    /// (`--set stall_warn_ms=N`).  Default: ignore.
+    fn on_fault(&mut self, _event: &FaultEvent) {}
 }
 
 /// The built-in observer: objective sampling into
@@ -290,6 +318,12 @@ impl MonitorGate {
         self.wake_at.store(epoch, Ordering::Release);
         std::thread::park_timeout(Duration::from_millis(5));
     }
+
+    /// Wake the monitor immediately, regardless of the epoch watermark
+    /// (fault events, worker death — anything it should notice now).
+    pub fn wake(&self) {
+        self.monitor.unpark();
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -307,6 +341,7 @@ impl Session {
             transport: None,
             observers: Vec::new(),
             algo: Algo::AsyncAdmm,
+            resume: None,
         }
     }
 }
@@ -317,6 +352,7 @@ pub struct SessionBuilder<'a> {
     transport: Option<Box<dyn Transport>>,
     observers: Vec<Box<dyn Observer + 'a>>,
     algo: Algo,
+    resume: Option<&'a Checkpoint>,
 }
 
 impl<'a> SessionBuilder<'a> {
@@ -346,6 +382,19 @@ impl<'a> SessionBuilder<'a> {
         self
     }
 
+    /// Warm-start from a saved [`Checkpoint`]: its consensus z seeds
+    /// the block store (so workers start from x⁰ = z̃⁰), a dynamic
+    /// placement restores the saved owner map and per-block push
+    /// counters, and v2 per-worker duals (when present and matching
+    /// this run's geometry) warm-start each worker's y.  The run still
+    /// executes `cfg.epochs` fresh epochs — resume restores *state*,
+    /// not the remaining epoch budget.  Threaded [`Algo::AsyncAdmm`]
+    /// only; other algos ignore it.
+    pub fn resume_from(mut self, ck: &'a Checkpoint) -> Self {
+        self.resume = Some(ck);
+        self
+    }
+
     pub fn run(mut self) -> Result<TrainReport> {
         let (ds, shards) = self
             .data
@@ -362,7 +411,7 @@ impl<'a> SessionBuilder<'a> {
                         cfg.batch,
                     )
                 });
-                run_threaded(cfg, ds, shards, transport, &mut self.observers)?
+                run_threaded(cfg, ds, shards, transport, &mut self.observers, self.resume)?
             }
             Algo::SyncAdmm => {
                 from_baseline(crate::baselines::run_sync_admm(cfg, ds, shards)?)
@@ -389,6 +438,7 @@ impl<'a> SessionBuilder<'a> {
                     consensus_max: f64::NAN,
                     theorem1_feasible: false,
                     migrations: r.migrations,
+                    faults: r.faults,
                     sim: Some(SimExtras {
                         virtual_time_s: r.virtual_time_s,
                         time_to_epoch: r.time_to_epoch,
@@ -419,6 +469,7 @@ fn from_baseline(r: BaselineReport) -> TrainReport {
         consensus_max: f64::NAN,
         theorem1_feasible: false,
         migrations: 0,
+        faults: Vec::new(),
         sim: None,
     }
 }
@@ -433,6 +484,7 @@ fn run_threaded<'o>(
     shards: &[WorkerShard],
     transport: Box<dyn Transport>,
     observers: &mut [Box<dyn Observer + 'o>],
+    resume: Option<&Checkpoint>,
 ) -> Result<TrainReport> {
     cfg.validate()?;
     anyhow::ensure!(shards.len() == cfg.n_workers, "shards/workers mismatch");
@@ -445,6 +497,25 @@ fn run_threaded<'o>(
     let placement = make_placement(cfg.placement);
     let topo = Topology::build_with(shards, cfg.n_blocks, cfg.n_servers, placement.as_ref());
     let store = Arc::new(BlockStore::new(cfg.n_blocks, cfg.block_size));
+    // Checkpoint resume: seed the store BEFORE the table and the
+    // workers pull their z⁰ (both honor a non-zero initialization).
+    if let Some(ck) = resume {
+        anyhow::ensure!(
+            ck.n_blocks == cfg.n_blocks && ck.block_size == cfg.block_size,
+            "checkpoint geometry {}x{} does not match config {}x{}",
+            ck.n_blocks,
+            ck.block_size,
+            cfg.n_blocks,
+            cfg.block_size
+        );
+        for j in 0..cfg.n_blocks {
+            store.write(j, &ck.z[j * cfg.block_size..(j + 1) * cfg.block_size]);
+        }
+    }
+    // Deterministic fault injection (`--set faults=...`): an empty
+    // plan short-circuits every hook to one branch.
+    let fault_plan =
+        Arc::new(FaultPlan::parse(&cfg.faults).context("invalid value for config key \"faults\"")?);
     let policy =
         DelayPolicy { net_mean_ms: cfg.net_delay_mean_ms, pull_hold: cfg.pull_hold.max(1) };
 
@@ -496,6 +567,16 @@ fn run_threaded<'o>(
     let gate = MonitorGate::new();
     let worker_results: Mutex<Vec<Option<(WorkerStats, Vec<f32>, Vec<f32>)>>> =
         Mutex::new((0..cfg.n_workers).map(|_| None).collect());
+    // Degraded (force-retired) workers: excluded from the monitor's
+    // min-epoch and liveness checks, tolerated missing at collection.
+    let dead: Vec<AtomicBool> = (0..cfg.n_workers).map(|_| AtomicBool::new(false)).collect();
+    // Per-(worker, slot) sent-seq watermarks, owned here so they
+    // survive a worker panic: the restart path seeds the replacement's
+    // seq counters from them once the in-flight tail has drained.
+    let ledgers: Vec<Vec<AtomicU64>> = shards
+        .iter()
+        .map(|s| (0..s.n_slots()).map(|_| AtomicU64::new(0)).collect())
+        .collect();
 
     // All per-block server state lives in ONE table shared by every
     // shard (the block write leases): with `drain=steal` any server
@@ -508,9 +589,27 @@ fn run_threaded<'o>(
     // never touch it after this; `placement=dynamic` hands it to the
     // rebalancer below.
     let map = Arc::new(BlockMap::new(&topo.server_of_block));
+    if let Some(ck) = resume {
+        // v2 recovery state (empty on v1 files): the saved owner map
+        // resumes a dynamic placement where it left off — a map from a
+        // different shard count is ignored rather than mis-routed —
+        // and the push counters resume the rebalancer's load signal.
+        if dynamic
+            && ck.block_owners.len() == cfg.n_blocks
+            && ck.block_owners.iter().all(|&s| s < cfg.n_servers)
+        {
+            map.reset_owners(&ck.block_owners);
+        }
+        if ck.push_counts.len() == cfg.n_blocks {
+            table.seed_push_counts(&ck.push_counts);
+        }
+    }
     let shard_rts: Vec<ShardRt> = (0..cfg.n_servers)
         .map(|sid| {
-            let shard = ServerShard::with_table(sid, &topo, table.clone(), !dynamic);
+            let mut shard = ServerShard::with_table(sid, &topo, table.clone(), !dynamic);
+            if !fault_plan.is_empty() {
+                shard.set_faults(fault_plan.clone());
+            }
             ShardRt::new(shard, transport.as_ref())
         })
         .collect();
@@ -524,6 +623,7 @@ fn run_threaded<'o>(
 
     let start = Instant::now();
     let mut sampler = ObjectiveSampler::default();
+    let mut fault_events: Vec<FaultEvent> = Vec::new();
 
     std::thread::scope(|scope| -> Result<()> {
         let mut server_handles = Vec::with_capacity(n_threads);
@@ -562,53 +662,174 @@ fn run_threaded<'o>(
         for shard in shards {
             let wid = shard.worker_id;
             let tx = transport.connect_worker(wid);
+            let transport_ref: &dyn Transport = transport.as_ref();
             let router: &BlockMap = &map;
             let store = &store;
+            let table = &table;
             let progress = &progress[wid];
             let gate = &gate;
             let manifest = manifest.as_ref();
             let worker_results = &worker_results;
+            let fault_plan = &fault_plan;
+            let dead = &dead;
+            let ledger: &[AtomicU64] = &ledgers[wid];
             let seed = cfg.seed ^ (0x9E37 + wid as u64 * 0x1000_0000_01B3);
             let local_weight = 1.0 / shard.samples().max(1) as f32;
+            // Checkpoint-resume warm duals (geometry-gated; a v1 file
+            // or a foreign shard layout falls back to y⁰ = 0).
+            let resume_duals = resume
+                .and_then(|ck| ck.duals.get(wid))
+                .filter(|y| y.len() == shard.packed_dim())
+                .cloned();
             worker_handles.push(scope.spawn(move || {
-                let mut compute = make_compute(
-                    cfg.backend,
-                    shard,
-                    problem,
-                    local_weight,
-                    manifest,
-                    cfg.m_chunk,
-                    cfg.d_pad,
-                )
-                .expect("construct worker compute backend");
-                let mut ctx = WorkerCtx::new(
-                    shard,
-                    store,
-                    router,
-                    tx,
-                    policy,
-                    cfg.selection,
-                    cfg.rho,
-                    cfg.epochs,
-                    cfg.max_delay,
-                    cfg.enforce_delay_bound,
-                    seed,
-                    progress,
-                    gate,
-                    pool_cap,
-                );
-                let stats = ctx.run(compute.as_mut()).expect("worker loop failed");
-                let (x, y) = ctx.into_state();
-                worker_results.lock().unwrap()[wid] = Some((stats, x, y));
+                // Crash containment (module docs "Failure model"): a
+                // panic anywhere in an attempt unwinds to this loop —
+                // dropping the attempt's sender, whose Drop-flush
+                // delivers any batched remainder — and `cfg.failure`
+                // picks die / degrade / restart.  Replacements run on
+                // this same OS thread, so the dead endpoint is fully
+                // dropped before `reconnect_worker` re-opens it (the
+                // SPSC single-producer handoff is sequential).
+                let mut first_tx = Some(tx);
+                let mut attempt = 0usize;
+                loop {
+                    let tx = match first_tx.take() {
+                        Some(tx) => tx,
+                        None => transport_ref.reconnect_worker(wid),
+                    };
+                    let start_epoch = progress.load(Ordering::Acquire);
+                    let run = catch_unwind(AssertUnwindSafe(
+                        || -> (WorkerStats, Vec<f32>, Vec<f32>) {
+                            let mut compute = make_compute(
+                                cfg.backend,
+                                shard,
+                                problem,
+                                local_weight,
+                                manifest,
+                                cfg.m_chunk,
+                                cfg.d_pad,
+                            )
+                            .expect("construct worker compute backend");
+                            let mut ctx = WorkerCtx::new(
+                                shard,
+                                store,
+                                router,
+                                tx,
+                                policy,
+                                cfg.selection,
+                                cfg.rho,
+                                cfg.epochs,
+                                cfg.max_delay,
+                                cfg.enforce_delay_bound,
+                                seed,
+                                progress,
+                                gate,
+                                pool_cap,
+                                fault_plan,
+                                ledger,
+                            );
+                            if attempt > 0 {
+                                // Warm-started replacement: resume the
+                                // crashed worker's epoch and seq stream
+                                // (the gate accepts `ledger + 1` next),
+                                // duals re-derived from server state.
+                                let seqs: Vec<u64> = ledger
+                                    .iter()
+                                    .map(|a| a.load(Ordering::Acquire))
+                                    .collect();
+                                ctx.resume_at(start_epoch, &seqs);
+                                ctx.warm_duals(&approx_duals(
+                                    table, store, shard, ledger, cfg.rho,
+                                ));
+                            } else if let Some(y) = resume_duals.as_deref() {
+                                ctx.warm_duals(y);
+                            }
+                            let stats =
+                                ctx.run(compute.as_mut()).expect("worker loop failed");
+                            let (x, y) = ctx.into_state();
+                            (stats, x, y)
+                        },
+                    ));
+                    match run {
+                        Ok(res) => {
+                            worker_results.lock().unwrap()[wid] = Some(res);
+                            break;
+                        }
+                        Err(payload) => {
+                            let at = progress.load(Ordering::Acquire);
+                            match cfg.failure {
+                                // Pre-fault-model behavior: the scope
+                                // join re-raises, the monitor's liveness
+                                // check tears the run down.
+                                FailurePolicy::Die => resume_unwind(payload),
+                                FailurePolicy::Degrade => {
+                                    degrade_worker(fault_plan, table, dead, gate, wid, at);
+                                    break;
+                                }
+                                FailurePolicy::Restart => {
+                                    fault_plan.record(FaultEvent::WorkerCrashed {
+                                        worker: wid,
+                                        epoch: at,
+                                    });
+                                    gate.wake();
+                                    if !wait_tail_drained(table, shard, ledger) {
+                                        // The in-flight tail never fully
+                                        // applied (e.g. messages destroyed
+                                        // against a closed lane): no
+                                        // replacement stream can be
+                                        // accepted — degrade instead.
+                                        degrade_worker(
+                                            fault_plan, table, dead, gate, wid, at,
+                                        );
+                                        break;
+                                    }
+                                    attempt += 1;
+                                    fault_plan.record(FaultEvent::WorkerRestarted {
+                                        worker: wid,
+                                        epoch: at,
+                                        attempt,
+                                    });
+                                    gate.wake();
+                                }
+                            }
+                        }
+                    }
+                }
             }));
         }
 
         // -- monitor (this thread, parked between samples) -------------------
         let log_every = cfg.log_every.max(1);
         let mut next_epoch = 0usize;
+        // Stall watchdog state (`--set stall_warn_ms=N`): one event
+        // per no-progress episode, re-armed by any progress.
+        let mut progress_sum = usize::MAX;
+        let mut progress_at = Instant::now();
+        let mut stall_fired = false;
+        // Periodic checkpoint watermark (`--set checkpoint_every=N`).
+        let mut next_ckpt =
+            if cfg.checkpoint_every > 0 { cfg.checkpoint_every } else { usize::MAX };
         loop {
-            let min_epoch =
-                progress.iter().map(|p| p.load(Ordering::Acquire)).min().unwrap_or(0);
+            // Min epoch over the workers still alive: a degraded
+            // worker's frozen progress must not hold sampling (or
+            // termination) hostage.  All dead → nothing left to wait
+            // for.
+            let min_epoch = progress
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| !dead[i].load(Ordering::Acquire))
+                .map(|(_, p)| p.load(Ordering::Acquire))
+                .min();
+            let Some(min_epoch) = min_epoch else { break };
+            // Fault telemetry: deliver events recorded since the last
+            // wakeup (injected faults, degrade/restart transitions) to
+            // every observer, in order.
+            for ev in fault_plan.take_events() {
+                for obs in observers.iter_mut() {
+                    obs.on_fault(&ev);
+                }
+                fault_events.push(ev);
+            }
             // Samples at `epoch == cfg.epochs` are the final-state row
             // appended after the join below — never emitted here, so no
             // sample ever lands past the configured budget.
@@ -628,6 +849,21 @@ fn run_threaded<'o>(
                 next_epoch = next_epoch.max(min_epoch) + log_every;
             }
             if min_epoch >= cfg.epochs {
+                // Final checkpoint at the budget watermark: with
+                // checkpointing on, a resumable artifact exists even
+                // when a fast run outpaced every periodic watermark.
+                if cfg.checkpoint_every > 0 {
+                    let ck = snapshot_checkpoint(
+                        cfg, shards, &store, &table, &map, &ledgers, &problem, weight,
+                        min_epoch,
+                    );
+                    if let Err(e) = ck.save(&cfg.checkpoint_path) {
+                        eprintln!(
+                            "final checkpoint -> {:?} failed: {e:#}",
+                            cfg.checkpoint_path
+                        );
+                    }
+                }
                 break;
             }
             // Dynamic re-placement rides the monitor's wakeups: sample
@@ -639,6 +875,47 @@ fn run_threaded<'o>(
                     last_scan = Instant::now();
                 }
             }
+            // Stall watchdog: TOTAL progress frozen for stall_warn_ms
+            // (a stalled shard backpressures every worker pushing to
+            // it) fires one `Stalled` event per episode.
+            if cfg.stall_warn_ms > 0 {
+                let sum: usize = progress.iter().map(|p| p.load(Ordering::Acquire)).sum();
+                if sum != progress_sum {
+                    progress_sum = sum;
+                    progress_at = Instant::now();
+                    stall_fired = false;
+                } else if !stall_fired
+                    && progress_at.elapsed() >= Duration::from_millis(cfg.stall_warn_ms)
+                {
+                    stall_fired = true;
+                    let ev = FaultEvent::Stalled {
+                        min_epoch,
+                        waited_ms: progress_at.elapsed().as_millis() as u64,
+                    };
+                    for obs in observers.iter_mut() {
+                        obs.on_fault(&ev);
+                    }
+                    fault_events.push(ev);
+                }
+            }
+            // Periodic checkpointing, entirely off the worker/server
+            // hot paths (this thread computes the approximate duals
+            // from the shared table).  An IO failure is reported, not
+            // fatal: persistence must never kill a healthy run.
+            if min_epoch >= next_ckpt && min_epoch < cfg.epochs {
+                while next_ckpt <= min_epoch {
+                    next_ckpt += cfg.checkpoint_every;
+                }
+                let ck = snapshot_checkpoint(
+                    cfg, shards, &store, &table, &map, &ledgers, &problem, weight, min_epoch,
+                );
+                if let Err(e) = ck.save(&cfg.checkpoint_path) {
+                    eprintln!(
+                        "checkpoint at epoch {min_epoch} -> {:?} failed: {e:#}",
+                        cfg.checkpoint_path
+                    );
+                }
+            }
             // Liveness: a server exiting before shutdown, or a worker
             // exiting below its epoch budget, died on a panic.  Stop
             // monitoring and shut the transport down so the remaining
@@ -647,7 +924,9 @@ fn run_threaded<'o>(
             // forever on progress that will never come.
             let thread_died = server_handles.iter().any(|h| h.is_finished())
                 || worker_handles.iter().enumerate().any(|(i, h)| {
-                    h.is_finished() && progress[i].load(Ordering::Acquire) < cfg.epochs
+                    h.is_finished()
+                        && !dead[i].load(Ordering::Acquire)
+                        && progress[i].load(Ordering::Acquire) < cfg.epochs
                 });
             if thread_died {
                 // A dead server thread can no longer drop its receivers
@@ -680,6 +959,14 @@ fn run_threaded<'o>(
         Ok(())
     })?;
     let elapsed_s = start.elapsed().as_secs_f64();
+    // Events recorded after the monitor's last drain (e.g. a degrade
+    // racing the final wakeup) still reach observers and the report.
+    for ev in fault_plan.take_events() {
+        for obs in observers.iter_mut() {
+            obs.on_fault(&ev);
+        }
+        fault_events.push(ev);
+    }
 
     // -- final metrics ---------------------------------------------------
     let z_final = store.snapshot();
@@ -688,19 +975,41 @@ fn run_threaded<'o>(
     let mut worker_stats = Vec::with_capacity(cfg.n_workers);
     let mut xs = Vec::with_capacity(cfg.n_workers);
     let mut ys = Vec::with_capacity(cfg.n_workers);
-    for r in collected {
-        let (stats, x, y) = r.context("worker did not report")?;
-        worker_stats.push(stats);
-        xs.push(x);
-        ys.push(y);
+    let mut missing = false;
+    for (i, r) in collected.into_iter().enumerate() {
+        match r {
+            Some((stats, x, y)) => {
+                worker_stats.push(stats);
+                xs.push(x);
+                ys.push(y);
+            }
+            None => {
+                // Only a degraded (force-retired) worker may fail to
+                // report; anything else is a runtime bug.
+                anyhow::ensure!(
+                    dead[i].load(Ordering::Acquire),
+                    "worker {i} did not report"
+                );
+                missing = true;
+                worker_stats.push(WorkerStats::default());
+            }
+        }
     }
     // Per-shard stats live in the shared shard state (any thread may
     // have applied them under `drain=steal`); a dead server thread is
     // still a hard error — its panic re-raised at the scope join above.
     let server_stats: Vec<ServerStats> =
         shard_rts.iter().map(|rt| rt.shard.stats()).collect();
-    let stationarity = stationarity_residual(shards, &problem, cfg.rho, &xs, &ys, &z_final);
-    let (consensus_max, _) = consensus_gap(shards, &xs, &z_final);
+    // Eq. 14 / consensus need EVERY worker's final x/y: a degraded run
+    // reports NaN rather than a number computed from the survivors
+    // pretending to be the full set.
+    let (stationarity, consensus_max) = if missing {
+        (f64::NAN, f64::NAN)
+    } else {
+        let st = stationarity_residual(shards, &problem, cfg.rho, &xs, &ys, &z_final);
+        let (cm, _) = consensus_gap(shards, &xs, &z_final);
+        (st, cm)
+    };
 
     // Ensure the last sample reflects the final state.
     let mut samples = sampler.samples;
@@ -728,8 +1037,110 @@ fn run_threaded<'o>(
         consensus_max,
         theorem1_feasible: t1.feasible,
         migrations: map.migrations(),
+        faults: fault_events,
         sim: None,
     })
+}
+
+/// Degrade transition: drop the dead worker's parked (seq-gapped)
+/// messages so no gap blocks other streams, record the event, retire
+/// the worker, and wake the monitor.  Its w̃ contributions stay frozen
+/// in the table — the survivors' consensus still includes them.
+fn degrade_worker(
+    plan: &FaultPlan,
+    table: &BlockTable,
+    dead: &[AtomicBool],
+    gate: &MonitorGate,
+    wid: usize,
+    epoch: usize,
+) {
+    let parked = table.purge_worker_pending(wid);
+    plan.record(FaultEvent::WorkerDegraded { worker: wid, epoch, parked_dropped: parked });
+    dead[wid].store(true, Ordering::Release);
+    gate.wake();
+}
+
+/// Restart precondition: poll until every push the crashed endpoint
+/// handed to the transport has been applied — the seq gate then sits
+/// at `ledger + 1` on every slot, exactly where the replacement's
+/// continuation stream begins.  Bounded: a tail that never drains
+/// (messages destroyed mid-flight against a closed lane) times out and
+/// the caller falls back to degrade.
+fn wait_tail_drained(table: &BlockTable, shard: &WorkerShard, ledger: &[AtomicU64]) -> bool {
+    let deadline = Instant::now() + Duration::from_secs(2);
+    loop {
+        let drained = shard.active_blocks.iter().enumerate().all(|(slot, &j)| {
+            table.next_seq(j, shard.worker_id) == ledger[slot].load(Ordering::Acquire) + 1
+        });
+        if drained {
+            return true;
+        }
+        if Instant::now() >= deadline {
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Per-worker dual approximation from server-side state: for every
+/// slot the worker has pushed at least once (ledger > 0), the cached
+/// w̃ = ρx + y and x ≈ z̃ give y ≈ w̃ − ρ·z̃; never-pushed slots keep
+/// the fresh-worker y⁰ = 0.  Used to warm-start restarted workers and
+/// to snapshot duals into checkpoints without touching worker threads.
+fn approx_duals(
+    table: &BlockTable,
+    store: &BlockStore,
+    shard: &WorkerShard,
+    ledger: &[AtomicU64],
+    rho: f32,
+) -> Vec<f32> {
+    let db = shard.block_size;
+    let mut y = vec![0.0f32; shard.packed_dim()];
+    let mut z = vec![0.0f32; db];
+    for (slot, &j) in shard.active_blocks.iter().enumerate() {
+        if ledger[slot].load(Ordering::Acquire) == 0 {
+            continue;
+        }
+        let w = table.w_tilde_of(j, shard.worker_id);
+        store.read_into(j, &mut z);
+        for k in 0..db {
+            y[slot * db + k] = w[k] - rho * z[k];
+        }
+    }
+    y
+}
+
+/// Monitor-side v2 checkpoint assembly (see `report/checkpoint.rs`):
+/// consensus z, live owner map, per-block push counters, and the
+/// approximate per-worker duals.
+#[allow(clippy::too_many_arguments)]
+fn snapshot_checkpoint(
+    cfg: &Config,
+    shards: &[WorkerShard],
+    store: &BlockStore,
+    table: &BlockTable,
+    map: &BlockMap,
+    ledgers: &[Vec<AtomicU64>],
+    problem: &Problem,
+    weight: f32,
+    epoch: usize,
+) -> Checkpoint {
+    let z = store.snapshot();
+    let objective = objective_at_z(shards, problem, weight, &z).total();
+    Checkpoint {
+        config_summary: cfg.summary(),
+        n_blocks: cfg.n_blocks,
+        block_size: cfg.block_size,
+        epoch,
+        objective,
+        block_owners: map.snapshot(),
+        push_counts: (0..cfg.n_blocks).map(|j| table.push_count(j)).collect(),
+        duals: shards
+            .iter()
+            .map(|sh| approx_duals(table, store, sh, &ledgers[sh.worker_id], cfg.rho))
+            .collect(),
+        z,
+    }
 }
 
 #[cfg(test)]

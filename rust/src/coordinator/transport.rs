@@ -126,6 +126,16 @@ pub trait Transport: Send + Sync {
     /// The sending endpoint for `worker`.  At most one call per worker.
     fn connect_worker(&self, worker: usize) -> Box<dyn PushSender>;
 
+    /// A *replacement* sending endpoint for a worker whose previous
+    /// endpoint is gone (`failure=restart` in `session.rs`).  The
+    /// caller must guarantee the original endpoint was dropped first —
+    /// the restart path satisfies this trivially because the
+    /// replacement runs on the thread that just unwound the original,
+    /// so the ring transport's single-producer discipline transfers to
+    /// the new endpoint without a race.  Panics if `worker` was never
+    /// connected.
+    fn reconnect_worker(&self, worker: usize) -> Box<dyn PushSender>;
+
     /// The receiving endpoint for `server`.  At most one call per server
     /// (shared with [`Transport::connect_server_lanes`]).
     fn connect_server(&self, server: usize) -> Box<dyn PushReceiver>;
@@ -232,17 +242,8 @@ impl MpscTransport {
             batch: batch.max(1),
         }
     }
-}
 
-impl Transport for MpscTransport {
-    fn name(&self) -> &'static str {
-        "mpsc"
-    }
-
-    fn connect_worker(&self, worker: usize) -> Box<dyn PushSender> {
-        let mut taken = self.worker_taken.lock().unwrap();
-        assert!(!taken[worker], "worker {worker} endpoint already taken");
-        taken[worker] = true;
+    fn make_sender(&self) -> Box<dyn PushSender> {
         let txs: Vec<SyncSender<PushMsg>> = self
             .txs
             .lock()
@@ -257,6 +258,29 @@ impl Transport for MpscTransport {
         } else {
             Box::new(inner)
         }
+    }
+}
+
+impl Transport for MpscTransport {
+    fn name(&self) -> &'static str {
+        "mpsc"
+    }
+
+    fn connect_worker(&self, worker: usize) -> Box<dyn PushSender> {
+        let mut taken = self.worker_taken.lock().unwrap();
+        assert!(!taken[worker], "worker {worker} endpoint already taken");
+        taken[worker] = true;
+        drop(taken);
+        self.make_sender()
+    }
+
+    fn reconnect_worker(&self, worker: usize) -> Box<dyn PushSender> {
+        let taken = self.worker_taken.lock().unwrap();
+        assert!(taken[worker], "worker {worker} was never connected");
+        drop(taken);
+        // The channels are MPSC: a replacement clone of the root
+        // senders is all a restarted worker needs.
+        self.make_sender()
     }
 
     fn connect_server(&self, server: usize) -> Box<dyn PushReceiver> {
@@ -516,6 +540,16 @@ impl SpscRingTransport {
         assert!(!taken[server], "server {server} endpoint already taken (SPSC)");
         taken[server] = true;
     }
+
+    fn make_sender(&self, worker: usize) -> Box<dyn PushSender> {
+        let n_servers = self.shared.closed.len();
+        Box::new(RingSender {
+            shared: self.shared.clone(),
+            worker,
+            batch: self.batch,
+            pending: (0..n_servers).map(|_| Vec::with_capacity(self.batch)).collect(),
+        })
+    }
 }
 
 impl Transport for SpscRingTransport {
@@ -527,13 +561,18 @@ impl Transport for SpscRingTransport {
         let mut taken = self.worker_taken.lock().unwrap();
         assert!(!taken[worker], "worker {worker} endpoint already taken (SPSC)");
         taken[worker] = true;
-        let n_servers = self.shared.closed.len();
-        Box::new(RingSender {
-            shared: self.shared.clone(),
-            worker,
-            batch: self.batch,
-            pending: (0..n_servers).map(|_| Vec::with_capacity(self.batch)).collect(),
-        })
+        drop(taken);
+        self.make_sender(worker)
+    }
+
+    fn reconnect_worker(&self, worker: usize) -> Box<dyn PushSender> {
+        let taken = self.worker_taken.lock().unwrap();
+        assert!(taken[worker], "worker {worker} was never connected (SPSC)");
+        drop(taken);
+        // Sound only because the caller guarantees the previous
+        // producer was dropped (trait contract): exactly one producer
+        // touches each `rings[worker][*]` at any time.
+        self.make_sender(worker)
     }
 
     fn connect_server(&self, server: usize) -> Box<dyn PushReceiver> {
@@ -1032,6 +1071,105 @@ mod tests {
                 "[{name}] queued buffers lost on teardown"
             );
         });
+    }
+
+    #[test]
+    fn flush_into_closed_lane_errors_like_send_and_strands_no_buffer() {
+        // A lane force-closed mid-partial-batch: `flush()` must surface
+        // the same "hung up" error `send` uses, never panic, and every
+        // pooled buffer must come home — batched and not, both impls.
+        let cases: Vec<(Box<dyn Transport>, usize)> = vec![
+            (Box::new(MpscTransport::new(1, 1, 8, 1)), 1),
+            (Box::new(MpscTransport::new(1, 1, 8, 2)), 2),
+            (Box::new(MpscTransport::new(1, 1, 8, 3)), 3),
+            (Box::new(SpscRingTransport::new(1, 1, 8, 1)), 1),
+            (Box::new(SpscRingTransport::new(1, 1, 8, 2)), 2),
+            (Box::new(SpscRingTransport::new(1, 1, 8, 3)), 3),
+        ];
+        for (t, batch) in cases {
+            let name = t.name();
+            let (home, inbox) = std::sync::mpsc::channel::<Vec<f32>>();
+            let mut created = 0usize;
+            let mut make = |i: usize| {
+                created += 1;
+                let mut m = msg(0, i);
+                m.recycle = Some(home.clone());
+                m
+            };
+            let mut tx = t.connect_worker(0);
+            // batch=1: delivered to the queue; batch>1: a partial batch
+            // parked in the sender.
+            tx.send(0, make(0)).unwrap();
+            drop(t.connect_server(0)); // force-close the lane
+            match tx.flush() {
+                Err(e) => assert!(
+                    e.to_string().contains("hung up"),
+                    "[{name} b{batch}] flush error {e:#} != send convention"
+                ),
+                Ok(()) => assert_eq!(
+                    batch, 1,
+                    "[{name} b{batch}] flush swallowed a partial batch into a dead lane"
+                ),
+            }
+            // `send` reports the same failure (a batched sender may
+            // buffer a few first, but must fail within one batch).
+            let mut send_err = None;
+            for i in 1..=batch + 1 {
+                if let Err(e) = tx.send(0, make(i)) {
+                    send_err = Some(e);
+                    break;
+                }
+            }
+            let e = send_err.unwrap_or_else(|| {
+                panic!("[{name} b{batch}] send kept succeeding into a closed lane")
+            });
+            assert!(e.to_string().contains("hung up"), "[{name} b{batch}] {e:#}");
+            drop(tx);
+            drop(t);
+            assert_eq!(
+                inbox.try_iter().count(),
+                created,
+                "[{name} b{batch}] pooled buffer stranded"
+            );
+        }
+    }
+
+    #[test]
+    fn reconnected_worker_resumes_the_same_fifo_stream() {
+        // The restart path: the first endpoint dies mid-stream (its
+        // partial batch flushes on drop), a replacement endpoint
+        // continues the stream, and the server sees one gap-free FIFO.
+        each_transport(2, 1, |t| {
+            let mut tx = t.connect_worker(1);
+            for i in 0..5 {
+                tx.send(0, msg(1, i)).unwrap();
+            }
+            drop(tx); // "crash": unwind drops the endpoint, flushing
+            let mut tx2 = t.reconnect_worker(1);
+            for i in 5..10 {
+                tx2.send(0, msg(1, i)).unwrap();
+            }
+            drop(tx2);
+            t.shutdown();
+            let mut rx = t.connect_server(0);
+            for i in 0..10 {
+                let m = rx.recv().expect("stream ended early");
+                assert_eq!(
+                    (m.worker, m.worker_epoch),
+                    (1, i),
+                    "[{}] reorder across reconnect",
+                    t.name()
+                );
+            }
+            assert!(rx.recv().is_none(), "[{}] phantom message", t.name());
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "never connected")]
+    fn reconnect_before_connect_is_rejected() {
+        let t = SpscRingTransport::new(2, 1, 4, 1);
+        let _ = t.reconnect_worker(0);
     }
 
     #[test]

@@ -23,7 +23,7 @@
 //!   instead of taken every push — the syscall leaves the hot loop and
 //!   the latency stat stays statistically intact.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -32,6 +32,7 @@ use super::block_store::BlockStore;
 use super::bufpool::PushPool;
 use super::compute::WorkerCompute;
 use super::delay::DelayPolicy;
+use super::fault::FaultPlan;
 use super::messages::PushMsg;
 use super::rebalance::BlockMap;
 use super::session::MonitorGate;
@@ -59,6 +60,9 @@ pub struct WorkerStats {
     /// Push buffers ever allocated by this worker's pool — bounded by the
     /// pool cap (≈ push channel capacity), NOT by `epochs`.
     pub pool_high_water: usize,
+    /// Transient send failures survived (injected via `--set faults=
+    /// sendfail:...`; each costs one bounded retry).
+    pub send_retries: usize,
 }
 
 pub struct WorkerCtx<'a> {
@@ -95,6 +99,16 @@ pub struct WorkerCtx<'a> {
     last_server: Vec<usize>,
     /// Recycled push buffers (w rides to the server and comes back).
     pool: PushPool,
+    /// Injected-fault schedule; `is_empty` short-circuits every hook.
+    faults: &'a FaultPlan,
+    /// Per-slot sent-seq watermarks, stamped after every successful
+    /// send.  Lives *outside* the ctx (owned by the session) so it
+    /// survives a worker panic: the restart path seeds the replacement's
+    /// `push_seq` from it once the in-flight tail has drained.
+    ledger: &'a [AtomicU64],
+    /// First epoch of the loop (0 for a fresh worker; the crash epoch
+    /// for a restarted one, so total pushes match the fault-free run).
+    start_epoch: usize,
     // scratch
     y_new: Vec<f32>,
     x_new: Vec<f32>,
@@ -118,7 +132,10 @@ impl<'a> WorkerCtx<'a> {
         progress: &'a AtomicUsize,
         gate: &'a MonitorGate,
         pool_cap: usize,
+        faults: &'a FaultPlan,
+        ledger: &'a [AtomicU64],
     ) -> Self {
+        debug_assert_eq!(ledger.len(), shard.n_slots());
         let db = shard.block_size;
         // Algorithm 1 lines 1-2: pull z⁰, x⁰ = z⁰, y⁰ = 0.
         let mut z0 = vec![0.0f32; shard.packed_dim()];
@@ -145,10 +162,31 @@ impl<'a> WorkerCtx<'a> {
             push_seq: vec![0u64; shard.n_slots()],
             last_server: vec![usize::MAX; shard.n_slots()],
             pool: PushPool::new(db, pool_cap),
+            faults,
+            ledger,
+            start_epoch: 0,
             y_new: vec![0.0; db],
             x_new: vec![0.0; db],
             stats: WorkerStats::default(),
         }
+    }
+
+    /// Resume support (`failure=restart`, checkpoint resume): start the
+    /// epoch loop at `start_epoch` and seed the per-slot seq counters so
+    /// the server's gate accepts this stream as a continuation of the
+    /// dead worker's — the next push on slot `s` carries `seqs[s] + 1`,
+    /// exactly what the gate expects once the old tail drained.
+    pub fn resume_at(&mut self, start_epoch: usize, seqs: &[u64]) {
+        self.start_epoch = start_epoch.min(self.epochs);
+        self.push_seq.copy_from_slice(seqs);
+        self.state.epoch = self.start_epoch;
+    }
+
+    /// Overwrite the packed dual with a warm-start snapshot (the
+    /// restart/resume paths compute y = w̃ − ρ·z̃ from server state, so
+    /// the first replacement push is consistent with the shard's cache).
+    pub fn warm_duals(&mut self, y: &[f32]) {
+        self.state.y.copy_from_slice(y);
     }
 
     fn select_slot(&mut self, t: usize) -> usize {
@@ -181,9 +219,10 @@ impl<'a> WorkerCtx<'a> {
             self.store.read_into(j, &mut self.state.z_local[slot * db..(slot + 1) * db]);
     }
 
-    /// Run Algorithm 1 for `epochs` local epochs.
+    /// Run Algorithm 1 for `epochs` local epochs (from `start_epoch`,
+    /// normally 0).
     pub fn run(&mut self, compute: &mut dyn WorkerCompute) -> Result<WorkerStats> {
-        for t in 0..self.epochs {
+        for t in self.start_epoch..self.epochs {
             let slot = self.select_slot(t);
             let j = self.shard.active_blocks[slot];
 
@@ -240,6 +279,15 @@ impl<'a> WorkerCtx<'a> {
                 }
                 self.last_server[slot] = server;
             }
+            // Injected transient send failures: bounded retries before
+            // the real send (one branch when the plan is empty).
+            if !self.faults.is_empty() {
+                let retries = self.faults.send_failures(self.shard.worker_id, t);
+                for _ in 0..retries {
+                    std::thread::yield_now();
+                }
+                self.stats.send_retries += retries;
+            }
             self.push_seq[slot] += 1;
             let push = PushMsg {
                 worker: self.shard.worker_id,
@@ -252,6 +300,10 @@ impl<'a> WorkerCtx<'a> {
                 recycle: Some(self.pool.recycler()),
             };
             self.sender.send(server, push)?;
+            // Sent watermark for the crash-recovery ledger: this seq was
+            // handed to the transport (a batched remainder still reaches
+            // the queue via the sender's drop-flush during unwind).
+            self.ledger[slot].store(self.push_seq[slot], Ordering::Release);
 
             // Deliver anything still batch-buffered BEFORE publishing
             // the final epoch: the monitor calls transport.shutdown()
@@ -266,6 +318,17 @@ impl<'a> WorkerCtx<'a> {
             self.stats.epochs = t + 1;
             self.progress.store(t + 1, Ordering::Release);
             self.gate.notify_epoch(t + 1);
+            // Injected crash: AFTER the epoch published, so the seq
+            // stream has no hole and a restarted replacement resuming at
+            // `progress` produces exactly the fault-free push count.
+            if !self.faults.is_empty() && self.faults.should_crash(self.shard.worker_id, t + 1)
+            {
+                panic!(
+                    "fault injection: worker {} crashed at epoch {}",
+                    self.shard.worker_id,
+                    t + 1
+                );
+            }
         }
         self.stats.pool_high_water = self.pool.high_water();
         Ok(self.stats.clone())

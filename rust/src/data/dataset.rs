@@ -24,7 +24,7 @@ impl LossKind {
         match s {
             "logistic" => Ok(LossKind::Logistic),
             "squared" => Ok(LossKind::Squared),
-            other => anyhow::bail!("unknown loss kind {other:?}"),
+            other => anyhow::bail!("unknown loss kind {other:?} (logistic|squared)"),
         }
     }
 }

@@ -55,6 +55,22 @@
 //! decouples the server thread count from the shard count (an elastic
 //! pool servicing all shards' lanes; 0 = one thread per shard).
 //!
+//! Survivability knobs (`coordinator/fault.rs`, DESIGN.md §2.0.3):
+//! `--set faults=SPEC` arms a deterministic, seeded
+//! [`coordinator::FaultPlan`] (`crash:w1@5`, `stall:s0@100+25ms`,
+//! `sendfail:w2@4x3`, `;`-separated) and `--set
+//! failure=die|degrade|restart` picks what a worker crash does: `die`
+//! propagates it, `degrade` completes on the survivors, `restart`
+//! spawns a warm replacement (ledger-seeded `block_seq`, tail drain,
+//! dual warm-start) with exact per-(worker, block) FIFO across the
+//! window. `--set checkpoint_every=EPOCHS checkpoint_path=FILE` writes
+//! periodic v2 checkpoints (z + duals + placement) the monitor thread
+//! snapshots off the hot path, resumable via
+//! `Session::builder(..).resume_from(&ck)`; `--set stall_warn_ms=MS`
+//! arms a watchdog that reports a [`coordinator::FaultEvent::Stalled`]
+//! to observers when no worker makes progress. Injected and observed
+//! faults land in `TrainReport::faults`.
+//!
 //! See `DESIGN.md` (repo root) for the system inventory, the hot-path
 //! mechanisms (seqlock block store, push-buffer pool, block-slice CSR
 //! index, SPSC ring transport) and the environment-driven design

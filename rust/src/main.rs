@@ -86,6 +86,9 @@ fn config_args(a: Args) -> Args {
              transport=mpsc|ring, placement=contiguous|roundrobin|hash|degree|dynamic, \
              drain=owned|steal, server_threads=N (0 = one per shard), \
              rebalance_ms=MS, batch=N, backend=native|xla, \
+             faults=crash:w1@5;stall:s0@100+25ms;sendfail:w2@4x3, \
+             failure=die|degrade|restart, stall_warn_ms=MS, \
+             checkpoint_every=EPOCHS, checkpoint_path=FILE, \
              n_workers=8; an unknown key lists all valid keys)",
         )
 }
@@ -191,14 +194,17 @@ fn cmd_train(argv: &[String], use_sim: bool) -> Result<()> {
     }
     let ckpt = p.get("checkpoint-out");
     if !ckpt.is_empty() {
-        Checkpoint {
-            config_summary: cfg.summary(),
-            n_blocks: cfg.n_blocks,
-            block_size: cfg.block_size,
-            epoch: cfg.epochs,
-            objective: final_obj.total(),
-            z: z_final,
-        }
+        // Model-only snapshot (no recovery state): the periodic
+        // `--set checkpoint_every=N` path writes full v2 checkpoints
+        // with duals + placement from inside the run.
+        Checkpoint::model_only(
+            cfg.summary(),
+            cfg.n_blocks,
+            cfg.block_size,
+            cfg.epochs,
+            final_obj.total(),
+            z_final,
+        )
         .save(std::path::Path::new(ckpt))?;
         println!("# checkpoint written to {ckpt}");
     }

@@ -5,6 +5,20 @@
 //! Format: a small JSON header (config summary, geometry, seed, epoch)
 //! followed by base64-free raw little-endian f32 payload in a sidecar
 //! `.bin` file — human-inspectable metadata, zero-copy-ish data.
+//!
+//! ## Versions
+//!
+//! * **v1** — consensus z only; sidecar is `dim` f32s.
+//! * **v2** (this PR) — adds the survivable-runtime recovery state
+//!   (DESIGN.md §2.0.3): the dynamic placement's block→shard owner map,
+//!   the per-block applied-push counters (the rebalancer's load
+//!   signal), and the per-worker packed dual vectors y_i.  The sidecar
+//!   becomes `[z | y_0 | y_1 | ...]`; the header records each dual's
+//!   length in `dual_dims` so the payload stays self-describing.
+//!
+//! `save` always writes v2; `load` accepts both (a v1 header simply
+//! yields empty recovery state), so pre-existing checkpoints keep
+//! loading.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -21,9 +35,42 @@ pub struct Checkpoint {
     pub epoch: usize,
     pub objective: f64,
     pub z: Vec<f32>,
+    /// Live block→shard owner map at snapshot time (empty = static
+    /// placement or a v1 file; resume keeps the initial map).
+    pub block_owners: Vec<usize>,
+    /// Per-block applied-push counters (the rebalancer's load signal;
+    /// empty = v1 file).
+    pub push_counts: Vec<usize>,
+    /// Per-worker packed dual vectors y_i (empty = v1 file; lengths may
+    /// differ per worker — each is `n_slots * block_size` of its shard).
+    pub duals: Vec<Vec<f32>>,
 }
 
 impl Checkpoint {
+    /// A v2 checkpoint carrying only the consensus model (what the CLI
+    /// writes after baselines and the DES, which have no recovery
+    /// state).
+    pub fn model_only(
+        config_summary: String,
+        n_blocks: usize,
+        block_size: usize,
+        epoch: usize,
+        objective: f64,
+        z: Vec<f32>,
+    ) -> Self {
+        Checkpoint {
+            config_summary,
+            n_blocks,
+            block_size,
+            epoch,
+            objective,
+            z,
+            block_owners: Vec::new(),
+            push_counts: Vec::new(),
+            duals: Vec::new(),
+        }
+    }
+
     pub fn save(&self, path: &Path) -> Result<()> {
         anyhow::ensure!(
             self.z.len() == self.n_blocks * self.block_size,
@@ -32,25 +79,46 @@ impl Checkpoint {
             self.n_blocks,
             self.block_size
         );
+        anyhow::ensure!(
+            self.block_owners.is_empty() || self.block_owners.len() == self.n_blocks,
+            "block_owners length {} != n_blocks {}",
+            self.block_owners.len(),
+            self.n_blocks
+        );
+        anyhow::ensure!(
+            self.push_counts.is_empty() || self.push_counts.len() == self.n_blocks,
+            "push_counts length {} != n_blocks {}",
+            self.push_counts.len(),
+            self.n_blocks
+        );
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir).with_context(|| format!("mkdir {dir:?}"))?;
         }
+        let usize_arr =
+            |v: &[usize]| Json::Arr(v.iter().map(|&x| num(x as f64)).collect());
         let header = obj(vec![
             ("format", s("asybadmm-checkpoint")),
-            ("version", num(1.0)),
+            ("version", num(2.0)),
             ("config", s(&self.config_summary)),
             ("n_blocks", num(self.n_blocks as f64)),
             ("block_size", num(self.block_size as f64)),
             ("epoch", num(self.epoch as f64)),
             ("objective", num(self.objective)),
             ("dim", num(self.z.len() as f64)),
+            ("block_owners", usize_arr(&self.block_owners)),
+            ("push_counts", usize_arr(&self.push_counts)),
+            (
+                "dual_dims",
+                Json::Arr(self.duals.iter().map(|d| num(d.len() as f64)).collect()),
+            ),
         ]);
         std::fs::write(path, header.to_string_pretty())
             .with_context(|| format!("write {path:?}"))?;
         let bin = path.with_extension("bin");
         let mut f = std::fs::File::create(&bin).with_context(|| format!("create {bin:?}"))?;
-        let mut bytes = Vec::with_capacity(self.z.len() * 4);
-        for v in &self.z {
+        let total = self.z.len() + self.duals.iter().map(Vec::len).sum::<usize>();
+        let mut bytes = Vec::with_capacity(total * 4);
+        for v in self.z.iter().chain(self.duals.iter().flatten()) {
             bytes.extend_from_slice(&v.to_le_bytes());
         }
         f.write_all(&bytes)?;
@@ -64,26 +132,74 @@ impl Checkpoint {
             header.req_str("format")? == "asybadmm-checkpoint",
             "not an asybadmm checkpoint"
         );
+        let version =
+            header.get("version").and_then(Json::as_usize).unwrap_or(1);
+        anyhow::ensure!(
+            (1..=2).contains(&version),
+            "unsupported checkpoint version {version} (this build reads 1-2)"
+        );
         let n_blocks = header.req_usize("n_blocks")?;
         let block_size = header.req_usize("block_size")?;
         let dim = header.req_usize("dim")?;
         anyhow::ensure!(dim == n_blocks * block_size, "corrupt header: dim mismatch");
 
+        let usize_arr = |key: &str| -> Result<Vec<usize>> {
+            match header.get(key) {
+                None | Some(Json::Null) => Ok(Vec::new()),
+                Some(j) => j
+                    .as_arr()
+                    .with_context(|| format!("corrupt header: {key} is not an array"))?
+                    .iter()
+                    .map(|v| {
+                        v.as_usize()
+                            .with_context(|| format!("corrupt header: bad entry in {key}"))
+                    })
+                    .collect(),
+            }
+        };
+        let block_owners = usize_arr("block_owners")?;
+        let push_counts = usize_arr("push_counts")?;
+        let dual_dims = usize_arr("dual_dims")?;
+        anyhow::ensure!(
+            block_owners.is_empty() || block_owners.len() == n_blocks,
+            "corrupt header: block_owners length {} != n_blocks {n_blocks}",
+            block_owners.len()
+        );
+        anyhow::ensure!(
+            push_counts.is_empty() || push_counts.len() == n_blocks,
+            "corrupt header: push_counts length {} != n_blocks {n_blocks}",
+            push_counts.len()
+        );
+
         let bin = path.with_extension("bin");
         let mut bytes = Vec::new();
         std::fs::File::open(&bin)
-            .with_context(|| format!("open {bin:?}"))?
-            .read_to_end(&mut bytes)?;
+            .with_context(|| format!("open checkpoint sidecar {bin:?}"))?
+            .read_to_end(&mut bytes)
+            .with_context(|| format!("read checkpoint sidecar {bin:?}"))?;
+        // Validate the payload against the header BEFORE decoding: a
+        // truncated copy or a half-written sidecar must fail loudly with
+        // the file named, not deserialize into a silently-short model.
+        let total = dim + dual_dims.iter().sum::<usize>();
         anyhow::ensure!(
-            bytes.len() == dim * 4,
-            "payload size {} != expected {}",
+            bytes.len() == total * 4,
+            "checkpoint sidecar {bin:?} is {} bytes but the header promises {} ({} f32s): \
+             truncated or corrupt",
             bytes.len(),
-            dim * 4
+            total * 4,
+            total
         );
-        let z = bytes
+        let floats: Vec<f32> = bytes
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
+        let z = floats[..dim].to_vec();
+        let mut duals = Vec::with_capacity(dual_dims.len());
+        let mut off = dim;
+        for &d in &dual_dims {
+            duals.push(floats[off..off + d].to_vec());
+            off += d;
+        }
         Ok(Checkpoint {
             config_summary: header.req_str("config")?.to_string(),
             n_blocks,
@@ -91,6 +207,9 @@ impl Checkpoint {
             epoch: header.req_usize("epoch")?,
             objective: header.get("objective").and_then(Json::as_f64).unwrap_or(f64::NAN),
             z,
+            block_owners,
+            push_counts,
+            duals,
         })
     }
 }
@@ -106,8 +225,7 @@ mod tests {
         dir.join(name)
     }
 
-    #[test]
-    fn roundtrip_preserves_everything() {
+    fn full(name: &str) -> (Checkpoint, std::path::PathBuf) {
         let mut rng = Rng::new(3);
         let z: Vec<f32> = (0..64).map(|_| rng.normal_f32(0.0, 2.0)).collect();
         let ck = Checkpoint {
@@ -117,40 +235,118 @@ mod tests {
             epoch: 1234,
             objective: 0.512345,
             z,
+            block_owners: vec![0, 1, 1, 0],
+            push_counts: vec![10, 200, 3, 0],
+            duals: vec![
+                (0..32).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+                (0..48).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+            ],
         };
-        let p = tmp("rt.ckpt");
+        (ck, tmp(name))
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let (ck, p) = full("rt.ckpt");
         ck.save(&p).unwrap();
         let back = Checkpoint::load(&p).unwrap();
         assert_eq!(back, ck);
     }
 
     #[test]
+    fn model_only_roundtrips_with_empty_recovery_state() {
+        let ck = Checkpoint::model_only("g=1".into(), 2, 4, 7, 0.25, vec![0.5; 8]);
+        let p = tmp("model_only.ckpt");
+        ck.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back, ck);
+        assert!(back.duals.is_empty());
+    }
+
+    #[test]
+    fn v1_header_loads_with_empty_recovery_state() {
+        // A pre-v2 checkpoint pair, byte-for-byte what the old writer
+        // produced: no version-2 arrays, sidecar = dim f32s.
+        let p = tmp("v1.ckpt");
+        std::fs::write(
+            &p,
+            r#"{
+  "format": "asybadmm-checkpoint",
+  "version": 1,
+  "config": "legacy",
+  "n_blocks": 2,
+  "block_size": 4,
+  "epoch": 9,
+  "objective": 0.5,
+  "dim": 8
+}"#,
+        )
+        .unwrap();
+        let mut bytes = Vec::new();
+        for v in [1.0f32; 8] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(p.with_extension("bin"), bytes).unwrap();
+        let ck = Checkpoint::load(&p).unwrap();
+        assert_eq!(ck.epoch, 9);
+        assert_eq!(ck.z, vec![1.0; 8]);
+        assert!(ck.block_owners.is_empty());
+        assert!(ck.push_counts.is_empty());
+        assert!(ck.duals.is_empty());
+    }
+
+    #[test]
     fn rejects_wrong_geometry() {
-        let ck = Checkpoint {
-            config_summary: String::new(),
-            n_blocks: 2,
-            block_size: 4,
-            epoch: 0,
-            objective: 0.0,
-            z: vec![0.0; 7], // != 8
-        };
+        let ck = Checkpoint::model_only(String::new(), 2, 4, 0, 0.0, vec![0.0; 7]); // != 8
         assert!(ck.save(&tmp("bad.ckpt")).is_err());
     }
 
     #[test]
-    fn rejects_truncated_payload() {
-        let ck = Checkpoint {
-            config_summary: String::new(),
-            n_blocks: 2,
-            block_size: 4,
-            epoch: 5,
-            objective: 0.1,
-            z: vec![1.0; 8],
-        };
-        let p = tmp("trunc.ckpt");
+    fn truncated_sidecar_error_names_the_file_and_both_sizes() {
+        let (ck, p) = full("trunc.ckpt");
         ck.save(&p).unwrap();
         std::fs::write(p.with_extension("bin"), [0u8; 12]).unwrap();
-        assert!(Checkpoint::load(&p).is_err());
+        let err = format!("{:#}", Checkpoint::load(&p).unwrap_err());
+        assert!(err.contains("trunc.bin"), "error does not name the sidecar: {err}");
+        assert!(err.contains("12 bytes"), "error lacks the actual size: {err}");
+        // header promises z (64) + duals (32 + 48) f32s
+        assert!(err.contains(&((64 + 32 + 48) * 4).to_string()), "{err}");
+        assert!(err.contains("truncated or corrupt"), "{err}");
+    }
+
+    #[test]
+    fn missing_sidecar_error_names_the_file() {
+        let (ck, p) = full("nosidecar.ckpt");
+        ck.save(&p).unwrap();
+        std::fs::remove_file(p.with_extension("bin")).unwrap();
+        let err = format!("{:#}", Checkpoint::load(&p).unwrap_err());
+        assert!(err.contains("nosidecar.bin"), "{err}");
+    }
+
+    #[test]
+    fn corrupted_header_is_rejected_not_misread() {
+        let (ck, p) = full("bitflip.ckpt");
+        ck.save(&p).unwrap();
+        // A "bit flip" in the geometry: dim no longer matches
+        // n_blocks * block_size.
+        let text = std::fs::read_to_string(&p).unwrap();
+        std::fs::write(&p, text.replace("\"dim\": 64", "\"dim\": 65")).unwrap();
+        let err = format!("{:#}", Checkpoint::load(&p).unwrap_err());
+        assert!(err.contains("corrupt header"), "{err}");
+        // And garbage that no longer parses as JSON names the file.
+        std::fs::write(&p, "{\"format\": \"asybadmm-ch\u{0}rupt").unwrap();
+        let err = format!("{:#}", Checkpoint::load(&p).unwrap_err());
+        assert!(err.contains("bitflip.ckpt"), "{err}");
+    }
+
+    #[test]
+    fn future_version_is_rejected() {
+        let (ck, p) = full("future.ckpt");
+        ck.save(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        std::fs::write(&p, text.replace("\"version\": 2", "\"version\": 3")).unwrap();
+        let err = format!("{:#}", Checkpoint::load(&p).unwrap_err());
+        assert!(err.contains("unsupported checkpoint version 3"), "{err}");
     }
 
     #[test]

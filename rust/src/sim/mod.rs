@@ -23,11 +23,11 @@ use std::cmp::Ordering as CmpOrdering;
 use std::collections::{BinaryHeap, VecDeque};
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::admm::{objective_at_z, prox_l1_box, worker_update, NativeEngine, Objective};
-use crate::config::{BlockSelection, Config, DrainKind, PlacementKind};
-use crate::coordinator::{make_placement, ObjSample, Observer, Progress, Topology};
+use crate::config::{BlockSelection, Config, DrainKind, FailurePolicy, PlacementKind};
+use crate::coordinator::{make_placement, FaultEvent, FaultPlan, ObjSample, Observer, Progress, Topology};
 use crate::coordinator::{
     plan_rebalance, REBALANCE_HYSTERESIS, REBALANCE_MAX_MOVES, REBALANCE_MIN_DELTA,
 };
@@ -308,6 +308,9 @@ pub struct SimReport {
     pub max_queue: usize,
     /// Blocks migrated between shards (`placement=dynamic` only).
     pub migrations: usize,
+    /// Injected faults and recovery transitions, in virtual-time order
+    /// (the DES mirror of `TrainReport::faults`).
+    pub faults: Vec<FaultEvent>,
 }
 
 /// Run Algorithm 1 under the DES with the given cost model.
@@ -412,6 +415,30 @@ pub fn run_sim_observed(
     let mut migrations = 0usize;
     let rebalance_s = cfg.rebalance_ms.max(1) as f64 * 1e-3;
 
+    // Fault mirror (DESIGN.md §2.0.3): the same deterministic plan the
+    // threaded runtime consults, replayed in virtual time.  Crash fires
+    // after the epoch's push is in flight (matching the worker hook's
+    // placement after the send), stall inflates one service time, and
+    // transient send failures pay extra network hops before arrival.
+    let plan = FaultPlan::parse(&cfg.faults)?;
+    let faults_on = !plan.is_empty();
+    // Degraded workers: chain stopped, epoch frozen, w̃ contributions
+    // left in `blocks` (the survivors' consensus still includes them).
+    let mut dead = vec![false; cfg.n_workers];
+    // Restart pending: the replacement warm-starts at its next PullDone
+    // — by then the crashed worker's only in-flight push has been
+    // serviced, the DES analogue of `wait_tail_drained`.
+    let mut restarting = vec![false; cfg.n_workers];
+    let mut restarts = vec![0usize; cfg.n_workers];
+    // Per-(worker, slot) sent-history — the DES ledger: a replacement
+    // only warm-starts duals for slots the dead worker actually pushed
+    // (a never-pushed slot's true local dual is y⁰ = 0).
+    let mut pushed: Vec<Vec<bool>> =
+        shards.iter().map(|s| vec![false; s.n_slots()]).collect();
+    // Per-station applied-push counters for the stall trigger (the
+    // mirror of `ServerShard::pushes`).
+    let mut served = vec![0usize; cfg.n_servers];
+
     let mut heap: BinaryHeap<Scheduled> = BinaryHeap::new();
     let mut seq = 0u64;
     let mut push_ev = |heap: &mut BinaryHeap<Scheduled>, t: f64, ev: Ev| {
@@ -450,7 +477,16 @@ pub fn run_sim_observed(
                 if pool {
                     idle -= 1;
                 }
-                push_ev($heap, $t + cost.server_service_s, Ev::ServiceDone { server: s, push });
+                let mut svc = cost.server_service_s;
+                if faults_on {
+                    // Injected straggler: one service pays the stall
+                    // (the threaded hook sleeps in handle_push).  The
+                    // plan records the ServerStalled event itself.
+                    if let Some(ms) = plan.stall_ms(s, served[s]) {
+                        svc += ms as f64 * 1e-3;
+                    }
+                }
+                push_ev($heap, $t + svc, Ev::ServiceDone { server: s, push });
             }
         }};
     }
@@ -473,8 +509,39 @@ pub fn run_sim_observed(
         match ev {
             Ev::PullDone { worker } => {
                 let wk = &mut workers[worker];
-                if wk.epoch >= cfg.epochs {
+                if wk.epoch >= cfg.epochs || dead[worker] {
+                    // Budget spent — or a degraded worker's last ack
+                    // arriving after its retirement.  Chain ends here.
                     continue;
+                }
+                if faults_on && restarting[worker] {
+                    // Replacement worker takes over: its predecessor's
+                    // in-flight push was serviced before this ack, so
+                    // the warm start reads settled server state — x
+                    // re-pulled from z̃, duals approximated as
+                    // y ≈ w̃ − ρ·z̃ for slots with push history (the
+                    // threaded `approx_duals`), y⁰ = 0 elsewhere.
+                    restarting[worker] = false;
+                    restarts[worker] += 1;
+                    let shard = wk.shard;
+                    for (slot, &j) in shard.active_blocks.iter().enumerate() {
+                        let (lo, hi) = (slot * db, (slot + 1) * db);
+                        wk.x[lo..hi].copy_from_slice(&z[j * db..(j + 1) * db]);
+                        if pushed[worker][slot] {
+                            let ws = blocks.worker_slot[j][worker];
+                            for k in 0..db {
+                                wk.y[lo + k] =
+                                    blocks.w_tilde[j][ws][k] - cfg.rho * z[j * db + k];
+                            }
+                        } else {
+                            wk.y[lo..hi].fill(0.0);
+                        }
+                    }
+                    plan.record(FaultEvent::WorkerRestarted {
+                        worker,
+                        epoch: wk.epoch,
+                        attempt: restarts[worker],
+                    });
                 }
                 // Snapshot z̃ (pull) — staleness begins here.
                 for (slot, &j) in wk.shard.active_blocks.iter().enumerate() {
@@ -516,14 +583,65 @@ pub fn run_sim_observed(
                 // placement=dynamic; static otherwise).
                 let server = server_of_block[j];
                 let push = SimPush { worker, block: j, w: w_new.clone() };
+                let mut delay = net(cost.net_mean_s);
+                if faults_on {
+                    // Transient send failures: each bounded retry pays
+                    // one extra mean network hop in virtual time.  The
+                    // push epoch is 0-based, matching the worker hook.
+                    delay += plan.send_failures(worker, wk.epoch - 1) as f64 * cost.net_mean_s;
+                }
                 // Bounded in-flight (ps-lite / the threaded runtime's
                 // sync_channel): the worker's next pull completes only
                 // after its own push is serviced, so server backlog
                 // throttles workers instead of growing unboundedly.
-                push_ev(&mut heap, t + net(cost.net_mean_s), Ev::Arrive { server, push });
+                push_ev(&mut heap, t + delay, Ev::Arrive { server, push });
+                pushed[worker][slot] = true;
 
-                // Progress bookkeeping (min epoch across workers).
-                let min_epoch = workers.iter().map(|w| w.epoch).min().unwrap();
+                // Injected crash — AFTER the push is in flight, the
+                // exact placement of the threaded worker hook, so the
+                // push stream has no hole for recovery to bridge.
+                if faults_on && plan.should_crash(worker, wk.epoch) {
+                    match cfg.failure {
+                        FailurePolicy::Die => {
+                            bail!(
+                                "fault injection: worker {worker} crashed at epoch {} \
+                                 (failure=die)",
+                                wk.epoch
+                            );
+                        }
+                        FailurePolicy::Degrade => {
+                            // Retire the worker; its w̃ stays frozen in
+                            // the table and its in-flight push still
+                            // applies (the DES has no seq gaps to purge).
+                            dead[worker] = true;
+                            plan.record(FaultEvent::WorkerDegraded {
+                                worker,
+                                epoch: wk.epoch,
+                                parked_dropped: 0,
+                            });
+                        }
+                        FailurePolicy::Restart => {
+                            plan.record(FaultEvent::WorkerCrashed {
+                                worker,
+                                epoch: wk.epoch,
+                            });
+                            // The replacement warm-starts at the next
+                            // PullDone — after the tail is serviced.
+                            restarting[worker] = true;
+                        }
+                    }
+                }
+
+                // Progress bookkeeping (min epoch across live workers;
+                // a degraded worker's frozen epoch must not pin the
+                // watermark forever).
+                let min_epoch = workers
+                    .iter()
+                    .enumerate()
+                    .filter(|&(i, _)| !dead[i])
+                    .map(|(_, w)| w.epoch)
+                    .min();
+                let Some(min_epoch) = min_epoch else { continue };
                 while recorded_min_epoch < min_epoch {
                     recorded_min_epoch += 1;
                     time_to_epoch[recorded_min_epoch] = t;
@@ -571,6 +689,7 @@ pub fn run_sim_observed(
                 );
                 z[push.block * db..(push.block + 1) * db].copy_from_slice(&z_out);
                 pushes += 1;
+                served[server] += 1;
                 served_per_block[push.block] += 1;
                 // Ack: worker pulls fresh z and starts its next
                 // iteration one network hop later.
@@ -611,10 +730,12 @@ pub fn run_sim_observed(
                         migrations += 1;
                     }
                 }
-                // Keep scanning while any worker still has epochs to
-                // run; once all budgets are spent the event chain ends
-                // and the heap drains naturally.
-                if workers.iter().any(|w| w.epoch < cfg.epochs) {
+                // Keep scanning while any LIVE worker still has epochs
+                // to run; once all budgets are spent (or every worker
+                // degraded) the event chain ends and the heap drains
+                // naturally — a dead worker's frozen epoch must not
+                // reschedule this forever.
+                if workers.iter().enumerate().any(|(i, w)| !dead[i] && w.epoch < cfg.epochs) {
                     push_ev(&mut heap, t + rebalance_s, Ev::Rebalance);
                 }
             }
@@ -639,6 +760,7 @@ pub fn run_sim_observed(
         pushes,
         max_queue,
         migrations,
+        faults: plan.take_events(),
     })
 }
 
@@ -840,6 +962,105 @@ mod tests {
             scarce.virtual_time_s,
             full.virtual_time_s
         );
+    }
+
+    #[test]
+    fn sim_restart_matches_the_fault_free_run_shape() {
+        let mut cfg = Config::tiny_test();
+        cfg.epochs = 200;
+        let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+        let ff = run_sim(&cfg, &ds, &shards, &tiny_cost()).unwrap();
+        cfg.faults = "crash:w1@30".into();
+        cfg.failure = FailurePolicy::Restart;
+        let r = run_sim(&cfg, &ds, &shards, &tiny_cost()).unwrap();
+        // No pushes lost: the replacement resumes the epoch budget where
+        // the crash left it, so totals equal the fault-free run exactly.
+        assert_eq!(r.pushes, ff.pushes);
+        assert_eq!(r.pushes, cfg.epochs * cfg.n_workers);
+        // Crash then restart, in that order, for the right worker.
+        assert_eq!(
+            r.faults,
+            vec![
+                FaultEvent::WorkerCrashed { worker: 1, epoch: 30 },
+                FaultEvent::WorkerRestarted { worker: 1, epoch: 30, attempt: 1 },
+            ]
+        );
+        // Survivor-objective neighborhood: the warm-started duals keep
+        // the run convergent and near the fault-free objective.
+        let (a, b) = (r.final_objective.total(), ff.final_objective.total());
+        assert!(a < std::f64::consts::LN_2 * 0.95, "restarted run did not converge: {a}");
+        assert!((a - b).abs() < 0.1, "restart drifted: {a} vs fault-free {b}");
+        // Determinism holds with churn in the loop.
+        let r2 = run_sim(&cfg, &ds, &shards, &tiny_cost()).unwrap();
+        assert_eq!(r.z_final, r2.z_final);
+        assert_eq!(r.faults, r2.faults);
+        assert_eq!(r.virtual_time_s, r2.virtual_time_s);
+    }
+
+    #[test]
+    fn sim_degrade_completes_on_survivors() {
+        let mut cfg = Config::tiny_test();
+        cfg.epochs = 40;
+        cfg.faults = "crash:w0@5".into();
+        cfg.failure = FailurePolicy::Degrade;
+        let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+        let r = run_sim(&cfg, &ds, &shards, &tiny_cost()).unwrap();
+        // The victim pushed once per completed epoch (its in-flight
+        // crash-epoch push still applies); survivors run the full budget.
+        assert_eq!(r.pushes, (cfg.n_workers - 1) * cfg.epochs + 5);
+        assert_eq!(
+            r.faults,
+            vec![FaultEvent::WorkerDegraded { worker: 0, epoch: 5, parked_dropped: 0 }]
+        );
+        assert_eq!(r.epochs, cfg.epochs);
+        assert!(r.virtual_time_s > 0.0);
+    }
+
+    #[test]
+    fn sim_die_policy_propagates_the_crash() {
+        let mut cfg = Config::tiny_test();
+        cfg.epochs = 20;
+        cfg.faults = "crash:w2@3".into(); // failure=die is the default
+        let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+        let err = run_sim(&cfg, &ds, &shards, &tiny_cost()).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("worker 2 crashed at epoch 3"), "{msg}");
+    }
+
+    #[test]
+    fn sim_stall_shows_up_in_virtual_time_and_the_log() {
+        let mut cfg = Config::tiny_test();
+        cfg.epochs = 20;
+        let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+        let ff = run_sim(&cfg, &ds, &shards, &tiny_cost()).unwrap();
+        cfg.faults = "stall:s0@5+50ms".into();
+        let r = run_sim(&cfg, &ds, &shards, &tiny_cost()).unwrap();
+        assert_eq!(r.pushes, ff.pushes, "a stall must delay, never drop");
+        assert!(
+            r.virtual_time_s >= ff.virtual_time_s + 0.045,
+            "50ms stall invisible in virtual time: {} vs {}",
+            r.virtual_time_s,
+            ff.virtual_time_s
+        );
+        assert!(r
+            .faults
+            .contains(&FaultEvent::ServerStalled { server: 0, after_pushes: 5, ms: 50 }));
+    }
+
+    #[test]
+    fn sim_sendfail_delays_arrival_deterministically() {
+        let mut cfg = Config::tiny_test();
+        cfg.epochs = 20;
+        let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+        let ff = run_sim(&cfg, &ds, &shards, &tiny_cost()).unwrap();
+        cfg.faults = "sendfail:w0@2x100".into();
+        let r = run_sim(&cfg, &ds, &shards, &tiny_cost()).unwrap();
+        assert_eq!(r.pushes, ff.pushes, "transient send failures must not drop pushes");
+        // 100 retries × net_mean_s (1e-4) ≈ 10ms of extra latency on one
+        // push — visible, bounded, deterministic.
+        assert!(r.virtual_time_s > ff.virtual_time_s);
+        let r2 = run_sim(&cfg, &ds, &shards, &tiny_cost()).unwrap();
+        assert_eq!(r.virtual_time_s, r2.virtual_time_s);
     }
 
     #[test]

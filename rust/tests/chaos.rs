@@ -1,0 +1,471 @@
+//! Chaos suite (DESIGN.md §2.0.3, EXPERIMENTS.md E8): deterministic
+//! fault injection × failure policy × scheduling matrix, driven by the
+//! in-tree seeded property harness.  The differential gates:
+//!
+//! - `failure=restart` ends with exactly the fault-free push totals and
+//!   lands in the fault-free objective neighborhood;
+//! - `failure=degrade` completes on the survivors with the victim's
+//!   contribution frozen and the event on the record;
+//! - per-(worker, block) FIFO holds exactly across a crash/reconnect
+//!   window at the transport+table level, batched or not, both rings;
+//! - the stall watchdog and checkpoint/resume paths work end to end.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+
+use asybadmm::config::{Config, FailurePolicy, PlacementKind, TransportKind};
+use asybadmm::coordinator::{
+    BlockMap, BlockStore, BlockTable, FaultEvent, MpscTransport, Observer, Progress,
+    ProxBackend, PushMsg, PushReceiver, ServerShard, Session, SpscRingTransport, Topology,
+    TrainReport, Transport, TryRecv,
+};
+use asybadmm::data::{gen_partitioned, BlockGeometry, Dataset, LossKind, SynthSpec, WorkerShard};
+use asybadmm::problem::Problem;
+use asybadmm::report::Checkpoint;
+use asybadmm::testutil::forall;
+use asybadmm::util::rng::Rng;
+
+fn tiny(epochs: usize) -> Config {
+    let mut cfg = Config::tiny_test();
+    cfg.epochs = epochs;
+    cfg
+}
+
+fn train(cfg: &Config, ds: &Dataset, shards: &[WorkerShard]) -> TrainReport {
+    Session::builder(cfg).dataset(ds, shards).run().unwrap()
+}
+
+#[test]
+fn restart_policy_matches_fault_free_push_accounting_and_objective() {
+    let cfg = tiny(200);
+    let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+    let ff = train(&cfg, &ds, &shards);
+
+    let mut cfg_f = tiny(200);
+    cfg_f.faults = "crash:w1@30".into();
+    cfg_f.failure = FailurePolicy::Restart;
+    let r = train(&cfg_f, &ds, &shards);
+
+    // The replacement resumes the seq stream at the crash watermark, so
+    // the run ends with EXACTLY the fault-free totals.
+    assert_eq!(r.total_pushes(), ff.total_pushes(), "restart lost or duplicated pushes");
+    assert_eq!(r.total_pushes(), cfg.epochs * cfg.n_workers);
+    assert!(
+        r.faults.contains(&FaultEvent::WorkerCrashed { worker: 1, epoch: 30 }),
+        "crash not recorded: {:?}",
+        r.faults
+    );
+    assert!(
+        r.faults
+            .iter()
+            .any(|e| matches!(e, FaultEvent::WorkerRestarted { worker: 1, epoch: 30, .. })),
+        "restart not recorded: {:?}",
+        r.faults
+    );
+    // Warm-started duals keep the run in the fault-free neighborhood.
+    let (a, b) = (r.final_objective.total(), ff.final_objective.total());
+    assert!(a.is_finite() && a < 0.68, "restarted run did not converge: {a}");
+    assert!((a - b).abs() < 0.1, "restart drifted: {a} vs fault-free {b}");
+    // Recovery health metrics survive into the report.
+    assert_eq!(r.worker_stats.len(), cfg.n_workers);
+    assert!(r.worker_stats[1].epochs == cfg.epochs, "replacement under-ran its budget");
+}
+
+#[test]
+fn degrade_policy_completes_on_survivors_with_the_fault_on_record() {
+    let mut cfg = tiny(60);
+    cfg.faults = "crash:w0@5".into();
+    cfg.failure = FailurePolicy::Degrade;
+    let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+    let r = train(&cfg, &ds, &shards);
+
+    // The victim contributed its 5 pre-crash pushes (drop-flush delivers
+    // any batched remainder); the survivors ran the full budget.
+    assert_eq!(r.total_pushes(), (cfg.n_workers - 1) * cfg.epochs + 5);
+    assert!(
+        r.faults
+            .iter()
+            .any(|e| matches!(e, FaultEvent::WorkerDegraded { worker: 0, epoch: 5, .. })),
+        "degrade not recorded: {:?}",
+        r.faults
+    );
+    assert!(r.final_objective.total().is_finite());
+    // Stationarity needs every worker's final duals — a degraded run
+    // reports NaN rather than a number computed from a ghost.
+    assert!(r.stationarity.is_nan());
+    assert!(r.consensus_max.is_nan());
+}
+
+#[test]
+fn die_policy_propagates_the_injected_panic() {
+    let mut cfg = tiny(40);
+    cfg.faults = "crash:w1@3".into(); // failure=die is the default
+    let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        Session::builder(&cfg).dataset(&ds, &shards).run()
+    }));
+    assert!(result.is_err(), "failure=die swallowed the worker panic");
+}
+
+#[test]
+fn stall_watchdog_fires_once_per_episode_and_reaches_observers() {
+    struct FaultSpy {
+        events: Arc<std::sync::Mutex<Vec<FaultEvent>>>,
+    }
+    impl Observer for FaultSpy {
+        fn on_sample(&mut self, _p: &Progress<'_>) {}
+        fn on_fault(&mut self, ev: &FaultEvent) {
+            self.events.lock().unwrap().push(ev.clone());
+        }
+    }
+
+    let mut cfg = tiny(40);
+    // One injected 120ms straggler on shard 0; the watchdog threshold is
+    // far below it, so exactly one no-progress episode must be reported.
+    cfg.faults = "stall:s0@5+120ms".into();
+    cfg.stall_warn_ms = 25;
+    let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+    let seen = Arc::new(std::sync::Mutex::new(Vec::new()));
+    let r = Session::builder(&cfg)
+        .dataset(&ds, &shards)
+        .observer(FaultSpy { events: seen.clone() })
+        .run()
+        .unwrap();
+
+    assert!(
+        r.faults
+            .iter()
+            .any(|e| matches!(e, FaultEvent::ServerStalled { server: 0, after_pushes: 5, ms: 120 })),
+        "injected stall not recorded: {:?}",
+        r.faults
+    );
+    let stalls: Vec<_> = r
+        .faults
+        .iter()
+        .filter(|e| matches!(e, FaultEvent::Stalled { .. }))
+        .collect();
+    // One injected episode → one event.  (A second organic episode is
+    // possible on a loaded single-core box, so bound rather than pin.)
+    assert!(
+        !stalls.is_empty() && stalls.len() <= 2,
+        "watchdog fired {} times: {:?}",
+        stalls.len(),
+        r.faults
+    );
+    if let FaultEvent::Stalled { waited_ms, .. } = stalls[0] {
+        assert!(*waited_ms >= cfg.stall_warn_ms, "fired early: {waited_ms}ms");
+    }
+    // The observer saw the same stream the report recorded.
+    let seen = seen.lock().unwrap();
+    assert_eq!(&*seen, &r.faults, "observer stream != report.faults");
+    // The stall delayed but never dropped anything.
+    assert_eq!(r.total_pushes(), cfg.epochs * cfg.n_workers);
+}
+
+#[test]
+fn periodic_checkpoint_resumes_placement_and_duals() {
+    let path = std::env::temp_dir().join(format!("asybadmm_chaos_{}.ckpt", std::process::id()));
+    let bin = path.with_extension("bin");
+    let mut cfg = tiny(40);
+    cfg.placement = PlacementKind::Dynamic;
+    cfg.rebalance_ms = 0;
+    cfg.checkpoint_every = 10;
+    cfg.checkpoint_path = path.clone();
+    let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+    let r1 = train(&cfg, &ds, &shards);
+    assert_eq!(r1.total_pushes(), cfg.epochs * cfg.n_workers);
+
+    let ck = Checkpoint::load(&path).unwrap();
+    assert!(ck.epoch >= 10 && ck.epoch <= cfg.epochs, "bad watermark {}", ck.epoch);
+    assert_eq!(ck.z.len(), cfg.n_blocks * cfg.block_size);
+    assert_eq!(ck.block_owners.len(), cfg.n_blocks, "v2 owner map missing");
+    assert_eq!(ck.push_counts.len(), cfg.n_blocks, "v2 push counters missing");
+    assert_eq!(ck.duals.len(), cfg.n_workers, "v2 per-worker duals missing");
+    for (w, y) in ck.duals.iter().enumerate() {
+        assert_eq!(y.len(), shards[w].packed_dim(), "worker {w} dual geometry");
+    }
+
+    // Resume: same dataset, fresh budget, state warm-started from the
+    // checkpoint.  The resumed run must keep exact push accounting and
+    // end at least as converged as the checkpoint it started from.
+    let mut cfg2 = tiny(40);
+    cfg2.placement = PlacementKind::Dynamic;
+    cfg2.rebalance_ms = 0;
+    let r2 = Session::builder(&cfg2)
+        .dataset(&ds, &shards)
+        .resume_from(&ck)
+        .run()
+        .unwrap();
+    assert_eq!(r2.total_pushes(), cfg2.epochs * cfg2.n_workers);
+    assert!(
+        r2.final_objective.total() <= ck.objective + 0.05,
+        "resume regressed: {} from checkpoint {}",
+        r2.final_objective.total(),
+        ck.objective
+    );
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&bin);
+}
+
+/// Exact per-(worker, block) FIFO across a crash/reconnect window, at
+/// the transport + seq-gated table level: a worker's sender is dropped
+/// mid-stream (crash: a partial batch drop-flushes), the endpoint is
+/// re-opened with `reconnect_worker`, and the replacement continues the
+/// same seq stream — randomized over transports, batch sizes, crash
+/// points and drain interleavings.
+#[test]
+fn prop_fifo_holds_exactly_across_the_restart_window() {
+    forall(
+        "chaos-restart-fifo",
+        10,
+        |rng| {
+            let workers = 1 + rng.below(3);
+            let servers = 2 + rng.below(2);
+            let per_worker = 8 + rng.below(24);
+            let batch = 1 + rng.below(3);
+            let ring = rng.bernoulli(0.5);
+            // Which worker crashes, and after how many of its sends.
+            let victim = rng.below(workers);
+            let crash_after = 1 + rng.below(per_worker - 1);
+            (workers, servers, per_worker, batch, ring, victim, crash_after, rng.next_u64())
+        },
+        |&(workers, servers, per_worker, batch, ring, victim, crash_after, seed)| {
+            let (n_blocks, db) = (4usize, 4usize);
+            let spec = SynthSpec {
+                samples: 8 * workers,
+                geometry: BlockGeometry::new(n_blocks, db),
+                nnz_per_row: 3,
+                blocks_per_worker: n_blocks,
+                shared_blocks: n_blocks,
+                ..Default::default()
+            };
+            let (_, data_shards) = gen_partitioned(&spec, workers);
+            let topo = Topology::build(&data_shards, n_blocks, servers);
+            let store = Arc::new(BlockStore::new(n_blocks, db));
+            let problem = Problem::new(LossKind::Logistic, 0.0, 1e4);
+            let table = Arc::new(BlockTable::new(&topo, store, problem, 2.0, 0.1));
+            let map = BlockMap::new(&topo.server_of_block);
+            let shards: Vec<ServerShard> = (0..servers)
+                .map(|sid| ServerShard::with_table(sid, &topo, table.clone(), false))
+                .collect();
+            let transport: Box<dyn Transport> = if ring {
+                Box::new(SpscRingTransport::new(workers, servers, workers * per_worker, batch))
+            } else {
+                Box::new(MpscTransport::new(workers, servers, workers * per_worker, batch))
+            };
+            let mut rng = Rng::new(seed);
+            let mut txs: Vec<_> =
+                (0..workers).map(|w| Some(transport.connect_worker(w))).collect();
+            let mut lanes: Vec<(usize, Box<dyn PushReceiver>)> = (0..servers)
+                .flat_map(|s| {
+                    transport.connect_server_lanes(s).into_iter().map(move |l| (s, l))
+                })
+                .collect();
+
+            let value = |w: usize, j: usize, s: u64| (w * 1000 + j * 100) as f32 + s as f32;
+            let mut seq = vec![vec![0u64; n_blocks]; workers];
+            let mut sent = vec![0usize; workers];
+            let mut crashed = false;
+            let total = workers * per_worker;
+            let mut sent_total = 0usize;
+            let mut safety = 0usize;
+            while sent_total < total {
+                safety += 1;
+                if safety > 200 * total + 10_000 {
+                    return Err("interleaving did not finish".into());
+                }
+                let dice = rng.below(5);
+                if dice <= 2 {
+                    let w = rng.below(workers);
+                    if sent[w] >= per_worker {
+                        continue;
+                    }
+                    // The crash window: drop the victim's sender cold
+                    // (in-flight partial batch drop-flushes, exactly a
+                    // worker thread unwinding), then reconnect — the
+                    // replacement continues the SAME seq stream, as the
+                    // session seeds `push_seq` from the ledger.
+                    if w == victim && sent[w] == crash_after && !crashed {
+                        crashed = true;
+                        txs[w] = None; // old producer dies first (SPSC)
+                        txs[w] = Some(transport.reconnect_worker(w));
+                    }
+                    let j = rng.below(n_blocks);
+                    seq[w][j] += 1;
+                    let msg = PushMsg {
+                        worker: w,
+                        block: j,
+                        w: vec![value(w, j, seq[w][j]); db],
+                        worker_epoch: sent[w],
+                        z_version_used: 0,
+                        block_seq: seq[w][j],
+                        sent_at: None,
+                        recycle: None,
+                    };
+                    txs[w]
+                        .as_mut()
+                        .unwrap()
+                        .send(map.owner(j), msg)
+                        .map_err(|e| format!("send failed: {e:#}"))?;
+                    sent[w] += 1;
+                    sent_total += 1;
+                } else {
+                    let k = rng.below(lanes.len());
+                    let budget = 1 + rng.below(4);
+                    let (s, lane) = &mut lanes[k];
+                    for _ in 0..budget {
+                        match lane.try_recv() {
+                            TryRecv::Msg(m) => shards[*s]
+                                .handle_push(&m, &ProxBackend::Native)
+                                .map_err(|e| format!("apply failed: {e:#}"))?,
+                            _ => break,
+                        }
+                    }
+                }
+            }
+            for tx in txs.iter_mut().flatten() {
+                tx.flush().map_err(|e| format!("flush failed: {e:#}"))?;
+            }
+            drop(txs);
+            transport.shutdown();
+            let mut done = vec![false; lanes.len()];
+            let mut safety = 0usize;
+            while !done.iter().all(|&d| d) {
+                safety += 1;
+                if safety > 200 * total + 10_000 {
+                    return Err("final drain did not terminate".into());
+                }
+                let k = rng.below(lanes.len());
+                if done[k] {
+                    continue;
+                }
+                let (s, lane) = &mut lanes[k];
+                match lane.try_recv() {
+                    TryRecv::Msg(m) => shards[*s]
+                        .handle_push(&m, &ProxBackend::Native)
+                        .map_err(|e| format!("apply failed: {e:#}"))?,
+                    TryRecv::Done => done[k] = true,
+                    TryRecv::Empty => {}
+                }
+            }
+
+            // Nothing lost across the restart window, nothing parked,
+            // every chain applied through its full sequence in order.
+            let applied: usize = shards.iter().map(|s| s.stats().pushes).sum();
+            if applied != total {
+                return Err(format!("applied {applied} of {total}"));
+            }
+            for j in 0..n_blocks {
+                if table.pending_len(j) != 0 {
+                    return Err(format!("block {j}: parked pushes stranded"));
+                }
+                for w in 0..workers {
+                    if table.next_seq(j, w) != seq[w][j] + 1 {
+                        return Err(format!(
+                            "({w},{j}): next_seq {} != sent {} + 1",
+                            table.next_seq(j, w),
+                            seq[w][j]
+                        ));
+                    }
+                    if seq[w][j] > 0 {
+                        let wt = table.w_tilde_of(j, w);
+                        let expect = value(w, j, seq[w][j]);
+                        if wt[0] != expect {
+                            return Err(format!(
+                                "({w},{j}): final w̃ {} != last sent {expect}",
+                                wt[0]
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Session-level chaos matrix: a random crash (victim × epoch) under a
+/// random policy × placement × transport must complete with the exact
+/// per-policy push accounting, a finite objective, and the transition
+/// on the record.
+#[test]
+fn prop_session_survives_random_fault_plans() {
+    let epochs = 40usize;
+    forall(
+        "chaos-session-matrix",
+        6,
+        |rng| {
+            let victim = rng.below(3);
+            let at = 1 + rng.below(epochs / 2);
+            let restart = rng.bernoulli(0.5);
+            let ring = rng.bernoulli(0.5);
+            let placement = rng.below(4);
+            let batch = 1 + rng.below(2);
+            (victim, at, restart, ring, placement, batch)
+        },
+        |&(victim, at, restart, ring, placement, batch)| {
+            let mut cfg = tiny(epochs);
+            cfg.faults = format!("crash:w{victim}@{at}");
+            cfg.failure =
+                if restart { FailurePolicy::Restart } else { FailurePolicy::Degrade };
+            cfg.transport = if ring { TransportKind::SpscRing } else { TransportKind::Mpsc };
+            cfg.placement = [
+                PlacementKind::Contiguous,
+                PlacementKind::Hash,
+                PlacementKind::Degree,
+                PlacementKind::Dynamic,
+            ][placement];
+            cfg.rebalance_ms = 0;
+            cfg.batch = batch;
+            let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+            let r = Session::builder(&cfg)
+                .dataset(&ds, &shards)
+                .run()
+                .map_err(|e| format!("run failed: {e:#}"))?;
+
+            // Degrade may legitimately drop parked (gap-blocked) pushes
+            // of the victim under live migration — the event records
+            // exactly how many, keeping the accounting exact.
+            let dropped: usize = r
+                .faults
+                .iter()
+                .filter_map(|e| match e {
+                    FaultEvent::WorkerDegraded { worker, parked_dropped, .. }
+                        if *worker == victim =>
+                    {
+                        Some(*parked_dropped)
+                    }
+                    _ => None,
+                })
+                .sum();
+            let expect = if restart {
+                epochs * cfg.n_workers
+            } else {
+                (cfg.n_workers - 1) * epochs + at - dropped
+            };
+            if r.total_pushes() != expect {
+                return Err(format!(
+                    "pushes {} != {expect} (policy {:?}, dropped {dropped})",
+                    r.total_pushes(),
+                    cfg.failure
+                ));
+            }
+            let survived = if restart {
+                r.faults.iter().any(
+                    |e| matches!(e, FaultEvent::WorkerRestarted { worker, .. } if *worker == victim),
+                )
+            } else {
+                r.faults.iter().any(
+                    |e| matches!(e, FaultEvent::WorkerDegraded { worker, .. } if *worker == victim),
+                )
+            };
+            if !survived {
+                return Err(format!("transition missing from record: {:?}", r.faults));
+            }
+            if !r.final_objective.total().is_finite() {
+                return Err("objective not finite".into());
+            }
+            Ok(())
+        },
+    );
+}
