@@ -15,7 +15,7 @@
 
 use std::time::Instant;
 
-use asybadmm::bench::{emit_hotpath_json, harness_from_env, json_requested, BenchResult};
+use asybadmm::bench::{emit_hotpath_json, harness_from_env, json_requested, maybe_list_gates, BenchResult};
 use asybadmm::config::{Config, FailurePolicy};
 use asybadmm::coordinator::Session;
 use asybadmm::data::{gen_partitioned, Dataset, WorkerShard};
@@ -48,6 +48,9 @@ fn record(h: &mut asybadmm::bench::Harness, name: &str, per_op_s: f64) {
 }
 
 fn main() {
+    if maybe_list_gates() {
+        return;
+    }
     let quick = std::env::var("BENCH_QUICK").as_deref() == Ok("1");
     let mut h = harness_from_env();
     println!("== fault hooks + crash recovery ==");

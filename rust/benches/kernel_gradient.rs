@@ -9,13 +9,18 @@
 use std::path::Path;
 
 use asybadmm::admm::NativeEngine;
-use asybadmm::bench::{emit_hotpath_json, harness_from_env, json_requested};
+use asybadmm::bench::{emit_hotpath_json, harness_from_env, json_requested, maybe_list_gates};
+use asybadmm::config::KernelKind;
 use asybadmm::data::{gen_partitioned, BlockGeometry, LossKind, SynthSpec};
 use asybadmm::problem::Problem;
 use asybadmm::runtime::{Manifest, WorkerXla, XlaEngine};
+use asybadmm::sparse::Kernels;
 use asybadmm::util::rng::Rng;
 
 fn main() {
+    if maybe_list_gates() {
+        return;
+    }
     let mut h = harness_from_env();
     println!("== L1 gradient kernel (lower is better) ==");
 
@@ -87,6 +92,52 @@ fn main() {
             ds.a.nnz() as f64 / r.mean_s / 1e6);
     }
 
+    // --- runtime SIMD dispatch: SpMV (margins matvec) simd vs unrolled ----
+    // The `kernel=simd` table is gated bit-identical to `unrolled` in
+    // sparse::simd's tests; here we record what the AVX2 gathers buy on
+    // this host.  On a non-AVX2 host `simd` resolves to `unrolled`
+    // (Kernels::name says so) and the gate records a neutral 1.0.
+    let mut simd_vs_unrolled = 1.0;
+    {
+        let spec = SynthSpec {
+            samples: 2048,
+            geometry: BlockGeometry::new(8, 512),
+            nnz_per_row: 40,
+            blocks_per_worker: 8,
+            shared_blocks: 1,
+            ..Default::default()
+        };
+        let (_, shards) = gen_partitioned(&spec, 1);
+        let shard = &shards[0];
+        let a = &shard.a_packed;
+        let mut rng = Rng::new(0x51D);
+        let x: Vec<f32> =
+            (0..shard.packed_dim()).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut out = vec![0.0f32; 2048];
+        let unrolled = Kernels::select(KernelKind::Unrolled);
+        let simd = Kernels::select(KernelKind::Simd);
+        let ru = h
+            .bench("unrolled matvec m=2048 d_pad=4096", || {
+                (unrolled.matvec)(a, &x, &mut out);
+            })
+            .mean_s;
+        if simd.name == "simd" {
+            let rs = h
+                .bench("simd     matvec m=2048 d_pad=4096", || {
+                    (simd.matvec)(a, &x, &mut out);
+                })
+                .mean_s;
+            simd_vs_unrolled = ru / rs.max(1e-12);
+            println!("  -> simd {simd_vs_unrolled:.2}x vs unrolled (AVX2 gathers)");
+        } else {
+            println!(
+                "  (no AVX2 at runtime: kernel=simd resolves to '{}'; \
+                 simd_vs_unrolled_spmv = 1.0)",
+                simd.name
+            );
+        }
+    }
+
     // --- XLA artifacts (requires `make artifacts`) ------------------------
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     match Manifest::load(&dir) {
@@ -130,7 +181,10 @@ fn main() {
         emit_hotpath_json(
             "kernel_gradient",
             &h,
-            &[("sliced_vs_scan_min_speedup", min_speedup)],
+            &[
+                ("sliced_vs_scan_min_speedup", min_speedup),
+                ("simd_vs_unrolled_spmv", simd_vs_unrolled),
+            ],
         );
     }
 }

@@ -25,7 +25,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::Duration;
 
 use asybadmm::baselines::run_locked_admm;
-use asybadmm::bench::{emit_hotpath_json, harness_from_env, json_requested, BenchResult};
+use asybadmm::bench::{emit_hotpath_json, harness_from_env, json_requested, maybe_list_gates, BenchResult};
 use asybadmm::config::{Config, TransportKind};
 use asybadmm::coordinator::{
     make_transport, push_inflight, BlockStore, PushMsg, PushPool, RwBlockStore, Session,
@@ -150,6 +150,9 @@ fn record(h: &mut asybadmm::bench::Harness, name: &str, per_op_s: f64) {
 }
 
 fn main() {
+    if maybe_list_gates() {
+        return;
+    }
     let quick = std::env::var("BENCH_QUICK").as_deref() == Ok("1");
     let mut h = harness_from_env();
     println!("== E4: lock-free block-wise vs global-lock full-vector ==");
@@ -258,9 +261,7 @@ fn main() {
             compute_per_row_s: 1e-6,
             server_service_s: 3e-5,
             net_mean_s: 1e-4,
-            chunk_rows: 0,
-            per_chunk_s: 0.0,
-            compute_jitter: 0.0,
+            ..CostModel::default()
         };
         let r_blockwise = run_sim(&c, &ds, &shards, &base_cost).unwrap();
 

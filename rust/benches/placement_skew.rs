@@ -4,7 +4,7 @@
 //! The synthetic workload's hot shared blocks have low indices, so the
 //! default contiguous placement concentrates the whole Zipf head on
 //! shard 0 — the server-side serialization the placement/drain layer
-//! (PR 4) and the adaptive runtime (this PR) exist to break.  Five
+//! (PR 4) and the adaptive runtime (this PR) exist to break.  Six
 //! measurements:
 //!
 //!  1. **Static skew**: max/mean shard load (load = Σ |𝒩(j)| over owned
@@ -29,6 +29,11 @@
 //!     `2 × n_servers` pool threads vs the classic one-per-shard —
 //!     the `elastic_threads_throughput` gate (≈1 on 1-core CI hosts,
 //!     > 1 once cores exist to borrow).
+//!  6. **Service-time-aware rebalancing** (DES): equal per-block push
+//!     rates with a 9× slow-head service skew — the
+//!     `service_time_vs_rate_rebalance` gate (virtual completion time,
+//!     rate-only / cost-weighted planner; the cost model isolates the
+//!     slow block, rate-only planning holds still).
 //!
 //!     cargo bench --bench placement_skew [-- --json]
 //!     BENCH_QUICK=1 cargo bench --bench placement_skew -- --json
@@ -37,8 +42,8 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use asybadmm::bench::{emit_hotpath_json, harness_from_env, json_requested, BenchResult};
-use asybadmm::config::{DrainKind, PlacementKind, TransportKind};
+use asybadmm::bench::{emit_hotpath_json, harness_from_env, json_requested, maybe_list_gates, BenchResult};
+use asybadmm::config::{BlockSelection, Config, DrainKind, PlacementKind, TransportKind};
 use asybadmm::coordinator::{
     load_imbalance, make_placement, make_transport, push_inflight, run_pool, run_server,
     BlockMap, BlockStore, BlockTable, ProxBackend, PushMsg, PushPool, Rebalancer, ServerShard,
@@ -46,6 +51,7 @@ use asybadmm::coordinator::{
 };
 use asybadmm::data::{gen_partitioned, BlockGeometry, LossKind, SynthSpec, WorkerShard};
 use asybadmm::problem::Problem;
+use asybadmm::sim::{run_sim, CostModel};
 
 const N_BLOCKS: usize = 16;
 const DB: usize = 256;
@@ -196,6 +202,9 @@ fn record(h: &mut asybadmm::bench::Harness, name: &str, per_op_s: f64) {
 }
 
 fn main() {
+    if maybe_list_gates() {
+        return;
+    }
     let quick = std::env::var("BENCH_QUICK").as_deref() == Ok("1");
     let mut h = harness_from_env();
     println!("== placement + drain + adaptive runtime under Zipf-hot blocks ==");
@@ -338,6 +347,57 @@ fn main() {
         elastic.rate
     );
 
+    // 6. Service-time-aware rebalancing (DES): a slow-head service skew
+    //    that rate-only planning cannot see.  Every worker cycles over
+    //    every block, so per-block push RATES are equal — but block 0's
+    //    Eq. 13 service costs 9× the rest, queueing its shard.  The
+    //    cost-weighted planner (rate × per-block service EWMA, the
+    //    threaded Rebalancer's weight since this PR) isolates the slow
+    //    block; the legacy rate-only weight sees balance and holds
+    //    still.  Gate: virtual completion time rate-only /
+    //    cost-weighted (> 1 once the skew binds).
+    let sim_arm = |weighted: bool| {
+        let mut cfg = Config::tiny_test();
+        cfg.epochs = if quick { 200 } else { 400 };
+        cfg.n_workers = 4;
+        cfg.n_blocks = 4;
+        cfg.blocks_per_worker = 4;
+        cfg.shared_blocks = 4;
+        cfg.placement = PlacementKind::Dynamic;
+        cfg.selection = BlockSelection::Cyclic;
+        cfg.rebalance_ms = 20;
+        cfg.log_every = 100_000;
+        let cost = CostModel {
+            compute_fixed_s: 1e-4,
+            compute_per_row_s: 0.0,
+            server_service_s: 5e-5,
+            net_mean_s: 0.0,
+            slow_head_blocks: 1,
+            slow_head_factor: 9.0,
+            cost_weighted_rebalance: weighted,
+            ..CostModel::default()
+        };
+        let (ds, sim_shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+        run_sim(&cfg, &ds, &sim_shards, &cost).unwrap()
+    };
+    let r_cost = sim_arm(true);
+    let r_rate = sim_arm(false);
+    let svc_ratio = r_rate.virtual_time_s / r_cost.virtual_time_s.max(1e-12);
+    record(&mut h, "DES rate-only rebalance (slow head)", r_rate.virtual_time_s);
+    record(&mut h, "DES cost-weighted rebalance (slow head)", r_cost.virtual_time_s);
+    println!(
+        "\nservice-time-aware rebalancing (DES, slow head 9x, equal rates):\n\
+         \x20 rate-only     {:.4}s virtual, {} migrations, final map {:?}\n\
+         \x20 cost-weighted {:.4}s virtual, {} migrations, final map {:?}\n\
+         \x20 -> rate-only / cost-weighted = {svc_ratio:.2}x  (gate: >= ~1)",
+        r_rate.virtual_time_s,
+        r_rate.migrations,
+        r_rate.placement_final,
+        r_cost.virtual_time_s,
+        r_cost.migrations,
+        r_cost.placement_final
+    );
+
     println!("\n{}", h.csv());
 
     if json_requested() {
@@ -359,6 +419,7 @@ fn main() {
                 ("dynamic_vs_degree_skew", dyn_vs_degree),
                 ("dynamic_migrations", dynamic.migrations as f64),
                 ("elastic_threads_throughput", elastic_ratio),
+                ("service_time_vs_rate_rebalance", svc_ratio),
             ],
         );
     }

@@ -18,17 +18,25 @@ use std::path::Path;
 use std::sync::Arc;
 
 use asybadmm::admm::{add_assign_diff, add_assign_diff_scalar, prox_l1_box, prox_l1_box_scalar};
-use asybadmm::bench::{emit_hotpath_json, harness_from_env, json_requested};
+use asybadmm::bench::{emit_hotpath_json, harness_from_env, json_requested, maybe_list_gates};
+use asybadmm::config::KernelKind;
 use asybadmm::coordinator::{BlockStore, PushMsg, ServerShard, Topology};
 use asybadmm::data::{gen_partitioned, BlockGeometry, LossKind, SynthSpec};
 use asybadmm::problem::Problem;
 use asybadmm::runtime::{Manifest, ServerProxXla};
+use asybadmm::sparse::Kernels;
 use asybadmm::util::rng::Rng;
 
-/// Bit-identity gate: the unrolled kernels must compute the exact same
-/// f32 expression per element as the scalar references — not just agree
-/// approximately.  Panics on the first divergent bit pattern.
-fn assert_bit_identical(db: usize) {
+/// Bit-identity gate: the fast kernels (`prox`, `wsum`) must compute
+/// the exact same f32 expression per element as the scalar references —
+/// not just agree approximately.  Panics on the first divergent bit
+/// pattern.
+fn assert_bit_identical(
+    tag: &str,
+    db: usize,
+    prox: fn(&[f32], &[f32], f32, f32, f32, f32, &mut [f32]),
+    wsum: fn(&mut [f32], &[f32], &[f32]),
+) {
     let mut rng = Rng::new(0xB17);
     for rep in 0..50 {
         let zt: Vec<f32> = (0..db).map(|_| rng.normal_f32(0.0, 3.0)).collect();
@@ -37,38 +45,48 @@ fn assert_bit_identical(db: usize) {
         let (lambda, clip) = (rng.f32(), 0.5 + rng.f32() * 4.0);
         let mut fast = vec![0.0f32; db];
         let mut slow = vec![0.0f32; db];
-        prox_l1_box(&zt, &ws, gamma, denom, lambda, clip, &mut fast);
+        prox(&zt, &ws, gamma, denom, lambda, clip, &mut fast);
         prox_l1_box_scalar(&zt, &ws, gamma, denom, lambda, clip, &mut slow);
         for (k, (a, b)) in fast.iter().zip(&slow).enumerate() {
             assert_eq!(
                 a.to_bits(),
                 b.to_bits(),
-                "prox diverged from scalar at rep {rep} elem {k}: {a} vs {b}"
+                "{tag} prox diverged from scalar at rep {rep} elem {k}: {a} vs {b}"
             );
         }
         let base: Vec<f32> = (0..db).map(|_| rng.normal_f32(0.0, 2.0)).collect();
         let (mut s_fast, mut s_slow) = (base.clone(), base);
-        add_assign_diff(&mut s_fast, &zt, &ws);
+        wsum(&mut s_fast, &zt, &ws);
         add_assign_diff_scalar(&mut s_slow, &zt, &ws);
         for (k, (a, b)) in s_fast.iter().zip(&s_slow).enumerate() {
             assert_eq!(
                 a.to_bits(),
                 b.to_bits(),
-                "w-sum diverged from scalar at rep {rep} elem {k}: {a} vs {b}"
+                "{tag} w-sum diverged from scalar at rep {rep} elem {k}: {a} vs {b}"
             );
         }
     }
 }
 
 fn main() {
+    if maybe_list_gates() {
+        return;
+    }
     let mut h = harness_from_env();
     println!("== server prox / push service (lower is better) ==");
 
-    for db in [64usize, 512] {
-        assert_bit_identical(db);
+    let simd = Kernels::select(KernelKind::Simd);
+    for db in [64usize, 512, 257] {
+        // 257: odd length, remainder lanes covered.
+        assert_bit_identical("unrolled", db, prox_l1_box, add_assign_diff);
+        // The runtime-dispatched table (AVX2 when available, else the
+        // unrolled fallback) is held to the same exact-bits standard.
+        assert_bit_identical(simd.name, db, simd.prox_l1_box, simd.add_assign_diff);
     }
-    assert_bit_identical(257); // odd length: remainder lanes covered
-    println!("bit-identity gate: unrolled prox / w-sum == scalar (PASS)");
+    println!(
+        "bit-identity gate: unrolled + dispatched ('{}') prox / w-sum == scalar (PASS)",
+        simd.name
+    );
 
     let mut prox_ratio = 1.0;
     let mut wsum_ratio = 1.0;
@@ -105,6 +123,28 @@ fn main() {
          (>= 1.0 expected; exact gain is ISA/LLVM dependent)"
     );
 
+    // Runtime-dispatched (kernel=simd) prox vs the scalar reference at
+    // db=512.  On a non-AVX2 host the table resolves to `unrolled`, so
+    // the gate degrades to the unrolled ratio instead of going silent.
+    let simd_prox_ratio = {
+        let db = 512usize;
+        let zt = vec![0.1f32; db];
+        let ws = vec![0.2f32; db];
+        let mut out = vec![0.0f32; db];
+        let r = h.bench(&format!("{} prox_l1_box db={db} (dispatch)", simd.name), || {
+            (simd.prox_l1_box)(&zt, &ws, 0.01, 16.0, 1e-5, 1e4, &mut out);
+        });
+        let fast_s = r.mean_s;
+        let r = h.bench(&format!("scalar prox_l1_box db={db} (ref)"), || {
+            prox_l1_box_scalar(&zt, &ws, 0.01, 16.0, 1e-5, 1e4, &mut out);
+        });
+        r.mean_s / fast_s.max(1e-12)
+    };
+    println!(
+        "dispatched ('{}') prox speedup vs scalar at db=512: {simd_prox_ratio:.2}x",
+        simd.name
+    );
+
     // Full push handling (w̃ bookkeeping + prox + seqlock store publish).
     let spec = SynthSpec {
         samples: 64,
@@ -124,7 +164,7 @@ fn main() {
     let msg = PushMsg {
         worker,
         block,
-        w: vec![0.3f32; 64],
+        w: vec![0.3f32; 64].into(),
         worker_epoch: 0,
         z_version_used: 0,
         block_seq: 0,
@@ -159,6 +199,7 @@ fn main() {
             &[
                 ("prox_unrolled_vs_scalar", prox_ratio),
                 ("wsum_unrolled_vs_scalar", wsum_ratio),
+                ("simd_prox_speedup", simd_prox_ratio),
             ],
         );
     }

@@ -10,6 +10,9 @@ use asybadmm::report::SpeedupTable;
 use asybadmm::sim::CostModel;
 
 fn main() {
+    if asybadmm::bench::maybe_list_gates() {
+        return;
+    }
     let quick = std::env::var("BENCH_QUICK").as_deref() == Ok("1");
     let ks = vec![20usize, 50, 100];
     let mut base = Config::default();
@@ -30,9 +33,8 @@ fn main() {
         compute_per_row_s: 2e-5,
         server_service_s: 2e-5,
         net_mean_s: 2e-4,
-        chunk_rows: 0,
-        per_chunk_s: 0.0,
         compute_jitter: 0.1,
+        ..CostModel::default()
     };
     for p in [1usize, 4, 8, 16, 32] {
         let mut cfg = base.clone();

@@ -8,6 +8,7 @@
 
 use crate::data::WorkerShard;
 use crate::problem::Problem;
+use crate::sparse::Kernels;
 
 /// Eq. 11/12/9 epilogue — mirror of `model.worker_update`:
 /// x = z̃ − (g + y)/ρ,  y' = y + ρ(x − z̃),  w = ρx + y'.
@@ -40,14 +41,35 @@ pub struct NativeEngine<'a> {
     /// Uniform per-sample weight (1/m_total so that Σ_i f_i equals the
     /// global mean loss of paper Eq. 22).
     pub sample_weight: f32,
+    /// Resolved kernel family for the spmv / block-gradient hot spots
+    /// (`sparse::simd`); `new` defaults to `kernel=auto`.
+    kernels: &'static Kernels,
     margins: Vec<f32>,
     slopes: Vec<f32>,
 }
 
 impl<'a> NativeEngine<'a> {
     pub fn new(shard: &'a WorkerShard, problem: Problem, sample_weight: f32) -> Self {
+        Self::with_kernels(shard, problem, sample_weight, Kernels::auto())
+    }
+
+    /// Like [`NativeEngine::new`] with an explicit kernel family (the
+    /// session resolves `--set kernel=` once and threads it here).
+    pub fn with_kernels(
+        shard: &'a WorkerShard,
+        problem: Problem,
+        sample_weight: f32,
+        kernels: &'static Kernels,
+    ) -> Self {
         let m = shard.samples();
-        NativeEngine { shard, problem, sample_weight, margins: vec![0.0; m], slopes: vec![0.0; m] }
+        NativeEngine {
+            shard,
+            problem,
+            sample_weight,
+            kernels,
+            margins: vec![0.0; m],
+            slopes: vec![0.0; m],
+        }
     }
 
     /// Fused margins + slopes pass; returns total (weighted) data loss at
@@ -55,7 +77,7 @@ impl<'a> NativeEngine<'a> {
     /// Pallas kernel.
     fn margins_pass(&mut self, point: &[f32]) -> f32 {
         debug_assert_eq!(point.len(), self.shard.packed_dim());
-        self.shard.a_packed.matvec(point, &mut self.margins);
+        (self.kernels.matvec)(&self.shard.a_packed, point, &mut self.margins);
         let mut loss = 0.0f32;
         for (k, &m) in self.margins.iter().enumerate() {
             let (l, s) = self.problem.loss_slope(m, self.shard.labels[k]);
@@ -74,7 +96,13 @@ impl<'a> NativeEngine<'a> {
         debug_assert_eq!(g.len(), hi - lo);
         let loss = self.margins_pass(point);
         g.fill(0.0);
-        self.shard.a_packed.tmatvec_block_sliced(&self.slopes, &self.shard.slices, slot, g);
+        (self.kernels.tmatvec_block_sliced)(
+            &self.shard.a_packed,
+            &self.slopes,
+            &self.shard.slices,
+            slot,
+            g,
+        );
         loss
     }
 

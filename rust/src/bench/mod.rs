@@ -178,6 +178,49 @@ pub fn json_requested() -> bool {
     std::env::args().any(|a| a == "--json")
 }
 
+/// Every perf-gate key the smoke suite must emit into
+/// `BENCH_hotpath.json` — the single source of truth.  CI derives its
+/// presence check from `--list-gates` output instead of a
+/// hand-maintained shell list, so adding a key here (plus the emitting
+/// bench) is the whole registration.  Grouped by emitting bench.
+pub const GATE_KEYS: &[&str] = &[
+    // locking_ablation
+    "seqlock_vs_rwlock",
+    "ring_vs_mpsc_enqueue",
+    // placement_skew
+    "steal_vs_owned_drain",
+    "degree_vs_contiguous_skew",
+    "ring_batch_amortization",
+    "dynamic_vs_degree_skew",
+    "dynamic_migrations",
+    "elastic_threads_throughput",
+    "service_time_vs_rate_rebalance",
+    // fault_recovery
+    "fault_hooks_overhead",
+    "recovery_vs_faultfree_epochs",
+    // kernel_gradient
+    "sliced_vs_scan_min_speedup",
+    "simd_vs_unrolled_spmv",
+    // server_prox
+    "prox_unrolled_vs_scalar",
+    "wsum_unrolled_vs_scalar",
+    "simd_prox_speedup",
+];
+
+/// Standard `--list-gates` handling for bench mains: when the flag is
+/// present, print every gate key (one per line) and return `true` so
+/// the bench exits without measuring anything.
+pub fn maybe_list_gates() -> bool {
+    if std::env::args().any(|a| a == "--list-gates") {
+        for key in GATE_KEYS {
+            println!("{key}");
+        }
+        true
+    } else {
+        false
+    }
+}
+
 /// Default output file for [`emit_hotpath_json_at`]; relative to the
 /// bench's working directory (the `rust/` package root under cargo).
 pub const HOTPATH_JSON: &str = "BENCH_hotpath.json";
@@ -251,6 +294,23 @@ pub fn emit_hotpath_json(section: &str, h: &Harness, extras: &[(&str, f64)]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn gate_keys_are_unique_and_cover_the_simd_pr() {
+        let mut seen = std::collections::HashSet::new();
+        for key in GATE_KEYS {
+            assert!(seen.insert(*key), "duplicate gate key {key:?}");
+            assert!(
+                key.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_'),
+                "gate key {key:?} is not a lower_snake_case token"
+            );
+        }
+        for key in
+            ["simd_vs_unrolled_spmv", "simd_prox_speedup", "service_time_vs_rate_rebalance"]
+        {
+            assert!(GATE_KEYS.contains(&key), "missing gate key {key:?}");
+        }
+    }
 
     #[test]
     fn bench_produces_sane_stats() {

@@ -142,6 +142,45 @@ impl DrainKind {
     }
 }
 
+/// Which implementation family the hot-path compute kernels use
+/// (spmv / block gradient / prox / w̃-sum; see `sparse/simd.rs` and
+/// DESIGN.md §2.0.4).  All variants are gated bit-identical, so this is
+/// purely a speed/portability knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Plain one-element-at-a-time loops (the differential reference).
+    Scalar,
+    /// 4-wide hand-unrolled loops LLVM autovectorizes (the PR-1..5
+    /// hot path; portable to every ISA).
+    Unrolled,
+    /// Explicit AVX2 `std::arch` intrinsics.  Falls back to `unrolled`
+    /// at dispatch time when the host lacks AVX2.
+    Simd,
+    /// `simd` when the host supports it, else `unrolled` (default).
+    Auto,
+}
+
+impl KernelKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "scalar" => Ok(KernelKind::Scalar),
+            "unrolled" => Ok(KernelKind::Unrolled),
+            "simd" => Ok(KernelKind::Simd),
+            "auto" => Ok(KernelKind::Auto),
+            other => anyhow::bail!("unknown kernel kind {other:?} (scalar|unrolled|simd|auto)"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Unrolled => "unrolled",
+            KernelKind::Simd => "simd",
+            KernelKind::Auto => "auto",
+        }
+    }
+}
+
 /// What the session does when a worker thread dies mid-run
 /// (see `coordinator/fault.rs` and DESIGN.md §2.0.3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -251,6 +290,9 @@ pub struct Config {
     pub transport: TransportKind,
     /// Server-thread drain policy (`owned` | `steal`).
     pub drain: DrainKind,
+    /// Hot-path compute kernel family
+    /// (`scalar` | `unrolled` | `simd` | `auto`; `sparse/simd.rs`).
+    pub kernel: KernelKind,
     /// Server threads servicing the shards' lanes.  0 (default) = one
     /// thread per shard (the classic shape).  Any other value runs an
     /// elastic pool: every thread services all shards' lanes (own-first
@@ -331,6 +373,7 @@ impl Default for Config {
             backend: Backend::Native,
             transport: TransportKind::Mpsc,
             drain: DrainKind::Owned,
+            kernel: KernelKind::Auto,
             server_threads: 0,
             rebalance_ms: 1,
             batch: 1,
@@ -410,6 +453,7 @@ impl Config {
         "n_servers",
         "placement",
         "drain",
+        "kernel",
         "server_threads",
         "rebalance_ms",
         "batch",
@@ -467,6 +511,7 @@ impl Config {
             "n_servers" => self.n_servers = scalar(key, v)?,
             "placement" => self.placement = PlacementKind::parse(v)?,
             "drain" => self.drain = DrainKind::parse(v)?,
+            "kernel" => self.kernel = KernelKind::parse(v)?,
             "server_threads" => self.server_threads = scalar(key, v)?,
             "rebalance_ms" => self.rebalance_ms = scalar(key, v)?,
             "batch" => self.batch = scalar(key, v)?,
@@ -587,7 +632,7 @@ impl Config {
 
     fn summary_base(&self) -> String {
         format!(
-            "loss={} m={} M={} db={} p={} servers={} threads={} rho={} gamma={} lambda={} T={} sel={} backend={} transport={} placement={} rebalance_ms={} drain={} batch={} seed={}",
+            "loss={} m={} M={} db={} p={} servers={} threads={} rho={} gamma={} lambda={} T={} sel={} backend={} transport={} placement={} rebalance_ms={} drain={} kernel={} batch={} seed={}",
             self.loss.as_str(),
             self.samples,
             self.n_blocks,
@@ -605,6 +650,7 @@ impl Config {
             self.placement.as_str(),
             self.rebalance_ms,
             self.drain.as_str(),
+            self.kernel.as_str(),
             self.batch,
             self.seed
         )
@@ -676,8 +722,17 @@ mod tests {
         c.apply_kv("drain", "owned").unwrap();
         assert_eq!(c.placement, PlacementKind::Contiguous);
         assert_eq!(c.drain, DrainKind::Owned);
+        c.apply_kv("kernel", "scalar").unwrap();
+        assert_eq!(c.kernel, KernelKind::Scalar);
+        c.apply_kv("kernel", "unrolled").unwrap();
+        assert_eq!(c.kernel, KernelKind::Unrolled);
+        c.apply_kv("kernel", "simd").unwrap();
+        assert_eq!(c.kernel, KernelKind::Simd);
+        c.apply_kv("kernel", "auto").unwrap();
+        assert_eq!(c.kernel, KernelKind::Auto);
         assert!(c.apply_kv("placement", "astrology").is_err());
         assert!(c.apply_kv("drain", "never").is_err());
+        assert!(c.apply_kv("kernel", "quantum").is_err());
         assert!(c.apply_kv("transport", "carrier-pigeon").is_err());
         assert!(c.apply_kv("nope", "1").is_err());
         assert!(c.apply_kv("n_workers", "abc").is_err());
@@ -710,6 +765,10 @@ mod tests {
         let err = format!("{:#}", c.apply_kv("loss", "bogus").unwrap_err());
         for v in ["logistic", "squared"] {
             assert!(err.contains(v), "loss error omits {v:?}: {err}");
+        }
+        let err = format!("{:#}", c.apply_kv("kernel", "bogus").unwrap_err());
+        for v in ["scalar", "unrolled", "simd", "auto"] {
+            assert!(err.contains(v), "kernel error omits {v:?}: {err}");
         }
         let err = format!("{:#}", c.apply_kv("n_workers", "abc").unwrap_err());
         assert!(err.contains("n_workers"), "scalar error omits the key: {err}");

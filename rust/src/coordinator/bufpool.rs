@@ -20,13 +20,18 @@
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 
-/// Worker-owned pool of `db`-sized push buffers with a recycle channel.
+use crate::util::AlignedBuf;
+
+/// Worker-owned pool of `db`-sized, 64-byte-aligned push buffers with a
+/// recycle channel.  Cache-line alignment means two buffers acquired
+/// back-to-back never straddle one line — the server-side readers of
+/// adjacent in-flight pushes cannot false-share.
 pub struct PushPool {
     /// Recycle inbox: buffers the server shards have finished with.
-    inbox: Receiver<Vec<f32>>,
+    inbox: Receiver<AlignedBuf>,
     /// Kept alive so `inbox.recv()` can never observe a closed channel;
     /// cloned into every [`PushMsg`] as the return address.
-    home: Sender<Vec<f32>>,
+    home: Sender<AlignedBuf>,
     db: usize,
     cap: usize,
     allocated: usize,
@@ -40,21 +45,21 @@ impl PushPool {
     }
 
     /// The sender a consumer uses to return a buffer to this pool.
-    pub fn recycler(&self) -> Sender<Vec<f32>> {
+    pub fn recycler(&self) -> Sender<AlignedBuf> {
         self.home.clone()
     }
 
     /// Get a buffer: reuse a recycled one if available, allocate while
     /// under the cap, otherwise block until a consumer returns one
     /// (backpressure mirroring the bounded push channel).
-    pub fn acquire(&mut self) -> Vec<f32> {
+    pub fn acquire(&mut self) -> AlignedBuf {
         if let Ok(buf) = self.inbox.try_recv() {
             debug_assert_eq!(buf.len(), self.db);
             return buf;
         }
         if self.allocated < self.cap {
             self.allocated += 1;
-            return vec![0.0; self.db];
+            return AlignedBuf::zeroed(self.db);
         }
         // Cannot fail: `self.home` keeps a sender alive.
         self.inbox.recv().expect("push pool recycle channel closed")

@@ -10,6 +10,7 @@ use crate::config::Backend;
 use crate::data::WorkerShard;
 use crate::problem::Problem;
 use crate::runtime::{Manifest, WorkerXla, XlaEngine};
+use crate::sparse::Kernels;
 
 /// One worker iteration's numerics: block gradient at z̃ + Eq. 9/11/12
 /// epilogue.  Returns the shard data loss observed at z̃.
@@ -36,8 +37,20 @@ pub struct NativeCompute<'a> {
 
 impl<'a> NativeCompute<'a> {
     pub fn new(shard: &'a WorkerShard, problem: Problem, sample_weight: f32) -> Self {
+        Self::with_kernels(shard, problem, sample_weight, Kernels::auto())
+    }
+
+    pub fn with_kernels(
+        shard: &'a WorkerShard,
+        problem: Problem,
+        sample_weight: f32,
+        kernels: &'static Kernels,
+    ) -> Self {
         let g = vec![0.0; shard.block_size];
-        NativeCompute { engine: NativeEngine::new(shard, problem, sample_weight), g }
+        NativeCompute {
+            engine: NativeEngine::with_kernels(shard, problem, sample_weight, kernels),
+            g,
+        }
     }
 }
 
@@ -111,6 +124,9 @@ impl WorkerCompute for XlaCompute {
 }
 
 /// Construct the configured backend for one worker, inside its thread.
+/// `kernels` is the session-resolved dispatch table (`--set kernel=`);
+/// only the native backend consumes it (XLA ships its own codegen).
+#[allow(clippy::too_many_arguments)]
 pub fn make_compute<'a>(
     backend: Backend,
     shard: &'a WorkerShard,
@@ -119,9 +135,12 @@ pub fn make_compute<'a>(
     manifest: Option<&Manifest>,
     m_chunk: usize,
     d_pad: usize,
+    kernels: &'static Kernels,
 ) -> Result<Box<dyn WorkerCompute + 'a>> {
     match backend {
-        Backend::Native => Ok(Box::new(NativeCompute::new(shard, problem, sample_weight))),
+        Backend::Native => {
+            Ok(Box::new(NativeCompute::with_kernels(shard, problem, sample_weight, kernels)))
+        }
         Backend::Xla => {
             let manifest = manifest
                 .ok_or_else(|| anyhow::anyhow!("XLA backend requires a loaded manifest"))?;

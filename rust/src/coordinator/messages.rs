@@ -7,6 +7,8 @@
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
+use crate::util::AlignedBuf;
+
 /// w_{i,j} push (Eq. 9).  `worker_epoch` and `z_version_used` implement
 //  the staleness accounting for Assumption 3.
 // Not `Clone`: each message owns one pooled buffer and one recycle
@@ -17,10 +19,12 @@ use std::time::Instant;
 pub struct PushMsg {
     pub worker: usize,
     pub block: usize,
-    /// The pushed w block.  Pooled: after `handle_push` the server shard
+    /// The pushed w block, in a 64-byte-aligned buffer (no false
+    /// sharing between adjacent pooled buffers; SIMD kernels see
+    /// aligned lanes).  Pooled: after `handle_push` the server shard
     /// sends it home on `recycle` instead of dropping it, so the steady
     /// state allocates nothing per epoch (see `coordinator::bufpool`).
-    pub w: Vec<f32>,
+    pub w: AlignedBuf,
     /// Worker's local epoch t when this w was produced.
     pub worker_epoch: usize,
     /// BlockStore version of z̃_j the worker used to compute this w.
@@ -38,7 +42,7 @@ pub struct PushMsg {
     pub sent_at: Option<Instant>,
     /// Return address of the worker's buffer pool; `None` means the
     /// buffer is unpooled and the server just drops it (tests, benches).
-    pub recycle: Option<Sender<Vec<f32>>>,
+    pub recycle: Option<Sender<AlignedBuf>>,
 }
 
 impl PushMsg {

@@ -8,10 +8,11 @@
 //! the updates the paper parallelizes.  `--set placement=dynamic`
 //! starts from the naive contiguous map and adapts: a [`Rebalancer`]
 //! (driven from the session monitor thread) samples per-block
-//! applied-push counters from the shared
+//! applied-push counters and service-time EWMAs from the shared
 //! [`super::server::BlockTable`], computes a greedy LPT re-map from the
-//! observed rates, and publishes the hottest diffs into the shared
-//! [`BlockMap`] that workers read on the push path.
+//! observed *cost* (`rate × service time` — a slow block at the same
+//! rate is a heavier block), and publishes the hottest diffs into the
+//! shared [`BlockMap`] that workers read on the push path.
 //!
 //! ## Why migration preserves the paper's assumptions
 //!
@@ -154,14 +155,21 @@ pub fn lpt_map(weight: &[usize], n_servers: usize) -> Vec<usize> {
 
 /// Pure migration planning, shared verbatim by the threaded
 /// [`Rebalancer`] and the DES migration model (`crate::sim`) so both
-/// react identically to the same rate window: greedy-LPT re-pack of
-/// `delta`, gated on beating the current imbalance by `hysteresis`,
-/// returning at most `max_moves` `(block, new_owner)` moves sorted
-/// hottest-first.  Empty = keep the current map.  (The noise-floor /
-/// window bookkeeping stays with the callers, which own the counters.)
+/// react identically to the same observation window: greedy-LPT re-pack
+/// of `weight` (per-block *cost* for the window — applied-push delta ×
+/// sampled service-time EWMA on the threaded path; a rate-only caller
+/// just passes raw deltas), gated on beating the current imbalance by
+/// `hysteresis`, returning at most `max_moves` `(block, new_owner)`
+/// moves sorted heaviest-first.  `tiebreak` breaks equal-weight move
+/// ordering (the threaded path passes per-block pending-queue depth:
+/// between two equally costly blocks, migrate the one whose queue is
+/// deeper first); pass `&[]` for the plain block-id tiebreak.  Empty
+/// result = keep the current map.  (The noise-floor / window
+/// bookkeeping stays with the callers, which own the counters.)
 pub fn plan_rebalance(
     current: &[usize],
-    delta: &[usize],
+    weight: &[usize],
+    tiebreak: &[usize],
     n_servers: usize,
     hysteresis: f64,
     max_moves: usize,
@@ -169,17 +177,20 @@ pub fn plan_rebalance(
     if n_servers < 2 || current.is_empty() {
         return Vec::new();
     }
-    let cur_imb = load_imbalance(current, delta, n_servers);
-    let target = lpt_map(delta, n_servers);
-    let tgt_imb = load_imbalance(&target, delta, n_servers);
+    let cur_imb = load_imbalance(current, weight, n_servers);
+    let target = lpt_map(weight, n_servers);
+    let tgt_imb = load_imbalance(&target, weight, n_servers);
     if tgt_imb >= cur_imb * hysteresis {
         return Vec::new();
     }
-    // Hottest mismatched blocks first, bounded per scan so one pass
-    // never floods the in-flight reorder window.
+    // Heaviest mismatched blocks first (deepest queue on ties), bounded
+    // per scan so one pass never floods the in-flight reorder window.
+    let depth = |j: usize| tiebreak.get(j).copied().unwrap_or(0);
     let mut diffs: Vec<usize> =
         (0..current.len()).filter(|&j| target[j] != current[j]).collect();
-    diffs.sort_by(|&a, &b| delta[b].cmp(&delta[a]).then(a.cmp(&b)));
+    diffs.sort_by(|&a, &b| {
+        weight[b].cmp(&weight[a]).then(depth(b).cmp(&depth(a))).then(a.cmp(&b))
+    });
     diffs.truncate(max_moves);
     diffs.into_iter().map(|j| (j, target[j])).collect()
 }
@@ -226,6 +237,14 @@ impl Rebalancer {
     /// One sampling + migration pass; returns blocks migrated.  The
     /// window accumulates across calls until `min_delta` pushes were
     /// observed, so a fast caller cadence only sharpens reaction time.
+    ///
+    /// The LPT weight is the window's *cost*, not its raw rate:
+    /// `delta × service-time EWMA` (nanos, sampled by the apply path).
+    /// Two blocks with identical push rates but a 5× prox-cost skew —
+    /// higher degree |𝒩(j)|, colder cache, an XLA round-trip — stop
+    /// looking interchangeable to the packer.  Blocks with no sample
+    /// yet weigh `delta × 1`, which preserves the old rate-only
+    /// ordering among themselves.
     pub fn scan(&mut self) -> usize {
         let n = self.map.n_blocks();
         if self.n_servers < 2 || n == 0 {
@@ -241,11 +260,25 @@ impl Rebalancer {
         }
         self.last = counts;
 
+        let cost: Vec<usize> = delta
+            .iter()
+            .enumerate()
+            .map(|(j, &d)| d.saturating_mul(self.table.service_ewma_ns(j).max(1) as usize))
+            .collect();
+        // Pending (seq-parked) depth: the equal-cost tiebreak — a block
+        // already backed up behind a migration tail moves first.
+        let pending: Vec<usize> = (0..n).map(|j| self.table.pending_len(j)).collect();
+
         let current = self.map.snapshot();
         let mut moved = 0usize;
-        for (j, s) in
-            plan_rebalance(&current, &delta, self.n_servers, self.hysteresis, self.max_moves)
-        {
+        for (j, s) in plan_rebalance(
+            &current,
+            &cost,
+            &pending,
+            self.n_servers,
+            self.hysteresis,
+            self.max_moves,
+        ) {
             if self.map.set_owner(j, s) {
                 moved += 1;
             }
@@ -307,6 +340,42 @@ mod tests {
     }
 
     #[test]
+    fn cost_weight_moves_what_rate_only_calls_balanced() {
+        // Two shards, two blocks each, every block at the SAME push
+        // rate — rate-only load is perfectly balanced and the planner
+        // must hold still.  Fold in a 9× service-time skew on block 0
+        // (the cost weighting the threaded scan and the DES both use)
+        // and shard 0 is suddenly carrying 100 of 120 cost units: the
+        // planner must move block 1 off it.
+        let current = vec![0usize, 0, 1, 1];
+        let rate = vec![10usize, 10, 10, 10];
+        assert!(
+            plan_rebalance(&current, &rate, &[], 2, 0.95, 8).is_empty(),
+            "rate-only view is balanced; nothing should move"
+        );
+        let ewma_ns = [9usize, 1, 1, 1];
+        let cost: Vec<usize> = rate.iter().zip(ewma_ns).map(|(&r, e)| r * e).collect();
+        let moves = plan_rebalance(&current, &cost, &[], 2, 0.95, 8);
+        assert_eq!(moves, vec![(1, 1)], "slow-block skew not rebalanced");
+    }
+
+    #[test]
+    fn plan_rebalance_breaks_weight_ties_by_queue_depth() {
+        // All four equal-weight blocks sit on shard 0; LPT wants blocks
+        // 1 and 3 on shard 1.  With max_moves=1 the pending-depth
+        // tiebreak decides which migrates first.
+        let current = vec![0usize, 0, 0, 0];
+        let weight = vec![10usize, 10, 10, 10];
+        let deep_at_3 = vec![0usize, 0, 0, 5];
+        let moves = plan_rebalance(&current, &weight, &deep_at_3, 2, 0.95, 1);
+        assert_eq!(moves.len(), 1);
+        assert_eq!(moves[0].0, 3, "deepest queue should move first: {moves:?}");
+        // No depth info: lowest mismatched block id wins, as before.
+        let moves = plan_rebalance(&current, &weight, &[], 2, 0.95, 1);
+        assert_eq!(moves[0].0, 1, "{moves:?}");
+    }
+
+    #[test]
     fn rebalancer_migrates_a_contiguous_hot_head_toward_balance() {
         // Every worker touches every block; the synthetic Zipf pushes
         // below hammer the low-index head, all of which contiguous
@@ -344,7 +413,7 @@ mod tests {
                 let msg = PushMsg {
                     worker: topo.workers_of_block[j][0],
                     block: j,
-                    w: vec![0.1; 4],
+                    w: vec![0.1; 4].into(),
                     worker_epoch: 0,
                     z_version_used: 0,
                     block_seq: seqs[j],

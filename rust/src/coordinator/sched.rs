@@ -315,7 +315,7 @@ mod tests {
         PushMsg {
             worker,
             block,
-            w: vec![0.1; 4],
+            w: vec![0.1; 4].into(),
             worker_epoch: epoch,
             z_version_used: 0,
             block_seq: 0,

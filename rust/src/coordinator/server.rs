@@ -50,13 +50,15 @@
 //! Hot-path notes: the table keeps an authoritative copy of each z̃_j
 //! (`z_cache` inside the lease) and never reads a block back from the
 //! store — an apply touches the store once for the version (staleness
-//! stat) and once for the write.  The w̃-sum maintenance is the 4-wide
-//! unrolled [`add_assign_diff`].  Pushed w buffers are pooled: after
-//! the update the shard sends each buffer home on the message's recycle
-//! channel instead of freeing it.
+//! stat) and once for the write.  The w̃-sum maintenance and the
+//! native prox go through the session-resolved kernel dispatch table
+//! (`sparse::simd`, `--set kernel=`).  Pushed w buffers are pooled:
+//! after the update the shard sends each buffer home on the message's
+//! recycle channel instead of freeing it.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -65,9 +67,10 @@ use super::fault::FaultPlan;
 use super::messages::PushMsg;
 use super::topology::Topology;
 use super::transport::PushReceiver;
-use crate::admm::{add_assign_diff, prox_l1_box};
 use crate::problem::Problem;
 use crate::runtime::ServerProxXla;
+use crate::sparse::Kernels;
+use crate::util::CacheAligned;
 
 /// Prox execution backend for a server thread.
 pub enum ProxBackend {
@@ -76,8 +79,10 @@ pub enum ProxBackend {
 }
 
 impl ProxBackend {
+    #[allow(clippy::too_many_arguments)]
     fn apply(
         &self,
+        kernels: &Kernels,
         z_tilde: &[f32],
         w_sum: &[f32],
         gamma: f32,
@@ -88,7 +93,7 @@ impl ProxBackend {
     ) -> Result<()> {
         match self {
             ProxBackend::Native => {
-                prox_l1_box(z_tilde, w_sum, gamma, denom, lambda, clip, out);
+                (kernels.prox_l1_box)(z_tilde, w_sum, gamma, denom, lambda, clip, out);
                 Ok(())
             }
             ProxBackend::Xla(sp) => {
@@ -144,18 +149,42 @@ pub(crate) struct Ingested {
     pub(crate) max_staleness: u64,
 }
 
+/// 1-in-N apply sampling discipline for the per-block service-time
+/// EWMA (same rate as the worker side's `sent_at` stamping: the
+/// `Instant::now` syscall pair stays off 63 of 64 applies).
+const SVC_SAMPLE: usize = 64;
+
+/// Per-block counters read/written outside the write lease, isolated on
+/// their own cache line so adjacent blocks' writers never false-share
+/// (two server threads applying to neighboring blocks would otherwise
+/// ping-pong one line between cores on every apply).
+#[derive(Default)]
+struct BlockHot {
+    /// Applied pushes (relaxed; the rebalancer's load signal).
+    push_count: AtomicUsize,
+    /// EWMA (α = 1/8) of the prox + publish service time in
+    /// nanoseconds, sampled 1-in-[`SVC_SAMPLE`] applies; 0 = no sample
+    /// yet.  The rebalancer's per-block cost weight.
+    svc_ewma_ns: AtomicU64,
+}
+
 /// Per-block server state for ALL consensus blocks of a run, shared by
 /// every [`ServerShard`] (module docs: the block write lease).  Also
-/// carries the per-block applied-push counters the dynamic rebalancer
-/// samples (`coordinator/rebalance.rs`).
+/// carries the per-block applied-push counters and service-time EWMAs
+/// the dynamic rebalancer samples (`coordinator/rebalance.rs`).
 pub struct BlockTable {
-    state: Vec<Mutex<BlockState>>,
+    /// The write leases, one line each: a lease holder bounces no other
+    /// block's lock word out of its neighbors' caches.
+    state: Vec<CacheAligned<Mutex<BlockState>>>,
     /// γ + Σ_{i∈𝒩(j)} ρ_i per block.
     denom: Vec<f32>,
     /// worker id -> slot in w_tilde (per block; usize::MAX = not in 𝒩).
     worker_slot: Vec<Vec<usize>>,
-    /// Applied pushes per block (relaxed; the rebalancer's load signal).
-    push_count: Vec<AtomicUsize>,
+    /// Per-block hot counters (push count + service-time EWMA).
+    hot: Vec<CacheAligned<BlockHot>>,
+    /// Kernel family for the w̃-sum maintenance and the native prox
+    /// (`--set kernel=`; resolved once by the session).
+    kernels: &'static Kernels,
     gamma: f32,
     problem: Problem,
     store: Arc<BlockStore>,
@@ -168,6 +197,18 @@ impl BlockTable {
         problem: Problem,
         rho: f32,
         gamma: f32,
+    ) -> Self {
+        Self::with_kernels(topo, store, problem, rho, gamma, Kernels::auto())
+    }
+
+    /// Like [`BlockTable::new`] with an explicit kernel family.
+    pub fn with_kernels(
+        topo: &Topology,
+        store: Arc<BlockStore>,
+        problem: Problem,
+        rho: f32,
+        gamma: f32,
+        kernels: &'static Kernels,
     ) -> Self {
         let db = topo.block_size;
         let mut state = Vec::with_capacity(topo.n_blocks);
@@ -184,7 +225,7 @@ impl BlockTable {
             // One-time pull so a non-zero store initialization is honored.
             let mut z0 = vec![0.0f32; db];
             store.read_into(j, &mut z0);
-            state.push(Mutex::new(BlockState {
+            state.push(CacheAligned(Mutex::new(BlockState {
                 // Initial w̃_{i,j} = ρ x⁰ + y⁰ = 0 for z⁰ = 0 (Algorithm 1
                 // worker lines 1-2), so the running sum starts at zero.
                 w_tilde: vec![vec![0.0f32; db]; degree],
@@ -195,13 +236,14 @@ impl BlockTable {
                 rounds: 0,
                 next_seq: vec![1; degree],
                 pending: Vec::new(),
-            }));
+            })));
         }
         BlockTable {
             state,
             denom,
             worker_slot,
-            push_count: (0..topo.n_blocks).map(|_| AtomicUsize::new(0)).collect(),
+            hot: (0..topo.n_blocks).map(|_| CacheAligned(BlockHot::default())).collect(),
+            kernels,
             gamma,
             problem,
             store,
@@ -215,7 +257,14 @@ impl BlockTable {
     /// Applied pushes on block `j` so far (the rebalancer's load
     /// signal; relaxed read).
     pub fn push_count(&self, j: usize) -> usize {
-        self.push_count[j].load(Ordering::Relaxed)
+        self.hot[j].push_count.load(Ordering::Relaxed)
+    }
+
+    /// Sampled service-time EWMA for block `j` in nanoseconds (0 until
+    /// the first 1-in-[`SVC_SAMPLE`] sample lands).  The rebalancer's
+    /// per-block cost weight (`rate × service time`).
+    pub fn service_ewma_ns(&self, j: usize) -> u64 {
+        self.hot[j].svc_ewma_ns.load(Ordering::Relaxed)
     }
 
     /// Diagnostic: messages parked behind a seq gap on block `j`
@@ -315,8 +364,14 @@ impl BlockTable {
         z_version_used: u64,
         prox: &ProxBackend,
     ) -> Result<u64> {
-        // w_sum += w_new - w̃_old; w̃ := w_new (4-wide unrolled).
-        add_assign_diff(&mut st.w_sum, w, &st.w_tilde[slot]);
+        // Service-time sample: 1-in-SVC_SAMPLE applies pay the two
+        // clock reads; the EWMA feeds the rebalancer's cost model.
+        let hot = &*self.hot[j];
+        let t0 = (hot.push_count.load(Ordering::Relaxed) % SVC_SAMPLE == 0)
+            .then(Instant::now);
+
+        // w_sum += w_new - w̃_old; w̃ := w_new (kernel-dispatched).
+        (self.kernels.add_assign_diff)(&mut st.w_sum, w, &st.w_tilde[slot]);
         st.w_tilde[slot].copy_from_slice(w);
 
         // z̃_j update + publish.  The cached z̃ is authoritative
@@ -325,6 +380,7 @@ impl BlockTable {
         // overwrite anyway.
         let cur_version = self.store.version(j);
         prox.apply(
+            self.kernels,
             &st.z_cache,
             &st.w_sum,
             self.gamma,
@@ -343,7 +399,15 @@ impl BlockTable {
             st.rounds += 1;
         }
 
-        self.push_count[j].fetch_add(1, Ordering::Relaxed);
+        hot.push_count.fetch_add(1, Ordering::Relaxed);
+        if let Some(t0) = t0 {
+            // α = 1/8 EWMA in integer nanos; `.max(1)` keeps a fast
+            // block distinguishable from "no sample yet" (0).
+            let dt = (t0.elapsed().as_nanos() as u64).max(1);
+            let prev = hot.svc_ewma_ns.load(Ordering::Relaxed);
+            let next = if prev == 0 { dt } else { (prev * 7 + dt) / 8 };
+            hot.svc_ewma_ns.store(next, Ordering::Relaxed);
+        }
         Ok(cur_version.saturating_sub(z_version_used))
     }
 
@@ -372,9 +436,9 @@ impl BlockTable {
     /// instead of re-learning from zero.  `counts.len()` must equal
     /// `n_blocks`.
     pub fn seed_push_counts(&self, counts: &[usize]) {
-        assert_eq!(counts.len(), self.push_count.len(), "push_counts geometry mismatch");
-        for (c, &v) in self.push_count.iter().zip(counts) {
-            c.store(v, Ordering::Relaxed);
+        assert_eq!(counts.len(), self.hot.len(), "push_counts geometry mismatch");
+        for (h, &v) in self.hot.iter().zip(counts) {
+            h.push_count.store(v, Ordering::Relaxed);
         }
     }
 }
@@ -543,7 +607,7 @@ mod tests {
         PushMsg {
             worker,
             block,
-            w,
+            w: w.into(),
             worker_epoch: 0,
             z_version_used: 0,
             block_seq: 0,
@@ -826,7 +890,7 @@ mod tests {
                 let w = topo.workers_of_block[j][0];
                 let transport: Box<dyn Transport> =
                     make_transport(kind, topo.n_workers, topo.n_servers, 4, batch);
-                let (home, inbox) = channel::<Vec<f32>>();
+                let (home, inbox) = channel::<crate::util::AlignedBuf>();
                 let mut msg = push(w, j, vec![0.5; 4]);
                 msg.recycle = Some(home);
                 let mut tx = transport.connect_worker(w);

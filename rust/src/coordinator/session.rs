@@ -76,6 +76,7 @@ use crate::problem::Problem;
 use crate::report::Checkpoint;
 use crate::runtime::{Manifest, ServerProxXla};
 use crate::sim::CostModel;
+use crate::sparse::Kernels;
 
 /// Which algorithm a [`Session`] executes.
 #[derive(Clone, Copy, Debug)]
@@ -533,10 +534,13 @@ fn run_threaded<'o>(
     // Elastic pool size: 0 = the classic one-thread-per-shard shape.
     let n_threads = if cfg.server_threads == 0 { cfg.n_servers } else { cfg.server_threads };
     let dynamic = cfg.placement == PlacementKind::Dynamic;
+    // Resolve `--set kernel=` ONCE (CPU feature probe + fallback); every
+    // worker engine and the shared block table dispatch through it.
+    let kernels = Kernels::select(cfg.kernel);
 
     info!(
         "session",
-        "theorem1: min_alpha={:.3e} min_beta={:.3e} feasible={} (strict bound; paper runs gamma=0.01 anyway); transport={} placement={} drain={} batch={} server_threads={}",
+        "theorem1: min_alpha={:.3e} min_beta={:.3e} feasible={} (strict bound; paper runs gamma=0.01 anyway); transport={} placement={} drain={} batch={} server_threads={} kernel={}",
         t1.min_alpha,
         t1.min_beta,
         t1.feasible,
@@ -544,7 +548,8 @@ fn run_threaded<'o>(
         cfg.placement.as_str(),
         cfg.drain.as_str(),
         cfg.batch,
-        n_threads
+        n_threads,
+        kernels.name
     );
 
     let manifest = match cfg.backend {
@@ -583,8 +588,14 @@ fn run_threaded<'o>(
     // thread may service any shard, and with `placement=dynamic` a
     // block's pushes may arrive through two shards' lanes mid-migration
     // (`server.rs` documents the ownership handoff).
-    let table =
-        Arc::new(BlockTable::new(&topo, store.clone(), problem, cfg.rho, cfg.gamma));
+    let table = Arc::new(BlockTable::with_kernels(
+        &topo,
+        store.clone(),
+        problem,
+        cfg.rho,
+        cfg.gamma,
+        kernels,
+    ));
     // The live routing map workers read per push.  Static placements
     // never touch it after this; `placement=dynamic` hands it to the
     // rebalancer below.
@@ -708,6 +719,7 @@ fn run_threaded<'o>(
                                 manifest,
                                 cfg.m_chunk,
                                 cfg.d_pad,
+                                kernels,
                             )
                             .expect("construct worker compute backend");
                             let mut ctx = WorkerCtx::new(

@@ -833,7 +833,7 @@ mod tests {
         PushMsg {
             worker,
             block: 0,
-            w: vec![epoch as f32; 4],
+            w: vec![epoch as f32; 4].into(),
             worker_epoch: epoch,
             z_version_used: 0,
             block_seq: 0,
@@ -1012,7 +1012,7 @@ mod tests {
         // The pooled-buffer return path: the recycle sender must survive
         // the trip so the consumer can send the buffer home.
         each_transport(1, 1, |t| {
-            let (home, inbox) = std::sync::mpsc::channel::<Vec<f32>>();
+            let (home, inbox) = std::sync::mpsc::channel::<crate::util::AlignedBuf>();
             let mut tx = t.connect_worker(0);
             for i in 0..4 {
                 let mut m = msg(0, i);
@@ -1025,7 +1025,7 @@ mod tests {
             while let Some(mut m) = rx.recv() {
                 m.recycle_now();
             }
-            let returned: Vec<Vec<f32>> = inbox.try_iter().collect();
+            let returned: Vec<crate::util::AlignedBuf> = inbox.try_iter().collect();
             assert_eq!(returned.len(), 4, "[{}] buffers lost", t.name());
         });
     }
@@ -1055,7 +1055,7 @@ mod tests {
         // block in PushPool::acquire forever.
         each_transport(1, 1, |t| {
             let name = t.name();
-            let (home, inbox) = std::sync::mpsc::channel::<Vec<f32>>();
+            let (home, inbox) = std::sync::mpsc::channel::<crate::util::AlignedBuf>();
             let mut tx = t.connect_worker(0);
             for i in 0..4 {
                 let mut m = msg(0, i);
@@ -1088,7 +1088,7 @@ mod tests {
         ];
         for (t, batch) in cases {
             let name = t.name();
-            let (home, inbox) = std::sync::mpsc::channel::<Vec<f32>>();
+            let (home, inbox) = std::sync::mpsc::channel::<crate::util::AlignedBuf>();
             let mut created = 0usize;
             let mut make = |i: usize| {
                 created += 1;

@@ -54,6 +54,18 @@
 //! stealing; `coordinator/sched.rs`), and `--set server_threads=N`
 //! decouples the server thread count from the shard count (an elastic
 //! pool servicing all shards' lanes; 0 = one thread per shard).
+//! `--set kernel=scalar|unrolled|simd|auto` (default `auto`) picks the
+//! compute-kernel family ([`sparse::Kernels`]) used by both the worker
+//! engine and the server apply path: `scalar` reference loops, the
+//! 4-wide portable `unrolled` paths, or AVX2 `simd` (runtime-detected
+//! via `is_x86_feature_detected!`; `auto` resolves to `simd` when AVX2
+//! is present, else `unrolled`, and `simd` on a non-AVX2 host degrades
+//! to `unrolled`). The prox and w̃-sum SIMD kernels are bit-identical
+//! to scalar (no FMA), so the knob changes speed, never results. The
+//! `dynamic` rebalancer weighs blocks by observed push rate × a
+//! per-block EWMA of sampled service time (queue depth breaks ties),
+//! so rarely-pushed-but-expensive blocks migrate too; with uniform
+//! service times it reduces exactly to rate-based packing.
 //!
 //! Survivability knobs (`coordinator/fault.rs`, DESIGN.md §2.0.3):
 //! `--set faults=SPEC` arms a deterministic, seeded

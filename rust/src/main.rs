@@ -85,6 +85,7 @@ fn config_args(a: Args) -> Args {
             "comma-separated key=value config overrides (e.g. \
              transport=mpsc|ring, placement=contiguous|roundrobin|hash|degree|dynamic, \
              drain=owned|steal, server_threads=N (0 = one per shard), \
+             kernel=scalar|unrolled|simd|auto (auto = AVX2 when available), \
              rebalance_ms=MS, batch=N, backend=native|xla, \
              faults=crash:w1@5;stall:s0@100+25ms;sendfail:w2@4x3, \
              failure=die|degrade|restart, stall_warn_ms=MS, \

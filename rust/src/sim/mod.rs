@@ -56,6 +56,18 @@ pub struct CostModel {
     /// is scaled by U(1-j, 1+j) (mean 1). Models shared-tenancy variance
     /// on the paper's EC2 c4 instances; 0 = deterministic.
     pub compute_jitter: f64,
+    /// Blocks `0..slow_head_blocks` cost `slow_head_factor ×` the base
+    /// service time per push — per-block service skew (denser columns,
+    /// heavier prox) for the service-time-aware rebalancing study
+    /// (EXPERIMENTS.md E9).  0 = uniform service times.
+    pub slow_head_blocks: usize,
+    /// Service-time multiplier for the slow head (ignored when
+    /// `slow_head_blocks == 0`).
+    pub slow_head_factor: f64,
+    /// Weight the dynamic re-placement plan by observed rate × per-block
+    /// service-time EWMA (the threaded Rebalancer's cost model); false
+    /// replays the legacy rate-only policy for ablations.
+    pub cost_weighted_rebalance: bool,
 }
 
 impl CostModel {
@@ -66,6 +78,16 @@ impl CostModel {
                 + self.per_chunk_s * rows.div_ceil(self.chunk_rows).max(1) as f64
         } else {
             self.compute_fixed_s + self.compute_per_row_s * rows as f64
+        }
+    }
+
+    /// Virtual service time for one push to block `j` (Eq. 13 over one
+    /// block), including the slow-head skew.
+    pub fn service_s(&self, j: usize) -> f64 {
+        if j < self.slow_head_blocks {
+            self.server_service_s * self.slow_head_factor
+        } else {
+            self.server_service_s
         }
     }
 }
@@ -82,6 +104,9 @@ impl Default for CostModel {
             chunk_rows: 0,
             per_chunk_s: 0.0,
             compute_jitter: 0.0,
+            slow_head_blocks: 0,
+            slow_head_factor: 1.0,
+            cost_weighted_rebalance: true,
         }
     }
 }
@@ -123,6 +148,7 @@ pub fn calibrate_native(ds: &Dataset, shards: &[WorkerShard], problem: Problem) 
         chunk_rows: 0,
         per_chunk_s: 0.0,
         compute_jitter: 0.0,
+        ..CostModel::default()
     }
 }
 
@@ -188,6 +214,7 @@ pub fn calibrate_xla(
         chunk_rows: m_chunk,
         per_chunk_s: per_chunk,
         compute_jitter: 0.0,
+        ..CostModel::default()
     })
 }
 
@@ -308,6 +335,9 @@ pub struct SimReport {
     pub max_queue: usize,
     /// Blocks migrated between shards (`placement=dynamic` only).
     pub migrations: usize,
+    /// Final block→server routing map (differs from the initial
+    /// contiguous assignment only under `placement=dynamic`).
+    pub placement_final: Vec<usize>,
     /// Injected faults and recovery transitions, in virtual-time order
     /// (the DES mirror of `TrainReport::faults`).
     pub faults: Vec<FaultEvent>,
@@ -412,6 +442,10 @@ pub fn run_sim_observed(
     let mut server_of_block = topo.server_of_block.clone();
     let mut served_per_block = vec![0usize; cfg.n_blocks];
     let mut last_counts = vec![0usize; cfg.n_blocks];
+    // Per-block virtual service-time EWMA (ns, α = 1/8) — the DES mirror
+    // of the threaded BlockTable's sampled wall-clock EWMA (0 = no
+    // sample yet, exactly like `BlockTable::service_ewma_ns`).
+    let mut svc_ewma = vec![0u64; cfg.n_blocks];
     let mut migrations = 0usize;
     let rebalance_s = cfg.rebalance_ms.max(1) as f64 * 1e-3;
 
@@ -477,7 +511,7 @@ pub fn run_sim_observed(
                 if pool {
                     idle -= 1;
                 }
-                let mut svc = cost.server_service_s;
+                let mut svc = cost.service_s(push.block);
                 if faults_on {
                     // Injected straggler: one service pays the stall
                     // (the threaded hook sleeps in handle_push).  The
@@ -486,6 +520,11 @@ pub fn run_sim_observed(
                         svc += ms as f64 * 1e-3;
                     }
                 }
+                // Observe the block's service time (stalls included,
+                // exactly as a wall-clock sample would see them).
+                let dt = ((svc * 1e9) as u64).max(1);
+                let prev = svc_ewma[push.block];
+                svc_ewma[push.block] = if prev == 0 { dt } else { (prev * 7 + dt) / 8 };
                 push_ev($heap, $t + svc, Ev::ServiceDone { server: s, push });
             }
         }};
@@ -717,11 +756,30 @@ pub fn run_sim_observed(
                 let total: usize = delta.iter().sum();
                 if total >= REBALANCE_MIN_DELTA {
                     last_counts.copy_from_slice(&served_per_block);
-                    // Same planner as the threaded Rebalancer, so the
-                    // DES reacts identically to the same rate window.
+                    // Same planner as the threaded Rebalancer: weight =
+                    // rate × service-time EWMA (cost), queued depth as
+                    // the tiebreak — so the DES reacts identically to
+                    // the same observation window.  The rate-only
+                    // ablation keeps raw deltas as weights.
+                    let weight: Vec<usize> = if cost.cost_weighted_rebalance {
+                        delta
+                            .iter()
+                            .enumerate()
+                            .map(|(j, &d)| d.saturating_mul(svc_ewma[j].max(1) as usize))
+                            .collect()
+                    } else {
+                        delta.clone()
+                    };
+                    let mut qdepth = vec![0usize; cfg.n_blocks];
+                    for srv in &servers {
+                        for p in &srv.queue {
+                            qdepth[p.block] += 1;
+                        }
+                    }
                     for (j, s) in plan_rebalance(
                         &server_of_block,
-                        &delta,
+                        &weight,
+                        &qdepth,
                         cfg.n_servers,
                         REBALANCE_HYSTERESIS,
                         REBALANCE_MAX_MOVES,
@@ -760,6 +818,7 @@ pub fn run_sim_observed(
         pushes,
         max_queue,
         migrations,
+        placement_final: server_of_block,
         faults: plan.take_events(),
     })
 }
@@ -778,6 +837,7 @@ mod tests {
             chunk_rows: 0,
             per_chunk_s: 0.0,
             compute_jitter: 0.0,
+            ..CostModel::default()
         }
     }
 
@@ -884,6 +944,73 @@ mod tests {
     }
 
     #[test]
+    fn sim_cost_model_isolates_slow_block_where_rate_only_pairs_it() {
+        use crate::config::{BlockSelection, PlacementKind};
+        // 4 blocks on 2 servers (contiguous start [0,0,1,1]), every
+        // worker cycling over every block ⇒ per-block push rates are
+        // (near-)equal, so a rate-only planner sees balance and always
+        // packs the blocks 2+2.  Block 0's service is 9× the rest:
+        // the cost model (rate × service EWMA) sees weights ≈ [9,1,1,1]
+        // and LPT isolates the slow block on its own shard — the move
+        // rate-only can never justify.
+        let mk = |weighted: bool| {
+            let mut cfg = Config::tiny_test();
+            cfg.epochs = 300;
+            cfg.n_workers = 4;
+            cfg.n_blocks = 4;
+            cfg.blocks_per_worker = 4;
+            cfg.shared_blocks = 4;
+            cfg.placement = PlacementKind::Dynamic;
+            cfg.selection = BlockSelection::Cyclic;
+            cfg.rebalance_ms = 100;
+            let cost = CostModel {
+                // Compute-dominated period keeps the workers in a
+                // deterministic lockstep rotation (queues drain between
+                // rounds), so per-block rate deltas stay near-equal.
+                compute_fixed_s: 1e-3,
+                compute_per_row_s: 0.0,
+                server_service_s: 1e-5,
+                net_mean_s: 0.0,
+                slow_head_blocks: 1,
+                slow_head_factor: 9.0,
+                cost_weighted_rebalance: weighted,
+                ..CostModel::default()
+            };
+            (cfg, cost)
+        };
+        let (cfg, cost) = mk(true);
+        let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+        let r_cost = run_sim(&cfg, &ds, &shards, &cost).unwrap();
+        let (cfg_rate, rate_only) = mk(false);
+        let r_rate = run_sim(&cfg_rate, &ds, &shards, &rate_only).unwrap();
+
+        // Blocks co-resident with the slow block 0 (incl. itself).
+        let partners =
+            |map: &[usize]| map.iter().filter(|&&s| s == map[0]).count();
+        assert!(r_cost.migrations > 0, "cost model never migrated");
+        assert_eq!(
+            partners(&r_cost.placement_final),
+            1,
+            "slow block not isolated: {:?}",
+            r_cost.placement_final
+        );
+        assert_eq!(
+            partners(&r_rate.placement_final),
+            2,
+            "rate-only planner should keep the slow block paired: {:?}",
+            r_rate.placement_final
+        );
+        // Both arms run the full budget and converge.
+        assert_eq!(r_cost.pushes, cfg.epochs * cfg.n_workers);
+        assert_eq!(r_rate.pushes, r_cost.pushes);
+        assert!(r_cost.final_objective.total() < std::f64::consts::LN_2 * 0.95);
+        // Determinism with the cost model in the loop.
+        let r2 = run_sim(&cfg, &ds, &shards, &cost).unwrap();
+        assert_eq!(r_cost.z_final, r2.z_final);
+        assert_eq!(r_cost.placement_final, r2.placement_final);
+    }
+
+    #[test]
     fn sim_steal_pool_drains_a_hot_shard_faster() {
         // ROADMAP item: predict the multi-core `steal_vs_owned_drain`
         // gate shape.  Every worker's footprint is the shared head
@@ -906,9 +1033,7 @@ mod tests {
             compute_per_row_s: 0.0,
             server_service_s: 1e-3,
             net_mean_s: 0.0,
-            chunk_rows: 0,
-            per_chunk_s: 0.0,
-            compute_jitter: 0.0,
+            ..CostModel::default()
         };
         let cfg_owned = mk(DrainKind::Owned);
         let (ds, shards) = gen_partitioned(&cfg_owned.synth_spec(), cfg_owned.n_workers);
@@ -934,9 +1059,7 @@ mod tests {
             compute_per_row_s: 0.0,
             server_service_s: 1e-3,
             net_mean_s: 0.0,
-            chunk_rows: 0,
-            per_chunk_s: 0.0,
-            compute_jitter: 0.0,
+            ..CostModel::default()
         };
         let mk = |threads: usize| {
             let mut cfg = Config::tiny_test();

@@ -30,6 +30,13 @@ impl CsrMatrix {
         (&self.indices[a..b], &self.values[a..b])
     }
 
+    /// Raw `[a, b)` window into the nnz arrays — the absolute ranges a
+    /// [`BlockSliceIndex`] hands out.  Crate-internal: only the kernel
+    /// layer (`sparse::simd`) walks nnz storage directly.
+    pub(crate) fn nnz_slices(&self, a: usize, b: usize) -> (&[u32], &[f32]) {
+        (&self.indices[a..b], &self.values[a..b])
+    }
+
     /// y = A x.  The inner dot product runs four independent
     /// accumulators so LLVM keeps separate FMA chains in flight (the
     /// single-accumulator form serializes on the add latency).
@@ -100,16 +107,15 @@ impl CsrMatrix {
     /// columns are grouped into contiguous blocks of `block_size` (the
     /// packed per-worker layout).  One pass over the nnz; built once at
     /// shard construction.
+    ///
+    /// `block_size` need not divide `cols`: the last block is then a
+    /// trailing partial block of `cols % block_size` columns
+    /// ([`BlockSliceIndex::block_len`]).
     pub fn block_slices(&self, block_size: usize) -> BlockSliceIndex {
         assert!(block_size > 0, "block_size must be positive");
-        assert_eq!(
-            self.cols % block_size,
-            0,
-            "cols {} not a multiple of block_size {block_size}",
-            self.cols
-        );
+        assert!(self.cols > 0, "block_slices of a zero-column matrix");
         assert!(self.nnz() <= u32::MAX as usize, "nnz exceeds u32 index range");
-        let n_blocks = self.cols / block_size;
+        let n_blocks = self.cols.div_ceil(block_size);
         let mut cuts = Vec::with_capacity(self.rows * (n_blocks + 1));
         for r in 0..self.rows {
             let (start, end) = (self.indptr[r], self.indptr[r + 1]);
@@ -125,7 +131,7 @@ impl CsrMatrix {
             }
             cuts.push(end as u32);
         }
-        BlockSliceIndex { n_blocks, block_size, rows: self.rows, cuts }
+        BlockSliceIndex { n_blocks, block_size, rows: self.rows, cols: self.cols, cuts }
     }
 
     /// Block-gradient kernel over a precomputed [`BlockSliceIndex`]:
@@ -142,7 +148,7 @@ impl CsrMatrix {
         assert_eq!(s.len(), self.rows);
         assert_eq!(index.rows, self.rows, "index built for a different matrix");
         assert!(block < index.n_blocks);
-        assert_eq!(g.len(), index.block_size);
+        assert_eq!(g.len(), index.block_len(block));
         let lo = (block * index.block_size) as u32;
         let stride = index.n_blocks + 1;
         for r in 0..self.rows {
@@ -238,9 +244,10 @@ impl CsrMatrix {
 
 /// `g[idx[k] - base] += vals[k] * sr`, 4-wide unrolled.  Element order is
 /// preserved (pure unroll), so callers composing it see identical f32
-/// results to the naive loop.
+/// results to the naive loop.  Crate-visible: `sparse::simd` dispatches
+/// to this as the `unrolled` scatter kernel.
 #[inline]
-fn scatter_acc(idx: &[u32], vals: &[f32], sr: f32, base: u32, g: &mut [f32]) {
+pub(crate) fn scatter_acc(idx: &[u32], vals: &[f32], sr: f32, base: u32, g: &mut [f32]) {
     let n = idx.len();
     let mut k = 0;
     while k + 4 <= n {
@@ -271,6 +278,7 @@ pub struct BlockSliceIndex {
     n_blocks: usize,
     block_size: usize,
     rows: usize,
+    cols: usize,
     cuts: Vec<u32>,
 }
 
@@ -285,6 +293,14 @@ impl BlockSliceIndex {
 
     pub fn rows(&self) -> usize {
         self.rows
+    }
+
+    /// Columns actually covered by `block`: `block_size` everywhere
+    /// except a trailing partial block when `block_size` does not
+    /// divide the matrix's column count.
+    pub fn block_len(&self, block: usize) -> usize {
+        assert!(block < self.n_blocks);
+        (self.cols - block * self.block_size).min(self.block_size)
     }
 
     /// Nonzeros of `block` within row `r` as an absolute `[start, end)`
@@ -468,6 +484,80 @@ mod tests {
         let mut g = vec![0.0f32; 4];
         m.tmatvec_block_sliced(&s, &ix, 1, &mut g);
         assert_eq!(g, vec![0.0, 0.0, 6.0, 0.0]);
+    }
+
+    #[test]
+    fn block_slices_trailing_partial_block() {
+        // cols=10, db=4 -> blocks of 4, 4, 2: the last block is partial
+        // and every nonzero (including one in the very last column)
+        // must still be covered exactly once.
+        let mut rng = Rng::new(21);
+        let (a, _) = random_csr(&mut rng, 19, 10, 0.4);
+        let ix = a.block_slices(4);
+        assert_eq!(ix.n_blocks(), 3);
+        assert_eq!(ix.block_len(0), 4);
+        assert_eq!(ix.block_len(1), 4);
+        assert_eq!(ix.block_len(2), 2);
+        let covered: usize = (0..3).map(|b| ix.block_nnz(b)).sum();
+        assert_eq!(covered, a.nnz());
+        // The sliced gradient over the partial block matches the
+        // index-free scan bit for bit.
+        let s: Vec<f32> = (0..19).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut scan = vec![0.0f32; 2];
+        a.tmatvec_block_acc(&s, 8, 10, &mut scan);
+        let mut sliced = vec![0.0f32; 2];
+        a.tmatvec_block_sliced(&s, &ix, 2, &mut sliced);
+        assert_eq!(scan, sliced);
+        // Full-width blocks are unaffected by the relaxed geometry.
+        let mut scan0 = vec![0.0f32; 4];
+        a.tmatvec_block_acc(&s, 0, 4, &mut scan0);
+        let mut sliced0 = vec![0.0f32; 4];
+        a.tmatvec_block_sliced(&s, &ix, 0, &mut sliced0);
+        assert_eq!(scan0, sliced0);
+    }
+
+    #[test]
+    fn block_slices_block_size_larger_than_cols() {
+        // Degenerate but legal: one partial block spanning everything.
+        let mut rng = Rng::new(22);
+        let (a, _) = random_csr(&mut rng, 9, 5, 0.5);
+        let ix = a.block_slices(8);
+        assert_eq!(ix.n_blocks(), 1);
+        assert_eq!(ix.block_len(0), 5);
+        assert_eq!(ix.block_nnz(0), a.nnz());
+        let s: Vec<f32> = (0..9).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut full = vec![0.0f32; 5];
+        a.tmatvec_acc(&s, &mut full);
+        let mut sliced = vec![0.0f32; 5];
+        a.tmatvec_block_sliced(&s, &ix, 0, &mut sliced);
+        assert_eq!(full, sliced);
+    }
+
+    #[test]
+    fn block_slices_all_empty_column_block() {
+        // Middle block (cols 4..8) has no nonzeros at all: its ranges
+        // must be empty for every row and its gradient must be a no-op,
+        // while the flanking blocks stay intact.
+        let mut b = CsrBuilder::new(4, 12);
+        b.push(0, 0, 1.0);
+        b.push(1, 2, 2.0);
+        b.push(2, 9, 3.0);
+        b.push(3, 11, 4.0);
+        let m = b.build();
+        let ix = m.block_slices(4);
+        assert_eq!(ix.n_blocks(), 3);
+        assert_eq!(ix.block_nnz(1), 0);
+        for r in 0..4 {
+            let (lo, hi) = ix.row_range(r, 1);
+            assert_eq!(lo, hi, "row {r} has phantom nnz in the empty block");
+        }
+        let s = [1.0f32, 1.0, 2.0, 0.5];
+        let mut g = vec![0.7f32; 4];
+        m.tmatvec_block_sliced(&s, &ix, 1, &mut g);
+        assert_eq!(g, vec![0.7; 4]); // untouched accumulator
+        let mut g2 = vec![0.0f32; 4];
+        m.tmatvec_block_sliced(&s, &ix, 2, &mut g2);
+        assert_eq!(g2, vec![0.0, 6.0, 0.0, 2.0]);
     }
 
     #[test]

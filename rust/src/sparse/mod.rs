@@ -7,7 +7,9 @@
 //! startup — see `data::partition`.
 
 mod csr;
+pub mod simd;
 pub use csr::{BlockSliceIndex, CsrBuilder, CsrMatrix};
+pub use simd::{simd_available, Kernels};
 
 /// Dense reference ops used by tests and small utilities.
 pub mod dense {

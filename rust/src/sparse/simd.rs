@@ -1,0 +1,604 @@
+//! Explicit SIMD kernel layer with one-time runtime dispatch
+//! (DESIGN.md §2.0.4, ROADMAP item 4).
+//!
+//! Three implementation families of the five hot-path kernels — spmv
+//! ([`CsrMatrix::matvec`]), the block gradient
+//! ([`CsrMatrix::tmatvec_block_sliced`]), its scatter primitive, the
+//! server prox ([`crate::admm::prox_l1_box`]) and the w̃-sum update
+//! ([`crate::admm::add_assign_diff`]) — behind a [`Kernels`] dispatch
+//! table of plain fn pointers, selected **once** at session start from
+//! `--set kernel=scalar|unrolled|simd|auto`:
+//!
+//! * `scalar` — naive one-element loops, the differential reference.
+//! * `unrolled` — the 4-wide hand-unrolled loops shipped by PRs 1–5
+//!   (LLVM autovectorizes them; portable to every ISA).
+//! * `simd` — explicit AVX2 `std::arch` intrinsics (this module).
+//!   Resolves to `unrolled` at dispatch time when the host lacks AVX2 —
+//!   the returned table's `name` reports what actually runs, so tests
+//!   can assert the fallback was *taken*, not silently passed.
+//!
+//! ## Bit-identity contract
+//!
+//! **FMA is deliberately not used anywhere in this module.**  A fused
+//! multiply-add rounds once where `mul` + `add` round twice, which would
+//! break the repo's exact `to_bits()` gates against the scalar
+//! references; every AVX2 kernel here composes only singly-rounded ops
+//! (`mul`/`add`/`sub`/`div`/`min`/`max` and bitwise sign ops), in the
+//! same per-element order as its reference, so for all finite inputs:
+//!
+//! * `prox_l1_box`, `add_assign_diff`, `scatter_acc`, and
+//!   `tmatvec_block_sliced` are bit-identical across **all three**
+//!   families (element-wise, or element-order-preserving scatter).
+//! * `matvec` reduces with the unrolled kernel's exact 4-accumulator
+//!   association (lane k sums elements `i % 4 == k`, combined as
+//!   `(a0+a1)+(a2+a3)`), so `simd` is bit-identical to `unrolled`; the
+//!   single-accumulator `scalar` form is a *different* (also exact)
+//!   association and agrees to normal f32 dot-product tolerance.
+//!
+//! NaN payloads may differ between families (e.g. the sign-transfer
+//! soft-threshold maps NaN to ±0 where scalar propagates it); no finite
+//! training input produces NaN ahead of the kernels, and the gates run
+//! finite inputs only.
+#![deny(clippy::undocumented_unsafe_blocks)]
+
+use crate::config::KernelKind;
+use crate::sparse::csr::scatter_acc as scatter_acc_unrolled;
+use crate::sparse::{BlockSliceIndex, CsrMatrix};
+
+/// Whether the explicit-SIMD table can run on this host.  The detection
+/// macro caches in an atomic, so calling this per kernel invocation (the
+/// defensive guard in the wrappers) costs one relaxed load.
+pub fn simd_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// One resolved family of hot-path kernels.  Plain `fn` pointers in a
+/// `'static` table: selection happens once (`Kernels::select`), the hot
+/// path pays one indirect call per *kernel invocation* (thousands of
+/// elements), never per element.
+#[derive(Clone, Copy)]
+pub struct Kernels {
+    /// The family that actually runs (`"scalar" | "unrolled" | "simd"`)
+    /// — after fallback resolution, so it may differ from the requested
+    /// [`KernelKind`].
+    pub name: &'static str,
+    /// `y = A x` over CSR.
+    pub matvec: fn(&CsrMatrix, &[f32], &mut [f32]),
+    /// `g += (A^T s)[block]` over a precomputed [`BlockSliceIndex`].
+    pub tmatvec_block_sliced: fn(&CsrMatrix, &[f32], &BlockSliceIndex, usize, &mut [f32]),
+    /// `g[idx[k]-base] += vals[k] * sr`.
+    pub scatter_acc: fn(&[u32], &[f32], f32, u32, &mut [f32]),
+    /// Eq. 13 prox: `(z_tilde, w_sum, gamma, denom, lambda, clip, out)`.
+    pub prox_l1_box: fn(&[f32], &[f32], f32, f32, f32, f32, &mut [f32]),
+    /// Incremental w̃-sum: `sum[k] += new[k] - old[k]`.
+    pub add_assign_diff: fn(&mut [f32], &[f32], &[f32]),
+}
+
+impl std::fmt::Debug for Kernels {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Kernels").field("name", &self.name).finish()
+    }
+}
+
+impl Kernels {
+    /// Resolve a config choice to the table that will actually run:
+    /// `auto` prefers `simd`, and `simd` on a non-AVX2 host falls back
+    /// to `unrolled` (reflected in [`Kernels::name`]).
+    pub fn select(kind: KernelKind) -> &'static Kernels {
+        match kind {
+            KernelKind::Scalar => &SCALAR,
+            KernelKind::Unrolled => &UNROLLED,
+            KernelKind::Simd | KernelKind::Auto => {
+                #[cfg(target_arch = "x86_64")]
+                if simd_available() {
+                    return &SIMD;
+                }
+                &UNROLLED
+            }
+        }
+    }
+
+    /// The default table (`kernel=auto`): SIMD when the host has it.
+    pub fn auto() -> &'static Kernels {
+        Self::select(KernelKind::Auto)
+    }
+}
+
+pub static SCALAR: Kernels = Kernels {
+    name: "scalar",
+    matvec: matvec_scalar,
+    tmatvec_block_sliced: tmatvec_block_sliced_scalar,
+    scatter_acc: scatter_acc_scalar,
+    prox_l1_box: crate::admm::prox_l1_box_scalar,
+    add_assign_diff: crate::admm::add_assign_diff_scalar,
+};
+
+pub static UNROLLED: Kernels = Kernels {
+    name: "unrolled",
+    matvec: matvec_unrolled,
+    tmatvec_block_sliced: tmatvec_block_sliced_unrolled,
+    scatter_acc: scatter_acc_unrolled,
+    prox_l1_box: crate::admm::prox_l1_box,
+    add_assign_diff: crate::admm::add_assign_diff,
+};
+
+#[cfg(target_arch = "x86_64")]
+pub static SIMD: Kernels = Kernels {
+    name: "simd",
+    matvec: matvec_simd,
+    tmatvec_block_sliced: tmatvec_block_sliced_simd,
+    scatter_acc: scatter_acc_simd,
+    prox_l1_box: prox_l1_box_simd,
+    add_assign_diff: add_assign_diff_simd,
+};
+
+// ---------------------------------------------------------------------------
+// scalar family — naive loops, the differential reference
+// ---------------------------------------------------------------------------
+
+/// Single-accumulator spmv: the plain textbook loop.  NOT bit-identical
+/// to the 4-accumulator `unrolled`/`simd` reduction (different exact
+/// association); agrees to dot-product tolerance.
+fn matvec_scalar(a: &CsrMatrix, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), a.cols());
+    assert_eq!(y.len(), a.rows());
+    for r in 0..a.rows() {
+        let (idx, vals) = a.row(r);
+        let mut acc = 0.0f32;
+        for (&j, &v) in idx.iter().zip(vals) {
+            acc += v * x[j as usize];
+        }
+        y[r] = acc;
+    }
+}
+
+fn scatter_acc_scalar(idx: &[u32], vals: &[f32], sr: f32, base: u32, g: &mut [f32]) {
+    for (&j, &v) in idx.iter().zip(vals) {
+        g[(j - base) as usize] += v * sr;
+    }
+}
+
+fn tmatvec_block_sliced_scalar(
+    a: &CsrMatrix,
+    s: &[f32],
+    index: &BlockSliceIndex,
+    block: usize,
+    g: &mut [f32],
+) {
+    tmatvec_block_sliced_with(a, s, index, block, g, scatter_acc_scalar)
+}
+
+// ---------------------------------------------------------------------------
+// unrolled family — delegates to the existing 4-wide kernels
+// ---------------------------------------------------------------------------
+
+fn matvec_unrolled(a: &CsrMatrix, x: &[f32], y: &mut [f32]) {
+    a.matvec(x, y)
+}
+
+fn tmatvec_block_sliced_unrolled(
+    a: &CsrMatrix,
+    s: &[f32],
+    index: &BlockSliceIndex,
+    block: usize,
+    g: &mut [f32],
+) {
+    a.tmatvec_block_sliced(s, index, block, g)
+}
+
+/// Shared block-gradient skeleton: the row loop, zero-skip, and slice
+/// lookup are identical across families — only the scatter primitive
+/// differs.  Mirrors [`CsrMatrix::tmatvec_block_sliced`] exactly.
+fn tmatvec_block_sliced_with(
+    a: &CsrMatrix,
+    s: &[f32],
+    index: &BlockSliceIndex,
+    block: usize,
+    g: &mut [f32],
+    scatter: fn(&[u32], &[f32], f32, u32, &mut [f32]),
+) {
+    assert_eq!(s.len(), a.rows());
+    assert_eq!(index.rows(), a.rows(), "index built for a different matrix");
+    assert!(block < index.n_blocks());
+    assert_eq!(g.len(), index.block_len(block));
+    let lo = (block * index.block_size()) as u32;
+    for r in 0..a.rows() {
+        let sr = s[r];
+        if sr == 0.0 {
+            continue;
+        }
+        let (start, end) = index.row_range(r, block);
+        let (idx, vals) = a.nnz_slices(start, end);
+        scatter(idx, vals, sr, lo, g);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// simd family — explicit AVX2, x86_64 only
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::*;
+    use std::arch::x86_64::*;
+
+    /// Safe wrapper: verifies the AVX2 precondition before entering the
+    /// `#[target_feature]` body.  The fallback branch makes the raw fn
+    /// pointer safe to call even off-table (it costs one cached atomic
+    /// load); `Kernels::select` never hands out this table without AVX2.
+    pub(super) fn matvec_simd(a: &CsrMatrix, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), a.cols());
+        assert_eq!(y.len(), a.rows());
+        // The 32-bit gather reads indices as *signed*; CSR cols are
+        // capped at u32::MAX by the builder, so reject the upper half.
+        assert!(a.cols() <= i32::MAX as usize, "matvec_simd: cols exceed i32 gather range");
+        if !simd_available() {
+            return matvec_unrolled(a, x, y);
+        }
+        // SAFETY: AVX2 availability checked just above.
+        unsafe { matvec_avx2(a, x, y) }
+    }
+
+    /// 4-lane spmv replicating the unrolled kernel's exact reduction:
+    /// lane k accumulates elements `i % 4 == k` with one mul + one add
+    /// per element (no FMA), lanes combined `(a0+a1)+(a2+a3)` — so the
+    /// result is bit-identical to [`CsrMatrix::matvec`].
+    ///
+    /// SAFETY (caller): requires AVX2.  All memory accesses are in
+    /// bounds: `k + 4 <= n` guards the 16-byte index/value loads, and
+    /// gather offsets are CSR column indices `< cols == x.len()`
+    /// (checked `<= i32::MAX` by the wrapper, so they stay positive as
+    /// i32).
+    #[target_feature(enable = "avx2")]
+    unsafe fn matvec_avx2(a: &CsrMatrix, x: &[f32], y: &mut [f32]) {
+        for r in 0..a.rows() {
+            let (idx, vals) = a.row(r);
+            let n = idx.len();
+            let mut acc = _mm_setzero_ps();
+            let mut k = 0usize;
+            while k + 4 <= n {
+                let v = _mm_loadu_ps(vals.as_ptr().add(k));
+                let ix = _mm_loadu_si128(idx.as_ptr().add(k) as *const __m128i);
+                let gathered = _mm_i32gather_ps::<4>(x.as_ptr(), ix);
+                acc = _mm_add_ps(acc, _mm_mul_ps(v, gathered));
+                k += 4;
+            }
+            let mut lanes = [0.0f32; 4];
+            _mm_storeu_ps(lanes.as_mut_ptr(), acc);
+            let mut sum = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+            while k < n {
+                sum += vals[k] * x[idx[k] as usize];
+                k += 1;
+            }
+            y[r] = sum;
+        }
+    }
+
+    pub(super) fn scatter_acc_simd(idx: &[u32], vals: &[f32], sr: f32, base: u32, g: &mut [f32]) {
+        if !simd_available() {
+            return scatter_acc_unrolled(idx, vals, sr, base, g);
+        }
+        // SAFETY: AVX2 availability checked just above.
+        unsafe { scatter_acc_avx2(idx, vals, sr, base, g) }
+    }
+
+    /// AVX2 has no scatter instruction, so the vectorizable half — the
+    /// `vals[k] * sr` products — runs 8-wide into a stack temp and the
+    /// indexed accumulates stay scalar.  Each product rounds once
+    /// (identical to scalar) and the adds run in element order, so the
+    /// result is bit-identical to both references.
+    ///
+    /// SAFETY (caller): requires AVX2; `k + 8 <= n` guards the 32-byte
+    /// value loads.
+    #[target_feature(enable = "avx2")]
+    unsafe fn scatter_acc_avx2(idx: &[u32], vals: &[f32], sr: f32, base: u32, g: &mut [f32]) {
+        let n = idx.len();
+        let srv = _mm256_set1_ps(sr);
+        let mut prod = [0.0f32; 8];
+        let mut k = 0usize;
+        while k + 8 <= n {
+            let v = _mm256_loadu_ps(vals.as_ptr().add(k));
+            _mm256_storeu_ps(prod.as_mut_ptr(), _mm256_mul_ps(v, srv));
+            for (j, &p) in prod.iter().enumerate() {
+                g[(idx[k + j] - base) as usize] += p;
+            }
+            k += 8;
+        }
+        while k < n {
+            g[(idx[k] - base) as usize] += vals[k] * sr;
+            k += 1;
+        }
+    }
+
+    pub(super) fn tmatvec_block_sliced_simd(
+        a: &CsrMatrix,
+        s: &[f32],
+        index: &BlockSliceIndex,
+        block: usize,
+        g: &mut [f32],
+    ) {
+        tmatvec_block_sliced_with(a, s, index, block, g, scatter_acc_simd)
+    }
+
+    pub(super) fn prox_l1_box_simd(
+        z_tilde: &[f32],
+        w_sum: &[f32],
+        gamma: f32,
+        denom: f32,
+        lambda: f32,
+        clip: f32,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(z_tilde.len(), w_sum.len());
+        debug_assert_eq!(z_tilde.len(), out.len());
+        debug_assert!(denom > 0.0);
+        if !simd_available() {
+            return crate::admm::prox_l1_box(z_tilde, w_sum, gamma, denom, lambda, clip, out);
+        }
+        // SAFETY: AVX2 availability checked just above.
+        unsafe { prox_avx2(z_tilde, w_sum, gamma, denom, lambda, clip, out) }
+    }
+
+    /// 8-wide Eq. 13 prox.  Per element, in reference order:
+    /// `v = (γ·z̃ + w)/denom` (mul, add, div — the division is kept, not
+    /// reciprocal-multiplied), `t = max(|v| - thr, 0)`, sign-of-`v`
+    /// transferred onto `t` (exactly `signum(v) * t` for finite `v`),
+    /// then `min(max(·, -clip), clip)` which matches `f32::clamp` for
+    /// finite inputs.  Every step rounds exactly like the scalar
+    /// reference ⇒ bit-identical.
+    ///
+    /// SAFETY (caller): requires AVX2; `k + 8 <= n` guards all 32-byte
+    /// loads/stores, and the three slices have equal length (debug-
+    /// asserted by the wrapper, guaranteed by the server call sites).
+    #[target_feature(enable = "avx2")]
+    unsafe fn prox_avx2(
+        z_tilde: &[f32],
+        w_sum: &[f32],
+        gamma: f32,
+        denom: f32,
+        lambda: f32,
+        clip: f32,
+        out: &mut [f32],
+    ) {
+        let thr = lambda / denom;
+        let n = out.len();
+        let gv = _mm256_set1_ps(gamma);
+        let dv = _mm256_set1_ps(denom);
+        let tv = _mm256_set1_ps(thr);
+        let hi = _mm256_set1_ps(clip);
+        let lo = _mm256_set1_ps(-clip);
+        let zero = _mm256_setzero_ps();
+        let sign_mask = _mm256_set1_ps(-0.0);
+        let abs_mask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
+        let mut k = 0usize;
+        while k + 8 <= n {
+            let zt = _mm256_loadu_ps(z_tilde.as_ptr().add(k));
+            let ws = _mm256_loadu_ps(w_sum.as_ptr().add(k));
+            let v = _mm256_div_ps(_mm256_add_ps(_mm256_mul_ps(gv, zt), ws), dv);
+            let soft = _mm256_or_ps(
+                _mm256_max_ps(_mm256_sub_ps(_mm256_and_ps(v, abs_mask), tv), zero),
+                _mm256_and_ps(v, sign_mask),
+            );
+            let clamped = _mm256_min_ps(_mm256_max_ps(soft, lo), hi);
+            _mm256_storeu_ps(out.as_mut_ptr().add(k), clamped);
+            k += 8;
+        }
+        for i in k..n {
+            let v = (gamma * z_tilde[i] + w_sum[i]) / denom;
+            out[i] = crate::admm::soft_threshold(v, thr).clamp(-clip, clip);
+        }
+    }
+
+    pub(super) fn add_assign_diff_simd(sum: &mut [f32], new: &[f32], old: &[f32]) {
+        debug_assert_eq!(sum.len(), new.len());
+        debug_assert_eq!(sum.len(), old.len());
+        if !simd_available() {
+            return crate::admm::add_assign_diff(sum, new, old);
+        }
+        // SAFETY: AVX2 availability checked just above.
+        unsafe { add_assign_diff_avx2(sum, new, old) }
+    }
+
+    /// 8-wide `sum[k] += new[k] - old[k]`: one sub + one add per
+    /// element, same order as scalar ⇒ bit-identical.
+    ///
+    /// SAFETY (caller): requires AVX2; `k + 8 <= n` guards all 32-byte
+    /// loads/stores, slice lengths equal per the wrapper.
+    #[target_feature(enable = "avx2")]
+    unsafe fn add_assign_diff_avx2(sum: &mut [f32], new: &[f32], old: &[f32]) {
+        let n = sum.len();
+        let mut k = 0usize;
+        while k + 8 <= n {
+            let s = _mm256_loadu_ps(sum.as_ptr().add(k));
+            let nv = _mm256_loadu_ps(new.as_ptr().add(k));
+            let ov = _mm256_loadu_ps(old.as_ptr().add(k));
+            _mm256_storeu_ps(sum.as_mut_ptr().add(k), _mm256_add_ps(s, _mm256_sub_ps(nv, ov)));
+            k += 8;
+        }
+        for i in k..n {
+            sum[i] += new[i] - old[i];
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+use avx2::{
+    add_assign_diff_simd, matvec_simd, prox_l1_box_simd, scatter_acc_simd,
+    tmatvec_block_sliced_simd,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CsrBuilder;
+    use crate::util::rng::Rng;
+
+    fn random_csr(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> CsrMatrix {
+        let mut b = CsrBuilder::new(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                if rng.bernoulli(density) {
+                    b.push(r, c, rng.normal_f32(0.0, 1.0));
+                }
+            }
+        }
+        b.build()
+    }
+
+    #[allow(unused_mut)]
+    fn families() -> Vec<&'static Kernels> {
+        let mut fams = vec![&SCALAR, &UNROLLED];
+        #[cfg(target_arch = "x86_64")]
+        if simd_available() {
+            fams.push(&SIMD);
+        }
+        fams
+    }
+
+    #[test]
+    fn select_resolves_fallbacks_by_name() {
+        assert_eq!(Kernels::select(KernelKind::Scalar).name, "scalar");
+        assert_eq!(Kernels::select(KernelKind::Unrolled).name, "unrolled");
+        let expect = if simd_available() { "simd" } else { "unrolled" };
+        // `simd` on a non-AVX2 host must RESOLVE to unrolled (visible in
+        // the name), not die at first kernel call.
+        assert_eq!(Kernels::select(KernelKind::Simd).name, expect);
+        assert_eq!(Kernels::select(KernelKind::Auto).name, expect);
+        assert_eq!(Kernels::auto().name, expect);
+    }
+
+    #[test]
+    fn scatter_and_block_gradient_bit_identical_across_all_families() {
+        // scatter_acc preserves element order in every family, so the
+        // whole tmatvec composition must be exactly equal — scalar too.
+        let mut rng = Rng::new(0x51D);
+        for (rows, cols, db) in [(37usize, 24usize, 8usize), (64, 96, 32), (11, 20, 7)] {
+            let a = random_csr(&mut rng, rows, cols, 0.3);
+            let ix = a.block_slices(db);
+            let s: Vec<f32> = (0..rows).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            for b in 0..ix.n_blocks() {
+                let mut reference = vec![0.1f32; ix.block_len(b)];
+                (SCALAR.tmatvec_block_sliced)(&a, &s, &ix, b, &mut reference);
+                for fam in families() {
+                    let mut g = vec![0.1f32; ix.block_len(b)];
+                    (fam.tmatvec_block_sliced)(&a, &s, &ix, b, &mut g);
+                    for (k, (x, y)) in g.iter().zip(&reference).enumerate() {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "{} block-grad diverged at block {b} elem {k}",
+                            fam.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_matvec_bit_identical_to_unrolled() {
+        let mut rng = Rng::new(0xA7);
+        for (rows, cols) in [(23usize, 17usize), (40, 64), (7, 129)] {
+            let a = random_csr(&mut rng, rows, cols, 0.35);
+            let x: Vec<f32> = (0..cols).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut y_unrolled = vec![0.0f32; rows];
+            (UNROLLED.matvec)(&a, &x, &mut y_unrolled);
+            if simd_available() {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    let mut y_simd = vec![0.0f32; rows];
+                    (SIMD.matvec)(&a, &x, &mut y_simd);
+                    for (k, (u, v)) in y_simd.iter().zip(&y_unrolled).enumerate() {
+                        assert_eq!(u.to_bits(), v.to_bits(), "simd matvec row {k}: {u} vs {v}");
+                    }
+                }
+            }
+            // scalar uses a different exact association: tolerance gate.
+            let mut y_scalar = vec![0.0f32; rows];
+            (SCALAR.matvec)(&a, &x, &mut y_scalar);
+            for (u, v) in y_scalar.iter().zip(&y_unrolled) {
+                assert!((u - v).abs() <= 1e-4 * (1.0 + v.abs()), "{u} vs {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_prox_and_wsum_bit_identical_to_scalar_all_lengths() {
+        // Same discipline as admm::prox's unrolled-vs-scalar gates:
+        // every remainder length, randomized parameters, exact bits.
+        let mut rng = Rng::new(0xBEEF);
+        let fams = families();
+        for db in [1usize, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 64, 257] {
+            for _ in 0..20 {
+                let zt: Vec<f32> = (0..db).map(|_| rng.normal_f32(0.0, 3.0)).collect();
+                let ws: Vec<f32> = (0..db).map(|_| rng.normal_f32(0.0, 3.0)).collect();
+                let gamma = rng.f32() * 2.0;
+                let denom = 0.1 + rng.f32() * 20.0;
+                let lambda = rng.f32();
+                let clip = 0.5 + rng.f32() * 4.0;
+                let mut reference = vec![0.0f32; db];
+                (SCALAR.prox_l1_box)(&zt, &ws, gamma, denom, lambda, clip, &mut reference);
+                let base: Vec<f32> = (0..db).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+                let mut ref_sum = base.clone();
+                (SCALAR.add_assign_diff)(&mut ref_sum, &zt, &ws);
+                for fam in &fams {
+                    let mut out = vec![0.0f32; db];
+                    (fam.prox_l1_box)(&zt, &ws, gamma, denom, lambda, clip, &mut out);
+                    for (a, b) in out.iter().zip(&reference) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{} prox db={db}", fam.name);
+                    }
+                    let mut sum = base.clone();
+                    (fam.add_assign_diff)(&mut sum, &zt, &ws);
+                    for (a, b) in sum.iter().zip(&ref_sum) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{} w-sum db={db}", fam.name);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simd_prox_preserves_sign_of_zero() {
+        // soft_threshold keeps the input's sign on a zero output
+        // (signum(-x)·0 = -0.0); the SIMD sign-transfer must agree bit
+        // for bit, which plain `==` would not catch.
+        let zt = [0.2f32, -0.2, 0.0, -0.0, 1e-30, -1e-30, 5.0, -5.0];
+        let ws = [0.0f32; 8];
+        for fam in families() {
+            let mut out = [7.0f32; 8];
+            let mut reference = [7.0f32; 8];
+            // thr = 1.0/1.0 swallows everything but ±5.0.
+            (fam.prox_l1_box)(&zt, &ws, 1.0, 1.0, 1.0, 100.0, &mut out);
+            (SCALAR.prox_l1_box)(&zt, &ws, 1.0, 1.0, 1.0, 100.0, &mut reference);
+            for (k, (a, b)) in out.iter().zip(&reference).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{} elem {k}: {a} vs {b}", fam.name);
+            }
+        }
+    }
+
+    #[test]
+    fn standalone_scatter_matches_across_families() {
+        let mut rng = Rng::new(0x5CA7);
+        for n in [0usize, 1, 3, 7, 8, 9, 16, 33] {
+            let idx: Vec<u32> = (0..n as u32).map(|k| 100 + k * 2).collect();
+            let vals: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let base_g: Vec<f32> = (0..80).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let mut reference = base_g.clone();
+            (SCALAR.scatter_acc)(&idx, &vals, 1.7, 100, &mut reference);
+            for fam in families() {
+                let mut g = base_g.clone();
+                (fam.scatter_acc)(&idx, &vals, 1.7, 100, &mut g);
+                for (a, b) in g.iter().zip(&reference) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{} n={n}", fam.name);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! Cache-line-aligned memory primitives for the coordinator hot path.
+//!
+//! Two false-sharing sources motivated this module (DESIGN.md §2.0.4):
+//!
+//! * **Per-block hot state.**  `BlockTable` keeps one small
+//!   mutex + counter bundle per consensus block; adjacent blocks land on
+//!   the same 64-byte line, so two server threads servicing *different*
+//!   blocks still ping-pong the line.  [`CacheAligned`] pads every entry
+//!   to its own line.
+//! * **Pooled push buffers.**  `Vec<f32>` is 4-byte aligned; two pooled
+//!   w-buffers can share a line boundary, and the SIMD kernels prefer
+//!   (though do not require) 32-byte-aligned loads.  [`AlignedBuf`] is an
+//!   owned f32 buffer whose storage always starts on a 64-byte boundary.
+#![deny(clippy::undocumented_unsafe_blocks)]
+
+use std::alloc::{alloc_zeroed, dealloc, handle_alloc_error, Layout};
+use std::ops::{Deref, DerefMut};
+use std::ptr::NonNull;
+
+/// 64 bytes: one cache line on every x86_64 and most aarch64 hosts.
+pub const CACHE_LINE: usize = 64;
+
+/// Pads (and aligns) `T` to a full cache line so adjacent array elements
+/// never share one.  `Deref`s to `T`, so wrapping is transparent at use
+/// sites: `CacheAligned(Mutex::new(state))`.
+#[derive(Debug, Default)]
+#[repr(align(64))]
+pub struct CacheAligned<T>(pub T);
+
+impl<T> Deref for CacheAligned<T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        &self.0
+    }
+}
+
+impl<T> DerefMut for CacheAligned<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.0
+    }
+}
+
+/// Owned, fixed-length f32 buffer whose storage is 64-byte aligned.
+///
+/// `Vec<f32>` cannot guarantee alignment beyond 4 bytes (and re-aligning
+/// one in place is UB), so the push-buffer pool owns these instead: a raw
+/// allocation with an explicit 64-byte [`Layout`], `Deref`ing to `[f32]`
+/// so every consumer keeps slice ergonomics.  Zero-length buffers (the
+/// `Default` used by `PushMsg::recycle_now`'s `mem::take`) allocate
+/// nothing.
+#[derive(Debug)]
+pub struct AlignedBuf {
+    ptr: NonNull<f32>,
+    len: usize,
+}
+
+// SAFETY: AlignedBuf uniquely owns its allocation (no aliasing, no
+// interior mutability); moving it between threads is as safe as moving a
+// Vec<f32>.
+unsafe impl Send for AlignedBuf {}
+// SAFETY: &AlignedBuf only exposes &[f32]; shared reads are safe.
+unsafe impl Sync for AlignedBuf {}
+
+impl AlignedBuf {
+    fn layout(len: usize) -> Layout {
+        Layout::from_size_align(len * std::mem::size_of::<f32>(), CACHE_LINE)
+            .expect("AlignedBuf size overflow")
+    }
+
+    /// A zero-filled buffer of `len` f32s on its own cache line(s).
+    pub fn zeroed(len: usize) -> Self {
+        if len == 0 {
+            return AlignedBuf { ptr: NonNull::dangling(), len: 0 };
+        }
+        let layout = Self::layout(len);
+        // SAFETY: layout has non-zero size (len > 0 checked above) and
+        // valid 64-byte power-of-two alignment.
+        let raw = unsafe { alloc_zeroed(layout) };
+        let Some(ptr) = NonNull::new(raw as *mut f32) else {
+            handle_alloc_error(layout);
+        };
+        AlignedBuf { ptr, len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Default for AlignedBuf {
+    fn default() -> Self {
+        AlignedBuf::zeroed(0)
+    }
+}
+
+impl Drop for AlignedBuf {
+    fn drop(&mut self) {
+        if self.len > 0 {
+            // SAFETY: ptr was produced by alloc_zeroed with exactly this
+            // layout (len is immutable after construction) and is only
+            // freed here, once.
+            unsafe { dealloc(self.ptr.as_ptr() as *mut u8, Self::layout(self.len)) };
+        }
+    }
+}
+
+impl Deref for AlignedBuf {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        // SAFETY: ptr is valid for len f32 reads (or dangling with
+        // len == 0, for which from_raw_parts is defined), and the buffer
+        // outlives the borrow.
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl DerefMut for AlignedBuf {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        // SAFETY: as above, plus &mut self guarantees exclusivity.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl Clone for AlignedBuf {
+    fn clone(&self) -> Self {
+        let mut b = AlignedBuf::zeroed(self.len);
+        b.copy_from_slice(self);
+        b
+    }
+}
+
+impl From<Vec<f32>> for AlignedBuf {
+    fn from(v: Vec<f32>) -> Self {
+        let mut b = AlignedBuf::zeroed(v.len());
+        b.copy_from_slice(&v);
+        b
+    }
+}
+
+impl From<&[f32]> for AlignedBuf {
+    fn from(v: &[f32]) -> Self {
+        let mut b = AlignedBuf::zeroed(v.len());
+        b.copy_from_slice(v);
+        b
+    }
+}
+
+impl PartialEq for AlignedBuf {
+    fn eq(&self, other: &Self) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl PartialEq<Vec<f32>> for AlignedBuf {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl PartialEq<AlignedBuf> for Vec<f32> {
+    fn eq(&self, other: &AlignedBuf) -> bool {
+        self[..] == other[..]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_aligned_is_line_sized_and_aligned() {
+        assert_eq!(std::mem::align_of::<CacheAligned<u8>>(), CACHE_LINE);
+        assert_eq!(std::mem::size_of::<CacheAligned<u8>>(), CACHE_LINE);
+        let xs: [CacheAligned<u64>; 4] = Default::default();
+        for x in &xs {
+            assert_eq!(&x.0 as *const u64 as usize % CACHE_LINE, 0);
+        }
+    }
+
+    #[test]
+    fn aligned_buf_is_zeroed_aligned_and_writable() {
+        for len in [1usize, 4, 7, 64, 513] {
+            let mut b = AlignedBuf::zeroed(len);
+            assert_eq!(b.len(), len);
+            assert_eq!(b.as_ptr() as usize % CACHE_LINE, 0, "len={len}");
+            assert!(b.iter().all(|&x| x == 0.0));
+            b[len - 1] = 3.5;
+            assert_eq!(b[len - 1], 3.5);
+        }
+    }
+
+    #[test]
+    fn aligned_buf_empty_default_clone_eq() {
+        let empty = AlignedBuf::default();
+        assert!(empty.is_empty());
+        let b: AlignedBuf = vec![1.0f32, 2.0, 3.0].into();
+        let c = b.clone();
+        assert_eq!(b, c);
+        assert_eq!(b, vec![1.0, 2.0, 3.0]);
+        assert_ne!(b, vec![1.0, 2.0]);
+        // mem::take (the recycle path) leaves a harmless empty buffer.
+        let mut m = b;
+        let taken = std::mem::take(&mut m);
+        assert_eq!(taken.len(), 3);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn adjacent_pool_buffers_never_share_a_line() {
+        let bufs: Vec<AlignedBuf> = (0..8).map(|_| AlignedBuf::zeroed(3)).collect();
+        let mut lines: Vec<usize> = bufs.iter().map(|b| b.as_ptr() as usize / CACHE_LINE).collect();
+        lines.sort_unstable();
+        lines.dedup();
+        assert_eq!(lines.len(), 8, "two 3-float buffers landed on one line");
+    }
+}

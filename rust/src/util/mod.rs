@@ -2,10 +2,13 @@
 //! CLI parsing, leveled logging.  See DESIGN.md "Environment-driven
 //! design decisions".
 
+pub mod align;
 pub mod cli;
 pub mod json;
 pub mod log;
 pub mod rng;
+
+pub use align::{AlignedBuf, CacheAligned};
 
 /// Mean and sample standard deviation (used by reports and the bench
 /// harness).

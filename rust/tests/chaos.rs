@@ -295,7 +295,7 @@ fn prop_fifo_holds_exactly_across_the_restart_window() {
                     let msg = PushMsg {
                         worker: w,
                         block: j,
-                        w: vec![value(w, j, seq[w][j]); db],
+                        w: vec![value(w, j, seq[w][j]); db].into(),
                         worker_epoch: sent[w],
                         z_version_used: 0,
                         block_seq: seq[w][j],

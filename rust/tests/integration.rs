@@ -26,9 +26,7 @@ fn sim_cost() -> CostModel {
         compute_per_row_s: 1e-5,
         server_service_s: 1e-5,
         net_mean_s: 1e-4,
-        chunk_rows: 0,
-        per_chunk_s: 0.0,
-        compute_jitter: 0.0,
+        ..CostModel::default()
     }
 }
 
@@ -190,9 +188,7 @@ fn sim_speedup_is_near_linear_then_saturates() {
             compute_per_row_s: 2e-4,
             server_service_s: 1e-5,
             net_mean_s: 2e-5,
-            chunk_rows: 0,
-            per_chunk_s: 0.0,
-            compute_jitter: 0.0,
+            ..CostModel::default()
         };
         let r = run_sim(&cfg, &ds, &shards, &cost).unwrap();
         times.push((p, r.time_to_epoch[k]));

@@ -1,0 +1,68 @@
+//! `kernel=` dispatch differential tests: the runtime-selected kernel
+//! family (scalar / unrolled / simd) is a pure speed knob — it must not
+//! change the algorithm.  Every family runs the full threaded `Session`
+//! with identical push accounting and lands in the same objective
+//! neighborhood; on a host without AVX2, `simd` must resolve to the
+//! `unrolled` fallback (visible in `Kernels::name`) and still run.
+
+use asybadmm::config::{Config, KernelKind};
+use asybadmm::coordinator::Session;
+use asybadmm::data::gen_partitioned;
+use asybadmm::sparse::{simd_available, Kernels};
+
+#[test]
+fn kernel_families_are_differentially_equivalent() {
+    let mut cfg = Config::tiny_test();
+    cfg.epochs = 240;
+    let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+    let mut objectives = Vec::new();
+    for kind in [KernelKind::Scalar, KernelKind::Unrolled, KernelKind::Simd] {
+        let resolved = Kernels::select(kind);
+        if kind == KernelKind::Simd && !simd_available() {
+            // No AVX2 at runtime: `simd` must degrade to the unrolled
+            // table, not crash or go scalar.  The run below then
+            // exercises the fallback end-to-end.
+            assert_eq!(
+                resolved.name, "unrolled",
+                "kernel=simd resolved to {:?} on a non-AVX2 host",
+                resolved.name
+            );
+        }
+        cfg.kernel = kind;
+        let r = Session::builder(&cfg).dataset(&ds, &shards).run().unwrap();
+        assert_eq!(
+            r.total_pushes(),
+            cfg.epochs * shards.len(),
+            "kernel={kind:?} (resolved '{}') broke push accounting",
+            resolved.name
+        );
+        let obj = r.final_objective.total();
+        assert!(
+            obj.is_finite() && obj < 0.66,
+            "kernel={kind:?} (resolved '{}') did not converge: {obj}",
+            resolved.name
+        );
+        objectives.push((kind, resolved.name, obj));
+    }
+    let min = objectives.iter().map(|&(_, _, o)| o).fold(f64::INFINITY, f64::min);
+    let max = objectives.iter().map(|&(_, _, o)| o).fold(f64::NEG_INFINITY, f64::max);
+    assert!(
+        max - min < 0.08,
+        "kernel families disagree beyond async noise: {objectives:?}"
+    );
+}
+
+#[test]
+fn auto_kernel_resolves_to_the_best_available_family() {
+    let auto = Kernels::auto();
+    if simd_available() {
+        assert_eq!(auto.name, "simd");
+    } else {
+        assert_eq!(auto.name, "unrolled");
+    }
+    // Explicit portable choices are always honored verbatim.
+    assert_eq!(Kernels::select(KernelKind::Scalar).name, "scalar");
+    assert_eq!(Kernels::select(KernelKind::Unrolled).name, "unrolled");
+    // And `auto` is exactly `select(Auto)` — one resolution rule.
+    assert!(std::ptr::eq(auto, Kernels::select(KernelKind::Auto)));
+}

@@ -209,7 +209,7 @@ fn prop_lane_steal_preserves_per_worker_fifo() {
                     let msg = PushMsg {
                         worker: w,
                         block: 0,
-                        w: vec![0.0; 2],
+                        w: vec![0.0; 2].into(),
                         worker_epoch: epoch,
                         z_version_used: 0,
                         block_seq: 0,
@@ -372,7 +372,7 @@ fn prop_migration_preserves_per_worker_block_fifo() {
                         let msg = PushMsg {
                             worker: w,
                             block: j,
-                            w: vec![value(w, j, seq[w][j]); db],
+                            w: vec![value(w, j, seq[w][j]); db].into(),
                             worker_epoch: sent[w],
                             z_version_used: 0,
                             block_seq: seq[w][j],
