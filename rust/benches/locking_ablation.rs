@@ -179,19 +179,27 @@ fn main() {
     );
 
     // 2. Raw transport enqueue/drain: per-worker SPSC rings vs the
-    //    shared bounded-mpsc channel (ROADMAP "lock-free server queues").
+    //    shared bounded-mpsc channel (ROADMAP "lock-free server queues"),
+    //    plus the loopback-TCP lanes so the socket transport's frame
+    //    encode + syscall + credit-window cost is tracked against the
+    //    in-process fast path it must stand in for across machines.
     let msgs = if quick { 2_000 } else { 20_000 };
     let mpsc_rate = push_throughput(TransportKind::Mpsc, 4, msgs, 256);
     let ring_rate = push_throughput(TransportKind::SpscRing, 4, msgs, 256);
+    let tcp_rate = push_throughput(TransportKind::Tcp, 4, msgs, 256);
     let enqueue_ratio = ring_rate / mpsc_rate.max(1.0);
+    let tcp_ratio = tcp_rate / ring_rate.max(1.0);
     record(&mut h, "mpsc transport push (4w->1s, db=256)", 1.0 / mpsc_rate.max(1.0));
     record(&mut h, "ring transport push (4w->1s, db=256)", 1.0 / ring_rate.max(1.0));
+    record(&mut h, "tcp transport push (4w->1s, db=256)", 1.0 / tcp_rate.max(1.0));
     println!(
         "\ntransport pushes (4 producers -> 1 draining server, db=256):\n\
          \x20 mpsc {:>10.0} pushes/s\n\
          \x20 ring {:>10.0} pushes/s\n\
-         \x20 -> ring/mpsc = {enqueue_ratio:.2}x  (gate; <1 expected only on 1-core hosts)",
-        mpsc_rate, ring_rate
+         \x20 tcp  {:>10.0} pushes/s  (loopback sockets)\n\
+         \x20 -> ring/mpsc = {enqueue_ratio:.2}x  (gate; <1 expected only on 1-core hosts)\n\
+         \x20 -> tcp/ring  = {tcp_ratio:.2}x  (gate; <1 expected — this is the price of a wire)",
+        mpsc_rate, ring_rate, tcp_rate
     );
 
     // 3. Wall-clock (threaded), async session under both transports.
@@ -299,7 +307,9 @@ fn main() {
                 ("seqlock_vs_rwlock", ratio),
                 ("mpsc_push_per_s", mpsc_rate),
                 ("ring_push_per_s", ring_rate),
+                ("tcp_push_per_s", tcp_rate),
                 ("ring_vs_mpsc_enqueue", enqueue_ratio),
+                ("tcp_loopback_vs_ring_enqueue", tcp_ratio),
                 ("threaded_lockfree_updates_per_s", free_rate),
                 ("threaded_ring_updates_per_s", ring_threaded_rate),
                 ("threaded_globallock_updates_per_s", locked_rate),

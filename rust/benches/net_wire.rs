@@ -1,0 +1,117 @@
+//! Wire-format hot path (DESIGN.md §2.0.5): encode/decode throughput
+//! of the length-prefixed push frames the networked runtime puts on
+//! every worker→server socket.
+//!
+//! The TCP transport's per-push budget is one body serialization on the
+//! sender (`put_push_body` into a reused frame buffer) and one
+//! bounds-checked body parse on the receiver (`take_push_body` out of a
+//! pooled buffer).  This bench isolates both from the socket so a
+//! serialization regression is attributable separately from kernel or
+//! syscall noise — the `tcp_frame_encode_throughput` gate in
+//! BENCH_hotpath.json (pushes encoded per second, batched frames).
+//!
+//!     cargo bench --bench net_wire [-- --json]
+//!     BENCH_QUICK=1 cargo bench --bench net_wire
+
+use asybadmm::bench::{emit_hotpath_json, harness_from_env, json_requested, maybe_list_gates};
+use asybadmm::coordinator::{wire, PushMsg};
+use asybadmm::util::rng::Rng;
+use asybadmm::util::AlignedBuf;
+
+/// One pending slot's worth of pushes, shaped like the threaded run:
+/// batch messages for one server, paper-scale block width.
+fn make_batch(batch: usize, db: usize) -> Vec<PushMsg> {
+    let mut rng = Rng::new(7);
+    (0..batch)
+        .map(|i| PushMsg {
+            worker: i % 4,
+            block: rng.below(64),
+            w: (0..db).map(|_| rng.normal_f32(0.0, 1.0)).collect::<Vec<f32>>().into(),
+            worker_epoch: i,
+            z_version_used: rng.next_u64(),
+            block_seq: i as u64 + 1,
+            sent_at: None,
+            recycle: None,
+        })
+        .collect()
+}
+
+/// Encode `msgs` as the sender does: one `PushBatch` envelope (or a
+/// bare `Push` for batch=1) into a reused buffer.
+fn encode_into(buf: &mut Vec<u8>, msgs: &[PushMsg]) {
+    buf.clear();
+    let start = if msgs.len() == 1 {
+        wire::begin_frame(buf, wire::kind::PUSH)
+    } else {
+        let s = wire::begin_frame(buf, wire::kind::PUSH_BATCH);
+        wire::put_u32(buf, msgs.len() as u32);
+        s
+    };
+    for m in msgs {
+        wire::put_push_body(buf, m);
+    }
+    wire::end_frame(buf, start);
+}
+
+fn main() {
+    if maybe_list_gates() {
+        return;
+    }
+    let mut h = harness_from_env();
+    println!("== net_wire: push-frame encode/decode (no sockets) ==");
+
+    let (batch, db) = (8usize, 256usize);
+    let msgs = make_batch(batch, db);
+    let mut buf = Vec::with_capacity(wire::HEADER + batch * (36 + 4 * db));
+
+    let encode_mean_s = h
+        .bench("wire encode (batch=8, db=256)", || {
+            encode_into(&mut buf, &msgs);
+            std::hint::black_box(buf.as_slice());
+        })
+        .mean_s;
+    let encode_rate = batch as f64 / encode_mean_s.max(1e-12);
+    let frame_bytes = buf.len();
+
+    // Decode path: envelope read + cursor parse + body copies, the
+    // receiver's cost per frame (allocating like the lane pool's miss
+    // path, the conservative bound).
+    encode_into(&mut buf, &msgs);
+    let decode_mean_s = h
+        .bench("wire decode (batch=8, db=256)", || {
+            let mut slice = buf.as_slice();
+            let (k, payload) = wire::read_frame(&mut slice).unwrap().unwrap();
+            let mut cur = wire::Cursor::new(k, &payload).unwrap();
+            let count = cur.u32("count").unwrap() as usize;
+            for _ in 0..count {
+                let p = wire::take_push_body(&mut cur, &mut |n| AlignedBuf::zeroed(n)).unwrap();
+                std::hint::black_box(&p);
+            }
+            cur.finish().unwrap();
+        })
+        .mean_s;
+    let decode_rate = batch as f64 / decode_mean_s.max(1e-12);
+
+    println!(
+        "\npush frames ({batch} bodies x db={db}, {frame_bytes} bytes/frame):\n\
+         \x20 encode {:>12.0} pushes/s  ({:.2} GB/s)\n\
+         \x20 decode {:>12.0} pushes/s\n\
+         \x20 (gate: tcp_frame_encode_throughput — serialization must stay far\n\
+         \x20  above the socket rate the locking_ablation tcp leg measures)",
+        encode_rate,
+        encode_rate / batch as f64 * frame_bytes as f64 / 1e9,
+        decode_rate
+    );
+
+    if json_requested() {
+        emit_hotpath_json(
+            "net_wire",
+            &h,
+            &[
+                ("tcp_frame_encode_throughput", encode_rate),
+                ("tcp_frame_decode_throughput", decode_rate),
+                ("frame_bytes_batch8_db256", frame_bytes as f64),
+            ],
+        );
+    }
+}

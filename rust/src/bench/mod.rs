@@ -187,6 +187,7 @@ pub const GATE_KEYS: &[&str] = &[
     // locking_ablation
     "seqlock_vs_rwlock",
     "ring_vs_mpsc_enqueue",
+    "tcp_loopback_vs_ring_enqueue",
     // placement_skew
     "steal_vs_owned_drain",
     "degree_vs_contiguous_skew",
@@ -198,6 +199,8 @@ pub const GATE_KEYS: &[&str] = &[
     // fault_recovery
     "fault_hooks_overhead",
     "recovery_vs_faultfree_epochs",
+    // net_wire
+    "tcp_frame_encode_throughput",
     // kernel_gradient
     "sliced_vs_scan_min_speedup",
     "simd_vs_unrolled_spmv",

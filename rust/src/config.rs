@@ -46,6 +46,11 @@ pub enum TransportKind {
     /// Per-(worker, server) SPSC rings with atomic head/tail — no
     /// shared queue lock anywhere on the push path.
     SpscRing,
+    /// Per-(worker, server) loopback TCP sockets with the same FIFO /
+    /// bounded-in-flight / drain contract (`coordinator/net/tcp.rs`) —
+    /// the single-process face of the multi-process runtime
+    /// (`asybadmm serve` / `asybadmm work`).
+    Tcp,
 }
 
 impl TransportKind {
@@ -53,7 +58,8 @@ impl TransportKind {
         match s {
             "mpsc" => Ok(TransportKind::Mpsc),
             "ring" => Ok(TransportKind::SpscRing),
-            other => anyhow::bail!("unknown transport {other:?} (mpsc|ring)"),
+            "tcp" => Ok(TransportKind::Tcp),
+            other => anyhow::bail!("unknown transport {other:?} (mpsc|ring|tcp)"),
         }
     }
 
@@ -61,6 +67,7 @@ impl TransportKind {
         match self {
             TransportKind::Mpsc => "mpsc",
             TransportKind::SpscRing => "ring",
+            TransportKind::Tcp => "tcp",
         }
     }
 }
@@ -339,6 +346,12 @@ pub struct Config {
     /// Where periodic checkpoints land (header file; `.bin` sidecar
     /// beside it).
     pub checkpoint_path: PathBuf,
+
+    // -- observability -----------------------------------------------------
+    /// `host:port` for the hand-rolled HTTP/1.1 stats endpoint
+    /// (`GET /stats`, `GET /healthz`; `coordinator/net/http.rs`).
+    /// Empty (default) = no endpoint.
+    pub stats_addr: String,
 }
 
 impl Default for Config {
@@ -389,6 +402,7 @@ impl Default for Config {
             stall_warn_ms: 0,
             checkpoint_every: 0,
             checkpoint_path: PathBuf::from("reports/auto.ckpt"),
+            stats_addr: String::new(),
         }
     }
 }
@@ -477,6 +491,7 @@ impl Config {
         "stall_warn_ms",
         "checkpoint_every",
         "checkpoint_path",
+        "stats_addr",
     ];
 
     pub fn apply_kv(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
@@ -535,6 +550,7 @@ impl Config {
             "stall_warn_ms" => self.stall_warn_ms = scalar(key, v)?,
             "checkpoint_every" => self.checkpoint_every = scalar(key, v)?,
             "checkpoint_path" => self.checkpoint_path = PathBuf::from(v),
+            "stats_addr" => self.stats_addr = v.to_string(),
             other => anyhow::bail!(
                 "unknown config key {other:?}; valid keys: {}",
                 Self::KEYS.join(", ")
@@ -611,7 +627,107 @@ impl Config {
         // Fail on a malformed fault spec at config time, not mid-run.
         crate::coordinator::FaultPlan::parse(&self.faults)
             .context("invalid value for config key \"faults\"")?;
+        // Fail on a malformed stats address before any thread binds it.
+        if !self.stats_addr.is_empty() {
+            use std::net::ToSocketAddrs;
+            self.stats_addr
+                .to_socket_addrs()
+                .map(|_| ())
+                .map_err(anyhow::Error::from)
+                .with_context(|| {
+                    format!(
+                        "invalid value {:?} for config key \"stats_addr\" (expected host:port, \
+                         e.g. 127.0.0.1:8080)",
+                        self.stats_addr
+                    )
+                })?;
+        }
         Ok(())
+    }
+
+    /// Every non-default setting as `(key, value)` pairs that
+    /// [`Config::apply_kv`] accepts — the wire representation the
+    /// multi-process handshake ships so `asybadmm work` reconstructs the
+    /// coordinator's exact config (`Config::default()` + these).
+    /// Defaults are elided to keep the frame small and forward-portable:
+    /// a worker build with a newer default set only diverges on keys the
+    /// coordinator actually set.
+    pub fn to_kv(&self) -> Vec<(String, String)> {
+        let d = Config::default();
+        let mut kv: Vec<(String, String)> = Vec::new();
+        let mut push = |k: &str, v: String, dv: String| {
+            if v != dv {
+                kv.push((k.to_string(), v));
+            }
+        };
+        push("loss", self.loss.as_str().into(), d.loss.as_str().into());
+        push("lambda", self.lambda.to_string(), d.lambda.to_string());
+        push("clip", self.clip.to_string(), d.clip.to_string());
+        push("samples", self.samples.to_string(), d.samples.to_string());
+        push("n_blocks", self.n_blocks.to_string(), d.n_blocks.to_string());
+        push("block_size", self.block_size.to_string(), d.block_size.to_string());
+        push("nnz_per_row", self.nnz_per_row.to_string(), d.nnz_per_row.to_string());
+        push(
+            "blocks_per_worker",
+            self.blocks_per_worker.to_string(),
+            d.blocks_per_worker.to_string(),
+        );
+        push("shared_blocks", self.shared_blocks.to_string(), d.shared_blocks.to_string());
+        push("zipf_s", self.zipf_s.to_string(), d.zipf_s.to_string());
+        push("noise", self.noise.to_string(), d.noise.to_string());
+        if let Some(p) = &self.data_path {
+            kv.push(("data_path".into(), p.display().to_string()));
+        }
+        push("n_workers", self.n_workers.to_string(), d.n_workers.to_string());
+        push("n_servers", self.n_servers.to_string(), d.n_servers.to_string());
+        push("placement", self.placement.as_str().into(), d.placement.as_str().into());
+        push("drain", self.drain.as_str().into(), d.drain.as_str().into());
+        push("kernel", self.kernel.as_str().into(), d.kernel.as_str().into());
+        push("server_threads", self.server_threads.to_string(), d.server_threads.to_string());
+        push("rebalance_ms", self.rebalance_ms.to_string(), d.rebalance_ms.to_string());
+        push("batch", self.batch.to_string(), d.batch.to_string());
+        push("rho", self.rho.to_string(), d.rho.to_string());
+        push("gamma", self.gamma.to_string(), d.gamma.to_string());
+        push("epochs", self.epochs.to_string(), d.epochs.to_string());
+        push("selection", self.selection.as_str().into(), d.selection.as_str().into());
+        push("max_delay", self.max_delay.to_string(), d.max_delay.to_string());
+        push(
+            "enforce_delay_bound",
+            self.enforce_delay_bound.to_string(),
+            d.enforce_delay_bound.to_string(),
+        );
+        push("backend", self.backend.as_str().into(), d.backend.as_str().into());
+        push("transport", self.transport.as_str().into(), d.transport.as_str().into());
+        push(
+            "artifacts_dir",
+            self.artifacts_dir.display().to_string(),
+            d.artifacts_dir.display().to_string(),
+        );
+        push("m_chunk", self.m_chunk.to_string(), d.m_chunk.to_string());
+        push("d_pad", self.d_pad.to_string(), d.d_pad.to_string());
+        push(
+            "net_delay_mean_ms",
+            self.net_delay_mean_ms.to_string(),
+            d.net_delay_mean_ms.to_string(),
+        );
+        push("pull_hold", self.pull_hold.to_string(), d.pull_hold.to_string());
+        push("seed", self.seed.to_string(), d.seed.to_string());
+        push("log_every", self.log_every.to_string(), d.log_every.to_string());
+        push("faults", self.faults.clone(), d.faults.clone());
+        push("failure", self.failure.as_str().into(), d.failure.as_str().into());
+        push("stall_warn_ms", self.stall_warn_ms.to_string(), d.stall_warn_ms.to_string());
+        push(
+            "checkpoint_every",
+            self.checkpoint_every.to_string(),
+            d.checkpoint_every.to_string(),
+        );
+        push(
+            "checkpoint_path",
+            self.checkpoint_path.display().to_string(),
+            d.checkpoint_path.display().to_string(),
+        );
+        push("stats_addr", self.stats_addr.clone(), d.stats_addr.clone());
+        kv
     }
 
     /// One-line summary for report headers.  Robustness knobs are
@@ -695,6 +811,8 @@ mod tests {
         c.apply_kv("backend", "xla").unwrap();
         c.apply_kv("selection", "cyclic").unwrap();
         c.apply_kv("transport", "ring").unwrap();
+        c.apply_kv("stats_addr", "127.0.0.1:9090").unwrap();
+        assert_eq!(c.stats_addr, "127.0.0.1:9090");
         assert_eq!(c.n_workers, 16);
         assert_eq!(c.gamma, 0.5);
         assert_eq!(c.backend, Backend::Xla);
@@ -702,6 +820,8 @@ mod tests {
         assert_eq!(c.transport, TransportKind::SpscRing);
         c.apply_kv("transport", "mpsc").unwrap();
         assert_eq!(c.transport, TransportKind::Mpsc);
+        c.apply_kv("transport", "tcp").unwrap();
+        assert_eq!(c.transport, TransportKind::Tcp);
         c.apply_kv("placement", "degree").unwrap();
         c.apply_kv("drain", "steal").unwrap();
         c.apply_kv("batch", "4").unwrap();
@@ -773,6 +893,48 @@ mod tests {
         let err = format!("{:#}", c.apply_kv("n_workers", "abc").unwrap_err());
         assert!(err.contains("n_workers"), "scalar error omits the key: {err}");
         assert!(err.contains("abc"), "scalar error omits the value: {err}");
+        let err = format!("{:#}", c.apply_kv("transport", "bogus").unwrap_err());
+        for v in ["mpsc", "ring", "tcp"] {
+            assert!(err.contains(v), "transport error omits {v:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn malformed_stats_addr_rejected_with_expected_form() {
+        let mut c = Config::default();
+        c.stats_addr = "127.0.0.1:9090".into();
+        c.validate().unwrap();
+        c.stats_addr = "no-port".into();
+        let err = format!("{:#}", c.validate().unwrap_err());
+        assert!(err.contains("stats_addr"), "{err}");
+        assert!(err.contains("host:port"), "error should show the form: {err}");
+    }
+
+    #[test]
+    fn to_kv_round_trips_through_apply_kv() {
+        let mut c = Config::tiny_test();
+        c.transport = TransportKind::Tcp;
+        c.placement = PlacementKind::Dynamic;
+        c.batch = 3;
+        c.seed = 777;
+        c.stats_addr = "127.0.0.1:0".into();
+        c.faults = "crash:w0@3".into();
+        let mut rebuilt = Config::default();
+        for (k, v) in c.to_kv() {
+            rebuilt.apply_kv(&k, &v).unwrap();
+        }
+        // The handshake contract: defaults + to_kv == the original.
+        assert_eq!(rebuilt.summary(), c.summary());
+        assert_eq!(rebuilt.stats_addr, c.stats_addr);
+        assert_eq!(rebuilt.epochs, c.epochs);
+        assert_eq!(rebuilt.n_blocks, c.n_blocks);
+        assert_eq!(rebuilt.block_size, c.block_size);
+        assert_eq!(rebuilt.samples, c.samples);
+        assert_eq!(rebuilt.shared_blocks, c.shared_blocks);
+        assert_eq!(rebuilt.lambda, c.lambda);
+        assert_eq!(rebuilt.max_delay, c.max_delay);
+        // An all-defaults config ships an empty diff.
+        assert!(Config::default().to_kv().is_empty());
     }
 
     #[test]

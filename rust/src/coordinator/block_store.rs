@@ -173,6 +173,41 @@ impl BlockStore {
         slot.write_locked(&scratch[..])
     }
 
+    /// Adopt block j at an externally assigned `version` — the mirror-
+    /// sync primitive of the networked runtime: a worker process's local
+    /// replica adopts the coordinator's (value, version) pairs from pull
+    /// responses, so the staleness accounting (`z_version_used`) refers
+    /// to the same version numbers on both sides of the socket.  No-op
+    /// (returns `false`) unless `version` is newer than the published
+    /// one, so reordered or duplicated sync frames cannot roll the
+    /// replica back.
+    ///
+    /// Seqlock-safe for any forward jump: the in-progress mark is set to
+    /// `2·version − 1`, so a reader that snapshotted version `v` revalidates
+    /// against `seq − 2v ≤ 2` — true only for the `v → v+1` step, which
+    /// (like [`BlockStore::write`]) targets the inactive buffer; any
+    /// larger jump forces the reader to retry.
+    pub fn write_versioned(&self, j: usize, data: &[f32], version: u64) -> bool {
+        debug_assert_eq!(data.len(), self.db);
+        let slot = &self.blocks[j];
+        let _guard = slot.writer.lock().unwrap();
+        let s0 = slot.seq.load(Ordering::Relaxed);
+        debug_assert_eq!(s0 & 1, 0, "write while another write in progress");
+        if version <= (s0 >> 1) {
+            return false;
+        }
+        // Stable buffer for version v is bufs[v & 1] — same invariant as
+        // the increment-by-one writer, generalized to jumps.
+        let target = &slot.bufs[(version & 1) as usize];
+        slot.seq.store((version << 1) - 1, Ordering::Release);
+        fence(Ordering::Release);
+        for (a, &v) in target.iter().zip(data) {
+            a.store(v.to_bits(), Ordering::Relaxed);
+        }
+        slot.seq.store(version << 1, Ordering::Release);
+        true
+    }
+
     pub fn version(&self, j: usize) -> u64 {
         // Odd (in-progress) states round down to the published version.
         self.blocks[j].seq.load(Ordering::Acquire) >> 1
@@ -391,6 +426,53 @@ mod tests {
         let mut out = vec![0.0f32; 48];
         s.read_into(0, &mut out);
         assert_eq!(out[0] as u64, writers as u64 * per_writer);
+    }
+
+    #[test]
+    fn write_versioned_adopts_only_newer_versions() {
+        let s = BlockStore::new(1, 2);
+        assert!(s.write_versioned(0, &[1.0, 1.0], 3));
+        assert_eq!(s.version(0), 3);
+        let mut out = [0.0f32; 2];
+        assert_eq!(s.read_into(0, &mut out), 3);
+        assert_eq!(out, [1.0, 1.0]);
+        // Stale and duplicate versions are ignored (reordered sync).
+        assert!(!s.write_versioned(0, &[9.0, 9.0], 3));
+        assert!(!s.write_versioned(0, &[9.0, 9.0], 2));
+        s.read_into(0, &mut out);
+        assert_eq!(out, [1.0, 1.0]);
+        // Forward jumps and +1 steps both land with the right value.
+        assert!(s.write_versioned(0, &[2.0, 2.0], 4));
+        assert!(s.write_versioned(0, &[7.0, 7.0], 9));
+        assert_eq!(s.read_into(0, &mut out), 9);
+        assert_eq!(out, [7.0, 7.0]);
+        // A plain write continues the sequence from the adopted version.
+        assert_eq!(s.write(0, &[8.0, 8.0]), 10);
+    }
+
+    #[test]
+    fn write_versioned_keeps_snapshots_consistent_under_races() {
+        // Readers must never observe a torn mix while a versioned
+        // writer jumps the block forward (the mirror-sync race).
+        let s = Arc::new(BlockStore::new(1, 32));
+        let writer = {
+            let s = s.clone();
+            std::thread::spawn(move || {
+                let mut v = 0u64;
+                for step in 1..=400u64 {
+                    v += 1 + (step % 3); // mix of +1 steps and jumps
+                    s.write_versioned(0, &[v as f32; 32], v);
+                }
+            })
+        };
+        let mut buf = vec![0.0f32; 32];
+        for _ in 0..2000 {
+            let v = s.read_into(0, &mut buf);
+            let first = buf[0];
+            assert!(buf.iter().all(|&x| x == first), "torn read");
+            assert_eq!(first as u64, v, "value {first} disagrees with version {v}");
+        }
+        writer.join().unwrap();
     }
 
     #[test]

@@ -76,9 +76,78 @@ impl PushPool {
     }
 }
 
+/// Receiver-side free list for wire-decoded push buffers
+/// (`coordinator/net`).  Unlike [`PushPool`], `acquire` **never
+/// blocks**: the receive path cannot wait on its own downstream (the
+/// server apply loop recycles into this pool *after* handling the
+/// message this pool is allocating for — blocking here would deadlock
+/// the lane).  Backpressure is the transport's credit window, not the
+/// pool; steady state still allocates nothing because every applied
+/// message sends its buffer straight back.
+pub struct LeasePool {
+    inbox: Receiver<AlignedBuf>,
+    home: Sender<AlignedBuf>,
+    /// Buffers ever allocated fresh (diagnostics; bounded by the credit
+    /// window in steady state, not by message count).
+    allocated: usize,
+}
+
+impl Default for LeasePool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LeasePool {
+    pub fn new() -> Self {
+        let (home, inbox) = channel();
+        LeasePool { inbox, home, allocated: 0 }
+    }
+
+    /// The return address decoded messages carry as their `recycle`.
+    pub fn recycler(&self) -> Sender<AlignedBuf> {
+        self.home.clone()
+    }
+
+    /// A buffer of exactly `n` floats: reuse a returned one if the size
+    /// matches, else allocate.  Off-size returns (a worker with a
+    /// different block size on the same lane cannot happen today, but a
+    /// resized config across a reconnect could) are dropped rather than
+    /// hoarded.
+    pub fn acquire(&mut self, n: usize) -> AlignedBuf {
+        while let Ok(buf) = self.inbox.try_recv() {
+            if buf.len() == n {
+                return buf;
+            }
+        }
+        self.allocated += 1;
+        AlignedBuf::zeroed(n)
+    }
+
+    pub fn high_water(&self) -> usize {
+        self.allocated
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn lease_pool_reuses_matching_returns_without_blocking() {
+        let mut pool = LeasePool::new();
+        let a = pool.acquire(4);
+        assert_eq!(pool.high_water(), 1);
+        pool.recycler().send(a).unwrap();
+        let b = pool.acquire(4);
+        assert_eq!(b.len(), 4);
+        assert_eq!(pool.high_water(), 1, "matching return not reused");
+        // A size change allocates fresh and drops the stale return.
+        pool.recycler().send(b).unwrap();
+        let c = pool.acquire(8);
+        assert_eq!(c.len(), 8);
+        assert_eq!(pool.high_water(), 2);
+    }
 
     #[test]
     fn acquire_allocates_up_to_cap_then_reuses() {

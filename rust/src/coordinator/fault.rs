@@ -62,6 +62,30 @@ pub enum FaultEvent {
     Stalled { min_epoch: usize, waited_ms: u64 },
 }
 
+impl FaultEvent {
+    /// One human-readable line per event — the `/stats` endpoint's
+    /// fault ledger entries and the monitor's log lines.
+    pub fn describe(&self) -> String {
+        match self {
+            FaultEvent::WorkerCrashed { worker, epoch } => {
+                format!("worker {worker} crashed at epoch {epoch}")
+            }
+            FaultEvent::WorkerDegraded { worker, epoch, parked_dropped } => format!(
+                "worker {worker} degraded at epoch {epoch} ({parked_dropped} parked pushes dropped)"
+            ),
+            FaultEvent::WorkerRestarted { worker, epoch, attempt } => {
+                format!("worker {worker} restarted at epoch {epoch} (attempt {attempt})")
+            }
+            FaultEvent::ServerStalled { server, after_pushes, ms } => {
+                format!("server {server} stalled {ms}ms after {after_pushes} pushes")
+            }
+            FaultEvent::Stalled { min_epoch, waited_ms } => {
+                format!("watchdog: no progress for {waited_ms}ms (slowest worker at epoch {min_epoch})")
+            }
+        }
+    }
+}
+
 struct CrashEntry {
     worker: usize,
     at_epoch: usize,
@@ -310,6 +334,35 @@ mod tests {
         assert!(!p.should_crash(0, 0));
         assert_eq!(p.send_failures(0, 0), 0);
         assert_eq!(p.stall_ms(0, usize::MAX), None);
+    }
+
+    #[test]
+    fn describe_names_the_victim_and_trigger() {
+        let cases = [
+            (FaultEvent::WorkerCrashed { worker: 3, epoch: 7 }, vec!["worker 3", "epoch 7"]),
+            (
+                FaultEvent::WorkerDegraded { worker: 1, epoch: 2, parked_dropped: 4 },
+                vec!["worker 1", "degraded", "4 parked"],
+            ),
+            (
+                FaultEvent::WorkerRestarted { worker: 0, epoch: 9, attempt: 2 },
+                vec!["worker 0", "restarted", "attempt 2"],
+            ),
+            (
+                FaultEvent::ServerStalled { server: 2, after_pushes: 100, ms: 25 },
+                vec!["server 2", "25ms", "100 pushes"],
+            ),
+            (
+                FaultEvent::Stalled { min_epoch: 5, waited_ms: 750 },
+                vec!["watchdog", "750ms", "epoch 5"],
+            ),
+        ];
+        for (ev, needles) in cases {
+            let line = ev.describe();
+            for needle in needles {
+                assert!(line.contains(needle), "{line:?} missing {needle:?}");
+            }
+        }
     }
 
     #[test]

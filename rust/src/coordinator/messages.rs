@@ -46,6 +46,33 @@ pub struct PushMsg {
 }
 
 impl PushMsg {
+    /// Re-materialize a message decoded off the wire
+    /// (`coordinator/net/wire.rs`): the timestamp is process-local and
+    /// never crosses a socket, and `recycle` points at the *receiving*
+    /// lane's buffer pool — the sender's pool got its buffer back at
+    /// encode time, so pooled-buffer conservation holds independently
+    /// on each side of the connection.
+    pub fn from_wire(
+        worker: usize,
+        block: usize,
+        w: AlignedBuf,
+        worker_epoch: usize,
+        z_version_used: u64,
+        block_seq: u64,
+        recycle: Option<Sender<AlignedBuf>>,
+    ) -> PushMsg {
+        PushMsg {
+            worker,
+            block,
+            w,
+            worker_epoch,
+            z_version_used,
+            block_seq,
+            sent_at: None,
+            recycle,
+        }
+    }
+
     /// Send the pooled buffer home (the normal post-`handle_push` path).
     /// Idempotent: the return address is taken on first use.
     pub fn recycle_now(&mut self) {

@@ -40,6 +40,7 @@ mod delay;
 mod events;
 mod fault;
 mod messages;
+pub(crate) mod net;
 mod placement;
 mod rebalance;
 mod sched;
@@ -56,6 +57,8 @@ pub use delay::DelayPolicy;
 pub use events::ObjSample;
 pub use fault::{FaultEvent, FaultPlan};
 pub use messages::PushMsg;
+pub use net::wire;
+pub use net::{serve_main, work_main, StatsServer, TcpPushSender, TcpTransport};
 pub use placement::{
     load_imbalance, make_placement, ContiguousPlacement, DegreePlacement, DynamicPlacement,
     HashPlacement, Placement, RoundRobinPlacement,

@@ -1,0 +1,177 @@
+//! Hand-rolled HTTP/1.1 stats endpoint (`--set stats_addr=HOST:PORT`).
+//!
+//! One thread, one non-blocking listener, zero dependencies: enough
+//! HTTP to let `curl`/a browser/a test's bare `TcpStream` watch a run.
+//!
+//! * `GET /stats`   → `200 application/json` — a live snapshot built by
+//!   the closure the runtime registers (per-shard load, applied-push
+//!   counters, placement map, migration ledger, fault events).
+//! * `GET /healthz` → `200 text/plain` `ok` — liveness only.
+//! * anything else  → `404` (unknown path) or `405` (non-GET).
+//!
+//! Requests are served sequentially — this is an observability tap for
+//! a handful of human/test clients, not a web server.  Each connection
+//! is read with a short timeout and closed after one response
+//! (`Connection: close`), so a stuck client cannot wedge the thread for
+//! long and teardown is prompt.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Builds the `/stats` JSON on demand; registered by the runtime that
+/// owns the counters.
+pub type StatsFn = Arc<dyn Fn() -> Json + Send + Sync>;
+
+/// A running stats endpoint; dropping it (or calling [`StatsServer::stop`])
+/// shuts the thread down.
+pub struct StatsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl StatsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:8080`, or `:0` for an ephemeral
+    /// port) and serve `stats` until stopped.
+    pub fn spawn(addr: &str, stats: StatsFn) -> Result<StatsServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("stats_addr {addr:?} (expected host:port)"))?;
+        let local = listener.local_addr().context("stats listener local_addr")?;
+        listener.set_nonblocking(true).context("nonblocking stats listener")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let thread = std::thread::Builder::new()
+            .name("stats-http".into())
+            .spawn(move || serve_loop(listener, stats, stop2))
+            .context("spawn stats thread")?;
+        Ok(StatsServer { addr: local, stop, thread: Some(thread) })
+    }
+
+    /// The bound address (resolves a `:0` port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop serving and join the thread.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for StatsServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn serve_loop(listener: TcpListener, stats: StatsFn, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((conn, _)) => {
+                let _ = serve_one(conn, &stats);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => {}
+        }
+    }
+}
+
+/// Read one request head, write one response, close.
+fn serve_one(mut conn: TcpStream, stats: &StatsFn) -> Result<()> {
+    conn.set_read_timeout(Some(Duration::from_millis(500))).ok();
+    conn.set_nodelay(true).ok();
+    let mut head = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    // Read until the blank line ends the header block (we ignore the
+    // headers themselves — method + path decide everything).
+    while !head.windows(4).any(|w| w == b"\r\n\r\n") && head.len() < 8192 {
+        match conn.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => head.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => break, // timeout or reset: respond to what we have
+        }
+    }
+    let request = String::from_utf8_lossy(&head);
+    let mut parts = request.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let (status, content_type, body): (&str, &str, String) = if method != "GET" {
+        ("405 Method Not Allowed", "text/plain", "GET only\n".into())
+    } else {
+        match path {
+            "/healthz" => ("200 OK", "text/plain", "ok\n".into()),
+            "/stats" => ("200 OK", "application/json", {
+                let mut s = stats().to_string_pretty();
+                s.push('\n');
+                s
+            }),
+            _ => ("404 Not Found", "text/plain", "unknown path (try /stats or /healthz)\n".into()),
+        }
+    };
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    conn.write_all(response.as_bytes()).context("write response")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{num, obj};
+
+    /// Bare-TcpStream client: the same curl-free probe the netproc CI
+    /// job uses.
+    fn get(addr: SocketAddr, path: &str) -> (String, String) {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").as_bytes()).unwrap();
+        let mut raw = String::new();
+        conn.read_to_string(&mut raw).unwrap();
+        let (head, body) = raw.split_once("\r\n\r\n").expect("header/body split");
+        (head.lines().next().unwrap_or("").to_string(), body.to_string())
+    }
+
+    #[test]
+    fn serves_stats_healthz_and_errors() {
+        let server = StatsServer::spawn(
+            "127.0.0.1:0",
+            Arc::new(|| obj(vec![("pushes_total", num(42.0))])),
+        )
+        .unwrap();
+        let addr = server.addr();
+
+        let (status, body) = get(addr, "/healthz");
+        assert!(status.contains("200"), "healthz: {status}");
+        assert_eq!(body, "ok\n");
+
+        let (status, body) = get(addr, "/stats");
+        assert!(status.contains("200"), "stats: {status}");
+        let parsed = Json::parse(&body).expect("stats body is JSON");
+        assert_eq!(parsed.get("pushes_total"), Some(&Json::Num(42.0)));
+
+        let (status, _) = get(addr, "/nope");
+        assert!(status.contains("404"), "unknown path: {status}");
+    }
+
+    #[test]
+    fn malformed_stats_addr_error_names_the_expected_form() {
+        let err = StatsServer::spawn("not-an-addr", Arc::new(|| Json::Null)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("host:port"), "error should show the form: {msg}");
+    }
+}

@@ -1,0 +1,25 @@
+//! Networked runtime: the multi-process face of the coordinator.
+//!
+//! Everything in here is std-only (`std::net` + threads): a
+//! length-prefixed little-endian wire format ([`wire`]), a TCP
+//! implementation of the [`super::transport::Transport`] contract
+//! ([`tcp`]), the `asybadmm serve` / `asybadmm work` process roles and
+//! their join/handshake + owner-republish control protocol ([`proc`]),
+//! and a hand-rolled HTTP/1.1 stats endpoint ([`http`]).
+//!
+//! The layering rule: nothing above the transport knows whether a push
+//! crossed a channel or a socket.  `net` adds *reach*, not semantics —
+//! FIFO per (worker, server) lane, exact in-flight bounds, drain-then-
+//! `None` shutdown, and reconnect all mean the same thing here as in
+//! `coordinator/transport.rs`, which is what lets the seq-gated apply,
+//! work stealing, dynamic re-placement and fault handling run unchanged
+//! across machines.
+
+pub mod http;
+pub mod proc;
+pub mod tcp;
+pub mod wire;
+
+pub use http::StatsServer;
+pub use proc::{serve_main, work_main};
+pub use tcp::{TcpPushSender, TcpTransport};

@@ -1,0 +1,921 @@
+//! Multi-process roles: `asybadmm serve` / `asybadmm work`.
+//!
+//! Splits the threaded runtime across OS processes with **zero new
+//! dependencies**: the coordinator process owns the server shards, the
+//! authoritative [`BlockStore`], the [`BlockTable`], the rebalancer and
+//! the `/stats` control plane; each worker process owns a slice of the
+//! worker ranks and talks to the coordinator over the
+//! [`super::tcp::TcpTransport`] wire format.
+//!
+//! ## Protocol (all frames from `wire.rs`)
+//!
+//! 1. **Join**: a worker process dials the coordinator and sends
+//!    `JoinCtl{rank, n_ranks}`.  The coordinator replies
+//!    `Welcome{config kv text, n_blocks, owner map, map_version}` on the
+//!    same stream; the worker rebuilds the [`Config`] from defaults +
+//!    the shipped `key=value` lines, so both sides run byte-identical
+//!    hyper-parameters and (for synthetic data) regenerate the same
+//!    dataset from the same seed.
+//! 2. **Push lanes**: each worker rank dials `n_servers` sockets via
+//!    [`TcpPushSender::connect_remote`] — the exact credit-window
+//!    backpressure documented in `tcp.rs`, identical to the in-process
+//!    `transport=tcp` path.
+//! 3. **Mirror sync**: one extra stream per worker process
+//!    (`HelloPull`) runs a poll loop: `PullReq` ships the mirror's
+//!    per-block versions, `PullResp` returns every block whose
+//!    authoritative version is newer, and the mirror adopts them with
+//!    [`BlockStore::write_versioned`] — workers see coordinator version
+//!    numbers, so staleness accounting matches the in-process run.
+//! 4. **Owner republish**: when `placement=dynamic` migrates a block,
+//!    the coordinator writes `OwnerUpdate{block, owner, map_version}`
+//!    frames down every rank's control stream; a reader thread applies
+//!    them to the process-local [`BlockMap`] mirror.  Pushes routed to
+//!    the old owner mid-flight still apply — every shard shares one
+//!    [`BlockTable`], exactly like the in-process handoff.
+//! 5. **Done**: a rank that finished its epochs sends
+//!    `WorkerDone{rank, pushes}`; once every rank reported, the
+//!    coordinator shuts the transport down, drains, and prints the same
+//!    `# done …` summary line as `asybadmm train`.
+//!
+//! ## Deliberate simplifications
+//!
+//! * Fault injection (`--set faults=…`) and `failure=degrade|restart`
+//!   stay with the in-process runtime: a worker process clears the
+//!   shipped fault plan (a remote crash is a process exit, reported as
+//!   a hard error by the coordinator when the control stream drops).
+//! * `--set data=FILE` requires the file to be readable by every
+//!   process; the default synthetic dataset needs nothing shared.
+
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::super::block_store::BlockStore;
+use super::super::compute::make_compute;
+use super::super::delay::DelayPolicy;
+use super::super::fault::FaultPlan;
+use super::super::placement::make_placement;
+use super::super::rebalance::{BlockMap, Rebalancer};
+use super::super::sched::{run_pool, run_server, ShardRt};
+use super::super::server::{BlockTable, ProxBackend, ServerShard};
+use super::super::session::MonitorGate;
+use super::super::topology::Topology;
+use super::super::transport::{push_inflight, PushSender, Transport};
+use super::super::worker::WorkerCtx;
+use super::http::StatsServer;
+use super::tcp::{CtlConn, TcpPushSender, TcpTransport};
+use super::wire::{self, kind};
+use crate::admm::objective_at_z;
+use crate::config::{Backend, Config, PlacementKind, TransportKind};
+use crate::data::{gen_partitioned, load_libsvm, partition_even, Dataset, WorkerShard};
+use crate::info;
+use crate::problem::Problem;
+use crate::runtime::{Manifest, ServerProxXla};
+use crate::sparse::Kernels;
+use crate::util::cli::{Args, Parsed};
+use crate::util::json::{num, obj, Json};
+
+/// Mirror-refresh poll cadence (worker side).  Each round is one
+/// request/response on an otherwise idle stream; 500µs keeps mirror
+/// staleness far below an epoch at negligible bandwidth.
+const PULL_POLL: Duration = Duration::from_micros(500);
+
+/// How long `serve` waits between join events before giving up on the
+/// barrier (a worker process that died pre-join must not wedge the
+/// coordinator forever).
+const JOIN_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Per-lane in-flight cap for the multi-process transport: the global
+/// budget [`push_inflight`] split per worker, floored so a lane can
+/// always hold a frame plus a partial batch.  Serve and work compute
+/// this independently from the same config — the two sides' credit
+/// windows must agree.
+fn lane_cap(cfg: &Config) -> usize {
+    push_inflight(cfg.n_workers).div_ceil(cfg.n_workers.max(1)).max(2)
+}
+
+/// Generate or load the dataset + shards for a config (the `main.rs`
+/// helper, duplicated here because the binary crate's items are not
+/// visible to the library).  Deterministic for synthetic specs: every
+/// process regenerates identical shards from the config seed.
+fn load_data(cfg: &Config) -> Result<(Dataset, Vec<WorkerShard>)> {
+    match &cfg.data_path {
+        Some(path) => {
+            let ds = load_libsvm(path, cfg.loss, cfg.block_size)?;
+            let shards = partition_even(&ds, cfg.n_workers);
+            Ok((ds, shards))
+        }
+        None => Ok(gen_partitioned(&cfg.synth_spec(), cfg.n_workers)),
+    }
+}
+
+fn build_config(p: &Parsed) -> Result<Config> {
+    let mut cfg = Config::default();
+    let file = p.get("config");
+    if !file.is_empty() {
+        cfg.apply_file(std::path::Path::new(file))?;
+    }
+    for kv in p.get("set").split(',').filter(|s| !s.is_empty()) {
+        let (k, v) = kv
+            .split_once('=')
+            .with_context(|| format!("--set expects key=value, got {kv:?}"))?;
+        cfg.apply_kv(k, v)?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+// ---------------------------------------------------------------------
+// Handshake payloads
+// ---------------------------------------------------------------------
+
+/// The `Welcome` config body: non-default keys as `key=value` lines.
+fn config_kv_text(cfg: &Config) -> String {
+    cfg.to_kv().iter().map(|(k, v)| format!("{k}={v}\n")).collect()
+}
+
+fn encode_welcome(cfg: &Config, owners: &[usize], map_version: u64) -> Vec<u8> {
+    let mut p = Vec::new();
+    wire::put_str(&mut p, &config_kv_text(cfg));
+    wire::put_u32(&mut p, owners.len() as u32);
+    for &s in owners {
+        wire::put_u32(&mut p, s as u32);
+    }
+    wire::put_u64(&mut p, map_version);
+    p
+}
+
+fn decode_welcome(payload: &[u8]) -> Result<(Config, Vec<usize>, u64)> {
+    let mut cur = wire::Cursor::new(kind::WELCOME, payload)?;
+    let kv = cur.str("config")?.to_string();
+    let n_blocks = cur.u32("n_blocks")? as usize;
+    let mut owners = Vec::with_capacity(n_blocks);
+    for _ in 0..n_blocks {
+        owners.push(cur.u32("owner")? as usize);
+    }
+    let map_version = cur.u64("map_version")?;
+    cur.finish()?;
+    let mut cfg = Config::default();
+    for line in kv.lines().filter(|l| !l.trim().is_empty()) {
+        let (k, v) = line
+            .split_once('=')
+            .with_context(|| format!("Welcome config line {line:?}"))?;
+        cfg.apply_kv(k, v)?;
+    }
+    // The coordinator owns the observability endpoint and the fault
+    // plan; a worker process re-binding the same stats address or
+    // re-injecting the same faults would double them up.
+    cfg.stats_addr.clear();
+    cfg.faults.clear();
+    cfg.validate()?;
+    anyhow::ensure!(
+        cfg.n_blocks == n_blocks,
+        "Welcome owner map covers {n_blocks} blocks, config says {}",
+        cfg.n_blocks
+    );
+    anyhow::ensure!(
+        owners.iter().all(|&s| s < cfg.n_servers),
+        "Welcome owner map references a server shard >= {}",
+        cfg.n_servers
+    );
+    Ok((cfg, owners, map_version))
+}
+
+fn parse_rank(s: &str) -> Result<(usize, usize)> {
+    let (r, n) = s
+        .split_once('/')
+        .with_context(|| format!("--rank {s:?}: expected R/N (e.g. 0/2)"))?;
+    let r: usize = r.trim().parse().with_context(|| format!("--rank {s:?}: bad rank"))?;
+    let n: usize =
+        n.trim().parse().with_context(|| format!("--rank {s:?}: bad rank count"))?;
+    anyhow::ensure!(n >= 1 && r < n, "--rank {s}: rank must be in 0..{n}");
+    Ok((r, n))
+}
+
+// ---------------------------------------------------------------------
+// serve
+// ---------------------------------------------------------------------
+
+/// `asybadmm serve` entry point.
+pub fn serve_main(argv: &[String]) -> Result<()> {
+    let p = Args::new(
+        "coordinator process: server shards + BlockTable + rebalancer; \
+         worker processes join over TCP (`asybadmm work`)",
+    )
+    .opt("listen", "127.0.0.1:0", "listen address (host:port; port 0 picks one)")
+    .opt("config", "", "config file (TOML-subset key = value)")
+    .opt(
+        "set",
+        "",
+        "comma-separated key=value config overrides (same keys as `asybadmm \
+         train`, e.g. stats_addr=HOST:PORT, placement=dynamic, batch=N; an \
+         unknown key lists all valid keys)",
+    )
+    .parse_from(argv);
+    let mut cfg = build_config(&p)?;
+    // The multi-process runtime IS the tcp transport; pin the canonical
+    // value so the shipped kv text says what actually runs.
+    cfg.transport = TransportKind::Tcp;
+    serve(&cfg, p.get("listen"))
+}
+
+fn serve(cfg: &Config, listen: &str) -> Result<()> {
+    let (ds, shards) = load_data(cfg)?;
+    let problem = Problem::new(cfg.loss, cfg.lambda, cfg.clip);
+    let weight = 1.0 / ds.samples() as f32;
+    let placement = make_placement(cfg.placement);
+    let topo = Topology::build_with(&shards, cfg.n_blocks, cfg.n_servers, placement.as_ref());
+    let store = Arc::new(BlockStore::new(cfg.n_blocks, cfg.block_size));
+    let kernels = Kernels::select(cfg.kernel);
+    let dynamic = cfg.placement == PlacementKind::Dynamic;
+    let table = Arc::new(BlockTable::with_kernels(
+        &topo,
+        store.clone(),
+        problem,
+        cfg.rho,
+        cfg.gamma,
+        kernels,
+    ));
+    let map = Arc::new(BlockMap::new(&topo.server_of_block));
+    let manifest: Arc<Option<Manifest>> = Arc::new(match cfg.backend {
+        Backend::Xla => Some(Manifest::load(&cfg.artifacts_dir)?),
+        Backend::Native => None,
+    });
+
+    let transport =
+        TcpTransport::bind(listen, cfg.n_workers, cfg.n_servers, lane_cap(cfg), cfg.batch)?;
+    let (ctl_tx, ctl_rx) = channel::<CtlConn>();
+    transport.set_ctl_hook(ctl_tx);
+    println!("# {}", cfg.summary());
+    println!("# dataset {}: m={} d={} nnz={}", ds.name, ds.samples(), ds.dim(), ds.a.nnz());
+    // Parsed by `asybadmm work` launchers and tests/netproc.rs; Rust
+    // stdout is line-buffered even when piped, so these appear live.
+    println!("# listening on {}", transport.local_addr());
+
+    let _stats_server = if cfg.stats_addr.is_empty() {
+        None
+    } else {
+        let table = table.clone();
+        let map = map.clone();
+        let n_servers = cfg.n_servers;
+        let server = StatsServer::spawn(
+            &cfg.stats_addr,
+            Arc::new(move || {
+                let counts = table.push_counts();
+                let owners = map.snapshot();
+                let mut shard_load = vec![0usize; n_servers];
+                for (j, &c) in counts.iter().enumerate() {
+                    shard_load[owners[j]] += c;
+                }
+                obj(vec![
+                    ("pushes_total", num(counts.iter().sum::<usize>() as f64)),
+                    ("push_counts", Json::Arr(counts.iter().map(|&c| num(c as f64)).collect())),
+                    ("placement", Json::Arr(owners.iter().map(|&o| num(o as f64)).collect())),
+                    (
+                        "shard_load",
+                        Json::Arr(shard_load.iter().map(|&l| num(l as f64)).collect()),
+                    ),
+                    ("map_version", num(map.version() as f64)),
+                    ("migrations", num(map.migrations() as f64)),
+                    // Serve mode runs fault-free (module docs); the key
+                    // stays so /stats consumers see one schema.
+                    ("faults", Json::Arr(Vec::new())),
+                ])
+            }),
+        )?;
+        println!("# stats on {}", server.addr());
+        Some(server)
+    };
+
+    // -- server threads (plain spawns, not a scope: any error below
+    //    must be able to exit the process without first waiting out a
+    //    drain loop that only a clean shutdown unblocks) --------------
+    let shard_rts: Arc<Vec<ShardRt>> = Arc::new(
+        (0..cfg.n_servers)
+            .map(|sid| {
+                let shard = ServerShard::with_table(sid, &topo, table.clone(), !dynamic);
+                ShardRt::new(shard, &transport)
+            })
+            .collect(),
+    );
+    let n_threads = if cfg.server_threads == 0 { cfg.n_servers } else { cfg.server_threads };
+    let mut server_handles = Vec::with_capacity(n_threads);
+    for tid in 0..n_threads {
+        let rts = shard_rts.clone();
+        let manifest = manifest.clone();
+        let (drain, n_servers, block_size) = (cfg.drain, cfg.n_servers, cfg.block_size);
+        server_handles.push(
+            std::thread::Builder::new()
+                .name(format!("server-{tid}"))
+                .spawn(move || {
+                    let prox = match &*manifest {
+                        None => ProxBackend::Native,
+                        Some(m) => match ServerProxXla::load(m, block_size) {
+                            Ok(p) => ProxBackend::Xla(p),
+                            Err(e) => {
+                                eprintln!(
+                                    "server thread {tid}: XLA prox unavailable ({e:#}); native fallback"
+                                );
+                                ProxBackend::Native
+                            }
+                        },
+                    };
+                    if n_threads == n_servers {
+                        run_server(&rts, tid, drain, &prox).expect("server loop failed");
+                    } else {
+                        run_pool(&rts, tid, &prox).expect("server pool loop failed");
+                    }
+                })
+                .context("spawn server thread")?,
+        );
+    }
+
+    // -- join barrier: every rank sends JoinCtl, gets Welcome ----------
+    let mut n_ranks: Option<usize> = None;
+    let mut joined: Vec<Option<TcpStream>> = Vec::new();
+    let mut joined_count = 0usize;
+    while n_ranks.map_or(true, |n| joined_count < n) {
+        let conn = match ctl_rx.recv_timeout(JOIN_TIMEOUT) {
+            Ok(conn) => conn,
+            Err(RecvTimeoutError::Timeout) => bail!(
+                "no worker joined within {}s ({joined_count} rank(s) connected so far); \
+                 start `asybadmm work --connect {} --rank R/N`",
+                JOIN_TIMEOUT.as_secs(),
+                transport.local_addr()
+            ),
+            Err(RecvTimeoutError::Disconnected) => {
+                bail!("control channel closed before all ranks joined")
+            }
+        };
+        match conn.kind {
+            kind::JOIN_CTL => {
+                let mut cur = wire::Cursor::new(kind::JOIN_CTL, &conn.payload)?;
+                let rank = cur.u32("rank")? as usize;
+                let ranks = cur.u32("n_ranks")? as usize;
+                cur.finish()?;
+                anyhow::ensure!(
+                    ranks >= 1 && ranks <= cfg.n_workers,
+                    "JoinCtl: n_ranks {ranks} outside 1..={} (every rank needs a worker)",
+                    cfg.n_workers
+                );
+                anyhow::ensure!(rank < ranks, "JoinCtl: rank {rank} out of range 0..{ranks}");
+                match n_ranks {
+                    None => {
+                        n_ranks = Some(ranks);
+                        joined.resize_with(ranks, || None);
+                    }
+                    Some(n) => anyhow::ensure!(
+                        n == ranks,
+                        "JoinCtl: rank {rank} claims {ranks} ranks, first join said {n}"
+                    ),
+                }
+                anyhow::ensure!(joined[rank].is_none(), "rank {rank} joined twice");
+                let mut stream = conn.stream;
+                wire::write_frame(
+                    &mut stream,
+                    kind::WELCOME,
+                    &encode_welcome(cfg, &map.snapshot(), map.version()),
+                )
+                .with_context(|| format!("sending Welcome to rank {rank}"))?;
+                info!("serve", "rank {rank}/{ranks} joined");
+                joined[rank] = Some(stream);
+                joined_count += 1;
+            }
+            // A rank's mirror-sync stream may open before the last rank
+            // joins; serve it right away.
+            kind::HELLO_PULL => spawn_pull_thread(conn.stream, store.clone()),
+            other => bail!("unexpected {} frame on the control plane", wire::kind_name(other)),
+        }
+    }
+    let n_ranks = n_ranks.expect("join barrier complete");
+
+    // Late control connections (a pull stream opening after the
+    // barrier) drain on their own thread for the rest of the run.
+    let stop_ctl = Arc::new(AtomicBool::new(false));
+    let ctl_drain = {
+        let store = store.clone();
+        let stop = stop_ctl.clone();
+        std::thread::Builder::new()
+            .name("ctl-drain".into())
+            .spawn(move || loop {
+                match ctl_rx.recv_timeout(Duration::from_millis(50)) {
+                    Ok(conn) if conn.kind == kind::HELLO_PULL => {
+                        spawn_pull_thread(conn.stream, store.clone())
+                    }
+                    Ok(conn) => {
+                        eprintln!("late {} connection refused", wire::kind_name(conn.kind))
+                    }
+                    Err(RecvTimeoutError::Timeout) => {
+                        if stop.load(Ordering::Acquire) {
+                            return;
+                        }
+                    }
+                    Err(RecvTimeoutError::Disconnected) => return,
+                }
+            })
+            .context("spawn control drain thread")?
+    };
+
+    // Split each rank's control stream: the read half waits for
+    // WorkerDone, the write half carries OwnerUpdate republishes.
+    let mut ctl_writers = Vec::with_capacity(n_ranks);
+    let (done_tx, done_rx) = channel::<(usize, u64)>();
+    for (rank, slot) in joined.into_iter().enumerate() {
+        let stream = slot.expect("join barrier complete");
+        ctl_writers.push(stream.try_clone().context("clone control stream")?);
+        let done_tx = done_tx.clone();
+        std::thread::Builder::new()
+            .name(format!("ctl-rank-{rank}"))
+            .spawn(move || ctl_read_loop(rank, stream, done_tx))
+            .context("spawn control reader")?;
+    }
+    drop(done_tx);
+
+    // -- monitor: collect WorkerDone, drive the rebalancer, republish -
+    let start = Instant::now();
+    let mut rebalancer = (dynamic && cfg.n_servers > 1)
+        .then(|| Rebalancer::new(map.clone(), table.clone(), cfg.n_servers));
+    let rebalance_every = Duration::from_millis(cfg.rebalance_ms.max(1));
+    let mut last_scan = Instant::now();
+    let mut owners_prev = map.snapshot();
+    let tick = Duration::from_millis(cfg.rebalance_ms.clamp(5, 100));
+    let mut done_ranks = 0usize;
+    let mut sent_total = 0u64;
+    while done_ranks < n_ranks {
+        match done_rx.recv_timeout(tick) {
+            Ok((rank, pushes)) => {
+                done_ranks += 1;
+                sent_total += pushes;
+                info!(
+                    "serve",
+                    "rank {rank} done ({pushes} pushes; {done_ranks}/{n_ranks} ranks)"
+                );
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => bail!(
+                "a worker process exited without finishing ({done_ranks}/{n_ranks} ranks done)"
+            ),
+        }
+        if let Some(rb) = rebalancer.as_mut() {
+            if last_scan.elapsed() >= rebalance_every {
+                rb.scan();
+                last_scan = Instant::now();
+                let changed = map.diff(&owners_prev);
+                if !changed.is_empty() {
+                    let version = map.version();
+                    for &(j, s) in &changed {
+                        owners_prev[j] = s;
+                        let mut p = Vec::with_capacity(16);
+                        wire::put_u32(&mut p, j as u32);
+                        wire::put_u32(&mut p, s as u32);
+                        wire::put_u64(&mut p, version);
+                        // A rank that already finished may have closed
+                        // its stream; EPIPE here is not an error.
+                        for w in ctl_writers.iter_mut() {
+                            let _ = wire::write_frame(w, kind::OWNER_UPDATE, &p);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // -- drain + summary ----------------------------------------------
+    transport.shutdown();
+    for h in server_handles {
+        h.join().map_err(|_| anyhow::anyhow!("server thread panicked"))?;
+    }
+    stop_ctl.store(true, Ordering::Release);
+    let _ = ctl_drain.join();
+    let applied: usize = shard_rts.iter().map(|rt| rt.shard.stats().pushes).sum();
+    let final_obj = objective_at_z(&shards, &problem, weight, &store.snapshot());
+    println!(
+        "# done in {:.3}s: objective {:.6} (data {:.6} + reg {:.6}); pushes={} sent={} migrations={}",
+        start.elapsed().as_secs_f64(),
+        final_obj.total(),
+        final_obj.data_loss,
+        final_obj.reg,
+        applied,
+        sent_total,
+        map.migrations()
+    );
+    Ok(())
+}
+
+fn spawn_pull_thread(stream: TcpStream, store: Arc<BlockStore>) {
+    // Detached: exits on its worker's EOF, reaped at process exit
+    // otherwise.
+    let _ = std::thread::Builder::new()
+        .name("pull-serve".into())
+        .spawn(move || pull_serve_loop(stream, store));
+}
+
+/// Answer one worker process's `PullReq` stream until it hangs up.
+fn pull_serve_loop(mut stream: TcpStream, store: Arc<BlockStore>) {
+    let n = store.n_blocks();
+    let db = store.block_size();
+    let mut block = vec![0.0f32; db];
+    let mut resp = Vec::new();
+    loop {
+        let payload = match wire::read_frame(&mut stream) {
+            Ok(Some((kind::PULL_REQ, p))) => p,
+            Ok(Some((k, _))) => {
+                eprintln!("pull stream: unexpected {} frame", wire::kind_name(k));
+                return;
+            }
+            Ok(None) | Err(_) => return,
+        };
+        let built = (|| -> Result<()> {
+            let mut cur = wire::Cursor::new(kind::PULL_REQ, &payload)?;
+            let req_n = cur.u32("n_blocks")? as usize;
+            anyhow::ensure!(req_n == n, "PullReq covers {req_n} blocks, store has {n}");
+            resp.clear();
+            wire::put_u32(&mut resp, 0); // changed-block count, patched below
+            let mut count = 0u32;
+            for j in 0..n {
+                let have = cur.u64("have_version")?;
+                let v = store.read_into(j, &mut block);
+                if v > have {
+                    wire::put_u32(&mut resp, j as u32);
+                    wire::put_u64(&mut resp, v);
+                    wire::put_u32(&mut resp, db as u32);
+                    wire::put_f32s(&mut resp, &block);
+                    count += 1;
+                }
+            }
+            cur.finish()?;
+            resp[0..4].copy_from_slice(&count.to_le_bytes());
+            Ok(())
+        })();
+        if let Err(e) = built {
+            eprintln!("pull stream: bad PullReq: {e:#}");
+            return;
+        }
+        if wire::write_frame(&mut stream, kind::PULL_RESP, &resp).is_err() {
+            return;
+        }
+    }
+}
+
+/// Wait for one rank's `WorkerDone` (or its death) on the control
+/// stream's read half.
+fn ctl_read_loop(rank: usize, mut stream: TcpStream, done: Sender<(usize, u64)>) {
+    loop {
+        match wire::read_frame(&mut stream) {
+            Ok(Some((kind::WORKER_DONE, payload))) => {
+                let parsed = (|| -> Result<(usize, u64)> {
+                    let mut cur = wire::Cursor::new(kind::WORKER_DONE, &payload)?;
+                    let r = cur.u32("rank")? as usize;
+                    let pushes = cur.u64("pushes")?;
+                    cur.finish()?;
+                    Ok((r, pushes))
+                })();
+                match parsed {
+                    Ok((r, pushes)) => {
+                        let _ = done.send((r, pushes));
+                    }
+                    Err(e) => eprintln!("rank {rank}: bad WorkerDone: {e:#}"),
+                }
+                return;
+            }
+            Ok(Some((k, _))) => {
+                eprintln!("rank {rank}: unexpected {} on control stream", wire::kind_name(k))
+            }
+            // EOF without WorkerDone: the rank died.  Dropping `done`
+            // is the signal — once every reader exits, the monitor's
+            // channel disconnects and serve reports the failure.
+            Ok(None) => return,
+            Err(e) => {
+                eprintln!("rank {rank}: control stream error: {e:#}");
+                return;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// work
+// ---------------------------------------------------------------------
+
+/// `asybadmm work` entry point.
+pub fn work_main(argv: &[String]) -> Result<()> {
+    let p = Args::new(
+        "worker process: joins an `asybadmm serve` coordinator and runs \
+         the worker ranks w where w mod N == R",
+    )
+    .req("connect", "coordinator address (host:port, printed by `asybadmm serve`)")
+    .req("rank", "this process's share as R/N (e.g. 0/2)")
+    .parse_from(argv);
+    let (rank, n_ranks) = parse_rank(p.get("rank"))?;
+    work(p.get("connect"), rank, n_ranks)
+}
+
+fn work(connect: &str, rank: usize, n_ranks: usize) -> Result<()> {
+    let addr: SocketAddr = connect
+        .to_socket_addrs()
+        .with_context(|| format!("connect address {connect:?} (expected host:port)"))?
+        .next()
+        .with_context(|| format!("connect address {connect:?} resolved to nothing"))?;
+
+    // -- join ----------------------------------------------------------
+    let mut ctl = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to coordinator at {addr}"))?;
+    ctl.set_nodelay(true).ok();
+    let mut join = Vec::with_capacity(8);
+    wire::put_u32(&mut join, rank as u32);
+    wire::put_u32(&mut join, n_ranks as u32);
+    wire::write_frame(&mut ctl, kind::JOIN_CTL, &join).context("sending JoinCtl")?;
+    let (k, payload) = wire::read_frame(&mut ctl)
+        .context("waiting for Welcome")?
+        .context("coordinator closed the connection before Welcome")?;
+    anyhow::ensure!(k == kind::WELCOME, "expected Welcome, got {}", wire::kind_name(k));
+    let (cfg, owners, _map_version) = decode_welcome(&payload)?;
+    anyhow::ensure!(
+        n_ranks <= cfg.n_workers,
+        "rank {rank}/{n_ranks}: only {} workers configured",
+        cfg.n_workers
+    );
+    info!("work", "rank {rank}/{n_ranks} joined {addr}: {}", cfg.summary());
+
+    let (_ds, shards) = load_data(&cfg)?;
+    let problem = Problem::new(cfg.loss, cfg.lambda, cfg.clip);
+    let kernels = Kernels::select(cfg.kernel);
+    let manifest = match cfg.backend {
+        Backend::Xla => Some(Manifest::load(&cfg.artifacts_dir)?),
+        Backend::Native => None,
+    };
+    let store = Arc::new(BlockStore::new(cfg.n_blocks, cfg.block_size));
+    let map = Arc::new(BlockMap::new(&owners));
+    let policy =
+        DelayPolicy { net_mean_ms: cfg.net_delay_mean_ms, pull_hold: cfg.pull_hold.max(1) };
+    let fault_plan = FaultPlan::none();
+    let pool_cap =
+        push_inflight(cfg.n_workers) + 4 + cfg.n_servers * cfg.batch.saturating_sub(1);
+
+    // -- mirror-sync thread -------------------------------------------
+    let stop_sync = Arc::new(AtomicBool::new(false));
+    let sync_handle = {
+        let mut stream = TcpStream::connect(addr).context("connecting the mirror-sync stream")?;
+        stream.set_nodelay(true).ok();
+        let mut hello = Vec::with_capacity(4);
+        wire::put_u32(&mut hello, rank as u32);
+        wire::write_frame(&mut stream, kind::HELLO_PULL, &hello).context("sending HelloPull")?;
+        let store = store.clone();
+        let stop = stop_sync.clone();
+        std::thread::Builder::new()
+            .name("pull-sync".into())
+            .spawn(move || pull_sync_loop(stream, store, stop))
+            .context("spawn mirror-sync thread")?
+    };
+
+    // -- owner-update reader (detached; exits on the coordinator's EOF)
+    {
+        let map = map.clone();
+        let stream = ctl.try_clone().context("clone control stream")?;
+        std::thread::Builder::new()
+            .name("ctl-owner".into())
+            .spawn(move || owner_update_loop(stream, map))
+            .context("spawn owner-update thread")?;
+    }
+
+    // -- this rank's workers ------------------------------------------
+    let local: Vec<&WorkerShard> =
+        shards.iter().filter(|s| s.worker_id % n_ranks == rank).collect();
+    anyhow::ensure!(!local.is_empty(), "rank {rank}/{n_ranks}: no workers to run");
+    let progress: Vec<AtomicUsize> = (0..cfg.n_workers).map(|_| AtomicUsize::new(0)).collect();
+    let gate = MonitorGate::new();
+    let ledgers: Vec<Vec<AtomicU64>> = shards
+        .iter()
+        .map(|s| (0..s.n_slots()).map(|_| AtomicU64::new(0)).collect())
+        .collect();
+
+    // Dial every lane before spawning anything: a refused connection
+    // fails the rank instead of stranding half-started workers.
+    let mut senders = Vec::with_capacity(local.len());
+    for shard in &local {
+        senders.push(
+            TcpPushSender::connect_remote(
+                &addr,
+                shard.worker_id,
+                cfg.n_servers,
+                lane_cap(&cfg),
+                cfg.batch,
+            )
+            .with_context(|| format!("worker {}: dialing push lanes", shard.worker_id))?,
+        );
+    }
+
+    let start = Instant::now();
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::with_capacity(local.len());
+        for (shard, tx) in local.iter().zip(senders) {
+            let wid = shard.worker_id;
+            let shard: &WorkerShard = shard;
+            let store = &store;
+            let router: &BlockMap = &map;
+            let progress = &progress[wid];
+            let gate = &gate;
+            let manifest = manifest.as_ref();
+            let fault_plan = &fault_plan;
+            let ledger: &[AtomicU64] = &ledgers[wid];
+            let cfg = &cfg;
+            let seed = cfg.seed ^ (0x9E37 + wid as u64 * 0x1000_0000_01B3);
+            let local_weight = 1.0 / shard.samples().max(1) as f32;
+            handles.push(scope.spawn(move || -> Result<()> {
+                let mut compute = make_compute(
+                    cfg.backend,
+                    shard,
+                    problem,
+                    local_weight,
+                    manifest,
+                    cfg.m_chunk,
+                    cfg.d_pad,
+                    kernels,
+                )
+                .context("construct worker compute backend")?;
+                let tx: Box<dyn PushSender> = Box::new(tx);
+                let mut ctx = WorkerCtx::new(
+                    shard,
+                    store,
+                    router,
+                    tx,
+                    policy,
+                    cfg.selection,
+                    cfg.rho,
+                    cfg.epochs,
+                    cfg.max_delay,
+                    cfg.enforce_delay_bound,
+                    seed,
+                    progress,
+                    gate,
+                    pool_cap,
+                    fault_plan,
+                    ledger,
+                );
+                ctx.run(compute.as_mut()).with_context(|| format!("worker {wid} loop"))?;
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().map_err(|_| anyhow::anyhow!("worker thread panicked"))??;
+        }
+        Ok(())
+    })?;
+
+    // -- report + teardown --------------------------------------------
+    // Senders dropped with the scope: their FIN is behind the last
+    // flushed push frame, so the coordinator's drain sees every message
+    // before the EOF.
+    stop_sync.store(true, Ordering::Release);
+    let _ = sync_handle.join();
+    let sent: u64 = local
+        .iter()
+        .map(|s| ledgers[s.worker_id].iter().map(|a| a.load(Ordering::Acquire)).sum::<u64>())
+        .sum();
+    let mut done = Vec::with_capacity(12);
+    wire::put_u32(&mut done, rank as u32);
+    wire::put_u64(&mut done, sent);
+    wire::write_frame(&mut ctl, kind::WORKER_DONE, &done).context("sending WorkerDone")?;
+    println!(
+        "# rank {rank}/{n_ranks} done in {:.3}s: {} workers, {sent} pushes sent",
+        start.elapsed().as_secs_f64(),
+        local.len()
+    );
+    Ok(())
+}
+
+/// Worker-side mirror refresh: poll the coordinator for blocks newer
+/// than the local replica and adopt them via
+/// [`BlockStore::write_versioned`].
+fn pull_sync_loop(mut stream: TcpStream, store: Arc<BlockStore>, stop: Arc<AtomicBool>) {
+    let n = store.n_blocks();
+    let db = store.block_size();
+    let mut req = Vec::new();
+    let mut data = vec![0.0f32; db];
+    while !stop.load(Ordering::Acquire) {
+        req.clear();
+        wire::put_u32(&mut req, n as u32);
+        for j in 0..n {
+            wire::put_u64(&mut req, store.version(j));
+        }
+        if wire::write_frame(&mut stream, kind::PULL_REQ, &req).is_err() {
+            return;
+        }
+        let (k, payload) = match wire::read_frame(&mut stream) {
+            Ok(Some(f)) => f,
+            Ok(None) | Err(_) => return,
+        };
+        if k != kind::PULL_RESP {
+            eprintln!("pull-sync: unexpected {} frame", wire::kind_name(k));
+            return;
+        }
+        let applied = (|| -> Result<()> {
+            let mut cur = wire::Cursor::new(kind::PULL_RESP, &payload)?;
+            let count = cur.u32("count")? as usize;
+            for _ in 0..count {
+                let j = cur.u32("block")? as usize;
+                let v = cur.u64("version")?;
+                let len = cur.u32("n")? as usize;
+                anyhow::ensure!(
+                    j < n && len == db,
+                    "PullResp: block {j} length {len} outside geometry {n}x{db}"
+                );
+                cur.f32s_into(&mut data, "z")?;
+                store.write_versioned(j, &data, v);
+            }
+            cur.finish()
+        })();
+        if let Err(e) = applied {
+            eprintln!("pull-sync: bad PullResp: {e:#}");
+            return;
+        }
+        std::thread::sleep(PULL_POLL);
+    }
+}
+
+/// Apply `OwnerUpdate` republishes to the process-local routing map.
+fn owner_update_loop(mut stream: TcpStream, map: Arc<BlockMap>) {
+    loop {
+        let payload = match wire::read_frame(&mut stream) {
+            Ok(Some((kind::OWNER_UPDATE, p))) => p,
+            Ok(Some((k, _))) => {
+                eprintln!("owner-update: unexpected {} frame", wire::kind_name(k));
+                return;
+            }
+            Ok(None) | Err(_) => return,
+        };
+        let applied = (|| -> Result<()> {
+            let mut cur = wire::Cursor::new(kind::OWNER_UPDATE, &payload)?;
+            let j = cur.u32("block")? as usize;
+            let s = cur.u32("owner")? as usize;
+            let _v = cur.u64("map_version")?;
+            cur.finish()?;
+            anyhow::ensure!(j < map.n_blocks(), "OwnerUpdate: block {j} out of range");
+            map.set_owner(j, s);
+            Ok(())
+        })();
+        if let Err(e) = applied {
+            eprintln!("owner-update: {e:#}");
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_spec_parses_and_rejects() {
+        assert_eq!(parse_rank("0/2").unwrap(), (0, 2));
+        assert_eq!(parse_rank("3/4").unwrap(), (3, 4));
+        assert!(parse_rank("2/2").is_err());
+        assert!(parse_rank("1").is_err());
+        assert!(parse_rank("a/b").is_err());
+        assert!(parse_rank("0/0").is_err());
+    }
+
+    #[test]
+    fn welcome_round_trips_config_and_owner_map() {
+        let mut cfg = Config::default();
+        cfg.apply_kv("n_workers", "3").unwrap();
+        cfg.apply_kv("n_servers", "2").unwrap();
+        cfg.apply_kv("epochs", "17").unwrap();
+        cfg.apply_kv("placement", "dynamic").unwrap();
+        cfg.apply_kv("batch", "2").unwrap();
+        cfg.apply_kv("stats_addr", "127.0.0.1:0").unwrap();
+        let owners: Vec<usize> = (0..cfg.n_blocks).map(|j| j % 2).collect();
+        let payload = encode_welcome(&cfg, &owners, 7);
+        let (got, got_owners, v) = decode_welcome(&payload).unwrap();
+        assert_eq!(got.n_workers, 3);
+        assert_eq!(got.n_servers, 2);
+        assert_eq!(got.epochs, 17);
+        assert_eq!(got.batch, 2);
+        assert_eq!(got_owners, owners);
+        assert_eq!(v, 7);
+        // Worker-side policy: the coordinator keeps the stats endpoint.
+        assert!(got.stats_addr.is_empty());
+    }
+
+    #[test]
+    fn welcome_rejects_owner_map_geometry_mismatch() {
+        let cfg = Config::default();
+        let mut owners: Vec<usize> = vec![0; cfg.n_blocks];
+        owners[0] = cfg.n_servers; // out-of-range shard
+        let payload = encode_welcome(&cfg, &owners, 1);
+        let err = format!("{:#}", decode_welcome(&payload).unwrap_err());
+        assert!(err.contains("server shard"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn truncated_welcome_names_the_missing_field() {
+        let cfg = Config::default();
+        let payload = encode_welcome(&cfg, &vec![0; cfg.n_blocks], 1);
+        let err = format!("{:#}", decode_welcome(&payload[..payload.len() - 4]).unwrap_err());
+        assert!(err.contains("map_version"), "unexpected error: {err}");
+    }
+}

@@ -1,0 +1,797 @@
+//! [`TcpTransport`] — the [`Transport`] contract over real sockets.
+//!
+//! Same observable semantics as the in-process mpsc/ring transports —
+//! per-(worker, server) FIFO lanes, an **exact** `inflight_bound`, a
+//! drain-then-`None` shutdown, per-lane hang-up errors, reconnect that
+//! resumes the same FIFO stream — so every layer above (seq-gated
+//! apply, work stealing, dynamic re-placement, `failure=degrade|
+//! restart`) runs unchanged whether the peer is a thread or a process.
+//!
+//! ## Shape
+//!
+//! One listener (ephemeral loopback for `--set transport=tcp` inside a
+//! process; the `--listen` address for `asybadmm serve`), one
+//! **sequential acceptor thread** that reads each connection's hello
+//! frame and parks push sockets into their (worker, server) lane queue
+//! — sequential accept + park preserves socket arrival order, which is
+//! what makes reconnect gap-free: the replacement socket can only be
+//! parked after the dead one.  Non-push hellos (`JoinCtl`,
+//! `HelloPull`) are handed to the serve-mode control plane
+//! (`coordinator/net/proc.rs`).
+//!
+//! ## Exact backpressure over TCP
+//!
+//! Kernel socket buffers are invisible and huge, so the in-flight
+//! bound is enforced with application-level **credits counted in
+//! frames**: a lane starts with `cap_b = ceil(cap / batch)` credits,
+//! every push frame (full or partial batch) spends one, and the lane
+//! receiver returns an `Ack` the moment it *decodes* a frame.  With no
+//! receiver decoding, a sender therefore stalls after exactly
+//! `cap_b × batch` queued messages plus `batch − 1` buffered in its
+//! partial batch — `inflight_bound = cap_b·batch + batch − 1`, the
+//! same accounting the SPSC ring reports.  Outstanding wire bytes are
+//! bounded by `cap_b` frames, so a blocked receiver never balloons
+//! kernel memory either.
+//!
+//! ## Pooled buffers
+//!
+//! The sender serializes `w` out of the pooled buffer and recycles it
+//! at encode time; the receiver re-materializes into a lane-local
+//! [`LeasePool`] free list.  Buffer conservation holds independently on
+//! each side; nothing allocates per message in steady state.
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::Sender as MpscSender;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::super::bufpool::LeasePool;
+use super::super::messages::PushMsg;
+use super::super::transport::{Backoff, PushReceiver, PushSender, Transport, TryRecv};
+use super::wire::{self, kind, FrameReader, Poll};
+
+/// How long the acceptor waits for a connection's hello frame before
+/// dropping it (a stuck dialer must not wedge the accept loop).
+const HELLO_TIMEOUT: Duration = Duration::from_secs(5);
+/// Bounded best-effort flush window for a dropped sender's partial
+/// batch (the explicit-flush paths wait on credits indefinitely).
+const DROP_FLUSH_DEADLINE: Duration = Duration::from_millis(250);
+
+/// A non-push connection routed off the acceptor to the serve-mode
+/// control plane: the hello frame that identified it plus the stream,
+/// back in blocking mode.
+pub struct CtlConn {
+    pub kind: u8,
+    pub payload: Vec<u8>,
+    pub stream: TcpStream,
+}
+
+/// Per-(worker, server) lane state shared between the acceptor, the
+/// sender (in-process fast-path close detection) and the lane receiver.
+struct LaneShared {
+    /// Replacement sockets parked by the acceptor, oldest first.
+    incoming: Mutex<VecDeque<TcpStream>>,
+    /// The receiving endpoint was dropped: senders fail fast with
+    /// "server S hung up" instead of waiting for a socket error.
+    closed: AtomicBool,
+    /// Sockets ever dialed at this lane (local dials count at dial
+    /// time, remote ones when their hello is parked).  The lane is
+    /// drained only once it has consumed EOF on this many sockets.
+    dialed: AtomicUsize,
+}
+
+struct Shared {
+    addr: SocketAddr,
+    n_workers: usize,
+    n_servers: usize,
+    /// Credit window per lane, in frames.
+    cap_b: usize,
+    batch: usize,
+    shutdown: AtomicBool,
+    stop_accept: AtomicBool,
+    /// `lanes[server][worker]`.
+    lanes: Vec<Vec<LaneShared>>,
+    worker_connected: Vec<AtomicBool>,
+    server_taken: Vec<AtomicBool>,
+    /// Serve-mode hook: where the acceptor routes non-push hellos.
+    ctl: Mutex<Option<MpscSender<CtlConn>>>,
+}
+
+impl Shared {
+    fn lane(&self, server: usize, worker: usize) -> &LaneShared {
+        &self.lanes[server][worker]
+    }
+}
+
+/// TCP implementation of [`Transport`] (see module docs).
+pub struct TcpTransport {
+    shared: Arc<Shared>,
+    acceptor: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl TcpTransport {
+    /// In-process loopback transport (`--set transport=tcp`): binds an
+    /// ephemeral 127.0.0.1 port.  `cap` is the per-lane in-flight
+    /// message budget (the ring's `ring_cap` analogue); the credit
+    /// window is `ceil(cap / batch)` frames.
+    pub fn new(n_workers: usize, n_servers: usize, cap: usize, batch: usize) -> Self {
+        Self::bind("127.0.0.1:0", n_workers, n_servers, cap, batch)
+            .expect("bind ephemeral loopback listener")
+    }
+
+    /// Bind `listen` and start the acceptor (the `asybadmm serve`
+    /// entry; malformed addresses error with the `host:port` form).
+    pub fn bind(
+        listen: &str,
+        n_workers: usize,
+        n_servers: usize,
+        cap: usize,
+        batch: usize,
+    ) -> Result<Self> {
+        assert!(batch >= 1, "batch must be >= 1");
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("listen address {listen:?} (expected host:port)"))?;
+        let addr = listener.local_addr().context("listener local_addr")?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        let cap_b = cap.div_ceil(batch).max(1);
+        let shared = Arc::new(Shared {
+            addr,
+            n_workers,
+            n_servers,
+            cap_b,
+            batch,
+            shutdown: AtomicBool::new(false),
+            stop_accept: AtomicBool::new(false),
+            lanes: (0..n_servers)
+                .map(|_| {
+                    (0..n_workers)
+                        .map(|_| LaneShared {
+                            incoming: Mutex::new(VecDeque::new()),
+                            closed: AtomicBool::new(false),
+                            dialed: AtomicUsize::new(0),
+                        })
+                        .collect()
+                })
+                .collect(),
+            worker_connected: (0..n_workers).map(|_| AtomicBool::new(false)).collect(),
+            server_taken: (0..n_servers).map(|_| AtomicBool::new(false)).collect(),
+            ctl: Mutex::new(None),
+        });
+        let accept_shared = shared.clone();
+        let acceptor = std::thread::Builder::new()
+            .name("tcp-accept".into())
+            .spawn(move || accept_loop(listener, accept_shared))
+            .context("spawn acceptor")?;
+        Ok(TcpTransport { shared, acceptor: Mutex::new(Some(acceptor)) })
+    }
+
+    /// The bound address (resolves a `:0` listen port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// Serve mode: route `JoinCtl`/`HelloPull` connections to `hook`
+    /// instead of dropping them.
+    pub fn set_ctl_hook(&self, hook: MpscSender<CtlConn>) {
+        *self.shared.ctl.lock().unwrap() = Some(hook);
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        self.shared.stop_accept.store(true, Ordering::Release);
+        if let Some(h) = self.acceptor.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    while !shared.stop_accept.load(Ordering::Acquire) {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_micros(500));
+                continue;
+            }
+            Err(_) => continue,
+        };
+        // Sequential hello read: parking order == connection order,
+        // the property reconnect's gap-free FIFO relies on.
+        let _ = admit(stream, &shared);
+    }
+}
+
+/// Read one hello frame (blocking, bounded) and route the connection.
+fn admit(stream: TcpStream, shared: &Shared) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(HELLO_TIMEOUT)).ok();
+    let mut s = stream;
+    let Some((k, payload)) = wire::read_frame(&mut s)? else {
+        return Ok(()); // dialed and closed without a hello
+    };
+    match k {
+        kind::HELLO_PUSH => {
+            let mut cur = wire::Cursor::new(k, &payload)?;
+            let worker = cur.u32("worker")? as usize;
+            let server = cur.u32("server")? as usize;
+            let local = cur.u8("local")?;
+            cur.finish()?;
+            if worker >= shared.n_workers || server >= shared.n_servers {
+                bail!("hello for unknown lane (worker {worker}, server {server})");
+            }
+            s.set_read_timeout(None).ok();
+            s.set_nonblocking(true).context("nonblocking lane socket")?;
+            let lane = shared.lane(server, worker);
+            if local == 0 {
+                // Remote dials are counted when they arrive; local ones
+                // were counted at dial time (see connect_lanes).
+                lane.dialed.fetch_add(1, Ordering::Release);
+                shared.worker_connected[worker].store(true, Ordering::Release);
+            }
+            lane.incoming.lock().unwrap().push_back(s);
+            Ok(())
+        }
+        kind::JOIN_CTL | kind::HELLO_PULL => {
+            s.set_read_timeout(None).ok();
+            let hook = shared.ctl.lock().unwrap().clone();
+            match hook {
+                Some(tx) => {
+                    let _ = tx.send(CtlConn { kind: k, payload, stream: s });
+                    Ok(())
+                }
+                None => bail!("{} connection without a control plane", wire::kind_name(k)),
+            }
+        }
+        other => bail!("unexpected {} hello frame", wire::kind_name(other)),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sender
+// ---------------------------------------------------------------------
+
+enum Link {
+    /// Same process as the listener: lane close and shutdown are
+    /// observable through the shared flags, no socket error needed.
+    Local(Arc<Shared>),
+    /// A worker process: hang-up is discovered via EPIPE/EOF.
+    Remote,
+}
+
+struct SendConn {
+    stream: TcpStream,
+    /// Ack stream accumulator.
+    reader: FrameReader,
+    credits: usize,
+    eof: bool,
+}
+
+/// Per-worker sending endpoint: one socket + credit window per server,
+/// batching up to `batch` messages per frame.
+pub struct TcpPushSender {
+    link: Link,
+    worker: usize,
+    batch: usize,
+    conns: Vec<SendConn>,
+    pending: Vec<Vec<PushMsg>>,
+    /// Reused frame-encode buffer.
+    wire_buf: Vec<u8>,
+}
+
+/// Dial one lane socket and say hello.
+fn dial_lane(
+    addr: &SocketAddr,
+    worker: usize,
+    server: usize,
+    local: bool,
+    cap_b: usize,
+) -> Result<SendConn> {
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("connect to coordinator at {addr}"))?;
+    stream.set_nodelay(true).ok();
+    let mut hello = Vec::with_capacity(16);
+    wire::put_u32(&mut hello, worker as u32);
+    wire::put_u32(&mut hello, server as u32);
+    hello.push(u8::from(local));
+    wire::write_frame(&mut stream, kind::HELLO_PUSH, &hello)
+        .with_context(|| format!("hello to server {server}"))?;
+    stream.set_nonblocking(true).context("nonblocking lane socket")?;
+    Ok(SendConn { stream, reader: FrameReader::new(), credits: cap_b, eof: false })
+}
+
+fn connect_lanes(shared: &Arc<Shared>, worker: usize) -> TcpPushSender {
+    let mut conns = Vec::with_capacity(shared.n_servers);
+    for server in 0..shared.n_servers {
+        // Count the dial BEFORE the hello goes out so a lane's drain
+        // check (`consumed == dialed`) can never run ahead of a socket
+        // the acceptor has yet to park.
+        shared.lane(server, worker).dialed.fetch_add(1, Ordering::Release);
+        conns.push(
+            dial_lane(&shared.addr, worker, server, true, shared.cap_b)
+                .expect("dial in-process lane"),
+        );
+    }
+    shared.worker_connected[worker].store(true, Ordering::Release);
+    TcpPushSender {
+        link: Link::Local(shared.clone()),
+        worker,
+        batch: shared.batch,
+        conns,
+        pending: (0..shared.n_servers).map(|_| Vec::new()).collect(),
+        wire_buf: Vec::new(),
+    }
+}
+
+impl TcpPushSender {
+    /// Worker-process endpoint: dial `n_servers` lanes of the
+    /// coordinator at `addr`.  `cap` and `batch` must match the
+    /// coordinator's config (the handshake ships them).
+    pub fn connect_remote(
+        addr: &SocketAddr,
+        worker: usize,
+        n_servers: usize,
+        cap: usize,
+        batch: usize,
+    ) -> Result<Self> {
+        let cap_b = cap.div_ceil(batch).max(1);
+        let mut conns = Vec::with_capacity(n_servers);
+        for server in 0..n_servers {
+            conns.push(dial_lane(addr, worker, server, false, cap_b)?);
+        }
+        Ok(TcpPushSender {
+            link: Link::Remote,
+            worker,
+            batch,
+            conns,
+            pending: (0..n_servers).map(|_| Vec::new()).collect(),
+            wire_buf: Vec::new(),
+        })
+    }
+
+    fn lane_closed(&self, server: usize) -> bool {
+        match &self.link {
+            Link::Local(sh) => sh.lane(server, self.worker).closed.load(Ordering::Acquire),
+            Link::Remote => false,
+        }
+    }
+
+    fn is_shutdown(&self) -> bool {
+        match &self.link {
+            Link::Local(sh) => sh.shutdown.load(Ordering::Acquire),
+            Link::Remote => false,
+        }
+    }
+
+    /// Drain any acks the receiver has returned; flips `eof` when the
+    /// peer is gone.
+    fn poll_acks(conn: &mut SendConn) -> Result<()> {
+        if conn.eof {
+            return Ok(());
+        }
+        loop {
+            match conn.reader.poll(&mut conn.stream) {
+                Ok(Poll::Frame) => {
+                    let k = conn.reader.frame_kind();
+                    let payload = conn.reader.payload();
+                    let mut cur = wire::Cursor::new(k, payload)?;
+                    if k != kind::ACK {
+                        bail!("unexpected {} frame on ack stream", wire::kind_name(k));
+                    }
+                    let frames = cur.u32("frames")? as usize;
+                    cur.finish()?;
+                    conn.reader.consume();
+                    conn.credits += frames;
+                }
+                Ok(Poll::Pending) => return Ok(()),
+                Ok(Poll::Eof) | Err(_) => {
+                    conn.eof = true;
+                    return Ok(());
+                }
+            }
+        }
+    }
+
+    /// Encode + write the pending batch for `server`, spending one
+    /// credit (waiting for one if the window is exhausted).
+    fn flush_server(&mut self, server: usize) -> Result<()> {
+        if self.pending[server].is_empty() {
+            return Ok(());
+        }
+        let mut backoff = Backoff::new();
+        loop {
+            if self.lane_closed(server) {
+                self.pending[server].clear(); // Drop recycles the buffers
+                bail!("server {server} hung up");
+            }
+            let conn = &mut self.conns[server];
+            Self::poll_acks(conn)?;
+            if conn.eof {
+                self.pending[server].clear();
+                bail!("server {server} hung up");
+            }
+            if conn.credits > 0 {
+                conn.credits -= 1;
+                break;
+            }
+            if self.is_shutdown() {
+                self.pending[server].clear();
+                bail!("transport shut down with pushes still in flight to server {server}");
+            }
+            backoff.snooze();
+        }
+        // Serialize, recycling each pooled buffer at encode time: the
+        // bytes travel, the buffer goes straight home.
+        self.wire_buf.clear();
+        let n = self.pending[server].len();
+        let start = if n == 1 {
+            wire::begin_frame(&mut self.wire_buf, kind::PUSH)
+        } else {
+            let s = wire::begin_frame(&mut self.wire_buf, kind::PUSH_BATCH);
+            wire::put_u32(&mut self.wire_buf, n as u32);
+            s
+        };
+        for mut m in self.pending[server].drain(..) {
+            wire::put_push_body(&mut self.wire_buf, &m);
+            m.recycle_now();
+        }
+        wire::end_frame(&mut self.wire_buf, start);
+        let conn = &mut self.conns[server];
+        if let Err(e) = write_all_nb(&mut conn.stream, &self.wire_buf) {
+            conn.eof = true;
+            bail!("server {server} hung up ({e})");
+        }
+        Ok(())
+    }
+}
+
+/// `write_all` on a non-blocking socket: spin through `WouldBlock`
+/// (bounded by the credit window — at most `cap_b` small frames are
+/// ever outstanding, so the kernel buffer drains without the peer's
+/// application reading).
+fn write_all_nb(stream: &mut TcpStream, mut buf: &[u8]) -> std::io::Result<()> {
+    let mut backoff = Backoff::new();
+    while !buf.is_empty() {
+        match stream.write(buf) {
+            Ok(0) => return Err(std::io::Error::from(ErrorKind::WriteZero)),
+            Ok(n) => {
+                buf = &buf[n..];
+                backoff.reset();
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => backoff.snooze(),
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+impl PushSender for TcpPushSender {
+    fn send(&mut self, server: usize, msg: PushMsg) -> Result<()> {
+        if self.lane_closed(server) || self.conns[server].eof {
+            drop(msg); // recycles the pooled buffer
+            bail!("server {server} hung up");
+        }
+        self.pending[server].push(msg);
+        if self.pending[server].len() >= self.batch {
+            self.flush_server(server)?;
+        }
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        for server in 0..self.conns.len() {
+            self.flush_server(server)?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for TcpPushSender {
+    /// Best-effort bounded flush of partial batches, mirroring the
+    /// in-process senders' drop-flush: a crashed worker's buffered tail
+    /// still reaches the wire when credits allow, and gives up (the
+    /// messages' own `Drop` recycles their buffers) rather than hang.
+    fn drop(&mut self) {
+        let deadline = Instant::now() + DROP_FLUSH_DEADLINE;
+        for server in 0..self.conns.len() {
+            while !self.pending[server].is_empty()
+                && !self.lane_closed(server)
+                && !self.conns[server].eof
+            {
+                let conn = &mut self.conns[server];
+                let _ = Self::poll_acks(conn);
+                if conn.credits > 0 {
+                    let _ = self.flush_server(server);
+                    break;
+                }
+                if Instant::now() >= deadline {
+                    break;
+                }
+                std::thread::sleep(Duration::from_micros(50));
+            }
+        }
+        // Dropping the streams sends FIN: receivers see EOF after the
+        // last written frame, never before it.
+    }
+}
+
+// ---------------------------------------------------------------------
+// Receiver
+// ---------------------------------------------------------------------
+
+/// One (worker, server) lane: current socket + parked replacements +
+/// decoded-but-unconsumed messages.
+pub struct TcpLaneReceiver {
+    shared: Arc<Shared>,
+    server: usize,
+    worker: usize,
+    conn: Option<TcpStream>,
+    reader: FrameReader,
+    queue: VecDeque<PushMsg>,
+    pool: LeasePool,
+    /// Sockets consumed through EOF (drain accounting vs `dialed`).
+    consumed: usize,
+    done: bool,
+}
+
+impl TcpLaneReceiver {
+    fn new(shared: Arc<Shared>, server: usize, worker: usize) -> Self {
+        TcpLaneReceiver {
+            shared,
+            server,
+            worker,
+            conn: None,
+            reader: FrameReader::new(),
+            queue: VecDeque::new(),
+            pool: LeasePool::new(),
+            consumed: 0,
+            done: false,
+        }
+    }
+
+    /// Decode the frame currently buffered in `self.reader` into
+    /// `self.queue` and ack it.
+    fn decode_frame(&mut self) -> Result<()> {
+        let k = self.reader.frame_kind();
+        let payload = self.reader.payload();
+        let mut cur = wire::Cursor::new(k, payload)?;
+        let count = match k {
+            kind::PUSH => 1,
+            kind::PUSH_BATCH => cur.u32("count")? as usize,
+            other => bail!("unexpected {} frame on push lane", wire::kind_name(other)),
+        };
+        let pool = &mut self.pool;
+        let recycle = pool.recycler();
+        let mut decoded = Vec::with_capacity(count);
+        {
+            let mut alloc = |n: usize| pool.acquire(n);
+            for _ in 0..count {
+                let p = wire::take_push_body(&mut cur, &mut alloc)?;
+                decoded.push(p);
+            }
+        }
+        cur.finish()?;
+        self.reader.consume();
+        for p in decoded {
+            self.queue.push_back(PushMsg::from_wire(
+                p.worker,
+                p.block,
+                p.w,
+                p.worker_epoch,
+                p.z_version_used,
+                p.block_seq,
+                Some(recycle.clone()),
+            ));
+        }
+        // Credit return: one frame decoded = one credit, written on the
+        // same socket.  A vanished sender is not an error here.
+        if let Some(conn) = self.conn.as_mut() {
+            let mut ack = Vec::with_capacity(wire::HEADER + 4);
+            let s = wire::begin_frame(&mut ack, kind::ACK);
+            wire::put_u32(&mut ack, 1);
+            wire::end_frame(&mut ack, s);
+            let _ = write_all_nb(conn, &ack);
+        }
+        Ok(())
+    }
+}
+
+impl PushReceiver for TcpLaneReceiver {
+    fn try_recv(&mut self) -> TryRecv {
+        loop {
+            if let Some(m) = self.queue.pop_front() {
+                return TryRecv::Msg(m);
+            }
+            if self.done {
+                return TryRecv::Done;
+            }
+            if self.conn.is_none() {
+                let next =
+                    self.shared.lane(self.server, self.worker).incoming.lock().unwrap().pop_front();
+                match next {
+                    Some(s) => {
+                        self.conn = Some(s);
+                        self.reader = FrameReader::new();
+                    }
+                    None => {
+                        // Nothing connected right now: drained only if
+                        // shut down AND every dialed socket was fully
+                        // consumed (a dial is counted before its socket
+                        // can be parked, so this cannot run ahead).
+                        let lane = self.shared.lane(self.server, self.worker);
+                        if self.shared.shutdown.load(Ordering::Acquire)
+                            && self.consumed >= lane.dialed.load(Ordering::Acquire)
+                            && lane.incoming.lock().unwrap().is_empty()
+                        {
+                            self.done = true;
+                            return TryRecv::Done;
+                        }
+                        return TryRecv::Empty;
+                    }
+                }
+            }
+            let conn = self.conn.as_mut().expect("conn set above");
+            match self.reader.poll(conn) {
+                Ok(Poll::Frame) => {
+                    if let Err(e) = self.decode_frame() {
+                        // A corrupted lane cannot be resynchronized;
+                        // surface loudly and retire the socket.
+                        eprintln!(
+                            "tcp lane (worker {}, server {}): {e:#}",
+                            self.worker, self.server
+                        );
+                        self.conn = None;
+                        self.reader = FrameReader::new();
+                        self.consumed += 1;
+                    }
+                }
+                Ok(Poll::Pending) => return TryRecv::Empty,
+                Ok(Poll::Eof) => {
+                    self.conn = None;
+                    self.reader = FrameReader::new();
+                    self.consumed += 1;
+                }
+                Err(e) => {
+                    eprintln!(
+                        "tcp lane (worker {}, server {}): {e:#}",
+                        self.worker, self.server
+                    );
+                    self.conn = None;
+                    self.reader = FrameReader::new();
+                    self.consumed += 1;
+                }
+            }
+        }
+    }
+
+    fn recv(&mut self) -> Option<PushMsg> {
+        let mut backoff = Backoff::new();
+        loop {
+            match self.try_recv() {
+                TryRecv::Msg(m) => return Some(m),
+                TryRecv::Done => return None,
+                TryRecv::Empty => backoff.snooze(),
+            }
+        }
+    }
+}
+
+impl Drop for TcpLaneReceiver {
+    fn drop(&mut self) {
+        let lane = self.shared.lane(self.server, self.worker);
+        lane.closed.store(true, Ordering::Release);
+        // Orphan any parked replacements too: with the endpoint gone
+        // their senders get EPIPE (remote) or the closed flag (local).
+        lane.incoming.lock().unwrap().clear();
+        // Queued messages drop here; their buffers recycle into the
+        // lane pool, which drops with them — nothing is stranded.
+    }
+}
+
+/// The single-endpoint view: all of one server's lanes behind one
+/// receiver, drained round-robin (fair across workers, FIFO within
+/// each).
+pub struct TcpServerReceiver {
+    lanes: Vec<TcpLaneReceiver>,
+    next: usize,
+}
+
+impl PushReceiver for TcpServerReceiver {
+    fn try_recv(&mut self) -> TryRecv {
+        let n = self.lanes.len();
+        if n == 0 {
+            return TryRecv::Done;
+        }
+        let mut done = 0;
+        for i in 0..n {
+            let idx = (self.next + i) % n;
+            match self.lanes[idx].try_recv() {
+                TryRecv::Msg(m) => {
+                    self.next = (idx + 1) % n;
+                    return TryRecv::Msg(m);
+                }
+                TryRecv::Done => done += 1,
+                TryRecv::Empty => {}
+            }
+        }
+        if done == n {
+            TryRecv::Done
+        } else {
+            TryRecv::Empty
+        }
+    }
+
+    fn recv(&mut self) -> Option<PushMsg> {
+        let mut backoff = Backoff::new();
+        loop {
+            match self.try_recv() {
+                TryRecv::Msg(m) => return Some(m),
+                TryRecv::Done => return None,
+                TryRecv::Empty => backoff.snooze(),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Transport impl
+// ---------------------------------------------------------------------
+
+impl Transport for TcpTransport {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn connect_worker(&self, worker: usize) -> Box<dyn PushSender> {
+        assert!(worker < self.shared.n_workers, "worker {worker} out of range");
+        Box::new(connect_lanes(&self.shared, worker))
+    }
+
+    fn reconnect_worker(&self, worker: usize) -> Box<dyn PushSender> {
+        assert!(
+            self.shared.worker_connected[worker].load(Ordering::Acquire),
+            "reconnect_worker({worker}): worker never connected"
+        );
+        // Fresh sockets, parked behind the dead ones: the acceptor's
+        // sequential ordering + per-socket FIFO resume the stream
+        // gap-free once the old tail is consumed.
+        Box::new(connect_lanes(&self.shared, worker))
+    }
+
+    fn connect_server(&self, server: usize) -> Box<dyn PushReceiver> {
+        if self.shared.server_taken[server].swap(true, Ordering::AcqRel) {
+            panic!("server {server} endpoint already taken");
+        }
+        let lanes = (0..self.shared.n_workers)
+            .map(|w| TcpLaneReceiver::new(self.shared.clone(), server, w))
+            .collect();
+        Box::new(TcpServerReceiver { lanes, next: 0 })
+    }
+
+    fn connect_server_lanes(&self, server: usize) -> Vec<Box<dyn PushReceiver>> {
+        if self.shared.server_taken[server].swap(true, Ordering::AcqRel) {
+            panic!("server {server} endpoint already taken");
+        }
+        (0..self.shared.n_workers)
+            .map(|w| {
+                Box::new(TcpLaneReceiver::new(self.shared.clone(), server, w))
+                    as Box<dyn PushReceiver>
+            })
+            .collect()
+    }
+
+    fn inflight_bound(&self) -> usize {
+        self.shared.cap_b * self.shared.batch + (self.shared.batch - 1)
+    }
+
+    fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+    }
+}

@@ -1,0 +1,556 @@
+//! Length-prefixed little-endian wire format for the networked runtime.
+//!
+//! Every frame on every socket — push lanes, the control plane, the
+//! pull-sync stream — has the same envelope:
+//!
+//! ```text
+//! [len: u32 LE][kind: u8][payload: len bytes]
+//! ```
+//!
+//! `len` counts payload bytes only, so a whole frame is `HEADER + len`
+//! bytes.  Integers are little-endian; f32 data is raw LE bit patterns
+//! (the same floats on both ends — no text round-trip).  A `len` above
+//! [`MAX_FRAME`] or an unknown `kind` is rejected before any payload is
+//! trusted, and every decode error names the frame kind and the length
+//! it expected (mirroring the checkpoint sidecar validation), so a
+//! truncated or corrupted stream produces a contextual `Err`, never a
+//! panic.
+//!
+//! The push hot path preserves the pooled-buffer discipline end to end:
+//! the **sender** serializes `w` straight out of the pooled
+//! [`AlignedBuf`] and recycles it at encode time (the buffer never
+//! crosses the wire, only its bytes do), and the **receiver**
+//! re-materializes the block into a lane-local [`super::super::bufpool`]
+//! free list — steady state allocates nothing per message on either
+//! side.  [`FrameReader`] likewise accumulates into one reused buffer.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::AlignedBuf;
+
+/// Envelope bytes before the payload: u32 length + u8 kind.
+pub const HEADER: usize = 5;
+/// Upper bound on one frame's payload — rejects corrupted lengths
+/// before any allocation (64 MiB is orders of magnitude above the
+/// largest legal batch of w blocks).
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Frame kinds.  Values are wire-stable: changing one breaks mixed
+/// coordinator/worker versions.
+pub mod kind {
+    /// Worker → server lane greeting: `worker u32, server u32, local u8`.
+    pub const HELLO_PUSH: u8 = 1;
+    /// One push body (see [`super::put_push_body`]).
+    pub const PUSH: u8 = 2;
+    /// `count u32` followed by `count` push bodies (a coalesced batch).
+    pub const PUSH_BATCH: u8 = 3;
+    /// Receiver → sender credit return: `frames u32`.
+    pub const ACK: u8 = 4;
+    /// Worker process join: `rank u32, n_ranks u32`.
+    pub const JOIN_CTL: u8 = 5;
+    /// Coordinator reply to a join: config + owner map (text kv + u32s).
+    pub const WELCOME: u8 = 6;
+    /// Rebalancer republish: `block u32, owner u32, map_version u64`.
+    pub const OWNER_UPDATE: u8 = 7;
+    /// Pull-sync stream greeting: `rank u32`.
+    pub const HELLO_PULL: u8 = 8;
+    /// Mirror sync request: `n_blocks u32, have_version u64 × n_blocks`.
+    pub const PULL_REQ: u8 = 9;
+    /// Sync reply: `count u32`, then per changed block
+    /// `block u32, version u64, n u32, f32 × n`.
+    pub const PULL_RESP: u8 = 10;
+    /// Worker process completion: `rank u32, pushes u64`.
+    pub const WORKER_DONE: u8 = 11;
+}
+
+/// Human name for a frame kind (error context).
+pub fn kind_name(k: u8) -> &'static str {
+    match k {
+        kind::HELLO_PUSH => "HelloPush",
+        kind::PUSH => "Push",
+        kind::PUSH_BATCH => "PushBatch",
+        kind::ACK => "Ack",
+        kind::JOIN_CTL => "JoinCtl",
+        kind::WELCOME => "Welcome",
+        kind::OWNER_UPDATE => "OwnerUpdate",
+        kind::HELLO_PULL => "HelloPull",
+        kind::PULL_REQ => "PullReq",
+        kind::PULL_RESP => "PullResp",
+        kind::WORKER_DONE => "WorkerDone",
+        _ => "unknown",
+    }
+}
+
+fn known_kind(k: u8) -> bool {
+    (kind::HELLO_PUSH..=kind::WORKER_DONE).contains(&k)
+}
+
+// ---------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------
+
+/// Start a frame in `buf`: pushes a length placeholder + the kind byte
+/// and returns the frame's start offset for [`end_frame`].
+pub fn begin_frame(buf: &mut Vec<u8>, kind: u8) -> usize {
+    let start = buf.len();
+    buf.extend_from_slice(&[0, 0, 0, 0, kind]);
+    start
+}
+
+/// Patch the length placeholder of the frame opened at `start`.
+pub fn end_frame(buf: &mut Vec<u8>, start: usize) {
+    let len = buf.len() - start - HEADER;
+    debug_assert!(len <= MAX_FRAME, "oversized frame: {len}");
+    buf[start..start + 4].copy_from_slice(&(len as u32).to_le_bytes());
+}
+
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f32s(buf: &mut Vec<u8>, data: &[f32]) {
+    // One reserve + per-element extend: f32::to_le_bytes compiles to a
+    // plain 4-byte store, so this is a straight memcpy on LE targets.
+    buf.reserve(4 * data.len());
+    for &x in data {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Serialize one push body (no envelope):
+/// `worker u32, block u32, worker_epoch u64, z_version_used u64,
+/// block_seq u64, n u32, f32 × n`.  `sent_at`/`recycle` are process-
+/// local and never cross the wire — the caller recycles the pooled
+/// buffer right after this returns.
+pub fn put_push_body(buf: &mut Vec<u8>, msg: &super::super::messages::PushMsg) {
+    put_u32(buf, msg.worker as u32);
+    put_u32(buf, msg.block as u32);
+    put_u64(buf, msg.worker_epoch as u64);
+    put_u64(buf, msg.z_version_used);
+    put_u64(buf, msg.block_seq);
+    put_u32(buf, msg.w.len() as u32);
+    put_f32s(buf, &msg.w);
+}
+
+// ---------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------
+
+/// A decoded push body, not yet bound to a recycle home (the lane
+/// receiver attaches its pool when it re-materializes the `PushMsg`).
+#[derive(Debug)]
+pub struct WirePush {
+    pub worker: usize,
+    pub block: usize,
+    pub worker_epoch: usize,
+    pub z_version_used: u64,
+    pub block_seq: u64,
+    pub w: AlignedBuf,
+}
+
+/// Bounds-checked payload reader with frame-kind context in every
+/// error: truncation/corruption yields `Err`, never a panic or an
+/// out-of-bounds read.
+pub struct Cursor<'a> {
+    kind: &'static str,
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(kind: u8, payload: &'a [u8]) -> Result<Self> {
+        if !known_kind(kind) {
+            bail!("unknown frame kind {kind} ({} payload bytes)", payload.len());
+        }
+        Ok(Cursor { kind: kind_name(kind), b: payload, i: 0 })
+    }
+
+    fn need(&self, n: usize, field: &str) -> Result<usize> {
+        let at = self.i;
+        if at + n > self.b.len() {
+            bail!(
+                "{} frame truncated: field {field:?} needs {n} bytes at \
+                 offset {at}, payload is {} bytes",
+                self.kind,
+                self.b.len()
+            );
+        }
+        Ok(at)
+    }
+
+    pub fn u32(&mut self, field: &str) -> Result<u32> {
+        let at = self.need(4, field)?;
+        self.i = at + 4;
+        Ok(u32::from_le_bytes(self.b[at..at + 4].try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self, field: &str) -> Result<u64> {
+        let at = self.need(8, field)?;
+        self.i = at + 8;
+        Ok(u64::from_le_bytes(self.b[at..at + 8].try_into().unwrap()))
+    }
+
+    pub fn u8(&mut self, field: &str) -> Result<u8> {
+        let at = self.need(1, field)?;
+        self.i = at + 1;
+        Ok(self.b[at])
+    }
+
+    /// Copy `out.len()` f32s out of the payload.
+    pub fn f32s_into(&mut self, out: &mut [f32], field: &str) -> Result<()> {
+        let at = self.need(4 * out.len(), field)?;
+        for (k, o) in out.iter_mut().enumerate() {
+            let p = at + 4 * k;
+            *o = f32::from_le_bytes(self.b[p..p + 4].try_into().unwrap());
+        }
+        self.i = at + 4 * out.len();
+        Ok(())
+    }
+
+    /// A length-prefixed UTF-8 string (`len u32, bytes`).
+    pub fn str(&mut self, field: &str) -> Result<&'a str> {
+        let n = self.u32(field)? as usize;
+        let at = self.need(n, field)?;
+        self.i = at + n;
+        std::str::from_utf8(&self.b[at..at + n])
+            .with_context(|| format!("{} frame: field {field:?} is not UTF-8", self.kind))
+    }
+
+    /// Reject trailing garbage (a wrong-length but parseable frame).
+    pub fn finish(&self) -> Result<()> {
+        let left = self.b.len() - self.i;
+        if left != 0 {
+            bail!(
+                "{} frame corrupted: {left} trailing bytes after a \
+                 {}-byte body (payload is {} bytes)",
+                self.kind,
+                self.i,
+                self.b.len()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Emit a length-prefixed string for [`Cursor::str`].
+pub fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Decode one push body at the cursor; `alloc` supplies the receiving
+/// buffer (the lane pool's free list on the hot path).
+pub fn take_push_body(
+    cur: &mut Cursor<'_>,
+    alloc: &mut dyn FnMut(usize) -> AlignedBuf,
+) -> Result<WirePush> {
+    let worker = cur.u32("worker")? as usize;
+    let block = cur.u32("block")? as usize;
+    let worker_epoch = cur.u64("worker_epoch")? as usize;
+    let z_version_used = cur.u64("z_version_used")?;
+    let block_seq = cur.u64("block_seq")?;
+    let n = cur.u32("n")? as usize;
+    if n > MAX_FRAME / 4 {
+        bail!("Push frame corrupted: block length {n} exceeds the frame bound");
+    }
+    let mut w = alloc(n);
+    debug_assert_eq!(w.len(), n);
+    cur.f32s_into(&mut w, "w")?;
+    Ok(WirePush { worker, block, worker_epoch, z_version_used, block_seq, w })
+}
+
+// ---------------------------------------------------------------------
+// Blocking frame I/O (control plane, pull sync — not the push path)
+// ---------------------------------------------------------------------
+
+/// Write one whole frame (envelope + payload) on a blocking stream.
+pub fn write_frame(w: &mut dyn Write, kind: u8, payload: &[u8]) -> std::io::Result<()> {
+    debug_assert!(payload.len() <= MAX_FRAME);
+    let mut head = [0u8; HEADER];
+    head[..4].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    head[4] = kind;
+    w.write_all(&head)?;
+    w.write_all(payload)
+}
+
+/// Read one whole frame on a blocking stream.  `Ok(None)` = clean EOF
+/// at a frame boundary; EOF mid-frame is a contextual error.
+pub fn read_frame(r: &mut dyn Read) -> Result<Option<(u8, Vec<u8>)>> {
+    let mut head = [0u8; HEADER];
+    let mut got = 0usize;
+    while got < HEADER {
+        match r.read(&mut head[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => bail!("connection closed mid-header: got {got} of {HEADER} bytes"),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("reading frame header"),
+        }
+    }
+    let len = u32::from_le_bytes(head[..4].try_into().unwrap()) as usize;
+    let k = head[4];
+    if !known_kind(k) {
+        bail!("unknown frame kind {k} (claimed length {len})");
+    }
+    if len > MAX_FRAME {
+        bail!("{} frame length {len} exceeds the {MAX_FRAME}-byte bound", kind_name(k));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).with_context(|| {
+        format!("{} frame truncated: expected {len} payload bytes", kind_name(k))
+    })?;
+    Ok(Some((k, payload)))
+}
+
+// ---------------------------------------------------------------------
+// Non-blocking frame accumulation (the push-lane receive path)
+// ---------------------------------------------------------------------
+
+/// What [`FrameReader::poll`] found.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Poll {
+    /// A complete frame is ready: [`FrameReader::frame_kind`] /
+    /// [`FrameReader::payload`] are valid until `consume`.
+    Frame,
+    /// No complete frame buffered and the socket has nothing more now.
+    Pending,
+    /// Peer closed cleanly at a frame boundary (all frames consumed).
+    Eof,
+}
+
+/// Accumulates bytes from a non-blocking socket into one reused buffer
+/// and yields complete frames zero-copy (`payload` borrows the buffer),
+/// so the steady-state receive path allocates nothing per message.
+pub struct FrameReader {
+    buf: Vec<u8>,
+    /// Start of un-consumed bytes in `buf`.
+    start: usize,
+    eof: bool,
+}
+
+const READ_CHUNK: usize = 64 * 1024;
+
+impl Default for FrameReader {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl FrameReader {
+    pub fn new() -> Self {
+        FrameReader { buf: Vec::with_capacity(READ_CHUNK), start: 0, eof: false }
+    }
+
+    /// Header of the buffered-but-unconsumed region, if complete.
+    fn buffered_header(&self) -> Option<(u8, usize)> {
+        let b = &self.buf[self.start..];
+        if b.len() < HEADER {
+            return None;
+        }
+        let len = u32::from_le_bytes(b[..4].try_into().unwrap()) as usize;
+        Some((b[4], len))
+    }
+
+    fn has_frame(&self) -> Result<bool> {
+        match self.buffered_header() {
+            None => Ok(false),
+            Some((k, len)) => {
+                if !known_kind(k) {
+                    bail!("unknown frame kind {k} on lane (claimed length {len})");
+                }
+                if len > MAX_FRAME {
+                    bail!(
+                        "{} frame length {len} exceeds the {MAX_FRAME}-byte bound",
+                        kind_name(k)
+                    );
+                }
+                Ok(self.buf.len() - self.start >= HEADER + len)
+            }
+        }
+    }
+
+    /// Pull whatever the socket has ready and report the state.  Never
+    /// blocks (the stream must be in non-blocking mode).  After
+    /// [`Poll::Frame`], call [`FrameReader::consume`] before polling
+    /// again.
+    pub fn poll(&mut self, conn: &mut TcpStream) -> Result<Poll> {
+        loop {
+            if self.has_frame()? {
+                return Ok(Poll::Frame);
+            }
+            if self.eof {
+                if self.buf.len() > self.start {
+                    bail!(
+                        "connection closed mid-frame: {} bytes of an incomplete \
+                         frame buffered",
+                        self.buf.len() - self.start
+                    );
+                }
+                return Ok(Poll::Eof);
+            }
+            // Compact before growing: consumed frames' bytes are dead.
+            if self.start > 0 {
+                self.buf.drain(..self.start);
+                self.start = 0;
+            }
+            let filled = self.buf.len();
+            self.buf.resize(filled + READ_CHUNK, 0);
+            match conn.read(&mut self.buf[filled..]) {
+                Ok(0) => {
+                    self.buf.truncate(filled);
+                    self.eof = true;
+                }
+                Ok(n) => {
+                    self.buf.truncate(filled + n);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    self.buf.truncate(filled);
+                    return Ok(Poll::Pending);
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {
+                    self.buf.truncate(filled);
+                }
+                // A reset from a closing peer after its last frame is a
+                // teardown artifact, not corruption: everything sent
+                // before the close was already buffered here.
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        ErrorKind::ConnectionReset | ErrorKind::BrokenPipe
+                    ) =>
+                {
+                    self.buf.truncate(filled);
+                    self.eof = true;
+                }
+                Err(e) => {
+                    self.buf.truncate(filled);
+                    return Err(e).context("reading push lane");
+                }
+            }
+        }
+    }
+
+    /// Kind of the frame reported by the last [`Poll::Frame`].
+    pub fn frame_kind(&self) -> u8 {
+        self.buf[self.start + 4]
+    }
+
+    /// Payload of the frame reported by the last [`Poll::Frame`].
+    pub fn payload(&self) -> &[u8] {
+        let (_, len) = self.buffered_header().expect("no buffered frame");
+        &self.buf[self.start + HEADER..self.start + HEADER + len]
+    }
+
+    /// Advance past the frame reported by the last [`Poll::Frame`].
+    pub fn consume(&mut self) {
+        let (_, len) = self.buffered_header().expect("no buffered frame");
+        self.start += HEADER + len;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::messages::PushMsg;
+    use super::*;
+
+    fn msg(worker: usize, block: usize, seq: u64, data: &[f32]) -> PushMsg {
+        PushMsg {
+            worker,
+            block,
+            w: data.into(),
+            worker_epoch: 7,
+            z_version_used: 42,
+            block_seq: seq,
+            sent_at: None,
+            recycle: None,
+        }
+    }
+
+    #[test]
+    fn push_body_round_trips() {
+        let m = msg(3, 11, 9, &[1.5, -2.25, 0.0, f32::MIN_POSITIVE]);
+        let mut buf = Vec::new();
+        let at = begin_frame(&mut buf, kind::PUSH);
+        put_push_body(&mut buf, &m);
+        end_frame(&mut buf, at);
+        assert_eq!(buf.len(), HEADER + 4 + 4 + 8 + 8 + 8 + 4 + 16);
+
+        let mut cur = Cursor::new(buf[4], &buf[HEADER..]).unwrap();
+        let p = take_push_body(&mut cur, &mut |n| AlignedBuf::zeroed(n)).unwrap();
+        cur.finish().unwrap();
+        assert_eq!(p.worker, 3);
+        assert_eq!(p.block, 11);
+        assert_eq!(p.worker_epoch, 7);
+        assert_eq!(p.z_version_used, 42);
+        assert_eq!(p.block_seq, 9);
+        assert_eq!(&p.w[..], &[1.5, -2.25, 0.0, f32::MIN_POSITIVE]);
+    }
+
+    #[test]
+    fn truncated_push_names_kind_and_need() {
+        let m = msg(0, 0, 1, &[1.0, 2.0]);
+        let mut buf = Vec::new();
+        let at = begin_frame(&mut buf, kind::PUSH);
+        put_push_body(&mut buf, &m);
+        end_frame(&mut buf, at);
+        // Cut the payload short of the w data.
+        let cut = &buf[HEADER..buf.len() - 5];
+        let mut cur = Cursor::new(kind::PUSH, cut).unwrap();
+        let err = take_push_body(&mut cur, &mut |n| AlignedBuf::zeroed(n)).unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("Push frame truncated"), "{text}");
+        assert!(text.contains("needs"), "{text}");
+    }
+
+    #[test]
+    fn unknown_kind_and_oversize_are_rejected() {
+        assert!(Cursor::new(0, &[]).is_err());
+        assert!(Cursor::new(99, &[]).is_err());
+        let mut head = [0u8; HEADER];
+        head[..4].copy_from_slice(&(u32::MAX).to_le_bytes());
+        head[4] = kind::PUSH;
+        let err = read_frame(&mut &head[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds"), "{err:#}");
+    }
+
+    #[test]
+    fn trailing_bytes_are_corruption() {
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 5);
+        put_u32(&mut payload, 0); // stray extra field
+        let mut cur = Cursor::new(kind::ACK, &payload).unwrap();
+        assert_eq!(cur.u32("frames").unwrap(), 5);
+        let err = cur.finish().unwrap_err();
+        assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+    }
+
+    #[test]
+    fn blocking_read_frame_round_trips_and_reports_clean_eof() {
+        let mut bytes = Vec::new();
+        write_frame(&mut bytes, kind::ACK, &3u32.to_le_bytes()).unwrap();
+        let mut r = &bytes[..];
+        let (k, payload) = read_frame(&mut r).unwrap().expect("one frame");
+        assert_eq!(k, kind::ACK);
+        assert_eq!(payload, 3u32.to_le_bytes());
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF expected");
+        // Mid-header EOF is an error, not None.
+        let mut cut = &bytes[..3];
+        assert!(read_frame(&mut cut).is_err());
+    }
+
+    #[test]
+    fn strings_round_trip() {
+        let mut payload = Vec::new();
+        put_str(&mut payload, "rho=2.5\nseed=7");
+        let mut cur = Cursor::new(kind::WELCOME, &payload).unwrap();
+        assert_eq!(cur.str("config").unwrap(), "rho=2.5\nseed=7");
+        cur.finish().unwrap();
+    }
+}

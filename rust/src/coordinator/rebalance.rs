@@ -118,6 +118,23 @@ impl BlockMap {
         self.owner.iter().map(|a| a.load(Ordering::Acquire)).collect()
     }
 
+    /// `(block, new_owner)` for every block whose current owner differs
+    /// from `prev` (a snapshot the caller took earlier).  The networked
+    /// runtime's owner-republish step: the coordinator diffs the map
+    /// after each rebalance scan and ships only the changed entries to
+    /// worker processes as `OwnerUpdate` frames.
+    pub fn diff(&self, prev: &[usize]) -> Vec<(usize, usize)> {
+        assert_eq!(prev.len(), self.owner.len(), "owner map geometry mismatch");
+        self.owner
+            .iter()
+            .enumerate()
+            .filter_map(|(j, a)| {
+                let s = a.load(Ordering::Acquire);
+                (s != prev[j]).then_some((j, s))
+            })
+            .collect()
+    }
+
     /// Restore owners wholesale from a checkpoint snapshot *without*
     /// counting migrations or bumping the version: a resumed run starts
     /// from the saved placement as if it had been the initial one.
@@ -320,6 +337,21 @@ mod tests {
         assert_eq!(m.snapshot(), vec![1, 1, 0, 0]);
         assert_eq!(m.version(), v, "resume must not look like churn");
         assert_eq!(m.migrations(), mig);
+    }
+
+    #[test]
+    fn diff_reports_exactly_the_changed_owners() {
+        let m = BlockMap::new(&[0, 0, 1, 1]);
+        let before = m.snapshot();
+        assert!(m.diff(&before).is_empty());
+        m.set_owner(0, 1);
+        m.set_owner(3, 0);
+        m.set_owner(1, 0); // no-op: already 0
+        let mut d = m.diff(&before);
+        d.sort_unstable();
+        assert_eq!(d, vec![(0, 1), (3, 0)]);
+        // Diffing against the fresh snapshot is empty again.
+        assert!(m.diff(&m.snapshot()).is_empty());
     }
 
     #[test]

@@ -260,6 +260,13 @@ impl BlockTable {
         self.hot[j].push_count.load(Ordering::Relaxed)
     }
 
+    /// All per-block applied-push counters at once (relaxed reads) —
+    /// the `/stats` endpoint's per-block load snapshot and the
+    /// checkpoint serializer's source.
+    pub fn push_counts(&self) -> Vec<usize> {
+        self.hot.iter().map(|h| h.push_count.load(Ordering::Relaxed)).collect()
+    }
+
     /// Sampled service-time EWMA for block `j` in nanoseconds (0 until
     /// the first 1-in-[`SVC_SAMPLE`] sample lands).  The rebalancer's
     /// per-block cost weight (`rate × service time`).

@@ -303,7 +303,9 @@ pub struct MonitorGate {
 }
 
 impl MonitorGate {
-    fn new() -> Self {
+    /// A gate whose monitor is the CURRENT thread (the session monitor
+    /// loop, or the serve/work process driver).
+    pub(crate) fn new() -> Self {
         MonitorGate { wake_at: AtomicUsize::new(0), monitor: std::thread::current() }
     }
 
@@ -364,7 +366,7 @@ impl<'a> SessionBuilder<'a> {
     }
 
     /// Override the push transport (default: built from
-    /// `cfg.transport` — `--set transport=mpsc|ring`).  Only the
+    /// `cfg.transport` — `--set transport=mpsc|ring|tcp`).  Only the
     /// threaded [`Algo::AsyncAdmm`] path moves real messages.
     pub fn transport(mut self, transport: Box<dyn Transport>) -> Self {
         self.transport = Some(transport);
@@ -615,6 +617,56 @@ fn run_threaded<'o>(
             table.seed_push_counts(&ck.push_counts);
         }
     }
+    // Live observability tap (`--set stats_addr=HOST:PORT`): a std-only
+    // HTTP endpoint serving this run's counters while it executes —
+    // per-shard load, per-block applied pushes, the live placement map,
+    // the migration ledger and the fault-event log.  Stopped on drop at
+    // the end of the run.
+    let fault_log: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let _stats_server = if cfg.stats_addr.is_empty() {
+        None
+    } else {
+        use crate::util::json::{num, obj, s as jstr, Json};
+        let table = table.clone();
+        let map = map.clone();
+        let log = fault_log.clone();
+        let n_servers = cfg.n_servers;
+        let server = super::net::StatsServer::spawn(
+            &cfg.stats_addr,
+            Arc::new(move || {
+                let counts = table.push_counts();
+                let owners = map.snapshot();
+                let mut shard_load = vec![0usize; n_servers];
+                for (j, &c) in counts.iter().enumerate() {
+                    shard_load[owners[j]] += c;
+                }
+                obj(vec![
+                    ("pushes_total", num(counts.iter().sum::<usize>() as f64)),
+                    (
+                        "push_counts",
+                        Json::Arr(counts.iter().map(|&c| num(c as f64)).collect()),
+                    ),
+                    (
+                        "placement",
+                        Json::Arr(owners.iter().map(|&o| num(o as f64)).collect()),
+                    ),
+                    (
+                        "shard_load",
+                        Json::Arr(shard_load.iter().map(|&l| num(l as f64)).collect()),
+                    ),
+                    ("map_version", num(map.version() as f64)),
+                    ("migrations", num(map.migrations() as f64)),
+                    (
+                        "faults",
+                        Json::Arr(log.lock().unwrap().iter().map(|l| jstr(l)).collect()),
+                    ),
+                ])
+            }),
+        )?;
+        info!("session", "stats endpoint on http://{}/stats", server.addr());
+        Some(server)
+    };
+
     let shard_rts: Vec<ShardRt> = (0..cfg.n_servers)
         .map(|sid| {
             let mut shard = ServerShard::with_table(sid, &topo, table.clone(), !dynamic);
@@ -840,6 +892,7 @@ fn run_threaded<'o>(
                 for obs in observers.iter_mut() {
                     obs.on_fault(&ev);
                 }
+                fault_log.lock().unwrap().push(ev.describe());
                 fault_events.push(ev);
             }
             // Samples at `epoch == cfg.epochs` are the final-state row
@@ -977,6 +1030,7 @@ fn run_threaded<'o>(
         for obs in observers.iter_mut() {
             obs.on_fault(&ev);
         }
+        fault_log.lock().unwrap().push(ev.describe());
         fault_events.push(ev);
     }
 

@@ -202,6 +202,14 @@ pub fn make_transport(
             let ring_cap = inflight.div_ceil(n_workers.max(1)).max(2);
             Box::new(SpscRingTransport::new(n_workers, n_servers, ring_cap, batch))
         }
+        TransportKind::Tcp => {
+            // Same per-worker split as the ring: each (worker, server)
+            // socket lane gets its share of the per-server budget,
+            // enforced as a frame-credit window
+            // (`coordinator/net/tcp.rs`).
+            let lane_cap = inflight.div_ceil(n_workers.max(1)).max(2);
+            Box::new(super::net::TcpTransport::new(n_workers, n_servers, lane_cap, batch))
+        }
     }
 }
 
@@ -842,9 +850,10 @@ mod tests {
         }
     }
 
-    /// Both transports, batched and unbatched, same shape, for every
+    /// All transports, batched and unbatched, same shape, for every
     /// conformance check.  batch=2 covers the capacity-misaligned case
-    /// (8+1 not divisible by 2), batch=3 the aligned one.
+    /// (8+1 not divisible by 2), batch=3 the aligned one.  The TCP
+    /// transport runs the identical contract over loopback sockets.
     fn each_transport(n_workers: usize, n_servers: usize, f: impl Fn(Box<dyn Transport>)) {
         f(Box::new(MpscTransport::new(n_workers, n_servers, 8, 1)));
         f(Box::new(MpscTransport::new(n_workers, n_servers, 8, 2)));
@@ -852,6 +861,25 @@ mod tests {
         f(Box::new(SpscRingTransport::new(n_workers, n_servers, 8, 1)));
         f(Box::new(SpscRingTransport::new(n_workers, n_servers, 8, 2)));
         f(Box::new(SpscRingTransport::new(n_workers, n_servers, 8, 3)));
+        f(Box::new(super::super::net::TcpTransport::new(n_workers, n_servers, 8, 1)));
+        f(Box::new(super::super::net::TcpTransport::new(n_workers, n_servers, 8, 2)));
+        f(Box::new(super::super::net::TcpTransport::new(n_workers, n_servers, 8, 3)));
+    }
+
+    /// Poll `f` until it yields, bounded: networked transports deliver
+    /// asynchronously (a flushed frame needs a socket round trip before
+    /// `try_recv` can surface it), so non-blocking assertions poll with
+    /// a deadline.  In-process transports still satisfy these on the
+    /// first call.
+    fn poll_until<T>(what: &str, mut f: impl FnMut() -> Option<T>) -> T {
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            if let Some(v) = f() {
+                return v;
+            }
+            assert!(std::time::Instant::now() < deadline, "timed out waiting for {what}");
+            std::thread::yield_now();
+        }
     }
 
     #[test]
@@ -1085,6 +1113,9 @@ mod tests {
             (Box::new(SpscRingTransport::new(1, 1, 8, 1)), 1),
             (Box::new(SpscRingTransport::new(1, 1, 8, 2)), 2),
             (Box::new(SpscRingTransport::new(1, 1, 8, 3)), 3),
+            (Box::new(super::super::net::TcpTransport::new(1, 1, 8, 1)), 1),
+            (Box::new(super::super::net::TcpTransport::new(1, 1, 8, 2)), 2),
+            (Box::new(super::super::net::TcpTransport::new(1, 1, 8, 3)), 3),
         ];
         for (t, batch) in cases {
             let name = t.name();
@@ -1209,7 +1240,7 @@ mod tests {
     }
 
     fn lanes_are_per_worker(name: &str) -> bool {
-        name == "ring"
+        name == "ring" || name == "tcp"
     }
 
     #[test]
@@ -1220,16 +1251,25 @@ mod tests {
             assert!(matches!(rx.try_recv(), TryRecv::Empty), "[{}]", t.name());
             tx.send(0, msg(0, 0)).unwrap();
             tx.flush().unwrap();
-            // Spin: the message is already enqueued, so the first poll
-            // must surface it.
-            match rx.try_recv() {
-                TryRecv::Msg(m) => assert_eq!(m.worker_epoch, 0),
-                other => panic!("[{}] expected Msg, got {other:?}", t.name()),
-            }
+            // The flush committed the message; polling must surface it
+            // (first call for in-process impls, within the deadline for
+            // the socket one) and never report Done early.
+            let m = poll_until("flushed message", || match rx.try_recv() {
+                TryRecv::Msg(m) => Some(m),
+                TryRecv::Empty => None,
+                TryRecv::Done => panic!("[{}] Done before shutdown", t.name()),
+            });
+            assert_eq!(m.worker_epoch, 0, "[{}]", t.name());
             assert!(matches!(rx.try_recv(), TryRecv::Empty), "[{}]", t.name());
             drop(tx);
             t.shutdown();
-            assert!(matches!(rx.try_recv(), TryRecv::Done), "[{}]", t.name());
+            poll_until("Done after shutdown", || match rx.try_recv() {
+                TryRecv::Done => Some(()),
+                TryRecv::Empty => None,
+                TryRecv::Msg(m) => {
+                    panic!("[{}] phantom message {}", t.name(), m.worker_epoch)
+                }
+            });
         });
     }
 
@@ -1267,5 +1307,14 @@ mod tests {
         // send 10's flush is the first that can block.
         let mb = make_transport(TransportKind::Mpsc, 4, 2, 8, 2);
         assert_eq!(mb.inflight_bound(), 9);
+        // TCP mirrors the ring's per-worker split, counted in frame
+        // credits: lane cap ceil(8/4)=2 → 2 unbatched frames...
+        let tc = make_transport(TransportKind::Tcp, 4, 2, 8, 1);
+        assert_eq!(tc.name(), "tcp");
+        assert_eq!(tc.inflight_bound(), 2);
+        // ...and batched, ceil(2/3)=1 credit of 3 messages plus 2 more
+        // parked in the sender's partial batch.
+        let tcb = make_transport(TransportKind::Tcp, 4, 2, 8, 3);
+        assert_eq!(tcb.inflight_bound(), 5);
     }
 }

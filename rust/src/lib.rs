@@ -35,10 +35,10 @@
 //!
 //! Three optional builder knobs:
 //! * `.transport(..)` — the worker→server push queueing discipline
-//!   ([`coordinator::Transport`]): the bounded-mpsc original or the
-//!   lock-free per-worker SPSC ring, with up to `batch` w-blocks
-//!   coalesced per slot (`--set transport=mpsc|ring batch=N` on the
-//!   CLI).
+//!   ([`coordinator::Transport`]): the bounded-mpsc original, the
+//!   lock-free per-worker SPSC ring, or loopback TCP sockets with
+//!   credit-window backpressure, with up to `batch` w-blocks coalesced
+//!   per slot (`--set transport=mpsc|ring|tcp batch=N` on the CLI).
 //! * `.observer(..)` — run telemetry hooks ([`coordinator::Observer`]);
 //!   objective sampling is itself the built-in observer.
 //! * `.algo(..)` — [`coordinator::Algo`]: `AsyncAdmm` (default),
@@ -82,6 +82,23 @@
 //! arms a watchdog that reports a [`coordinator::FaultEvent::Stalled`]
 //! to observers when no worker makes progress. Injected and observed
 //! faults land in `TrainReport::faults`.
+//!
+//! ## Networked runtime (`coordinator/net/`, DESIGN.md §2.0.5)
+//!
+//! The same runtime also runs **multi-process**, std-only (no new
+//! dependencies): `asybadmm serve --listen HOST:PORT` starts the
+//! coordinator (server shards, [`coordinator::BlockTable`], rebalancer)
+//! and `asybadmm work --connect HOST:PORT --rank R/N` runs the worker
+//! ranks `w where w mod N == R` against it.  Worker processes join over
+//! a length-prefixed little-endian wire format (`net/wire.rs`), receive
+//! the full config + block-owner map in the `Welcome` handshake, push
+//! through [`coordinator::TcpTransport`] lanes with **exact**
+//! credit-window backpressure, mirror consensus state via a versioned
+//! pull stream, and learn `placement=dynamic` migrations through
+//! `OwnerUpdate` republishes.  `--set stats_addr=HOST:PORT` (any run,
+//! in-process or serve mode) serves live JSON counters over hand-rolled
+//! HTTP/1.1: `GET /stats` (per-shard load, applied-push counters,
+//! placement map, migration ledger, fault events) and `GET /healthz`.
 //!
 //! See `DESIGN.md` (repo root) for the system inventory, the hot-path
 //! mechanisms (seqlock block store, push-buffer pool, block-slice CSR

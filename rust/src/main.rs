@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   train       threaded async training run (Algorithm 1)
+//!   serve       multi-process coordinator: server shards + control plane
+//!   work        multi-process worker: joins a serve coordinator over TCP
 //!   sim         discrete-event cluster simulation of the same run
 //!   sync        synchronous baseline (paper §3.1)
 //!   gen-data    emit a synthetic KDDa-like dataset as libsvm text
@@ -33,6 +35,8 @@ fn main() {
         .collect();
     let code = match cmd {
         "train" => run("train", &rest),
+        "serve" => run("serve", &rest),
+        "work" => run("work", &rest),
         "sim" => run("sim", &rest),
         "sync" => run("sync", &rest),
         "gen-data" => run("gen-data", &rest),
@@ -41,8 +45,12 @@ fn main() {
         "--help" | "-h" | "help" | "" => {
             eprintln!(
                 "asybadmm — block-wise asynchronous distributed ADMM\n\n\
-                 USAGE: asybadmm <train|sim|sync|gen-data|check|artifacts> [OPTIONS]\n\
-                 Run `asybadmm <cmd> --help` for options."
+                 USAGE: asybadmm <train|serve|work|sim|sync|gen-data|check|artifacts> [OPTIONS]\n\
+                 Run `asybadmm <cmd> --help` for options.\n\n\
+                 Multi-process: `asybadmm serve --listen HOST:PORT [--set ...]` starts the\n\
+                 coordinator (server shards + /stats control plane when stats_addr=HOST:PORT\n\
+                 is set); `asybadmm work --connect HOST:PORT --rank R/N` runs worker ranks\n\
+                 w where w mod N == R against it."
             );
             if cmd.is_empty() {
                 2
@@ -61,6 +69,8 @@ fn main() {
 fn run(cmd: &str, argv: &[String]) -> i32 {
     let result = match cmd {
         "train" => cmd_train(argv, false),
+        "serve" => asybadmm::coordinator::serve_main(argv),
+        "work" => asybadmm::coordinator::work_main(argv),
         "sim" => cmd_train(argv, true),
         "sync" => cmd_sync(argv),
         "gen-data" => cmd_gen_data(argv),
@@ -83,13 +93,14 @@ fn config_args(a: Args) -> Args {
             "set",
             "",
             "comma-separated key=value config overrides (e.g. \
-             transport=mpsc|ring, placement=contiguous|roundrobin|hash|degree|dynamic, \
+             transport=mpsc|ring|tcp, placement=contiguous|roundrobin|hash|degree|dynamic, \
              drain=owned|steal, server_threads=N (0 = one per shard), \
              kernel=scalar|unrolled|simd|auto (auto = AVX2 when available), \
              rebalance_ms=MS, batch=N, backend=native|xla, \
              faults=crash:w1@5;stall:s0@100+25ms;sendfail:w2@4x3, \
              failure=die|degrade|restart, stall_warn_ms=MS, \
              checkpoint_every=EPOCHS, checkpoint_path=FILE, \
+             stats_addr=HOST:PORT (live /stats + /healthz HTTP endpoint), \
              n_workers=8; an unknown key lists all valid keys)",
         )
 }

@@ -1,0 +1,251 @@
+//! Multi-process differential test (DESIGN.md §2.0.5): one `asybadmm
+//! serve` coordinator + two `asybadmm work` processes over real loopback
+//! sockets must
+//!  * keep exact push accounting (frames applied == frames sent),
+//!  * migrate blocks under `placement=dynamic` with a Zipf-hot head,
+//!  * land in the same objective neighborhood as the in-process runtime
+//!    on an identical config, and
+//!  * answer `GET /stats` with live per-shard load + placement mid-run
+//!    (probed with a bare `TcpStream` — the CI job stays curl-free).
+//!
+//! Processes are torn down on any failure via a kill-on-drop guard.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use asybadmm::config::Config;
+use asybadmm::coordinator::Session;
+use asybadmm::data::gen_partitioned;
+use asybadmm::util::json::Json;
+
+const BIN: &str = env!("CARGO_BIN_EXE_asybadmm");
+
+/// Config shared verbatim by the serve process and the in-process
+/// reference run.  The shape mirrors `tests/integration.rs`'s dynamic-
+/// placement gate: a Zipf-hot 3-block shared head that the contiguous
+/// start parks on shard 0, so the rebalancer has an unambiguous signal;
+/// `rebalance_ms=0` scans on every monitor wakeup.  The injected
+/// 0.1ms-mean network delay keeps the run long enough (>= ~120ms) for
+/// the /stats probe to land mid-run without changing where it converges.
+const SET: &[(&str, &str)] = &[
+    ("samples", "96"),
+    ("n_blocks", "8"),
+    ("block_size", "16"),
+    ("nnz_per_row", "6"),
+    ("blocks_per_worker", "4"),
+    ("shared_blocks", "3"),
+    ("n_workers", "3"),
+    ("n_servers", "2"),
+    ("epochs", "1200"),
+    ("m_chunk", "32"),
+    ("d_pad", "64"),
+    ("rho", "2"),
+    ("lambda", "0.0001"),
+    ("placement", "dynamic"),
+    ("rebalance_ms", "0"),
+    ("batch", "2"),
+    ("net_delay_mean_ms", "0.1"),
+    ("log_every", "100000"),
+];
+
+const EPOCHS: usize = 1200;
+const N_WORKERS: usize = 3;
+
+fn set_string(extra: &str) -> String {
+    let mut s: String =
+        SET.iter().map(|(k, v)| format!("{k}={v}")).collect::<Vec<_>>().join(",");
+    if !extra.is_empty() {
+        s.push(',');
+        s.push_str(extra);
+    }
+    s
+}
+
+/// Kill-on-drop child guard: a failed assertion must not strand
+/// coordinator/worker processes (locally or in CI).
+struct Reap(Child);
+
+impl Drop for Reap {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+/// One curl-free HTTP GET against the stats endpoint.
+fn http_get(addr: &str, path: &str) -> std::io::Result<(String, String)> {
+    let mut conn = TcpStream::connect(addr)?;
+    conn.set_read_timeout(Some(Duration::from_secs(2))).ok();
+    conn.write_all(
+        format!("GET {path} HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").as_bytes(),
+    )?;
+    let mut raw = String::new();
+    conn.read_to_string(&mut raw)?;
+    let (head, body) = raw.split_once("\r\n\r\n").unwrap_or((raw.as_str(), ""));
+    Ok((head.lines().next().unwrap_or("").to_string(), body.to_string()))
+}
+
+/// `key=value` token out of the serve summary line.
+fn field_u64(line: &str, key: &str) -> u64 {
+    line.split_whitespace()
+        .find_map(|t| t.strip_prefix(key))
+        .unwrap_or_else(|| panic!("no {key:?} field in {line:?}"))
+        .trim_end_matches(|c: char| !c.is_ascii_digit())
+        .parse()
+        .unwrap_or_else(|e| panic!("bad {key:?} field in {line:?}: {e}"))
+}
+
+fn objective_of(line: &str) -> f64 {
+    line.split("objective ")
+        .nth(1)
+        .and_then(|rest| rest.split_whitespace().next())
+        .unwrap_or_else(|| panic!("no objective in {line:?}"))
+        .parse()
+        .unwrap_or_else(|e| panic!("bad objective in {line:?}: {e}"))
+}
+
+#[test]
+fn two_worker_processes_match_the_in_process_run() {
+    // -- coordinator ---------------------------------------------------
+    let mut serve = Reap(
+        Command::new(BIN)
+            .args([
+                "serve",
+                "--listen",
+                "127.0.0.1:0",
+                "--set",
+                &set_string("stats_addr=127.0.0.1:0"),
+            ])
+            .stdout(Stdio::piped())
+            .spawn()
+            .expect("spawn serve"),
+    );
+    let mut lines = BufReader::new(serve.0.stdout.take().expect("serve stdout")).lines();
+    let (mut listen, mut stats) = (None, None);
+    while listen.is_none() || stats.is_none() {
+        let line = lines
+            .next()
+            .expect("serve exited before announcing its addresses")
+            .expect("serve stdout");
+        if let Some(a) = line.strip_prefix("# listening on ") {
+            listen = Some(a.trim().to_string());
+        } else if let Some(a) = line.strip_prefix("# stats on ") {
+            stats = Some(a.trim().to_string());
+        }
+    }
+    let (listen, stats) = (listen.unwrap(), stats.unwrap());
+
+    // -- two worker processes, ranks 0/2 and 1/2 ----------------------
+    let spawn_worker = |rank: &str| {
+        Reap(
+            Command::new(BIN)
+                .args(["work", "--connect", &listen, "--rank", rank])
+                .stdout(Stdio::null())
+                .spawn()
+                .expect("spawn work"),
+        )
+    };
+    let mut w0 = spawn_worker("0/2");
+    let mut w1 = spawn_worker("1/2");
+
+    // -- live /stats probe (bare TcpStream; no curl) -------------------
+    let (status, body) = http_get(&stats, "/healthz").expect("healthz");
+    assert!(status.contains("200"), "healthz: {status}");
+    assert_eq!(body, "ok\n");
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut live = None;
+    while live.is_none() {
+        assert!(
+            Instant::now() < deadline,
+            "stats probe never saw a live run (pushes_total stayed 0)"
+        );
+        if let Ok((status, body)) = http_get(&stats, "/stats") {
+            assert!(status.contains("200"), "stats: {status}");
+            let snap = Json::parse(&body).expect("stats body is JSON");
+            let pushes = snap.get("pushes_total").and_then(Json::as_f64).expect("pushes_total");
+            if pushes > 0.0 {
+                live = Some(snap);
+            }
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let snap = live.unwrap();
+    match snap.get("placement") {
+        Some(Json::Arr(owners)) => {
+            assert_eq!(owners.len(), 8, "placement map must cover every block");
+            for o in owners {
+                let o = o.as_f64().expect("owner index");
+                assert!(o == 0.0 || o == 1.0, "owner {o} outside the 2 shards");
+            }
+        }
+        other => panic!("/stats placement missing or not an array: {other:?}"),
+    }
+    match snap.get("shard_load") {
+        Some(Json::Arr(load)) => assert_eq!(load.len(), 2, "one load entry per shard"),
+        other => panic!("/stats shard_load missing or not an array: {other:?}"),
+    }
+
+    // -- completion + accounting ---------------------------------------
+    let done = lines
+        .by_ref()
+        .map(|l| l.expect("serve stdout"))
+        .find(|l| l.starts_with("# done in "))
+        .expect("serve exited without a done line");
+    assert!(serve.0.wait().expect("wait serve").success(), "serve failed");
+    assert!(w0.0.wait().expect("wait rank 0").success(), "rank 0/2 failed");
+    assert!(w1.0.wait().expect("wait rank 1").success(), "rank 1/2 failed");
+
+    let applied = field_u64(&done, "pushes=");
+    let sent = field_u64(&done, "sent=");
+    let migrations = field_u64(&done, "migrations=");
+    assert_eq!(
+        applied,
+        (EPOCHS * N_WORKERS) as u64,
+        "push accounting broke across processes: {done}"
+    );
+    assert_eq!(applied, sent, "applied != sent across the wire: {done}");
+    assert!(migrations > 0, "no migrations under a Zipf-hot head: {done}");
+
+    // -- differential: same config, in-process runtime -----------------
+    let obj_mp = objective_of(&done);
+    let mut cfg = Config::default();
+    for (k, v) in SET {
+        cfg.apply_kv(k, v).unwrap();
+    }
+    cfg.validate().unwrap();
+    let (ds, shards) = gen_partitioned(&cfg.synth_spec(), cfg.n_workers);
+    let r = Session::builder(&cfg).dataset(&ds, &shards).run().unwrap();
+    let obj_ip = r.final_objective.total();
+    assert!(obj_mp.is_finite() && obj_mp < 0.68, "multi-process did not converge: {obj_mp}");
+    // The worker processes iterate against a pulled mirror of z (up to
+    // ~one poll interval stale) instead of the live store, so allow a
+    // slightly wider neighborhood than the in-process transport matrix.
+    assert!(
+        (obj_mp - obj_ip).abs() < 0.1,
+        "multi-process {obj_mp} vs in-process {obj_ip} beyond async noise"
+    );
+}
+
+#[test]
+fn serve_rejects_malformed_listen_addr_naming_the_form() {
+    let out = Command::new(BIN)
+        .args(["serve", "--listen", "not-an-addr", "--set", "epochs=1"])
+        .output()
+        .expect("run serve");
+    assert!(!out.status.success(), "serve accepted a malformed listen address");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("host:port"), "error should show the form: {stderr}");
+}
+
+#[test]
+fn work_rejects_out_of_range_rank() {
+    let out = Command::new(BIN)
+        .args(["work", "--connect", "127.0.0.1:9", "--rank", "5/2"])
+        .output()
+        .expect("run work");
+    assert!(!out.status.success(), "work accepted rank 5/2");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("rank must be in 0..2"), "unexpected error: {stderr}");
+}

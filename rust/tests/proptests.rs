@@ -6,14 +6,15 @@ use std::sync::Arc;
 use asybadmm::admm::{gather_packed, prox_l1_box, soft_threshold};
 use asybadmm::config::PlacementKind;
 use asybadmm::coordinator::{
-    make_placement, BlockMap, BlockStore, BlockTable, MpscTransport, ProxBackend, PushMsg,
-    RwBlockStore, ServerShard, SpscRingTransport, Topology, Transport, TryRecv,
+    make_placement, wire, BlockMap, BlockStore, BlockTable, MpscTransport, ProxBackend,
+    PushMsg, RwBlockStore, ServerShard, SpscRingTransport, Topology, Transport, TryRecv,
 };
 use asybadmm::data::{gen_partitioned, BlockGeometry, Dataset, LossKind, SynthSpec};
 use asybadmm::problem::Problem;
 use asybadmm::sparse::{dense, CsrBuilder, CsrMatrix};
 use asybadmm::testutil::forall;
 use asybadmm::util::rng::Rng;
+use asybadmm::util::AlignedBuf;
 
 fn random_spec(rng: &mut Rng) -> (SynthSpec, usize) {
     let n_blocks = 2 + rng.below(8);
@@ -744,6 +745,209 @@ fn prop_gather_packed_consistent() {
                         return Err(format!("slot {slot} block {j} mismatch"));
                     }
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Wire format (coordinator/net/wire.rs, DESIGN.md §2.0.5)
+// ---------------------------------------------------------------------
+
+/// Random pushes shaped like a TCP sender's pending slot: `k` messages
+/// coalesce into one `Push` (k = 1) or `PushBatch` (k > 1) frame.
+fn rand_push_set(rng: &mut Rng) -> Vec<PushMsg> {
+    let db = 1 + rng.below(48);
+    let k = 1 + rng.below(3);
+    (0..k)
+        .map(|_| PushMsg {
+            worker: rng.below(64),
+            block: rng.below(256),
+            w: (0..db).map(|_| rng.normal_f32(0.0, 10.0)).collect::<Vec<f32>>().into(),
+            worker_epoch: rng.below(1 << 20),
+            z_version_used: rng.next_u64(),
+            block_seq: rng.next_u64(),
+            sent_at: None,
+            recycle: None,
+        })
+        .collect()
+}
+
+/// Envelope + bodies, exactly as `TcpPushSender::flush_server` encodes
+/// a pending slot.
+fn encode_push_frame(msgs: &[PushMsg]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    let start = if msgs.len() == 1 {
+        wire::begin_frame(&mut buf, wire::kind::PUSH)
+    } else {
+        let s = wire::begin_frame(&mut buf, wire::kind::PUSH_BATCH);
+        wire::put_u32(&mut buf, msgs.len() as u32);
+        s
+    };
+    for m in msgs {
+        wire::put_push_body(&mut buf, m);
+    }
+    wire::end_frame(&mut buf, start);
+    buf
+}
+
+/// Full receive-path decode of one encoded frame: envelope, cursor,
+/// bodies, trailing-bytes check.  Returns the decoded pushes.
+fn decode_push_frame(bytes: &[u8]) -> Result<Vec<wire::WirePush>, String> {
+    let mut slice = bytes;
+    let (k, payload) = wire::read_frame(&mut slice)
+        .map_err(|e| format!("{e:#}"))?
+        .ok_or_else(|| "clean EOF instead of a frame".to_string())?;
+    let mut cur = wire::Cursor::new(k, &payload).map_err(|e| format!("{e:#}"))?;
+    let count = match k {
+        wire::kind::PUSH => 1,
+        wire::kind::PUSH_BATCH => cur.u32("count").map_err(|e| format!("{e:#}"))? as usize,
+        other => return Err(format!("not a push frame: {}", wire::kind_name(other))),
+    };
+    let mut out = Vec::new();
+    for _ in 0..count {
+        out.push(
+            wire::take_push_body(&mut cur, &mut |n| AlignedBuf::zeroed(n))
+                .map_err(|e| format!("{e:#}"))?,
+        );
+    }
+    cur.finish().map_err(|e| format!("{e:#}"))?;
+    Ok(out)
+}
+
+/// (i) Wire round-trip: random push sets — batched and not — encode
+/// through the full envelope and decode back identically, fields and
+/// f32 payload bit-for-bit, with the stream left at a clean boundary.
+#[test]
+fn prop_wire_push_frames_roundtrip() {
+    forall(
+        "wire-roundtrip",
+        40,
+        |rng| rand_push_set(rng),
+        |msgs| {
+            let buf = encode_push_frame(msgs);
+            let got = decode_push_frame(&buf)?;
+            if got.len() != msgs.len() {
+                return Err(format!("decoded {} of {} pushes", got.len(), msgs.len()));
+            }
+            for (p, m) in got.iter().zip(msgs) {
+                if p.worker != m.worker
+                    || p.block != m.block
+                    || p.worker_epoch != m.worker_epoch
+                    || p.z_version_used != m.z_version_used
+                    || p.block_seq != m.block_seq
+                {
+                    return Err(format!("scalar fields diverged: {p:?}"));
+                }
+                if p.w.len() != m.w.len()
+                    || !p.w.iter().zip(m.w.iter()).all(|(a, b)| a.to_bits() == b.to_bits())
+                {
+                    return Err("w payload not bit-identical".into());
+                }
+            }
+            // The envelope consumed exactly its own bytes: a second read
+            // on the remaining stream is a clean EOF.
+            let mut rest = &buf[buf.len()..];
+            match wire::read_frame(&mut rest) {
+                Ok(None) => Ok(()),
+                other => Err(format!("stream not at a frame boundary: {other:?}")),
+            }
+        },
+    );
+}
+
+/// (i2) Truncation: cutting an encoded frame at ANY byte yields a
+/// contextual error — naming the frame kind and the expected length
+/// once the header is readable — and never panics or silently decodes
+/// a partial frame.
+#[test]
+fn prop_wire_truncated_frames_error_contextually() {
+    forall(
+        "wire-truncation",
+        40,
+        |rng| {
+            let buf = encode_push_frame(&rand_push_set(rng));
+            let cut = rng.below(buf.len());
+            (buf, cut)
+        },
+        |(buf, cut)| {
+            let kind_byte = buf[4];
+            let payload_len = buf.len() - wire::HEADER;
+            let err = match decode_push_frame(&buf[..*cut]) {
+                Ok(_) => return Err(format!("decoded a frame cut at byte {cut}")),
+                Err(e) => e,
+            };
+            if *cut == 0 {
+                // A cut before any byte is a clean EOF, reported as such.
+                if !err.contains("clean EOF") {
+                    return Err(format!("cut at 0 not a clean EOF: {err}"));
+                }
+            } else if *cut < wire::HEADER {
+                if !err.contains("mid-header") {
+                    return Err(format!("header cut lacks context: {err}"));
+                }
+            } else {
+                // Header intact: the error must name the frame kind and
+                // the payload length the envelope promised.
+                if !err.contains(wire::kind_name(kind_byte)) {
+                    return Err(format!("error does not name the frame kind: {err}"));
+                }
+                if !err.contains("truncated") || !err.contains(&format!("{payload_len}")) {
+                    return Err(format!("error lacks the expected length: {err}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (i3) Corruption safety: flipping any byte of an encoded frame (and
+/// the targeted worst cases — unknown kind, oversized claimed length)
+/// either fails with a contextual error or decodes without panicking;
+/// the bounds-checked cursor never reads out of bounds.
+#[test]
+fn prop_wire_corrupted_frames_never_panic() {
+    forall(
+        "wire-corruption",
+        40,
+        |rng| {
+            let buf = encode_push_frame(&rand_push_set(rng));
+            let at = rng.below(buf.len());
+            let flip = 1 + rng.below(255) as u8;
+            (buf, at, flip)
+        },
+        |(buf, at, flip)| {
+            let mut bad = buf.clone();
+            bad[*at] ^= flip;
+            if *at < 4 {
+                // Length-field flips claim the wrong payload size: pad
+                // so the claimed bytes exist, to exercise the cursor's
+                // bounds checks rather than the stream's EOF path.
+                let claimed =
+                    u32::from_le_bytes(bad[..4].try_into().unwrap()) as usize;
+                if claimed <= wire::MAX_FRAME {
+                    bad.resize(wire::HEADER + claimed, 0);
+                }
+            }
+            match decode_push_frame(&bad) {
+                Ok(_) => {} // payload flips legitimately round-trip
+                Err(e) if e.is_empty() => return Err("empty error context".into()),
+                Err(_) => {}
+            }
+            // Targeted worst cases on top of the random flip:
+            let mut unknown = buf.clone();
+            unknown[4] = 0xEE;
+            let err = decode_push_frame(&unknown).unwrap_err();
+            if !err.contains("unknown frame kind") {
+                return Err(format!("unknown-kind error lacks context: {err}"));
+            }
+            let mut oversized = buf.clone();
+            oversized[..4]
+                .copy_from_slice(&((wire::MAX_FRAME + 1) as u32).to_le_bytes());
+            let err = decode_push_frame(&oversized).unwrap_err();
+            if !err.contains("exceeds") {
+                return Err(format!("oversize-length error lacks context: {err}"));
             }
             Ok(())
         },
