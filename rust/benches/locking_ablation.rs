@@ -29,6 +29,7 @@ use asybadmm::bench::{emit_hotpath_json, harness_from_env, json_requested, maybe
 use asybadmm::config::{Config, TransportKind};
 use asybadmm::coordinator::{
     make_transport, push_inflight, BlockStore, PushMsg, PushPool, RwBlockStore, Session,
+    TcpTransport, Transport,
 };
 use asybadmm::data::gen_partitioned;
 use asybadmm::sim::{run_sim, CostModel};
@@ -184,6 +185,11 @@ fn main() {
     //    encode + syscall + credit-window cost is tracked against the
     //    in-process fast path it must stand in for across machines.
     let msgs = if quick { 2_000 } else { 20_000 };
+    // Warm each transport once (connection setup, listener accept and
+    // first-allocation costs land outside the measured run).
+    for kind in [TransportKind::Mpsc, TransportKind::SpscRing, TransportKind::Tcp] {
+        push_throughput(kind, 4, msgs / 10 + 1, 256);
+    }
     let mpsc_rate = push_throughput(TransportKind::Mpsc, 4, msgs, 256);
     let ring_rate = push_throughput(TransportKind::SpscRing, 4, msgs, 256);
     let tcp_rate = push_throughput(TransportKind::Tcp, 4, msgs, 256);
@@ -200,6 +206,63 @@ fn main() {
          \x20 -> ring/mpsc = {enqueue_ratio:.2}x  (gate; <1 expected only on 1-core hosts)\n\
          \x20 -> tcp/ring  = {tcp_ratio:.2}x  (gate; <1 expected — this is the price of a wire)",
         mpsc_rate, ring_rate, tcp_rate
+    );
+
+    // 2b. Credit coalescing on the tcp reverse path: v1 acked every
+    //     decoded push frame 1:1; v2 returns one cumulative
+    //     Credit{frames, hint} per drain pass (flush threshold
+    //     ceil(cap_b/2), plus an idle flush for liveness).  The
+    //     `credit_coalescing_frames` gate is credit frames per push
+    //     frame at batch=2 — 1.0 is the old per-frame ack wire, the
+    //     threshold puts steady state near 0.25.
+    //     Windowed send/drain keeps the measurement deterministic: each
+    //     round fills the credit window exactly (cap=16 msgs = 8 batch-2
+    //     frames), lets loopback deliver, then drains — so credit
+    //     frames per window are set by the flush threshold, not by how
+    //     the scheduler interleaved a racing producer.
+    let n_windows = if quick { 50 } else { 200 };
+    let window_msgs = 16usize;
+    let (credit_ratio, credit_w) = {
+        let transport = TcpTransport::new(1, 1, window_msgs, 2);
+        let mut tx = transport.connect_worker(0);
+        let mut rx = transport.connect_server(0);
+        let mut pool = PushPool::new(256, 32);
+        for round in 0..n_windows {
+            for i in 0..window_msgs {
+                let buf = pool.acquire();
+                let msg = PushMsg {
+                    worker: 0,
+                    block: 0,
+                    w: buf,
+                    worker_epoch: round * window_msgs + i,
+                    z_version_used: 0,
+                    block_seq: 0,
+                    sent_at: None,
+                    recycle: Some(pool.recycler()),
+                };
+                tx.send(0, msg).unwrap();
+            }
+            std::thread::sleep(Duration::from_micros(500));
+            for _ in 0..window_msgs {
+                let mut msg = rx.recv().expect("tcp transport ended early");
+                msg.recycle_now();
+            }
+        }
+        let w = transport.wire_snapshot();
+        assert_eq!(
+            w.msgs_in as usize,
+            n_windows * window_msgs,
+            "wire counters missed messages"
+        );
+        (w.credit_frames_out as f64 / (w.push_frames_in as f64).max(1.0), w)
+    };
+    record(&mut h, "tcp credit coalescing (1w->1s, batch=2)", credit_ratio);
+    println!(
+        "\ncredit coalescing (1 producer -> 1 draining server, batch=2, cap=16):\n\
+         \x20 push frames in    {:>8}  ({} msgs)\n\
+         \x20 credit frames out {:>8}  ({} frame credits returned)\n\
+         \x20 -> credits/pushes = {credit_ratio:.3}  (gate: < 0.55; per-frame acks were 1.0)",
+        credit_w.push_frames_in, credit_w.msgs_in, credit_w.credit_frames_out, credit_w.credits_out
     );
 
     // 3. Wall-clock (threaded), async session under both transports.
@@ -310,6 +373,7 @@ fn main() {
                 ("tcp_push_per_s", tcp_rate),
                 ("ring_vs_mpsc_enqueue", enqueue_ratio),
                 ("tcp_loopback_vs_ring_enqueue", tcp_ratio),
+                ("credit_coalescing_frames", credit_ratio),
                 ("threaded_lockfree_updates_per_s", free_rate),
                 ("threaded_ring_updates_per_s", ring_threaded_rate),
                 ("threaded_globallock_updates_per_s", locked_rate),

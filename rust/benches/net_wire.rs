@@ -1,6 +1,7 @@
-//! Wire-format hot path (DESIGN.md §2.0.5): encode/decode throughput
-//! of the length-prefixed push frames the networked runtime puts on
-//! every worker→server socket.
+//! Wire-format hot path (DESIGN.md §2.0.5–2.0.6): encode/decode
+//! throughput of the length-prefixed push frames the networked runtime
+//! puts on every worker→server socket, plus the pull-plane delta
+//! encoding ratio.
 //!
 //! The TCP transport's per-push budget is one body serialization on the
 //! sender (`put_push_body` into a reused frame buffer) and one
@@ -9,6 +10,12 @@
 //! serialization regression is attributable separately from kernel or
 //! syscall noise — the `tcp_frame_encode_throughput` gate in
 //! BENCH_hotpath.json (pushes encoded per second, batched frames).
+//!
+//! The second section measures the `PullResp` v2 encoder on an ADMM-like
+//! sparse refresh (a few lanes of z̃ move per block between polls): the
+//! `delta_pull_bytes` gate is sparse-encoded bytes over the all-dense
+//! bytes the v1 wire would have shipped, asserted bit-identical after
+//! reconstruction.
 //!
 //!     cargo bench --bench net_wire [-- --json]
 //!     BENCH_QUICK=1 cargo bench --bench net_wire
@@ -103,6 +110,86 @@ fn main() {
         decode_rate
     );
 
+    // -- pull-plane delta encoding (DESIGN.md §2.0.6) -----------------
+    // A mirror poll after one prox round touches a handful of lanes per
+    // block (sparse dual/primal updates); model ~10% density across 64
+    // paper-scale blocks and measure what the v2 encoder ships vs the
+    // v1 all-dense wire.  Reconstruction is checked bit-for-bit so the
+    // ratio can never be bought with lossy encoding.
+    let n_blocks = 64usize;
+    let changed_lanes = db / 10;
+    let mut rng = Rng::new(11);
+    let base: Vec<Vec<f32>> = (0..n_blocks)
+        .map(|_| (0..db).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+        .collect();
+    let mut cur: Vec<Vec<f32>> = base.clone();
+    for blk in cur.iter_mut() {
+        for _ in 0..changed_lanes {
+            let lane = rng.below(db);
+            blk[lane] += rng.normal_f32(0.0, 0.1);
+        }
+    }
+    let (mut idx, mut vals) = (Vec::new(), Vec::new());
+    let mut sparse_buf = Vec::new();
+    let mut dense_buf = Vec::new();
+    let delta_mean_s = h
+        .bench("pull delta encode (64 blocks, ~10% lanes changed)", || {
+            sparse_buf.clear();
+            dense_buf.clear();
+            for j in 0..n_blocks {
+                wire::diff_block(&base[j], &cur[j], &mut idx, &mut vals);
+                if wire::sparse_saves_bytes(idx.len(), db) {
+                    wire::put_pull_block_sparse(&mut sparse_buf, j as u32, 2, 1, &idx, &vals);
+                } else {
+                    wire::put_pull_block_dense(&mut sparse_buf, j as u32, 2, &cur[j]);
+                }
+                wire::put_pull_block_dense(&mut dense_buf, j as u32, 2, &cur[j]);
+            }
+            std::hint::black_box((sparse_buf.len(), dense_buf.len()));
+        })
+        .mean_s;
+    let delta_rate = n_blocks as f64 / delta_mean_s.max(1e-12);
+    let delta_pull_bytes = sparse_buf.len() as f64 / dense_buf.len() as f64;
+
+    // Reconstruct every block from the sparse stream and demand bit
+    // identity with the dense truth.
+    {
+        let mut payload = Vec::new();
+        wire::put_u32(&mut payload, n_blocks as u32);
+        payload.extend_from_slice(&sparse_buf);
+        let mut cursor = wire::Cursor::new(wire::kind::PULL_RESP, &payload).unwrap();
+        let count = cursor.u32("count").unwrap() as usize;
+        assert_eq!(count, n_blocks);
+        for _ in 0..count {
+            let b = wire::take_pull_block(&mut cursor).unwrap();
+            let mut rebuilt = base[b.block].clone();
+            match b.body {
+                wire::WirePullBody::Dense(d) => rebuilt.copy_from_slice(&d),
+                wire::WirePullBody::Sparse { idx, vals, .. } => {
+                    wire::apply_sparse_patch(&mut rebuilt, &idx, &vals).unwrap()
+                }
+            }
+            let same = rebuilt
+                .iter()
+                .zip(&cur[b.block])
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "sparse reconstruction diverged on block {}", b.block);
+        }
+        cursor.finish().unwrap();
+    }
+
+    println!(
+        "\npull delta ({n_blocks} blocks x db={db}, ~{changed_lanes} lanes changed):\n\
+         \x20 encode {:>12.0} blocks/s\n\
+         \x20 bytes  {:>12} sparse vs {} dense  (ratio {:.3})\n\
+         \x20 (gate: delta_pull_bytes < 0.5 — sparse deltas must at least halve\n\
+         \x20  pull bandwidth on a ~10%-density refresh)",
+        delta_rate,
+        sparse_buf.len(),
+        dense_buf.len(),
+        delta_pull_bytes
+    );
+
     if json_requested() {
         emit_hotpath_json(
             "net_wire",
@@ -111,6 +198,8 @@ fn main() {
                 ("tcp_frame_encode_throughput", encode_rate),
                 ("tcp_frame_decode_throughput", decode_rate),
                 ("frame_bytes_batch8_db256", frame_bytes as f64),
+                ("delta_pull_bytes", delta_pull_bytes),
+                ("delta_pull_encode_blocks_per_s", delta_rate),
             ],
         );
     }

@@ -188,6 +188,7 @@ pub const GATE_KEYS: &[&str] = &[
     "seqlock_vs_rwlock",
     "ring_vs_mpsc_enqueue",
     "tcp_loopback_vs_ring_enqueue",
+    "credit_coalescing_frames",
     // placement_skew
     "steal_vs_owned_drain",
     "degree_vs_contiguous_skew",
@@ -201,6 +202,7 @@ pub const GATE_KEYS: &[&str] = &[
     "recovery_vs_faultfree_epochs",
     // net_wire
     "tcp_frame_encode_throughput",
+    "delta_pull_bytes",
     // kernel_gradient
     "sliced_vs_scan_min_speedup",
     "simd_vs_unrolled_spmv",

@@ -54,11 +54,17 @@
 //! crossbeam's `SeqLock`.
 
 use std::sync::atomic::{fence, AtomicU32, AtomicU64, Ordering};
-use std::sync::{Mutex, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 
 pub struct BlockStore {
     blocks: Vec<Slot>,
     db: usize,
+    /// Global publish counter: bumped once per published write, any
+    /// block.  `Arc`ed so the networked runtime can piggyback it on
+    /// Credit frames (the pull-cadence version hint) without holding a
+    /// store reference — a relaxed `fetch_add` next to the seqlock
+    /// publish, invisible to the hot path.
+    publishes: Arc<AtomicU64>,
 }
 
 struct Slot {
@@ -129,7 +135,14 @@ impl Slot {
 impl BlockStore {
     pub fn new(n_blocks: usize, db: usize) -> Self {
         let blocks = (0..n_blocks).map(|_| Slot::new(db)).collect();
-        BlockStore { blocks, db }
+        BlockStore { blocks, db, publishes: Arc::new(AtomicU64::new(0)) }
+    }
+
+    /// Handle on the global publish counter (see the field docs).  The
+    /// counter is monotone and starts at 0; equal observed values mean
+    /// "no block has been republished since".
+    pub fn publish_counter(&self) -> Arc<AtomicU64> {
+        self.publishes.clone()
     }
 
     pub fn n_blocks(&self) -> usize {
@@ -155,7 +168,9 @@ impl BlockStore {
         debug_assert_eq!(data.len(), self.db);
         let slot = &self.blocks[j];
         let _guard = slot.writer.lock().unwrap();
-        slot.write_locked(data)
+        let v = slot.write_locked(data);
+        self.publishes.fetch_add(1, Ordering::Relaxed);
+        v
     }
 
     /// Atomic read-modify-write of block j (HOGWILD-SGD baseline): the
@@ -170,7 +185,9 @@ impl BlockStore {
             *o = f32::from_bits(a.load(Ordering::Relaxed));
         }
         f(&mut scratch);
-        slot.write_locked(&scratch[..])
+        let v = slot.write_locked(&scratch[..]);
+        self.publishes.fetch_add(1, Ordering::Relaxed);
+        v
     }
 
     /// Adopt block j at an externally assigned `version` — the mirror-
@@ -205,6 +222,7 @@ impl BlockStore {
             a.store(v.to_bits(), Ordering::Relaxed);
         }
         slot.seq.store(version << 1, Ordering::Release);
+        self.publishes.fetch_add(1, Ordering::Relaxed);
         true
     }
 

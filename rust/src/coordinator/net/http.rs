@@ -5,7 +5,9 @@
 //!
 //! * `GET /stats`   → `200 application/json` — a live snapshot built by
 //!   the closure the runtime registers (per-shard load, applied-push
-//!   counters, placement map, migration ledger, fault events).
+//!   counters, placement map, migration ledger, fault events, and the
+//!   nested `"wire"`/`"pull"` data-plane counter objects the serve role
+//!   publishes — see DESIGN.md §2.0.6).
 //! * `GET /healthz` → `200 text/plain` `ok` — liveness only.
 //! * anything else  → `404` (unknown path) or `405` (non-GET).
 //!
@@ -166,6 +168,33 @@ mod tests {
 
         let (status, _) = get(addr, "/nope");
         assert!(status.contains("404"), "unknown path: {status}");
+    }
+
+    /// The serve role nests its data-plane counters under `"wire"` and
+    /// `"pull"`; the endpoint must ship nested objects intact (a flat
+    /// serializer would silently drop them from dashboards).
+    #[test]
+    fn serves_nested_counter_objects_intact() {
+        let server = StatsServer::spawn(
+            "127.0.0.1:0",
+            Arc::new(|| {
+                obj(vec![
+                    ("pushes_total", num(3.0)),
+                    ("wire", obj(vec![("push_frames_in", num(17.0)), ("credits_out", num(34.0))])),
+                    ("pull", obj(vec![("sparse_blocks", num(5.0))])),
+                ])
+            }),
+        )
+        .unwrap();
+
+        let (status, body) = get(server.addr(), "/stats");
+        assert!(status.contains("200"), "stats: {status}");
+        let parsed = Json::parse(&body).expect("stats body is JSON");
+        let wire = parsed.get("wire").expect("nested wire object");
+        assert_eq!(wire.get("push_frames_in"), Some(&Json::Num(17.0)));
+        assert_eq!(wire.get("credits_out"), Some(&Json::Num(34.0)));
+        let pull = parsed.get("pull").expect("nested pull object");
+        assert_eq!(pull.get("sparse_blocks"), Some(&Json::Num(5.0)));
     }
 
     #[test]

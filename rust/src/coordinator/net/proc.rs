@@ -19,13 +19,21 @@
 //! 2. **Push lanes**: each worker rank dials `n_servers` sockets via
 //!    [`TcpPushSender::connect_remote`] — the exact credit-window
 //!    backpressure documented in `tcp.rs`, identical to the in-process
-//!    `transport=tcp` path.
+//!    `transport=tcp` path.  Delivery acks return as coalesced
+//!    `Credit{frames, hint}` frames; the hint is the coordinator's
+//!    publish counter and feeds the pull cadence below.
 //! 3. **Mirror sync**: one extra stream per worker process
 //!    (`HelloPull`) runs a poll loop: `PullReq` ships the mirror's
 //!    per-block versions, `PullResp` returns every block whose
-//!    authoritative version is newer, and the mirror adopts them with
-//!    [`BlockStore::write_versioned`] — workers see coordinator version
-//!    numbers, so staleness accounting matches the in-process run.
+//!    authoritative version is newer — dense, or as a sparse
+//!    (index,value) delta against the worker's acked copy when that is
+//!    cheaper (v2 encoding, `wire.rs`) — and the mirror adopts them
+//!    with [`BlockStore::write_versioned`] — workers see coordinator
+//!    version numbers, so staleness accounting matches the in-process
+//!    run.  The poll cadence is adaptive ([`PullCadence`]): 500µs while
+//!    responses carry data, exponential backoff to 8ms on an idle
+//!    stream, snapped back to the floor by the Credit-borne publish
+//!    hint.
 //! 4. **Owner republish**: when `placement=dynamic` migrates a block,
 //!    the coordinator writes `OwnerUpdate{block, owner, map_version}`
 //!    frames down every rank's control stream; a reader thread applies
@@ -33,9 +41,10 @@
 //!    the old owner mid-flight still apply — every shard shares one
 //!    [`BlockTable`], exactly like the in-process handoff.
 //! 5. **Done**: a rank that finished its epochs sends
-//!    `WorkerDone{rank, pushes}`; once every rank reported, the
-//!    coordinator shuts the transport down, drains, and prints the same
-//!    `# done …` summary line as `asybadmm train`.
+//!    `WorkerDone{rank, pushes, pull_rounds, pull_empty}`; once every
+//!    rank reported, the coordinator shuts the transport down, drains,
+//!    and prints the same `# done …` summary line as `asybadmm train`
+//!    (extended with the aggregated pull round-trip accounting).
 //!
 //! ## Deliberate simplifications
 //!
@@ -79,10 +88,65 @@ use crate::sparse::Kernels;
 use crate::util::cli::{Args, Parsed};
 use crate::util::json::{num, obj, Json};
 
-/// Mirror-refresh poll cadence (worker side).  Each round is one
-/// request/response on an otherwise idle stream; 500µs keeps mirror
-/// staleness far below an epoch at negligible bandwidth.
-const PULL_POLL: Duration = Duration::from_micros(500);
+/// Mirror-refresh poll floor (worker side).  Each round is one
+/// request/response; 500µs keeps mirror staleness far below an epoch
+/// while z̃ is churning.
+const PULL_POLL_MIN: Duration = Duration::from_micros(500);
+
+/// Idle poll ceiling: bounds how stale the mirror can go once z̃
+/// quiesces (and how long a rank naps before noticing new versions if
+/// the publish hint is somehow lost).
+const PULL_POLL_MAX: Duration = Duration::from_millis(8);
+
+/// Exponential idle backoff for the mirror poll loop: sleeps start at
+/// [`PULL_POLL_MIN`], double after every empty round (a `PullResp`
+/// carrying no blocks), cap at [`PULL_POLL_MAX`], and snap back to the
+/// floor on any productive response or publish-hint advance.
+struct PullCadence {
+    cur: Duration,
+}
+
+impl PullCadence {
+    fn new() -> Self {
+        PullCadence { cur: PULL_POLL_MIN }
+    }
+
+    /// Sleep to take after a round; `productive` means the response
+    /// carried at least one newer block.
+    fn after_round(&mut self, productive: bool) -> Duration {
+        if productive {
+            self.cur = PULL_POLL_MIN;
+            return self.cur;
+        }
+        let d = self.cur;
+        self.cur = (self.cur * 2).min(PULL_POLL_MAX);
+        d
+    }
+
+    /// The coordinator's publish hint advanced: poll at the floor again.
+    fn reset(&mut self) {
+        self.cur = PULL_POLL_MIN;
+    }
+}
+
+/// Coordinator-side pull-plane counters, shared by every pull-serve
+/// thread and the `/stats` closure.  `resp_bytes` vs
+/// `dense_equiv_bytes` is the live form of the `delta_pull_bytes`
+/// bench gate: encoded block bytes actually sent vs what the same
+/// blocks would have cost fully dense.
+#[derive(Default)]
+struct PullServeStats {
+    /// `PullReq` frames answered.
+    rounds: AtomicU64,
+    /// Rounds whose response carried no blocks (idle polls).
+    empty: AtomicU64,
+    /// Blocks shipped dense / as sparse deltas.
+    dense_blocks: AtomicU64,
+    sparse_blocks: AtomicU64,
+    /// Encoded `PullResp` block bytes, and their all-dense equivalent.
+    resp_bytes: AtomicU64,
+    dense_equiv_bytes: AtomicU64,
+}
 
 /// How long `serve` waits between join events before giving up on the
 /// barrier (a worker process that died pre-join must not wedge the
@@ -250,6 +314,10 @@ fn serve(cfg: &Config, listen: &str) -> Result<()> {
         TcpTransport::bind(listen, cfg.n_workers, cfg.n_servers, lane_cap(cfg), cfg.batch)?;
     let (ctl_tx, ctl_rx) = channel::<CtlConn>();
     transport.set_ctl_hook(ctl_tx);
+    // Every z̃ publish bumps this counter; receivers piggyback it on
+    // Credit frames so idle workers snap their pull cadence back down.
+    transport.set_version_hint(store.publish_counter());
+    let pull_stats = Arc::new(PullServeStats::default());
     println!("# {}", cfg.summary());
     println!("# dataset {}: m={} d={} nnz={}", ds.name, ds.samples(), ds.dim(), ds.a.nnz());
     // Parsed by `asybadmm work` launchers and tests/netproc.rs; Rust
@@ -262,6 +330,8 @@ fn serve(cfg: &Config, listen: &str) -> Result<()> {
         let table = table.clone();
         let map = map.clone();
         let n_servers = cfg.n_servers;
+        let wire_ctr = transport.wire_counters();
+        let pull_stats = pull_stats.clone();
         let server = StatsServer::spawn(
             &cfg.stats_addr,
             Arc::new(move || {
@@ -271,6 +341,8 @@ fn serve(cfg: &Config, listen: &str) -> Result<()> {
                 for (j, &c) in counts.iter().enumerate() {
                     shard_load[owners[j]] += c;
                 }
+                let w = wire_ctr.snapshot();
+                let p = &pull_stats;
                 obj(vec![
                     ("pushes_total", num(counts.iter().sum::<usize>() as f64)),
                     ("push_counts", Json::Arr(counts.iter().map(|&c| num(c as f64)).collect())),
@@ -281,6 +353,33 @@ fn serve(cfg: &Config, listen: &str) -> Result<()> {
                     ),
                     ("map_version", num(map.version() as f64)),
                     ("migrations", num(map.migrations() as f64)),
+                    (
+                        "wire",
+                        obj(vec![
+                            ("push_frames_in", num(w.push_frames_in as f64)),
+                            ("push_bytes_in", num(w.push_bytes_in as f64)),
+                            ("msgs_in", num(w.msgs_in as f64)),
+                            ("credit_frames_out", num(w.credit_frames_out as f64)),
+                            ("credits_out", num(w.credits_out as f64)),
+                        ]),
+                    ),
+                    (
+                        "pull",
+                        obj(vec![
+                            ("rounds", num(p.rounds.load(Ordering::Relaxed) as f64)),
+                            ("empty_rounds", num(p.empty.load(Ordering::Relaxed) as f64)),
+                            ("dense_blocks", num(p.dense_blocks.load(Ordering::Relaxed) as f64)),
+                            (
+                                "sparse_blocks",
+                                num(p.sparse_blocks.load(Ordering::Relaxed) as f64),
+                            ),
+                            ("resp_bytes", num(p.resp_bytes.load(Ordering::Relaxed) as f64)),
+                            (
+                                "dense_equiv_bytes",
+                                num(p.dense_equiv_bytes.load(Ordering::Relaxed) as f64),
+                            ),
+                        ]),
+                    ),
                     // Serve mode runs fault-free (module docs); the key
                     // stays so /stats consumers see one schema.
                     ("faults", Json::Arr(Vec::new())),
@@ -387,7 +486,7 @@ fn serve(cfg: &Config, listen: &str) -> Result<()> {
             }
             // A rank's mirror-sync stream may open before the last rank
             // joins; serve it right away.
-            kind::HELLO_PULL => spawn_pull_thread(conn.stream, store.clone()),
+            kind::HELLO_PULL => spawn_pull_thread(conn.stream, store.clone(), pull_stats.clone()),
             other => bail!("unexpected {} frame on the control plane", wire::kind_name(other)),
         }
     }
@@ -398,13 +497,14 @@ fn serve(cfg: &Config, listen: &str) -> Result<()> {
     let stop_ctl = Arc::new(AtomicBool::new(false));
     let ctl_drain = {
         let store = store.clone();
+        let stats = pull_stats.clone();
         let stop = stop_ctl.clone();
         std::thread::Builder::new()
             .name("ctl-drain".into())
             .spawn(move || loop {
                 match ctl_rx.recv_timeout(Duration::from_millis(50)) {
                     Ok(conn) if conn.kind == kind::HELLO_PULL => {
-                        spawn_pull_thread(conn.stream, store.clone())
+                        spawn_pull_thread(conn.stream, store.clone(), stats.clone())
                     }
                     Ok(conn) => {
                         eprintln!("late {} connection refused", wire::kind_name(conn.kind))
@@ -423,7 +523,7 @@ fn serve(cfg: &Config, listen: &str) -> Result<()> {
     // Split each rank's control stream: the read half waits for
     // WorkerDone, the write half carries OwnerUpdate republishes.
     let mut ctl_writers = Vec::with_capacity(n_ranks);
-    let (done_tx, done_rx) = channel::<(usize, u64)>();
+    let (done_tx, done_rx) = channel::<(usize, u64, u64, u64)>();
     for (rank, slot) in joined.into_iter().enumerate() {
         let stream = slot.expect("join barrier complete");
         ctl_writers.push(stream.try_clone().context("clone control stream")?);
@@ -445,14 +545,18 @@ fn serve(cfg: &Config, listen: &str) -> Result<()> {
     let tick = Duration::from_millis(cfg.rebalance_ms.clamp(5, 100));
     let mut done_ranks = 0usize;
     let mut sent_total = 0u64;
+    let (mut pull_rounds_total, mut pull_empty_total) = (0u64, 0u64);
     while done_ranks < n_ranks {
         match done_rx.recv_timeout(tick) {
-            Ok((rank, pushes)) => {
+            Ok((rank, pushes, rounds, empty)) => {
                 done_ranks += 1;
                 sent_total += pushes;
+                pull_rounds_total += rounds;
+                pull_empty_total += empty;
                 info!(
                     "serve",
-                    "rank {rank} done ({pushes} pushes; {done_ranks}/{n_ranks} ranks)"
+                    "rank {rank} done ({pushes} pushes, {rounds} pull rounds ({empty} empty); \
+                     {done_ranks}/{n_ranks} ranks)"
                 );
             }
             Err(RecvTimeoutError::Timeout) => {}
@@ -494,32 +598,47 @@ fn serve(cfg: &Config, listen: &str) -> Result<()> {
     let applied: usize = shard_rts.iter().map(|rt| rt.shard.stats().pushes).sum();
     let final_obj = objective_at_z(&shards, &problem, weight, &store.snapshot());
     println!(
-        "# done in {:.3}s: objective {:.6} (data {:.6} + reg {:.6}); pushes={} sent={} migrations={}",
+        "# done in {:.3}s: objective {:.6} (data {:.6} + reg {:.6}); pushes={} sent={} \
+         migrations={} pull_rounds={} pull_empty={}",
         start.elapsed().as_secs_f64(),
         final_obj.total(),
         final_obj.data_loss,
         final_obj.reg,
         applied,
         sent_total,
-        map.migrations()
+        map.migrations(),
+        pull_rounds_total,
+        pull_empty_total
     );
     Ok(())
 }
 
-fn spawn_pull_thread(stream: TcpStream, store: Arc<BlockStore>) {
+fn spawn_pull_thread(stream: TcpStream, store: Arc<BlockStore>, stats: Arc<PullServeStats>) {
     // Detached: exits on its worker's EOF, reaped at process exit
     // otherwise.
     let _ = std::thread::Builder::new()
         .name("pull-serve".into())
-        .spawn(move || pull_serve_loop(stream, store));
+        .spawn(move || pull_serve_loop(stream, store, stats));
 }
 
 /// Answer one worker process's `PullReq` stream until it hangs up.
-fn pull_serve_loop(mut stream: TcpStream, store: Arc<BlockStore>) {
+///
+/// Delta encoding: the loop mirrors exactly what it last sent for each
+/// block.  TCP is reliable and ordered, so whenever a request's
+/// `have_version` equals the mirrored version the worker's copy is
+/// byte-identical to the mirror, and the block can ship as a sparse
+/// (index,value) patch against it when that is smaller
+/// ([`wire::sparse_saves_bytes`]).  Any base mismatch — first send on
+/// this connection, a reconnect, a worker that skipped a version —
+/// falls back to dense, so reconstruction is always exact.
+fn pull_serve_loop(mut stream: TcpStream, store: Arc<BlockStore>, stats: Arc<PullServeStats>) {
     let n = store.n_blocks();
     let db = store.block_size();
     let mut block = vec![0.0f32; db];
     let mut resp = Vec::new();
+    let mut sent: Vec<Vec<f32>> = vec![Vec::new(); n];
+    let mut sent_v = vec![0u64; n];
+    let (mut idx, mut vals) = (Vec::new(), Vec::new());
     loop {
         let payload = match wire::read_frame(&mut stream) {
             Ok(Some((kind::PULL_REQ, p))) => p,
@@ -539,16 +658,38 @@ fn pull_serve_loop(mut stream: TcpStream, store: Arc<BlockStore>) {
             for j in 0..n {
                 let have = cur.u64("have_version")?;
                 let v = store.read_into(j, &mut block);
-                if v > have {
-                    wire::put_u32(&mut resp, j as u32);
-                    wire::put_u64(&mut resp, v);
-                    wire::put_u32(&mut resp, db as u32);
-                    wire::put_f32s(&mut resp, &block);
-                    count += 1;
+                if v <= have {
+                    continue;
                 }
+                let before = resp.len();
+                if have > 0 && sent_v[j] == have {
+                    wire::diff_block(&sent[j], &block, &mut idx, &mut vals);
+                    if wire::sparse_saves_bytes(idx.len(), db) {
+                        wire::put_pull_block_sparse(&mut resp, j as u32, v, have, &idx, &vals);
+                        stats.sparse_blocks.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        wire::put_pull_block_dense(&mut resp, j as u32, v, &block);
+                        stats.dense_blocks.fetch_add(1, Ordering::Relaxed);
+                    }
+                } else {
+                    wire::put_pull_block_dense(&mut resp, j as u32, v, &block);
+                    stats.dense_blocks.fetch_add(1, Ordering::Relaxed);
+                }
+                stats.resp_bytes.fetch_add((resp.len() - before) as u64, Ordering::Relaxed);
+                stats.dense_equiv_bytes.fetch_add((17 + 4 * db) as u64, Ordering::Relaxed);
+                if sent[j].is_empty() {
+                    sent[j].resize(db, 0.0);
+                }
+                sent[j].copy_from_slice(&block);
+                sent_v[j] = v;
+                count += 1;
             }
             cur.finish()?;
             resp[0..4].copy_from_slice(&count.to_le_bytes());
+            stats.rounds.fetch_add(1, Ordering::Relaxed);
+            if count == 0 {
+                stats.empty.fetch_add(1, Ordering::Relaxed);
+            }
             Ok(())
         })();
         if let Err(e) = built {
@@ -563,20 +704,22 @@ fn pull_serve_loop(mut stream: TcpStream, store: Arc<BlockStore>) {
 
 /// Wait for one rank's `WorkerDone` (or its death) on the control
 /// stream's read half.
-fn ctl_read_loop(rank: usize, mut stream: TcpStream, done: Sender<(usize, u64)>) {
+fn ctl_read_loop(rank: usize, mut stream: TcpStream, done: Sender<(usize, u64, u64, u64)>) {
     loop {
         match wire::read_frame(&mut stream) {
             Ok(Some((kind::WORKER_DONE, payload))) => {
-                let parsed = (|| -> Result<(usize, u64)> {
+                let parsed = (|| -> Result<(usize, u64, u64, u64)> {
                     let mut cur = wire::Cursor::new(kind::WORKER_DONE, &payload)?;
                     let r = cur.u32("rank")? as usize;
                     let pushes = cur.u64("pushes")?;
+                    let pull_rounds = cur.u64("pull_rounds")?;
+                    let pull_empty = cur.u64("pull_empty")?;
                     cur.finish()?;
-                    Ok((r, pushes))
+                    Ok((r, pushes, pull_rounds, pull_empty))
                 })();
                 match parsed {
-                    Ok((r, pushes)) => {
-                        let _ = done.send((r, pushes));
+                    Ok(tuple) => {
+                        let _ = done.send(tuple);
                     }
                     Err(e) => eprintln!("rank {rank}: bad WorkerDone: {e:#}"),
                 }
@@ -658,6 +801,12 @@ fn work(connect: &str, rank: usize, n_ranks: usize) -> Result<()> {
 
     // -- mirror-sync thread -------------------------------------------
     let stop_sync = Arc::new(AtomicBool::new(false));
+    // Publish hint: every push sender's Credit frames max-merge the
+    // coordinator's publish counter in here; the pull loop reads it to
+    // cut idle backoff short the moment z̃ moves.
+    let publish_hint = Arc::new(AtomicU64::new(0));
+    let pull_rounds = Arc::new(AtomicU64::new(0));
+    let pull_empty = Arc::new(AtomicU64::new(0));
     let sync_handle = {
         let mut stream = TcpStream::connect(addr).context("connecting the mirror-sync stream")?;
         stream.set_nodelay(true).ok();
@@ -666,9 +815,11 @@ fn work(connect: &str, rank: usize, n_ranks: usize) -> Result<()> {
         wire::write_frame(&mut stream, kind::HELLO_PULL, &hello).context("sending HelloPull")?;
         let store = store.clone();
         let stop = stop_sync.clone();
+        let hint = publish_hint.clone();
+        let (rounds, empty) = (pull_rounds.clone(), pull_empty.clone());
         std::thread::Builder::new()
             .name("pull-sync".into())
-            .spawn(move || pull_sync_loop(stream, store, stop))
+            .spawn(move || pull_sync_loop(stream, store, stop, hint, rounds, empty))
             .context("spawn mirror-sync thread")?
     };
 
@@ -697,16 +848,16 @@ fn work(connect: &str, rank: usize, n_ranks: usize) -> Result<()> {
     // fails the rank instead of stranding half-started workers.
     let mut senders = Vec::with_capacity(local.len());
     for shard in &local {
-        senders.push(
-            TcpPushSender::connect_remote(
-                &addr,
-                shard.worker_id,
-                cfg.n_servers,
-                lane_cap(&cfg),
-                cfg.batch,
-            )
-            .with_context(|| format!("worker {}: dialing push lanes", shard.worker_id))?,
-        );
+        let mut tx = TcpPushSender::connect_remote(
+            &addr,
+            shard.worker_id,
+            cfg.n_servers,
+            lane_cap(&cfg),
+            cfg.batch,
+        )
+        .with_context(|| format!("worker {}: dialing push lanes", shard.worker_id))?;
+        tx.set_hint_sink(publish_hint.clone());
+        senders.push(tx);
     }
 
     let start = Instant::now();
@@ -776,12 +927,19 @@ fn work(connect: &str, rank: usize, n_ranks: usize) -> Result<()> {
         .iter()
         .map(|s| ledgers[s.worker_id].iter().map(|a| a.load(Ordering::Acquire)).sum::<u64>())
         .sum();
-    let mut done = Vec::with_capacity(12);
+    // Counters are final: the sync thread joined above.
+    let rounds = pull_rounds.load(Ordering::Acquire);
+    let empty = pull_empty.load(Ordering::Acquire);
+    let mut done = Vec::with_capacity(28);
     wire::put_u32(&mut done, rank as u32);
     wire::put_u64(&mut done, sent);
+    wire::put_u64(&mut done, rounds);
+    wire::put_u64(&mut done, empty);
     wire::write_frame(&mut ctl, kind::WORKER_DONE, &done).context("sending WorkerDone")?;
+    // Parsed by tests/netproc.rs (`pull_rounds=` / `pull_empty=`).
     println!(
-        "# rank {rank}/{n_ranks} done in {:.3}s: {} workers, {sent} pushes sent",
+        "# rank {rank}/{n_ranks} done in {:.3}s: {} workers, {sent} pushes sent, \
+         pull_rounds={rounds} pull_empty={empty}",
         start.elapsed().as_secs_f64(),
         local.len()
     );
@@ -791,20 +949,38 @@ fn work(connect: &str, rank: usize, n_ranks: usize) -> Result<()> {
 /// Worker-side mirror refresh: poll the coordinator for blocks newer
 /// than the local replica and adopt them via
 /// [`BlockStore::write_versioned`].
-fn pull_sync_loop(mut stream: TcpStream, store: Arc<BlockStore>, stop: Arc<AtomicBool>) {
+///
+/// Keeps shadow copies of the exact bytes last adopted per block — the
+/// base sparse deltas patch against.  The shadow's versions go out as
+/// `have_version`, so the coordinator's per-connection mirror and this
+/// shadow stay in lockstep and reconstruction is bit-identical (SET
+/// semantics).  Pacing is [`PullCadence`]; `hint` is the coordinator's
+/// publish counter delivered via Credit frames, sampled mid-sleep so an
+/// idle 8ms nap ends the moment z̃ moves.
+fn pull_sync_loop(
+    mut stream: TcpStream,
+    store: Arc<BlockStore>,
+    stop: Arc<AtomicBool>,
+    hint: Arc<AtomicU64>,
+    rounds_out: Arc<AtomicU64>,
+    empty_out: Arc<AtomicU64>,
+) {
     let n = store.n_blocks();
     let db = store.block_size();
     let mut req = Vec::new();
-    let mut data = vec![0.0f32; db];
+    let mut shadow: Vec<Vec<f32>> = vec![vec![0.0f32; db]; n];
+    let mut shadow_v = vec![0u64; n];
+    let mut cadence = PullCadence::new();
     while !stop.load(Ordering::Acquire) {
         req.clear();
         wire::put_u32(&mut req, n as u32);
-        for j in 0..n {
-            wire::put_u64(&mut req, store.version(j));
+        for &v in &shadow_v {
+            wire::put_u64(&mut req, v);
         }
         if wire::write_frame(&mut stream, kind::PULL_REQ, &req).is_err() {
             return;
         }
+        rounds_out.fetch_add(1, Ordering::Relaxed);
         let (k, payload) = match wire::read_frame(&mut stream) {
             Ok(Some(f)) => f,
             Ok(None) | Err(_) => return,
@@ -813,19 +989,36 @@ fn pull_sync_loop(mut stream: TcpStream, store: Arc<BlockStore>, stop: Arc<Atomi
             eprintln!("pull-sync: unexpected {} frame", wire::kind_name(k));
             return;
         }
+        let mut got = 0usize;
         let applied = (|| -> Result<()> {
             let mut cur = wire::Cursor::new(kind::PULL_RESP, &payload)?;
             let count = cur.u32("count")? as usize;
             for _ in 0..count {
-                let j = cur.u32("block")? as usize;
-                let v = cur.u64("version")?;
-                let len = cur.u32("n")? as usize;
-                anyhow::ensure!(
-                    j < n && len == db,
-                    "PullResp: block {j} length {len} outside geometry {n}x{db}"
-                );
-                cur.f32s_into(&mut data, "z")?;
-                store.write_versioned(j, &data, v);
+                let b = wire::take_pull_block(&mut cur)?;
+                let j = b.block;
+                anyhow::ensure!(j < n, "PullResp: block {j} outside geometry {n}x{db}");
+                match b.body {
+                    wire::WirePullBody::Dense(data) => {
+                        anyhow::ensure!(
+                            data.len() == db,
+                            "PullResp: block {j} length {} outside geometry {n}x{db}",
+                            data.len()
+                        );
+                        shadow[j].copy_from_slice(&data);
+                    }
+                    wire::WirePullBody::Sparse { base_version, idx, vals } => {
+                        anyhow::ensure!(
+                            base_version == shadow_v[j],
+                            "PullResp: sparse block {j} against base v{base_version}, \
+                             shadow holds v{}",
+                            shadow_v[j]
+                        );
+                        wire::apply_sparse_patch(&mut shadow[j], &idx, &vals)?;
+                    }
+                }
+                shadow_v[j] = b.version;
+                store.write_versioned(j, &shadow[j], b.version);
+                got += 1;
             }
             cur.finish()
         })();
@@ -833,7 +1026,23 @@ fn pull_sync_loop(mut stream: TcpStream, store: Arc<BlockStore>, stop: Arc<Atomi
             eprintln!("pull-sync: bad PullResp: {e:#}");
             return;
         }
-        std::thread::sleep(PULL_POLL);
+        if got == 0 {
+            empty_out.fetch_add(1, Ordering::Relaxed);
+        }
+        // Sleep in floor-sized slices so the publish hint (or stop) can
+        // cut a long idle nap short.
+        let target = cadence.after_round(got > 0);
+        let h0 = hint.load(Ordering::Relaxed);
+        let mut slept = Duration::ZERO;
+        while slept < target && !stop.load(Ordering::Acquire) {
+            let step = PULL_POLL_MIN.min(target - slept);
+            std::thread::sleep(step);
+            slept += step;
+            if hint.load(Ordering::Relaxed) > h0 {
+                cadence.reset();
+                break;
+            }
+        }
     }
 }
 
@@ -917,5 +1126,102 @@ mod tests {
         let payload = encode_welcome(&cfg, &vec![0; cfg.n_blocks], 1);
         let err = format!("{:#}", decode_welcome(&payload[..payload.len() - 4]).unwrap_err());
         assert!(err.contains("map_version"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn pull_cadence_backs_off_doubling_and_resets_on_progress() {
+        let mut c = PullCadence::new();
+        assert_eq!(c.after_round(true), PULL_POLL_MIN);
+        assert_eq!(c.after_round(false), PULL_POLL_MIN);
+        let mut prev = PULL_POLL_MIN;
+        for _ in 0..10 {
+            let d = c.after_round(false);
+            assert!(d >= prev && d <= PULL_POLL_MAX, "cadence left [{prev:?}, max]: {d:?}");
+            prev = d;
+        }
+        assert_eq!(prev, PULL_POLL_MAX, "ten idle rounds must reach the ceiling");
+        assert_eq!(c.after_round(true), PULL_POLL_MIN, "productive round resets");
+        let _ = c.after_round(false);
+        assert!(c.after_round(false) > PULL_POLL_MIN);
+        c.reset();
+        assert_eq!(c.after_round(false), PULL_POLL_MIN, "hint reset returns to the floor");
+    }
+
+    /// The serve and sync loops against each other over a real socket:
+    /// dense first sends, sparse deltas once bases align, bit-identical
+    /// mirrors throughout (including -0.0 and NaN payloads).
+    #[test]
+    fn pull_loop_pair_converges_bit_identically_via_sparse_deltas() {
+        let (n, db) = (4usize, 32usize);
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server_store = Arc::new(BlockStore::new(n, db));
+        for j in 0..n {
+            let data: Vec<f32> = (0..db).map(|i| (j * db + i) as f32).collect();
+            server_store.write_versioned(j, &data, 1);
+        }
+        let stats = Arc::new(PullServeStats::default());
+        {
+            let (store, stats) = (server_store.clone(), stats.clone());
+            std::thread::spawn(move || {
+                let (s, _) = listener.accept().unwrap();
+                pull_serve_loop(s, store, stats);
+            });
+        }
+        let worker_store = Arc::new(BlockStore::new(n, db));
+        let stop = Arc::new(AtomicBool::new(false));
+        let hint = Arc::new(AtomicU64::new(0));
+        let rounds = Arc::new(AtomicU64::new(0));
+        let empty = Arc::new(AtomicU64::new(0));
+        let sync = {
+            let (ws, st) = (worker_store.clone(), stop.clone());
+            let (h, r, e) = (hint.clone(), rounds.clone(), empty.clone());
+            let stream = TcpStream::connect(addr).unwrap();
+            std::thread::spawn(move || pull_sync_loop(stream, ws, st, h, r, e))
+        };
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let wait_version = |j: usize, v: u64| {
+            while worker_store.version(j) < v {
+                assert!(Instant::now() < deadline, "mirror never reached block {j} v{v}");
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        };
+        for j in 0..n {
+            wait_version(j, 1);
+        }
+        // Idle tail: with everything in sync, rounds must come back
+        // empty (and the cadence backs off, not asserted on timing).
+        std::thread::sleep(Duration::from_millis(40));
+        assert!(empty.load(Ordering::Relaxed) > 0, "idle polls should report empty rounds");
+        // Touch two lanes of block 2 with awkward bit patterns: small
+        // enough for the sparse path, and only bit-exact copying keeps
+        // the mirrors identical.
+        let mut blk = vec![0.0f32; db];
+        server_store.read_into(2, &mut blk);
+        blk[3] = -0.0;
+        blk[17] = f32::from_bits(0x7fc0_1234); // non-canonical NaN
+        server_store.write_versioned(2, &blk, 2);
+        wait_version(2, 2);
+        stop.store(true, Ordering::Release);
+        sync.join().unwrap();
+        assert!(
+            stats.sparse_blocks.load(Ordering::Relaxed) >= 1,
+            "2 changed lanes of {db} must take the sparse path"
+        );
+        assert!(stats.dense_blocks.load(Ordering::Relaxed) >= n as u64 - 1);
+        let (mut sv, mut wv) = (vec![0.0f32; db], vec![0.0f32; db]);
+        for j in 0..n {
+            server_store.read_into(j, &mut sv);
+            worker_store.read_into(j, &mut wv);
+            let sb: Vec<u32> = sv.iter().map(|f| f.to_bits()).collect();
+            let wb: Vec<u32> = wv.iter().map(|f| f.to_bits()).collect();
+            assert_eq!(sb, wb, "block {j} mirrors diverged");
+        }
+        assert!(
+            stats.resp_bytes.load(Ordering::Relaxed)
+                < stats.dense_equiv_bytes.load(Ordering::Relaxed),
+            "delta encoding should beat all-dense on this workload"
+        );
+        assert_eq!(rounds.load(Ordering::Relaxed), stats.rounds.load(Ordering::Relaxed));
     }
 }

@@ -59,11 +59,21 @@ pub mod kind {
     pub const HELLO_PULL: u8 = 8;
     /// Mirror sync request: `n_blocks u32, have_version u64 × n_blocks`.
     pub const PULL_REQ: u8 = 9;
-    /// Sync reply: `count u32`, then per changed block
-    /// `block u32, version u64, n u32, f32 × n`.
+    /// Sync reply (v2): `count u32`, then per changed block
+    /// `block u32, version u64, enc u8` followed by a dense body
+    /// (`n u32, f32 × n`) or a sparse delta against the receiver's
+    /// acked copy (`base_version u64, k u32, idx u32 × k, f32 × k`) —
+    /// see [`super::take_pull_block`].
     pub const PULL_RESP: u8 = 10;
-    /// Worker process completion: `rank u32, pushes u64`.
+    /// Worker process completion:
+    /// `rank u32, pushes u64, pull_rounds u64, pull_empty u64`.
     pub const WORKER_DONE: u8 = 11;
+    /// Coalesced receiver → sender credit return:
+    /// `frames u32, hint u64`.  Replaces N per-frame [`ACK`]s with one
+    /// cumulative grant; `hint` piggybacks the server's monotonically
+    /// increasing z̃ publish counter so an idle pull stream learns that
+    /// new versions exist without a round-trip (0 = no hint source).
+    pub const CREDIT: u8 = 12;
 }
 
 /// Human name for a frame kind (error context).
@@ -80,12 +90,13 @@ pub fn kind_name(k: u8) -> &'static str {
         kind::PULL_REQ => "PullReq",
         kind::PULL_RESP => "PullResp",
         kind::WORKER_DONE => "WorkerDone",
+        kind::CREDIT => "Credit",
         _ => "unknown",
     }
 }
 
 fn known_kind(k: u8) -> bool {
-    (kind::HELLO_PUSH..=kind::WORKER_DONE).contains(&k)
+    (kind::HELLO_PUSH..=kind::CREDIT).contains(&k)
 }
 
 // ---------------------------------------------------------------------
@@ -264,6 +275,170 @@ pub fn take_push_body(
     debug_assert_eq!(w.len(), n);
     cur.f32s_into(&mut w, "w")?;
     Ok(WirePush { worker, block, worker_epoch, z_version_used, block_seq, w })
+}
+
+// ---------------------------------------------------------------------
+// Credit frames (coalesced reverse-path flow control)
+// ---------------------------------------------------------------------
+
+/// A decoded [`kind::CREDIT`] body.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireCredit {
+    /// Cumulative frame credits granted since the last credit frame.
+    pub frames: u32,
+    /// Server z̃ publish counter at grant time (monotone; 0 = no hint
+    /// source wired up, e.g. the in-process `transport=tcp` path).
+    pub hint: u64,
+}
+
+/// Append one whole `Credit` frame (envelope included) to `buf`.
+pub fn put_credit_frame(buf: &mut Vec<u8>, frames: u32, hint: u64) {
+    let at = begin_frame(buf, kind::CREDIT);
+    put_u32(buf, frames);
+    put_u64(buf, hint);
+    end_frame(buf, at);
+}
+
+/// Decode a `Credit` body at the cursor.
+pub fn take_credit(cur: &mut Cursor<'_>) -> Result<WireCredit> {
+    let frames = cur.u32("frames")?;
+    let hint = cur.u64("hint")?;
+    Ok(WireCredit { frames, hint })
+}
+
+// ---------------------------------------------------------------------
+// PullResp v2 blocks (dense or sparse delta vs the worker's copy)
+// ---------------------------------------------------------------------
+
+/// Per-block encoding tag inside a `PullResp` payload.
+pub mod pull_enc {
+    /// `n u32, f32 × n` — the whole block.
+    pub const DENSE: u8 = 0;
+    /// `base_version u64, k u32, idx u32 × k, f32 × k` — SET-semantics
+    /// patch over the worker's copy at `base_version` (changed entries
+    /// overwrite; untouched entries are bit-identical by construction).
+    pub const SPARSE: u8 = 1;
+}
+
+/// Body of one decoded v2 pull block.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WirePullBody {
+    Dense(Vec<f32>),
+    Sparse { base_version: u64, idx: Vec<u32>, vals: Vec<f32> },
+}
+
+/// One decoded v2 pull block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WirePullBlock {
+    pub block: usize,
+    pub version: u64,
+    pub body: WirePullBody,
+}
+
+/// Collect the entries of `new` that differ bit-wise from `base` into
+/// `(idx, vals)`.  Bit-level comparison (`to_bits`), so `-0.0` vs `0.0`
+/// and NaN payload changes are treated as changes — the sparse patch
+/// reconstructs the dense block bit-identically, never "close enough".
+pub fn diff_block(base: &[f32], new: &[f32], idx: &mut Vec<u32>, vals: &mut Vec<f32>) {
+    debug_assert_eq!(base.len(), new.len());
+    idx.clear();
+    vals.clear();
+    for (i, (&b, &n)) in base.iter().zip(new.iter()).enumerate() {
+        if b.to_bits() != n.to_bits() {
+            idx.push(i as u32);
+            vals.push(n);
+        }
+    }
+}
+
+/// Does a sparse patch of `changed` entries beat shipping all `db`
+/// entries dense?  Compares exact encoded body bytes: sparse costs
+/// `1 (tag) + 8 (base) + 4 (k) + 8·k`, dense `1 (tag) + 4 (n) + 4·db`.
+pub fn sparse_saves_bytes(changed: usize, db: usize) -> bool {
+    13 + 8 * changed < 5 + 4 * db
+}
+
+/// Append one dense v2 block (no envelope — the caller owns the
+/// `PullResp` frame and its leading count).
+pub fn put_pull_block_dense(buf: &mut Vec<u8>, block: u32, version: u64, data: &[f32]) {
+    put_u32(buf, block);
+    put_u64(buf, version);
+    buf.push(pull_enc::DENSE);
+    put_u32(buf, data.len() as u32);
+    put_f32s(buf, data);
+}
+
+/// Append one sparse v2 block (no envelope).  `idx`/`vals` come from
+/// [`diff_block`] against the copy the worker holds at `base_version`.
+pub fn put_pull_block_sparse(
+    buf: &mut Vec<u8>,
+    block: u32,
+    version: u64,
+    base_version: u64,
+    idx: &[u32],
+    vals: &[f32],
+) {
+    debug_assert_eq!(idx.len(), vals.len());
+    put_u32(buf, block);
+    put_u64(buf, version);
+    buf.push(pull_enc::SPARSE);
+    put_u64(buf, base_version);
+    put_u32(buf, idx.len() as u32);
+    for &i in idx {
+        put_u32(buf, i);
+    }
+    put_f32s(buf, vals);
+}
+
+/// Decode one v2 pull block at the cursor.
+pub fn take_pull_block(cur: &mut Cursor<'_>) -> Result<WirePullBlock> {
+    let block = cur.u32("block")? as usize;
+    let version = cur.u64("version")?;
+    let enc = cur.u8("enc")?;
+    let body = match enc {
+        pull_enc::DENSE => {
+            let n = cur.u32("n")? as usize;
+            if n > MAX_FRAME / 4 {
+                bail!("PullResp frame corrupted: block length {n} exceeds the frame bound");
+            }
+            let mut data = vec![0.0f32; n];
+            cur.f32s_into(&mut data, "data")?;
+            WirePullBody::Dense(data)
+        }
+        pull_enc::SPARSE => {
+            let base_version = cur.u64("base_version")?;
+            let k = cur.u32("k")? as usize;
+            if k > MAX_FRAME / 8 {
+                bail!("PullResp frame corrupted: patch length {k} exceeds the frame bound");
+            }
+            let mut idx = Vec::with_capacity(k);
+            for _ in 0..k {
+                idx.push(cur.u32("idx")?);
+            }
+            let mut vals = vec![0.0f32; k];
+            cur.f32s_into(&mut vals, "vals")?;
+            WirePullBody::Sparse { base_version, idx, vals }
+        }
+        other => bail!("PullResp frame corrupted: unknown block encoding tag {other}"),
+    };
+    Ok(WirePullBlock { block, version, body })
+}
+
+/// Apply a SET-semantics sparse patch onto `dst` (the worker's copy at
+/// the patch's `base_version`).  Out-of-range indices are corruption.
+pub fn apply_sparse_patch(dst: &mut [f32], idx: &[u32], vals: &[f32]) -> Result<()> {
+    for (&i, &v) in idx.iter().zip(vals.iter()) {
+        let i = i as usize;
+        if i >= dst.len() {
+            bail!(
+                "PullResp frame corrupted: patch index {i} out of range for a \
+                 {}-entry block",
+                dst.len()
+            );
+        }
+        dst[i] = v;
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------
@@ -552,5 +727,106 @@ mod tests {
         let mut cur = Cursor::new(kind::WELCOME, &payload).unwrap();
         assert_eq!(cur.str("config").unwrap(), "rho=2.5\nseed=7");
         cur.finish().unwrap();
+    }
+
+    #[test]
+    fn credit_frame_round_trips() {
+        let mut buf = Vec::new();
+        put_credit_frame(&mut buf, 7, 123_456_789);
+        assert_eq!(buf.len(), HEADER + 4 + 8);
+        assert_eq!(buf[4], kind::CREDIT);
+        let mut cur = Cursor::new(buf[4], &buf[HEADER..]).unwrap();
+        let c = take_credit(&mut cur).unwrap();
+        cur.finish().unwrap();
+        assert_eq!(c, WireCredit { frames: 7, hint: 123_456_789 });
+    }
+
+    #[test]
+    fn truncated_credit_names_kind_and_field() {
+        let mut buf = Vec::new();
+        put_credit_frame(&mut buf, 1, 9);
+        let mut cur = Cursor::new(kind::CREDIT, &buf[HEADER..buf.len() - 3]).unwrap();
+        let err = take_credit(&mut cur).unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("Credit frame truncated"), "{text}");
+        assert!(text.contains("\"hint\""), "{text}");
+    }
+
+    #[test]
+    fn sparse_pull_block_reconstructs_bit_identically() {
+        let base = [1.0f32, -0.0, 2.5, f32::NAN, 0.0, 7.0];
+        let mut new = base;
+        new[1] = 0.0; // -0.0 -> 0.0 is a bit-level change
+        new[3] = 4.0;
+        new[5] = -7.0;
+        let (mut idx, mut vals) = (Vec::new(), Vec::new());
+        diff_block(&base, &new, &mut idx, &mut vals);
+        assert_eq!(idx, [1, 3, 5]);
+
+        let mut payload = Vec::new();
+        put_pull_block_sparse(&mut payload, 3, 11, 10, &idx, &vals);
+        let mut cur = Cursor::new(kind::PULL_RESP, &payload).unwrap();
+        let blk = take_pull_block(&mut cur).unwrap();
+        cur.finish().unwrap();
+        assert_eq!(blk.block, 3);
+        assert_eq!(blk.version, 11);
+        let WirePullBody::Sparse { base_version, idx: di, vals: dv } = blk.body else {
+            panic!("expected sparse body");
+        };
+        assert_eq!(base_version, 10);
+        let mut got = base;
+        apply_sparse_patch(&mut got, &di, &dv).unwrap();
+        for (g, n) in got.iter().zip(new.iter()) {
+            assert_eq!(g.to_bits(), n.to_bits());
+        }
+    }
+
+    #[test]
+    fn dense_pull_block_round_trips() {
+        let data = [0.5f32, -1.5, 3.25];
+        let mut payload = Vec::new();
+        put_pull_block_dense(&mut payload, 9, 42, &data);
+        let mut cur = Cursor::new(kind::PULL_RESP, &payload).unwrap();
+        let blk = take_pull_block(&mut cur).unwrap();
+        cur.finish().unwrap();
+        assert_eq!((blk.block, blk.version), (9, 42));
+        assert_eq!(blk.body, WirePullBody::Dense(data.to_vec()));
+    }
+
+    #[test]
+    fn pull_block_rejects_unknown_tag_and_bad_patch_index() {
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 0);
+        put_u64(&mut payload, 1);
+        payload.push(7); // unknown encoding tag
+        let mut cur = Cursor::new(kind::PULL_RESP, &payload).unwrap();
+        let err = take_pull_block(&mut cur).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown block encoding tag"), "{err:#}");
+
+        let mut dst = [0.0f32; 4];
+        let err = apply_sparse_patch(&mut dst, &[4], &[1.0]).unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+    }
+
+    #[test]
+    fn sparse_chooser_matches_encoded_bytes() {
+        for db in [1usize, 4, 16, 256] {
+            for changed in 0..=db {
+                let idx: Vec<u32> = (0..changed as u32).collect();
+                let vals = vec![1.0f32; changed];
+                let data = vec![1.0f32; db];
+                let mut sparse = Vec::new();
+                put_pull_block_sparse(&mut sparse, 0, 2, 1, &idx, &vals);
+                let mut dense = Vec::new();
+                put_pull_block_dense(&mut dense, 0, 2, &data);
+                assert_eq!(
+                    sparse_saves_bytes(changed, db),
+                    sparse.len() < dense.len(),
+                    "db={db} changed={changed}: sparse {} vs dense {}",
+                    sparse.len(),
+                    dense.len()
+                );
+            }
+        }
     }
 }

@@ -139,6 +139,15 @@ pub struct TrainReport {
     /// transitions, the stall watchdog) in recording order.  Empty on
     /// fault-free runs and for the baselines.
     pub faults: Vec<FaultEvent>,
+    /// Mirror-sync round-trips issued over the pull stream.  Only the
+    /// networked runtime (`asybadmm serve`/`work`) has a pull stream:
+    /// its coordinator aggregates these from `WorkerDone` accounting;
+    /// in-process runs read the shared [`BlockStore`] directly and
+    /// report 0.
+    pub pull_rounds: u64,
+    /// Of [`Self::pull_rounds`], how many came back with no newer
+    /// blocks (idle polls the adaptive cadence exists to suppress).
+    pub pull_empty: u64,
     /// Present iff the run was [`Algo::Sim`].
     pub sim: Option<SimExtras>,
 }
@@ -442,6 +451,8 @@ impl<'a> SessionBuilder<'a> {
                     theorem1_feasible: false,
                     migrations: r.migrations,
                     faults: r.faults,
+                    pull_rounds: 0,
+                    pull_empty: 0,
                     sim: Some(SimExtras {
                         virtual_time_s: r.virtual_time_s,
                         time_to_epoch: r.time_to_epoch,
@@ -473,6 +484,8 @@ fn from_baseline(r: BaselineReport) -> TrainReport {
         theorem1_feasible: false,
         migrations: 0,
         faults: Vec::new(),
+        pull_rounds: 0,
+        pull_empty: 0,
         sim: None,
     }
 }
@@ -1104,6 +1117,8 @@ fn run_threaded<'o>(
         theorem1_feasible: t1.feasible,
         migrations: map.migrations(),
         faults: fault_events,
+        pull_rounds: 0,
+        pull_empty: 0,
         sim: None,
     })
 }

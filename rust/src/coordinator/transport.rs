@@ -970,6 +970,60 @@ mod tests {
         });
     }
 
+    /// Coalesced credit return must keep the in-flight bound *exact*:
+    /// draining one window's worth of messages hands the sender exactly
+    /// one window of credits back — it advances to the new bound and
+    /// stalls there, for every batch shape (1 = unbatched, 2 =
+    /// capacity-misaligned, 3 = aligned).
+    #[test]
+    fn coalesced_credits_reopen_the_tcp_window_exactly() {
+        for batch in [1usize, 2, 3] {
+            let t = super::super::net::TcpTransport::new(1, 1, 8, batch);
+            let bound = t.inflight_bound();
+            // bound = cap_b*batch + (batch-1); the wire itself holds one
+            // window (cap_b frames), the rest is the pending partial.
+            let window = bound - (batch - 1);
+            let total = 3 * window + bound;
+            let sent = Arc::new(AtomicUsize::new(0));
+            let mut tx = t.connect_worker(0);
+            let h = std::thread::spawn({
+                let sent = sent.clone();
+                move || {
+                    for i in 0..total {
+                        tx.send(0, msg(0, i)).unwrap();
+                        sent.fetch_add(1, Ordering::SeqCst);
+                    }
+                }
+            });
+            std::thread::sleep(Duration::from_millis(100));
+            assert_eq!(sent.load(Ordering::SeqCst), bound, "[batch={batch}] initial bound");
+            let mut rx = t.connect_server(0);
+            let mut next = 0usize;
+            for slice in 1..=3usize {
+                for _ in 0..window {
+                    assert_eq!(rx.recv().expect("ended early").worker_epoch, next);
+                    next += 1;
+                }
+                let expect = slice * window + bound;
+                poll_until("sender to spend returned credits", || {
+                    (sent.load(Ordering::SeqCst) >= expect).then_some(())
+                });
+                // Exactness: the credits we just returned cover one
+                // window, no more — the sender must not run past it.
+                std::thread::sleep(Duration::from_millis(50));
+                assert_eq!(
+                    sent.load(Ordering::SeqCst),
+                    expect,
+                    "[batch={batch}] sender overran the coalesced-credit window"
+                );
+            }
+            for _ in 0..total - next {
+                rx.recv().expect("ended early");
+            }
+            h.join().unwrap();
+        }
+    }
+
     #[test]
     fn shutdown_drains_queued_messages() {
         each_transport(1, 2, |t| {

@@ -200,6 +200,10 @@ fn two_worker_processes_match_the_in_process_run() {
     let applied = field_u64(&done, "pushes=");
     let sent = field_u64(&done, "sent=");
     let migrations = field_u64(&done, "migrations=");
+    let pull_rounds = field_u64(&done, "pull_rounds=");
+    let pull_empty = field_u64(&done, "pull_empty=");
+    assert!(pull_rounds > 0, "no mirror-sync rounds recorded: {done}");
+    assert!(pull_empty <= pull_rounds, "empty polls exceed total rounds: {done}");
     assert_eq!(
         applied,
         (EPOCHS * N_WORKERS) as u64,
@@ -225,6 +229,73 @@ fn two_worker_processes_match_the_in_process_run() {
     assert!(
         (obj_mp - obj_ip).abs() < 0.1,
         "multi-process {obj_mp} vs in-process {obj_ip} beyond async noise"
+    );
+}
+
+/// Adaptive pull cadence (DESIGN.md §2.0.6): with one slow worker
+/// (20ms mean injected delay between pushes) the mirror stream is idle
+/// almost all the time, so the exponential backoff must issue far
+/// fewer round-trips than the old fixed 500µs poll would have.  The
+/// serve summary's aggregated pull accounting proves it.
+#[test]
+fn adaptive_pull_cadence_beats_fixed_polling_on_an_idle_tail() {
+    let set = "samples=32,n_blocks=4,block_size=16,nnz_per_row=4,blocks_per_worker=4,\
+               shared_blocks=1,n_workers=1,n_servers=1,epochs=40,rho=2,lambda=0.0001,\
+               batch=1,net_delay_mean_ms=20,log_every=100000";
+    let mut serve = Reap(
+        Command::new(BIN)
+            .args(["serve", "--listen", "127.0.0.1:0", "--set", set])
+            .stdout(Stdio::piped())
+            .spawn()
+            .expect("spawn serve"),
+    );
+    let mut lines = BufReader::new(serve.0.stdout.take().expect("serve stdout")).lines();
+    let listen = loop {
+        let line = lines
+            .next()
+            .expect("serve exited before announcing its address")
+            .expect("serve stdout");
+        if let Some(a) = line.strip_prefix("# listening on ") {
+            break a.trim().to_string();
+        }
+    };
+    let mut worker = Reap(
+        Command::new(BIN)
+            .args(["work", "--connect", &listen, "--rank", "0/1"])
+            .stdout(Stdio::null())
+            .spawn()
+            .expect("spawn work"),
+    );
+    let done = lines
+        .by_ref()
+        .map(|l| l.expect("serve stdout"))
+        .find(|l| l.starts_with("# done in "))
+        .expect("serve exited without a done line");
+    assert!(serve.0.wait().expect("wait serve").success(), "serve failed");
+    assert!(worker.0.wait().expect("wait rank 0").success(), "rank 0/1 failed");
+
+    let elapsed_s: f64 = done
+        .strip_prefix("# done in ")
+        .and_then(|rest| rest.split('s').next())
+        .expect("elapsed in done line")
+        .parse()
+        .expect("elapsed parses");
+    let rounds = field_u64(&done, "pull_rounds=");
+    let empty = field_u64(&done, "pull_empty=");
+    assert!(rounds > 0, "no pull rounds recorded: {done}");
+    assert!(empty <= rounds, "empty rounds exceed total: {done}");
+    assert!(
+        elapsed_s > 0.2,
+        "run too short to compare cadences ({elapsed_s}s): raise the injected delay"
+    );
+    // A fixed 500µs poll would have issued ~elapsed/500µs round-trips;
+    // the 500µs→8ms backoff (publish-hint resets included) must cut
+    // that by well over half on this mostly-idle stream.
+    let fixed_cadence_rounds = elapsed_s / 500e-6;
+    assert!(
+        (rounds as f64) < fixed_cadence_rounds * 0.5,
+        "adaptive cadence did not reduce round-trips: {rounds} rounds in {elapsed_s:.3}s \
+         (fixed-cadence estimate {fixed_cadence_rounds:.0}): {done}"
     );
 }
 

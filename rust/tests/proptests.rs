@@ -954,6 +954,205 @@ fn prop_wire_corrupted_frames_never_panic() {
     );
 }
 
+/// Read one Credit frame through the full envelope + cursor path.
+fn decode_credit_frame(bytes: &[u8]) -> Result<wire::WireCredit, String> {
+    let mut slice = bytes;
+    let (k, payload) = wire::read_frame(&mut slice)
+        .map_err(|e| format!("{e:#}"))?
+        .ok_or_else(|| "clean EOF instead of a frame".to_string())?;
+    if k != wire::kind::CREDIT {
+        return Err(format!("not a credit frame: {}", wire::kind_name(k)));
+    }
+    let mut cur = wire::Cursor::new(k, &payload).map_err(|e| format!("{e:#}"))?;
+    let c = wire::take_credit(&mut cur).map_err(|e| format!("{e:#}"))?;
+    cur.finish().map_err(|e| format!("{e:#}"))?;
+    Ok(c)
+}
+
+/// (i4) Credit frames: roundtrip exactly; truncation at every byte
+/// errors contextually (kind once the header is readable, field once
+/// the payload is short); random byte flips never panic.
+#[test]
+fn prop_wire_credit_frames_roundtrip_truncate_and_survive_flips() {
+    forall(
+        "wire-credit",
+        40,
+        |rng| (rng.below(1 << 20) as u32, rng.next_u64(), rng.next_u64()),
+        |(frames, hint, flip_seed)| {
+            let mut buf = Vec::new();
+            wire::put_credit_frame(&mut buf, *frames, *hint);
+            let c = decode_credit_frame(&buf)?;
+            if c.frames != *frames || c.hint != *hint {
+                return Err(format!("roundtrip diverged: {} / {}", c.frames, c.hint));
+            }
+            // Stream truncation at every byte: contextual, no panic.
+            for cut in 1..buf.len() {
+                let err = match decode_credit_frame(&buf[..cut]) {
+                    Ok(_) => return Err(format!("decoded a credit frame cut at {cut}")),
+                    Err(e) => e,
+                };
+                if cut < wire::HEADER {
+                    if !err.contains("mid-header") {
+                        return Err(format!("cut {cut}: header cut lacks context: {err}"));
+                    }
+                } else if !err.contains("Credit") {
+                    return Err(format!("cut {cut}: error does not name the kind: {err}"));
+                }
+            }
+            // Payload truncation behind an intact envelope: the cursor
+            // names the missing field.
+            for keep in 0..buf.len() - wire::HEADER {
+                let mut f = Vec::new();
+                let start = wire::begin_frame(&mut f, wire::kind::CREDIT);
+                f.extend_from_slice(&buf[wire::HEADER..wire::HEADER + keep]);
+                wire::end_frame(&mut f, start);
+                let err = decode_credit_frame(&f).unwrap_err();
+                if !err.contains("Credit") || !(err.contains("frames") || err.contains("hint")) {
+                    return Err(format!("short payload ({keep}B) lacks kind+field: {err}"));
+                }
+            }
+            // Byte flips: decode may fail (with context) but never panic.
+            let mut rng = Rng::new(*flip_seed);
+            for _ in 0..32 {
+                let mut bad = buf.clone();
+                let at = rng.below(bad.len());
+                bad[at] ^= 1 + rng.below(255) as u8;
+                if at < 4 {
+                    let claimed = u32::from_le_bytes(bad[..4].try_into().unwrap()) as usize;
+                    if claimed <= wire::MAX_FRAME {
+                        bad.resize(wire::HEADER + claimed, 0);
+                    }
+                }
+                match decode_credit_frame(&bad) {
+                    Ok(_) => {}
+                    Err(e) if e.is_empty() => return Err("empty error context".into()),
+                    Err(_) => {}
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A random pull-block case: a base block and a mutated copy with an
+/// arbitrary change count (including awkward bit patterns), encoded by
+/// the serve-side chooser (sparse when it saves bytes, dense
+/// otherwise) into a one-block `PullResp` payload.
+fn rand_pull_case(rng: &mut Rng) -> (Vec<f32>, Vec<f32>, u64) {
+    let db = 1 + rng.below(96);
+    let base: Vec<f32> = (0..db).map(|_| rng.normal_f32(0.0, 10.0)).collect();
+    let mut new = base.clone();
+    for _ in 0..rng.below(db + 1) {
+        let lane = rng.below(db);
+        new[lane] = if rng.below(8) == 0 {
+            f32::from_bits(rng.next_u64() as u32) // NaN payloads, -0.0, denormals
+        } else {
+            new[lane] + rng.normal_f32(0.0, 1.0)
+        };
+    }
+    (base, new, rng.next_u64())
+}
+
+/// (i5) PullResp v2 blocks: the chooser's encoding — sparse delta or
+/// dense — reconstructs the new block bit-identically from the base;
+/// truncation behind an intact envelope names kind+field; byte flips
+/// never panic (bad patch indices and unknown tags error contextually).
+#[test]
+fn prop_wire_pull_blocks_roundtrip_bit_identically() {
+    forall(
+        "wire-pull-v2",
+        40,
+        |rng| rand_pull_case(rng),
+        |(base, new, flip_seed)| {
+            let db = base.len();
+            let (mut idx, mut vals) = (Vec::new(), Vec::new());
+            wire::diff_block(base, new, &mut idx, &mut vals);
+            let sparse = wire::sparse_saves_bytes(idx.len(), db);
+            let mut payload = Vec::new();
+            wire::put_u32(&mut payload, 1);
+            if sparse {
+                wire::put_pull_block_sparse(&mut payload, 7, 3, 2, &idx, &vals);
+            } else {
+                wire::put_pull_block_dense(&mut payload, 7, 3, new);
+            }
+            let decode = |payload: &[u8]| -> Result<wire::WirePullBlock, String> {
+                let mut cur = wire::Cursor::new(wire::kind::PULL_RESP, payload)
+                    .map_err(|e| format!("{e:#}"))?;
+                let count = cur.u32("count").map_err(|e| format!("{e:#}"))?;
+                if count != 1 {
+                    return Err(format!("count {count}"));
+                }
+                let b = wire::take_pull_block(&mut cur).map_err(|e| format!("{e:#}"))?;
+                cur.finish().map_err(|e| format!("{e:#}"))?;
+                Ok(b)
+            };
+            let b = decode(&payload)?;
+            if b.block != 7 || b.version != 3 {
+                return Err(format!("header fields diverged: {b:?}"));
+            }
+            let mut rebuilt = base.clone();
+            match &b.body {
+                wire::WirePullBody::Dense(d) => {
+                    if d.len() != db {
+                        return Err("dense length diverged".into());
+                    }
+                    rebuilt.copy_from_slice(d);
+                }
+                wire::WirePullBody::Sparse { base_version, idx, vals } => {
+                    if *base_version != 2 {
+                        return Err("base_version diverged".into());
+                    }
+                    wire::apply_sparse_patch(&mut rebuilt, idx, vals)
+                        .map_err(|e| format!("{e:#}"))?;
+                }
+            }
+            if !rebuilt.iter().zip(new.iter()).all(|(a, b)| a.to_bits() == b.to_bits()) {
+                return Err(format!(
+                    "reconstruction not bit-identical ({} encoding)",
+                    if sparse { "sparse" } else { "dense" }
+                ));
+            }
+            // Truncation: every prefix of the payload errors with the
+            // kind and a field name — never panics, never half-decodes.
+            for cut in 0..payload.len() {
+                let err = match decode(&payload[..cut]) {
+                    Ok(_) => return Err(format!("decoded a pull block cut at {cut}")),
+                    Err(e) => e,
+                };
+                if !err.contains("PullResp") {
+                    return Err(format!("cut {cut}: error does not name the kind: {err}"));
+                }
+                let fields =
+                    ["count", "block", "version", "enc", "n", "data", "base_version", "k",
+                     "idx", "vals", "trailing"];
+                if !fields.iter().any(|f| err.contains(f)) {
+                    return Err(format!("cut {cut}: error names no field: {err}"));
+                }
+            }
+            // Byte flips (tag included): contextual errors or a clean
+            // decode of a differently-valid block; apply_sparse_patch
+            // rejects out-of-range indices rather than indexing wild.
+            let mut rng = Rng::new(*flip_seed);
+            for _ in 0..32 {
+                let mut bad = payload.clone();
+                let at = rng.below(bad.len());
+                bad[at] ^= 1 + rng.below(255) as u8;
+                match decode(&bad) {
+                    Ok(b) => {
+                        let mut scratch = base.clone();
+                        if let wire::WirePullBody::Sparse { idx, vals, .. } = &b.body {
+                            let _ = wire::apply_sparse_patch(&mut scratch, idx, vals);
+                        }
+                    }
+                    Err(e) if e.is_empty() => return Err("empty error context".into()),
+                    Err(_) => {}
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// (h) The uniform block sampler covers all of 𝒩(i).
 #[test]
 fn prop_block_selection_covers_footprint() {
