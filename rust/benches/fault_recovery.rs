@@ -9,15 +9,26 @@
 //!     `recovery_vs_faultfree_epochs` is the wall-clock ratio of the
 //!     recovered run over the fault-free run for the same epoch budget
 //!     (tail-drain wait + warm-start re-read included).
+//!  3. **Wire hook overhead** (DESIGN.md §2.0.7): the same armed-inert
+//!     discipline on the TCP data plane — a loopback push/drain loop
+//!     with a `netdrop`/`netstall` plan that never fires vs no plan.
+//!     `net_fault_hooks_overhead` must stay ≈ 1: both hooks sit behind
+//!     one `is_empty` branch per send/flush.
+//!  4. **Networked recovery cost**: the crash-restart ratio of (2)
+//!     measured over `transport=tcp` (real loopback sockets, credit
+//!     windows, lane reconnect) — `net_recovery_vs_faultfree_epochs`.
 //!
 //!     cargo bench --bench fault_recovery [-- --json]
 //!     BENCH_QUICK=1 cargo bench --bench fault_recovery -- --json
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use asybadmm::bench::{emit_hotpath_json, harness_from_env, json_requested, maybe_list_gates, BenchResult};
-use asybadmm::config::{Config, FailurePolicy};
-use asybadmm::coordinator::Session;
+use asybadmm::config::{Config, FailurePolicy, TransportKind};
+use asybadmm::coordinator::{
+    FaultPlan, PushMsg, PushPool, PushReceiver, PushSender, Session, TcpPushSender, TcpTransport,
+};
 use asybadmm::data::{gen_partitioned, Dataset, WorkerShard};
 
 /// Best-of-N wall time for a full threaded session (min is robust to
@@ -34,6 +45,45 @@ fn timed(cfg: &Config, ds: &Dataset, shards: &[WorkerShard], reps: usize) -> f64
         best = best.min(dt);
     }
     best
+}
+
+/// Wall time for `n_windows` windowed push/drain rounds over a real
+/// loopback socket pair, with `plan` (possibly armed-but-inert) on the
+/// sender.  One window fills the credit cap exactly, then drains, so
+/// both variants execute identical send/flush/credit sequences and the
+/// ratio isolates the per-call hook cost.
+fn net_window_time(plan: Option<Arc<FaultPlan>>, n_windows: usize) -> f64 {
+    const WINDOW: usize = 16;
+    let transport = TcpTransport::new(1, 1, WINDOW, 2);
+    let addr = transport.local_addr();
+    let mut tx =
+        TcpPushSender::connect_remote(&addr, 0, 1, WINDOW, 2).expect("dial loopback lanes");
+    if let Some(p) = plan {
+        tx.set_fault_plan(p);
+    }
+    let mut rx = transport.connect_server(0);
+    let mut pool = PushPool::new(256, 32);
+    let t0 = Instant::now();
+    for round in 0..n_windows {
+        for i in 0..WINDOW {
+            let msg = PushMsg {
+                worker: 0,
+                block: 0,
+                w: pool.acquire(),
+                worker_epoch: round * WINDOW + i,
+                z_version_used: 0,
+                block_seq: 0,
+                sent_at: None,
+                recycle: Some(pool.recycler()),
+            };
+            tx.send(0, msg).expect("loopback send");
+        }
+        for _ in 0..WINDOW {
+            let mut msg = rx.recv().expect("loopback transport ended early");
+            msg.recycle_now();
+        }
+    }
+    t0.elapsed().as_secs_f64()
 }
 
 fn record(h: &mut asybadmm::bench::Harness, name: &str, per_op_s: f64) {
@@ -93,6 +143,52 @@ fn main() {
         cfg.epochs / 4
     );
 
+    // 3. Wire-level hooks: armed-but-never-firing netdrop+netstall plan
+    //    vs no plan on a loopback push/drain loop (best-of to shrug off
+    //    socket scheduling noise).
+    let n_windows = if quick { 100 } else { 400 };
+    let inert = Arc::new(
+        FaultPlan::parse(&format!(
+            "netdrop:w0@{m};netstall:w0@{m}+1ms",
+            m = usize::MAX
+        ))
+        .unwrap(),
+    );
+    let (mut net_empty_s, mut net_armed_s) = (f64::INFINITY, f64::INFINITY);
+    for _ in 0..3 {
+        net_empty_s = net_empty_s.min(net_window_time(None, n_windows));
+        net_armed_s = net_armed_s.min(net_window_time(Some(inert.clone()), n_windows));
+    }
+    let net_overhead = net_armed_s / net_empty_s.max(1e-12);
+    record(&mut h, "tcp push loop, no fault plan", net_empty_s);
+    record(&mut h, "tcp push loop, armed inert net plan", net_armed_s);
+    println!(
+        "\nwire fault hooks ({n_windows} windows x 16 pushes, loopback, best of 3):\n\
+         \x20 no plan {net_empty_s:.4}s | armed {net_armed_s:.4}s\n\
+         \x20 -> net_fault_hooks_overhead = {net_overhead:.3}x  (gate: ~1, noise aside)",
+    );
+
+    // 4. Crash + restart over the TCP transport: same discipline as
+    //    leg 2, but every push crosses a real socket and the restarted
+    //    worker re-dials its lanes.
+    let mut cfg_net = Config::tiny_test();
+    cfg_net.epochs = cfg.epochs;
+    cfg_net.transport = TransportKind::Tcp;
+    let net_free_s = timed(&cfg_net, &ds, &shards, reps);
+    cfg_net.faults = format!("crash:w1@{}", cfg_net.epochs / 4);
+    cfg_net.failure = FailurePolicy::Restart;
+    let net_recovered_s = timed(&cfg_net, &ds, &shards, reps);
+    let net_recovery = net_recovered_s / net_free_s.max(1e-12);
+    record(&mut h, "tcp session, fault-free", net_free_s);
+    record(&mut h, "tcp session, mid-run crash + restart", net_recovered_s);
+    println!(
+        "\ncrash at epoch {} + warm restart over transport=tcp:\n\
+         \x20 fault-free {net_free_s:.4}s | recovered {net_recovered_s:.4}s\n\
+         \x20 -> net_recovery_vs_faultfree_epochs = {net_recovery:.3}x \
+         (lane re-dial + tail drain included)",
+        cfg_net.epochs / 4
+    );
+
     println!("\n{}", h.csv());
 
     if json_requested() {
@@ -102,6 +198,8 @@ fn main() {
             &[
                 ("fault_hooks_overhead", overhead),
                 ("recovery_vs_faultfree_epochs", recovery),
+                ("net_fault_hooks_overhead", net_overhead),
+                ("net_recovery_vs_faultfree_epochs", net_recovery),
             ],
         );
     }

@@ -200,6 +200,8 @@ pub const GATE_KEYS: &[&str] = &[
     // fault_recovery
     "fault_hooks_overhead",
     "recovery_vs_faultfree_epochs",
+    "net_fault_hooks_overhead",
+    "net_recovery_vs_faultfree_epochs",
     // net_wire
     "tcp_frame_encode_throughput",
     "delta_pull_bytes",

@@ -340,6 +340,21 @@ pub struct Config {
     /// Watchdog: warn observers with a `Stalled` event when no worker
     /// publishes progress for this many ms (0 = off).
     pub stall_warn_ms: u64,
+    /// Networked runtime: a worker rank whose control stream is silent
+    /// for this many ms is declared dead (the `failure` policy decides
+    /// what happens next).  Workers heartbeat at a third of this
+    /// deadline.  0 (default) = liveness tracking off; socket resets
+    /// are still detected immediately.
+    pub net_liveness_ms: u64,
+    /// Networked runtime: how long `asybadmm serve` waits for all ranks
+    /// to join before giving up (naming the missing ranks).
+    pub join_timeout_ms: u64,
+    /// Pull-cadence floor in microseconds (the worker mirror's fastest
+    /// re-poll after a productive round).  Hot-reloadable.
+    pub pull_floor_us: u64,
+    /// Pull-cadence ceiling in milliseconds (the idle mirror's slowest
+    /// re-poll).  Hot-reloadable.
+    pub pull_ceil_ms: u64,
     /// Write a v2 checkpoint from the monitor thread every this many
     /// epochs of global progress (0 = off).
     pub checkpoint_every: usize,
@@ -400,6 +415,10 @@ impl Default for Config {
             faults: String::new(),
             failure: FailurePolicy::Die,
             stall_warn_ms: 0,
+            net_liveness_ms: 0,
+            join_timeout_ms: 60_000,
+            pull_floor_us: 500,
+            pull_ceil_ms: 8,
             checkpoint_every: 0,
             checkpoint_path: PathBuf::from("reports/auto.ckpt"),
             stats_addr: String::new(),
@@ -489,10 +508,40 @@ impl Config {
         "faults",
         "failure",
         "stall_warn_ms",
+        "net_liveness_ms",
+        "join_timeout_ms",
+        "pull_floor_us",
+        "pull_ceil_ms",
         "checkpoint_every",
         "checkpoint_path",
         "stats_addr",
     ];
+
+    /// The runtime-safe subset `POST /config` may change on a live
+    /// `asybadmm serve` (applied atomically, republished to workers via
+    /// a `ConfigUpdate` frame).  Everything else shapes data, threads
+    /// or wire geometry and requires a restart.
+    pub const RELOADABLE_KEYS: &'static [&'static str] = &[
+        "rebalance_ms",
+        "stall_warn_ms",
+        "net_liveness_ms",
+        "pull_floor_us",
+        "pull_ceil_ms",
+    ];
+
+    /// `apply_kv`, restricted to [`Config::RELOADABLE_KEYS`].  A known
+    /// but non-reloadable key gets an error listing what *is*
+    /// reloadable (mirroring the unknown-key error's shape).
+    pub fn apply_reload_kv(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
+        let k = key.trim();
+        if !Self::RELOADABLE_KEYS.contains(&k) {
+            anyhow::bail!(
+                "config key {k:?} is not hot-reloadable; reloadable keys: {}",
+                Self::RELOADABLE_KEYS.join(", ")
+            );
+        }
+        self.apply_kv(k, value)
+    }
 
     pub fn apply_kv(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
         // Like unknown *keys*, an unrejectable *value* must say what
@@ -548,6 +597,10 @@ impl Config {
             "faults" => self.faults = v.to_string(),
             "failure" => self.failure = FailurePolicy::parse(v)?,
             "stall_warn_ms" => self.stall_warn_ms = scalar(key, v)?,
+            "net_liveness_ms" => self.net_liveness_ms = scalar(key, v)?,
+            "join_timeout_ms" => self.join_timeout_ms = scalar(key, v)?,
+            "pull_floor_us" => self.pull_floor_us = scalar(key, v)?,
+            "pull_ceil_ms" => self.pull_ceil_ms = scalar(key, v)?,
             "checkpoint_every" => self.checkpoint_every = scalar(key, v)?,
             "checkpoint_path" => self.checkpoint_path = PathBuf::from(v),
             "stats_addr" => self.stats_addr = v.to_string(),
@@ -627,6 +680,14 @@ impl Config {
         // Fail on a malformed fault spec at config time, not mid-run.
         crate::coordinator::FaultPlan::parse(&self.faults)
             .context("invalid value for config key \"faults\"")?;
+        anyhow::ensure!(self.join_timeout_ms > 0, "join_timeout_ms must be > 0");
+        anyhow::ensure!(self.pull_floor_us > 0, "pull_floor_us must be > 0");
+        anyhow::ensure!(
+            self.pull_floor_us <= self.pull_ceil_ms.saturating_mul(1000),
+            "pull_floor_us ({}us) exceeds pull_ceil_ms ({}ms)",
+            self.pull_floor_us,
+            self.pull_ceil_ms
+        );
         // Fail on a malformed stats address before any thread binds it.
         if !self.stats_addr.is_empty() {
             use std::net::ToSocketAddrs;
@@ -716,6 +777,18 @@ impl Config {
         push("faults", self.faults.clone(), d.faults.clone());
         push("failure", self.failure.as_str().into(), d.failure.as_str().into());
         push("stall_warn_ms", self.stall_warn_ms.to_string(), d.stall_warn_ms.to_string());
+        push(
+            "net_liveness_ms",
+            self.net_liveness_ms.to_string(),
+            d.net_liveness_ms.to_string(),
+        );
+        push(
+            "join_timeout_ms",
+            self.join_timeout_ms.to_string(),
+            d.join_timeout_ms.to_string(),
+        );
+        push("pull_floor_us", self.pull_floor_us.to_string(), d.pull_floor_us.to_string());
+        push("pull_ceil_ms", self.pull_ceil_ms.to_string(), d.pull_ceil_ms.to_string());
         push(
             "checkpoint_every",
             self.checkpoint_every.to_string(),
@@ -896,6 +969,34 @@ mod tests {
         let err = format!("{:#}", c.apply_kv("transport", "bogus").unwrap_err());
         for v in ["mpsc", "ring", "tcp"] {
             assert!(err.contains(v), "transport error omits {v:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn reload_kv_enforces_the_whitelist() {
+        let mut c = Config::default();
+        c.apply_reload_kv("rebalance_ms", "25").unwrap();
+        c.apply_reload_kv("net_liveness_ms", "400").unwrap();
+        c.apply_reload_kv("pull_floor_us", "250").unwrap();
+        c.apply_reload_kv("pull_ceil_ms", "16").unwrap();
+        assert_eq!(c.rebalance_ms, 25);
+        assert_eq!(c.net_liveness_ms, 400);
+        assert_eq!(c.pull_floor_us, 250);
+        assert_eq!(c.pull_ceil_ms, 16);
+        // Known-but-frozen and unknown keys both list the whitelist.
+        for frozen in ["epochs", "n_workers", "transport", "not_a_key"] {
+            let err = format!("{:#}", c.apply_reload_kv(frozen, "1").unwrap_err());
+            assert!(err.contains("not hot-reloadable"), "{err}");
+            for valid in Config::RELOADABLE_KEYS {
+                assert!(err.contains(valid), "{frozen} error omits {valid}: {err}");
+            }
+        }
+        // A reloadable key with a bad value keeps the apply_kv shape.
+        let err = format!("{:#}", c.apply_reload_kv("rebalance_ms", "abc").unwrap_err());
+        assert!(err.contains("rebalance_ms") && err.contains("abc"), "{err}");
+        // Every reloadable key is a real config key.
+        for k in Config::RELOADABLE_KEYS {
+            assert!(Config::KEYS.contains(k), "{k} missing from Config::KEYS");
         }
     }
 

@@ -27,6 +27,23 @@
 //!   `N` transient send failures before succeeding (modelled as bounded
 //!   retries; counted in `WorkerStats::send_retries`).
 //!
+//! The networked runtime (`coordinator/net/`) adds three wire-level
+//! kinds, hooked at the tcp/proc read-write seams behind the same
+//! [`FaultPlan::is_empty`] gate:
+//!
+//! - `netdrop:w<W>@<E>` — worker `W`'s push sockets are severed just
+//!   before its epoch-`E` push, simulating a network partition or a
+//!   peer reset.  Fires in the *worker* process.
+//! - `netstall:w<W>@<P>+<MS>ms` — worker `W`'s push stream freezes for
+//!   `MS` milliseconds, once, when its sent-frame counter reaches `P`
+//!   (a socket-level straggler; with `net_liveness_ms` shorter than
+//!   `MS` the coordinator will treat the silence as death).  Fires in
+//!   the *worker* process.
+//! - `corrupt:s<S>@<N>` — the coordinator flips bytes in the `N`-th
+//!   frame it sends on rank `S`'s pull-sync stream.  The receiver must
+//!   surface a named decode error (never a panic) and tear down that
+//!   stream cleanly.  Fires in the *serve* process.
+//!
 //! Every hook is gated on [`FaultPlan::is_empty`] — a single branch on
 //! a pre-computed bool — so the default (no faults) hot path pays
 //! nothing measurable; `benches/fault_recovery.rs` keeps that honest.
@@ -60,6 +77,23 @@ pub enum FaultEvent {
     /// Watchdog: no worker published progress for `waited_ms` while the
     /// slowest live worker sat at `min_epoch` (`--set stall_warn_ms`).
     Stalled { min_epoch: usize, waited_ms: u64 },
+    /// `netdrop`: worker `worker`'s push sockets were severed before
+    /// its epoch-`epoch` push.
+    NetDropped { worker: usize, epoch: usize },
+    /// `netstall`: worker `worker`'s push stream froze `ms` after
+    /// `after_frames` sent frames.
+    NetStalled { worker: usize, after_frames: usize, ms: u64 },
+    /// `corrupt`: frame `frame` on rank `stream`'s pull stream had its
+    /// bytes flipped in flight.
+    FrameCorrupted { stream: usize, frame: usize },
+    /// Networked runtime: rank `rank` was evicted (liveness deadline or
+    /// socket reset under `failure=degrade`) and the run continued on
+    /// the survivors.  `parked_dropped` counts purged early-arrivals
+    /// across the rank's workers.
+    RankEvicted { rank: usize, parked_dropped: usize },
+    /// Networked runtime: rank `rank` rejoined via the Rejoin handshake
+    /// (`failure=restart`) and resumed its seq streams exactly.
+    RankRejoined { rank: usize, attempt: usize },
 }
 
 impl FaultEvent {
@@ -81,6 +115,21 @@ impl FaultEvent {
             }
             FaultEvent::Stalled { min_epoch, waited_ms } => {
                 format!("watchdog: no progress for {waited_ms}ms (slowest worker at epoch {min_epoch})")
+            }
+            FaultEvent::NetDropped { worker, epoch } => {
+                format!("worker {worker} push sockets severed at epoch {epoch} (netdrop)")
+            }
+            FaultEvent::NetStalled { worker, after_frames, ms } => {
+                format!("worker {worker} push stream froze {ms}ms after {after_frames} frames")
+            }
+            FaultEvent::FrameCorrupted { stream, frame } => {
+                format!("pull stream {stream}: frame {frame} corrupted in flight")
+            }
+            FaultEvent::RankEvicted { rank, parked_dropped } => format!(
+                "rank {rank} evicted ({parked_dropped} parked pushes dropped); completing on survivors"
+            ),
+            FaultEvent::RankRejoined { rank, attempt } => {
+                format!("rank {rank} rejoined (attempt {attempt})")
             }
         }
     }
@@ -105,6 +154,25 @@ struct SendFailEntry {
     count: usize,
 }
 
+struct NetDropEntry {
+    worker: usize,
+    at_epoch: usize,
+    fired: AtomicBool,
+}
+
+struct NetStallEntry {
+    worker: usize,
+    after_frames: usize,
+    ms: u64,
+    fired: AtomicBool,
+}
+
+struct CorruptEntry {
+    stream: usize,
+    at_frame: usize,
+    fired: AtomicBool,
+}
+
 /// A deterministic, shareable (`&self` hooks, atomics inside) schedule
 /// of injected faults.  See the module docs for the spec grammar.
 #[derive(Default)]
@@ -112,6 +180,9 @@ pub struct FaultPlan {
     crashes: Vec<CrashEntry>,
     stalls: Vec<StallEntry>,
     sendfails: Vec<SendFailEntry>,
+    netdrops: Vec<NetDropEntry>,
+    netstalls: Vec<NetStallEntry>,
+    corrupts: Vec<CorruptEntry>,
     log: Mutex<Vec<FaultEvent>>,
 }
 
@@ -175,8 +246,48 @@ impl FaultPlan {
                             .with_context(|| format!("fault entry {entry:?}: bad count"))?,
                     });
                 }
+                "netdrop" => {
+                    let (w, e) = parse_at(rest, 'w')
+                        .with_context(|| format!("fault entry {entry:?} (netdrop:w<W>@<E>)"))?;
+                    plan.netdrops.push(NetDropEntry {
+                        worker: w,
+                        at_epoch: e,
+                        fired: AtomicBool::new(false),
+                    });
+                }
+                "netstall" => {
+                    let (w, trigger) = parse_at_raw(rest, 'w').with_context(|| {
+                        format!("fault entry {entry:?} (netstall:w<W>@<P>+<MS>ms)")
+                    })?;
+                    let (frames, ms) = trigger
+                        .split_once('+')
+                        .with_context(|| format!("fault entry {entry:?}: expected <P>+<MS>ms"))?;
+                    let ms = ms
+                        .strip_suffix("ms")
+                        .with_context(|| format!("fault entry {entry:?}: duration must end in ms"))?;
+                    plan.netstalls.push(NetStallEntry {
+                        worker: w,
+                        after_frames: frames
+                            .parse()
+                            .with_context(|| format!("fault entry {entry:?}: bad frame count"))?,
+                        ms: ms
+                            .parse()
+                            .with_context(|| format!("fault entry {entry:?}: bad duration"))?,
+                        fired: AtomicBool::new(false),
+                    });
+                }
+                "corrupt" => {
+                    let (s, f) = parse_at(rest, 's')
+                        .with_context(|| format!("fault entry {entry:?} (corrupt:s<S>@<N>)"))?;
+                    plan.corrupts.push(CorruptEntry {
+                        stream: s,
+                        at_frame: f,
+                        fired: AtomicBool::new(false),
+                    });
+                }
                 other => bail!(
-                    "fault entry {entry:?}: unknown kind {other:?} (crash|stall|sendfail)"
+                    "fault entry {entry:?}: unknown kind {other:?} \
+                     (crash|stall|sendfail|netdrop|netstall|corrupt)"
                 ),
             }
         }
@@ -186,7 +297,27 @@ impl FaultPlan {
     /// True when no faults are scheduled — the hot-path gate.
     #[inline]
     pub fn is_empty(&self) -> bool {
-        self.crashes.is_empty() && self.stalls.is_empty() && self.sendfails.is_empty()
+        self.crashes.is_empty()
+            && self.stalls.is_empty()
+            && self.sendfails.is_empty()
+            && self.netdrops.is_empty()
+            && self.netstalls.is_empty()
+            && self.corrupts.is_empty()
+    }
+
+    /// Filter a spec down to the entries that fire in the *worker*
+    /// process on the networked runtime (`netdrop`, `netstall`) — the
+    /// subset the Welcome frame deliberately re-plumbs to `asybadmm
+    /// work` (everything else would double-fire or has no seam there).
+    /// Textual, so it composes with an already-validated spec.
+    pub fn worker_net_spec(spec: &str) -> String {
+        spec.split(';')
+            .map(str::trim)
+            .filter(|e| {
+                matches!(e.split_once(':').map(|(k, _)| k), Some("netdrop" | "netstall"))
+            })
+            .collect::<Vec<_>>()
+            .join(";")
     }
 
     /// Worker hook: should `worker` crash now, having just completed
@@ -245,6 +376,70 @@ impl FaultPlan {
             }
         }
         None
+    }
+
+    /// Push-sender hook (networked runtime): should `worker`'s sockets
+    /// be severed before its epoch-`epoch` push?  Fires each matching
+    /// entry at most once and records the [`FaultEvent::NetDropped`].
+    #[inline]
+    pub fn net_drop(&self, worker: usize, epoch: usize) -> bool {
+        if self.netdrops.is_empty() {
+            return false;
+        }
+        for d in &self.netdrops {
+            if d.worker == worker
+                && epoch >= d.at_epoch
+                && !d.fired.swap(true, Ordering::AcqRel)
+            {
+                self.record(FaultEvent::NetDropped { worker, epoch });
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Push-sender hook (networked runtime): milliseconds `worker`'s
+    /// push stream should freeze given its sent-frame count.  Fires
+    /// each entry once and records the [`FaultEvent::NetStalled`].
+    #[inline]
+    pub fn net_stall_ms(&self, worker: usize, frames: usize) -> Option<u64> {
+        if self.netstalls.is_empty() {
+            return None;
+        }
+        for st in &self.netstalls {
+            if st.worker == worker
+                && frames >= st.after_frames
+                && !st.fired.swap(true, Ordering::AcqRel)
+            {
+                self.record(FaultEvent::NetStalled {
+                    worker,
+                    after_frames: st.after_frames,
+                    ms: st.ms,
+                });
+                return Some(st.ms);
+            }
+        }
+        None
+    }
+
+    /// Serve-side hook (networked runtime): should the `frame`-th frame
+    /// on rank `stream`'s pull stream have its bytes flipped?  Fires
+    /// each entry once and records the [`FaultEvent::FrameCorrupted`].
+    #[inline]
+    pub fn corrupt_frame(&self, stream: usize, frame: usize) -> bool {
+        if self.corrupts.is_empty() {
+            return false;
+        }
+        for c in &self.corrupts {
+            if c.stream == stream
+                && frame >= c.at_frame
+                && !c.fired.swap(true, Ordering::AcqRel)
+            {
+                self.record(FaultEvent::FrameCorrupted { stream, frame });
+                return true;
+            }
+        }
+        false
     }
 
     /// Append an event to the plan's log (drained by the monitor).
@@ -308,6 +503,46 @@ mod tests {
     }
 
     #[test]
+    fn parses_the_net_kinds_and_hooks_fire_once() {
+        let p =
+            FaultPlan::parse("netdrop:w1@5; netstall:w0@100+25ms; corrupt:s2@3").unwrap();
+        assert!(!p.is_empty());
+        assert!(!p.net_drop(1, 4));
+        assert!(!p.net_drop(0, 5));
+        assert!(p.net_drop(1, 5));
+        assert!(!p.net_drop(1, 6), "netdrop entry refired");
+        assert_eq!(p.net_stall_ms(0, 99), None);
+        assert_eq!(p.net_stall_ms(1, 200), None);
+        assert_eq!(p.net_stall_ms(0, 100), Some(25));
+        assert_eq!(p.net_stall_ms(0, 200), None, "netstall entry refired");
+        assert!(!p.corrupt_frame(2, 2));
+        assert!(!p.corrupt_frame(0, 3));
+        assert!(p.corrupt_frame(2, 3));
+        assert!(!p.corrupt_frame(2, 4), "corrupt entry refired");
+        // Each hook recorded its own event, in firing order.
+        let evs = p.take_events();
+        assert_eq!(
+            evs,
+            vec![
+                FaultEvent::NetDropped { worker: 1, epoch: 5 },
+                FaultEvent::NetStalled { worker: 0, after_frames: 100, ms: 25 },
+                FaultEvent::FrameCorrupted { stream: 2, frame: 3 },
+            ]
+        );
+    }
+
+    #[test]
+    fn worker_net_spec_keeps_only_worker_side_net_entries() {
+        let spec = "crash:w1@5;netdrop:w1@5; stall:s0@9+1ms ;netstall:w0@10+5ms;corrupt:s0@3";
+        assert_eq!(
+            FaultPlan::worker_net_spec(spec),
+            "netdrop:w1@5;netstall:w0@10+5ms"
+        );
+        assert_eq!(FaultPlan::worker_net_spec("crash:w0@1"), "");
+        assert_eq!(FaultPlan::worker_net_spec(""), "");
+    }
+
+    #[test]
     fn rejects_malformed_specs_with_context() {
         for bad in [
             "crash",
@@ -318,6 +553,12 @@ mod tests {
             "stall:s0@100+25",
             "sendfail:w2@4",
             "explode:w0@1",
+            "netdrop:s1@5",
+            "netdrop:w1@",
+            "netstall:w0@100",
+            "netstall:w0@100+25",
+            "corrupt:w0@3",
+            "corrupt:s0@x",
         ] {
             let err = FaultPlan::parse(bad).unwrap_err();
             let msg = format!("{err:#}");
@@ -334,6 +575,9 @@ mod tests {
         assert!(!p.should_crash(0, 0));
         assert_eq!(p.send_failures(0, 0), 0);
         assert_eq!(p.stall_ms(0, usize::MAX), None);
+        assert!(!p.net_drop(0, usize::MAX));
+        assert_eq!(p.net_stall_ms(0, usize::MAX), None);
+        assert!(!p.corrupt_frame(0, usize::MAX));
     }
 
     #[test]
@@ -355,6 +599,26 @@ mod tests {
             (
                 FaultEvent::Stalled { min_epoch: 5, waited_ms: 750 },
                 vec!["watchdog", "750ms", "epoch 5"],
+            ),
+            (
+                FaultEvent::NetDropped { worker: 2, epoch: 6 },
+                vec!["worker 2", "severed", "epoch 6"],
+            ),
+            (
+                FaultEvent::NetStalled { worker: 1, after_frames: 40, ms: 30 },
+                vec!["worker 1", "froze 30ms", "40 frames"],
+            ),
+            (
+                FaultEvent::FrameCorrupted { stream: 0, frame: 3 },
+                vec!["stream 0", "frame 3", "corrupted"],
+            ),
+            (
+                FaultEvent::RankEvicted { rank: 1, parked_dropped: 2 },
+                vec!["rank 1", "evicted", "2 parked"],
+            ),
+            (
+                FaultEvent::RankRejoined { rank: 1, attempt: 1 },
+                vec!["rank 1", "rejoined", "attempt 1"],
             ),
         ];
         for (ev, needles) in cases {

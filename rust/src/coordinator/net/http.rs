@@ -8,8 +8,16 @@
 //!   counters, placement map, migration ledger, fault events, and the
 //!   nested `"wire"`/`"pull"` data-plane counter objects the serve role
 //!   publishes — see DESIGN.md §2.0.6).
-//! * `GET /healthz` → `200 text/plain` `ok` — liveness only.
-//! * anything else  → `404` (unknown path) or `405` (non-GET).
+//! * `GET /healthz` → `200 application/json` when the runtime registers
+//!   a liveness closure (serve mode: per-rank heartbeat ages,
+//!   connection state, evicted flags, `"degraded"` overall status —
+//!   DESIGN.md §2.0.7); `200 text/plain` `ok` otherwise.
+//! * `POST /config` → hot-reload: the body is `key=value` lines; the
+//!   registered apply closure validates against the reloadable
+//!   whitelist and applies atomically.  `200` with the applied set, or
+//!   `400` with the validation error (which lists the reloadable
+//!   keys).  `404` when no apply closure is registered.
+//! * anything else  → `404` (unknown path) or `405` (bad method).
 //!
 //! Requests are served sequentially — this is an observability tap for
 //! a handful of human/test clients, not a web server.  Each connection
@@ -32,6 +40,23 @@ use crate::util::json::Json;
 /// owns the counters.
 pub type StatsFn = Arc<dyn Fn() -> Json + Send + Sync>;
 
+/// Builds the `/healthz` JSON on demand (serve mode: per-rank liveness
+/// detail).  Without one the endpoint answers plain `ok`.
+pub type HealthFn = Arc<dyn Fn() -> Json + Send + Sync>;
+
+/// Applies a `POST /config` body (`key=value` lines).  Returns the
+/// human-readable confirmation for a `200`, or an error (surfaced as a
+/// `400` whose body lists the reloadable keys).
+pub type ConfigFn = Arc<dyn Fn(&str) -> Result<String> + Send + Sync>;
+
+/// The closures one endpoint serves; only `stats` is mandatory.
+#[derive(Clone)]
+struct Hooks {
+    stats: StatsFn,
+    health: Option<HealthFn>,
+    config: Option<ConfigFn>,
+}
+
 /// A running stats endpoint; dropping it (or calling [`StatsServer::stop`])
 /// shuts the thread down.
 pub struct StatsServer {
@@ -44,15 +69,28 @@ impl StatsServer {
     /// Bind `addr` (e.g. `127.0.0.1:8080`, or `:0` for an ephemeral
     /// port) and serve `stats` until stopped.
     pub fn spawn(addr: &str, stats: StatsFn) -> Result<StatsServer> {
+        Self::spawn_with(addr, stats, None, None)
+    }
+
+    /// [`StatsServer::spawn`] plus the optional serve-mode closures: a
+    /// `/healthz` liveness-detail builder and a `POST /config`
+    /// hot-reload handler.
+    pub fn spawn_with(
+        addr: &str,
+        stats: StatsFn,
+        health: Option<HealthFn>,
+        config: Option<ConfigFn>,
+    ) -> Result<StatsServer> {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("stats_addr {addr:?} (expected host:port)"))?;
         let local = listener.local_addr().context("stats listener local_addr")?;
         listener.set_nonblocking(true).context("nonblocking stats listener")?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
+        let hooks = Hooks { stats, health, config };
         let thread = std::thread::Builder::new()
             .name("stats-http".into())
-            .spawn(move || serve_loop(listener, stats, stop2))
+            .spawn(move || serve_loop(listener, hooks, stop2))
             .context("spawn stats thread")?;
         Ok(StatsServer { addr: local, stop, thread: Some(thread) })
     }
@@ -77,11 +115,11 @@ impl Drop for StatsServer {
     }
 }
 
-fn serve_loop(listener: TcpListener, stats: StatsFn, stop: Arc<AtomicBool>) {
+fn serve_loop(listener: TcpListener, hooks: Hooks, stop: Arc<AtomicBool>) {
     while !stop.load(Ordering::Acquire) {
         match listener.accept() {
             Ok((conn, _)) => {
-                let _ = serve_one(conn, &stats);
+                let _ = serve_one(conn, &hooks);
             }
             Err(e) if e.kind() == ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_millis(5));
@@ -91,38 +129,81 @@ fn serve_loop(listener: TcpListener, stats: StatsFn, stop: Arc<AtomicBool>) {
     }
 }
 
-/// Read one request head, write one response, close.
-fn serve_one(mut conn: TcpStream, stats: &StatsFn) -> Result<()> {
+/// `Content-Length` from a raw header block (case-insensitive key).
+fn content_length(head: &str) -> usize {
+    head.lines()
+        .filter_map(|l| l.split_once(':'))
+        .find(|(k, _)| k.trim().eq_ignore_ascii_case("content-length"))
+        .and_then(|(_, v)| v.trim().parse().ok())
+        .unwrap_or(0)
+}
+
+/// Read one request (head + body for POST), write one response, close.
+fn serve_one(mut conn: TcpStream, hooks: &Hooks) -> Result<()> {
     conn.set_read_timeout(Some(Duration::from_millis(500))).ok();
     conn.set_nodelay(true).ok();
-    let mut head = Vec::with_capacity(512);
+    let mut raw = Vec::with_capacity(512);
     let mut chunk = [0u8; 512];
-    // Read until the blank line ends the header block (we ignore the
-    // headers themselves — method + path decide everything).
-    while !head.windows(4).any(|w| w == b"\r\n\r\n") && head.len() < 8192 {
+    // Read until the blank line ends the header block (the only header
+    // that matters is Content-Length — method + path decide the rest).
+    while !raw.windows(4).any(|w| w == b"\r\n\r\n") && raw.len() < 8192 {
         match conn.read(&mut chunk) {
             Ok(0) => break,
-            Ok(n) => head.extend_from_slice(&chunk[..n]),
+            Ok(n) => raw.extend_from_slice(&chunk[..n]),
             Err(e) if e.kind() == ErrorKind::Interrupted => {}
             Err(_) => break, // timeout or reset: respond to what we have
         }
     }
-    let request = String::from_utf8_lossy(&head);
-    let mut parts = request.split_whitespace();
-    let method = parts.next().unwrap_or("");
-    let path = parts.next().unwrap_or("");
-    let (status, content_type, body): (&str, &str, String) = if method != "GET" {
-        ("405 Method Not Allowed", "text/plain", "GET only\n".into())
-    } else {
-        match path {
-            "/healthz" => ("200 OK", "text/plain", "ok\n".into()),
-            "/stats" => ("200 OK", "application/json", {
-                let mut s = stats().to_string_pretty();
+    let head_end = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .map(|p| p + 4)
+        .unwrap_or(raw.len());
+    let head = String::from_utf8_lossy(&raw[..head_end]).into_owned();
+    let mut parts = head.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    // Body: whatever followed the blank line, topped up to
+    // Content-Length (bounded — config bodies are a few lines).
+    let want = content_length(&head).min(64 * 1024);
+    let mut body_bytes = raw[head_end..].to_vec();
+    while body_bytes.len() < want {
+        match conn.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => body_bytes.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => break,
+        }
+    }
+    let (status, content_type, body): (&str, &str, String) = match (method.as_str(), path.as_str())
+    {
+        ("GET", "/healthz") => match &hooks.health {
+            Some(h) => ("200 OK", "application/json", {
+                let mut s = h().to_string_pretty();
                 s.push('\n');
                 s
             }),
-            _ => ("404 Not Found", "text/plain", "unknown path (try /stats or /healthz)\n".into()),
+            None => ("200 OK", "text/plain", "ok\n".into()),
+        },
+        ("GET", "/stats") => ("200 OK", "application/json", {
+            let mut s = (hooks.stats)().to_string_pretty();
+            s.push('\n');
+            s
+        }),
+        ("POST", "/config") => match &hooks.config {
+            Some(apply) => {
+                let text = String::from_utf8_lossy(&body_bytes);
+                match apply(&text) {
+                    Ok(msg) => ("200 OK", "text/plain", format!("{msg}\n")),
+                    Err(e) => ("400 Bad Request", "text/plain", format!("{e:#}\n")),
+                }
+            }
+            None => ("404 Not Found", "text/plain", "config reload not enabled\n".into()),
+        },
+        ("GET", _) => {
+            ("404 Not Found", "text/plain", "unknown path (try /stats or /healthz)\n".into())
         }
+        _ => ("405 Method Not Allowed", "text/plain", "GET (or POST /config) only\n".into()),
     };
     let response = format!(
         "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
@@ -202,5 +283,79 @@ mod tests {
         let err = StatsServer::spawn("not-an-addr", Arc::new(|| Json::Null)).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("host:port"), "error should show the form: {msg}");
+    }
+
+    fn post(addr: SocketAddr, path: &str, body: &str) -> (String, String) {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(
+            format!(
+                "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        let mut raw = String::new();
+        conn.read_to_string(&mut raw).unwrap();
+        let (head, body) = raw.split_once("\r\n\r\n").expect("header/body split");
+        (head.lines().next().unwrap_or("").to_string(), body.to_string())
+    }
+
+    /// The serve role registers a liveness closure and a config-apply
+    /// closure; `/healthz` then answers JSON and `POST /config` routes
+    /// the body through the apply hook (200 on success, 400 with the
+    /// hook's error otherwise).
+    #[test]
+    fn healthz_detail_and_config_reload_round_trip() {
+        use std::sync::Mutex;
+        let applied: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        let applied2 = applied.clone();
+        let server = StatsServer::spawn_with(
+            "127.0.0.1:0",
+            Arc::new(|| obj(vec![("pushes_total", num(0.0))])),
+            Some(Arc::new(|| {
+                obj(vec![("status", Json::Str("degraded".into())), ("evicted", num(1.0))])
+            })),
+            Some(Arc::new(move |body: &str| {
+                if body.contains("bogus") {
+                    anyhow::bail!("config key \"bogus\" is not hot-reloadable");
+                }
+                applied2.lock().unwrap().push(body.to_string());
+                Ok(format!("applied {} line(s)", body.lines().count()))
+            })),
+        )
+        .unwrap();
+        let addr = server.addr();
+
+        let (status, body) = get(addr, "/healthz");
+        assert!(status.contains("200"), "healthz: {status}");
+        let parsed = Json::parse(&body).expect("healthz body is JSON");
+        assert_eq!(parsed.get("status"), Some(&Json::Str("degraded".into())));
+        assert_eq!(parsed.get("evicted"), Some(&Json::Num(1.0)));
+
+        let (status, body) = post(addr, "/config", "rebalance_ms=50\nstall_warn_ms=100\n");
+        assert!(status.contains("200"), "config apply: {status} {body}");
+        assert!(body.contains("applied 2"), "confirmation: {body}");
+        assert_eq!(applied.lock().unwrap().len(), 1, "hook ran once");
+
+        let (status, body) = post(addr, "/config", "bogus=1\n");
+        assert!(status.contains("400"), "bad key must 400: {status}");
+        assert!(body.contains("not hot-reloadable"), "names the failure: {body}");
+
+        let (status, _) = post(addr, "/stats", "");
+        assert!(status.contains("405"), "POST on a GET path: {status}");
+    }
+
+    /// Without an apply hook, POST /config is a 404 (feature off), and
+    /// bare spawn keeps the plain-text healthz contract.
+    #[test]
+    fn config_endpoint_is_404_without_a_hook() {
+        let server = StatsServer::spawn("127.0.0.1:0", Arc::new(|| Json::Null)).unwrap();
+        let (status, body) = post(server.addr(), "/config", "rebalance_ms=50\n");
+        assert!(status.contains("404"), "no hook: {status}");
+        assert!(body.contains("not enabled"), "says why: {body}");
+        let (status, body) = get(server.addr(), "/healthz");
+        assert!(status.contains("200"), "healthz: {status}");
+        assert_eq!(body, "ok\n");
     }
 }

@@ -44,21 +44,61 @@
 //!    `WorkerDone{rank, pushes, pull_rounds, pull_empty}`; once every
 //!    rank reported, the coordinator shuts the transport down, drains,
 //!    and prints the same `# done …` summary line as `asybadmm train`
-//!    (extended with the aggregated pull round-trip accounting).
+//!    (extended with the aggregated pull round-trip accounting and an
+//!    `evicted=` count).
+//!
+//! ## Failure model (DESIGN.md §2.0.7)
+//!
+//! The in-process survivability contract extends across the process
+//! boundary:
+//!
+//! * **Liveness**: each rank's control stream carries `Heartbeat`
+//!   frames (`--set net_liveness_ms=MS`; period MS/3, floor 10ms).
+//!   The coordinator tracks per-rank last-seen ages — a rank silent
+//!   past the deadline, or whose control stream drops, is declared
+//!   dead.  `/healthz` publishes the per-rank detail.
+//! * **`failure=die`** (default): a dead rank fails the run with an
+//!   error naming the rank — the pre-PR behavior, made diagnosable.
+//! * **`failure=degrade`**: the coordinator *evicts* the rank — its
+//!   push lanes are force-closed (late reconnects refused), parked
+//!   early-arrivals are purged so no seq gap blocks the survivors, a
+//!   `RankEvicted` fault event is recorded, and the run completes on
+//!   the survivors.  The victim's already-applied pushes stay in the
+//!   consensus, exactly like the threaded degrade path.
+//! * **`failure=restart`**: a dead rank's slot waits (bounded by
+//!   `join_timeout_ms`) for a replacement `asybadmm work … --rank R/N`.
+//!   The rejoin handshake drains the crashed stream's tail (kernel
+//!   socket buffers survive process death, so the applied prefix is
+//!   contiguous), then the Welcome carries per-(worker, slot) resume
+//!   state — last applied seq and warm duals y ≈ w̃ − ρ·z̃ — and the
+//!   replacement resumes the exact FIFO streams mid-flight.
+//! * **Wire fault injection**: `netdrop:wW@E` / `netstall:wW@P+MSms`
+//!   ship to worker processes (the only fault kinds that survive the
+//!   Welcome; crash/stall/sendfail remain in-process kinds) and fire
+//!   in [`TcpPushSender`]; `corrupt:sS@N` fires coordinator-side on a
+//!   pull stream and must surface as a *named* decode error, never a
+//!   panic.  All hooks sit behind the `FaultPlan::is_empty` guard.
+//! * **Config hot-reload**: `POST /config` on the stats endpoint
+//!   accepts `key=value` lines for the reloadable whitelist
+//!   (`Config::RELOADABLE_KEYS`), applies them atomically, and
+//!   republishes via `ConfigUpdate` frames on every control stream.
+//! * With `checkpoint_every=N`, the coordinator snapshots the v2
+//!   checkpoint off the monitor loop; a restarted `asybadmm serve`
+//!   warm-starts z̃ and the owner map from it.
 //!
 //! ## Deliberate simplifications
 //!
-//! * Fault injection (`--set faults=…`) and `failure=degrade|restart`
-//!   stay with the in-process runtime: a worker process clears the
-//!   shipped fault plan (a remote crash is a process exit, reported as
-//!   a hard error by the coordinator when the control stream drops).
 //! * `--set data=FILE` requires the file to be readable by every
 //!   process; the default synthetic dataset needs nothing shared.
+//! * Serve-side checkpoint resume restores the model (z̃, owners) but
+//!   not epoch bookkeeping: rejoined worker processes rerun their full
+//!   epoch budget against the warm model.
 
+use std::io::Write;
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
@@ -66,66 +106,101 @@ use anyhow::{bail, Context, Result};
 use super::super::block_store::BlockStore;
 use super::super::compute::make_compute;
 use super::super::delay::DelayPolicy;
-use super::super::fault::FaultPlan;
+use super::super::fault::{FaultEvent, FaultPlan};
 use super::super::placement::make_placement;
 use super::super::rebalance::{BlockMap, Rebalancer};
 use super::super::sched::{run_pool, run_server, ShardRt};
 use super::super::server::{BlockTable, ProxBackend, ServerShard};
-use super::super::session::MonitorGate;
+use super::super::session::{approx_duals, snapshot_checkpoint, MonitorGate};
 use super::super::topology::Topology;
 use super::super::transport::{push_inflight, PushSender, Transport};
 use super::super::worker::WorkerCtx;
-use super::http::StatsServer;
+use super::http::{ConfigFn, HealthFn, StatsServer};
 use super::tcp::{CtlConn, TcpPushSender, TcpTransport};
 use super::wire::{self, kind};
 use crate::admm::objective_at_z;
-use crate::config::{Backend, Config, PlacementKind, TransportKind};
+use crate::config::{Backend, Config, FailurePolicy, PlacementKind, TransportKind};
 use crate::data::{gen_partitioned, load_libsvm, partition_even, Dataset, WorkerShard};
 use crate::info;
 use crate::problem::Problem;
+use crate::report::Checkpoint;
 use crate::runtime::{Manifest, ServerProxXla};
 use crate::sparse::Kernels;
 use crate::util::cli::{Args, Parsed};
 use crate::util::json::{num, obj, Json};
 
-/// Mirror-refresh poll floor (worker side).  Each round is one
-/// request/response; 500µs keeps mirror staleness far below an epoch
-/// while z̃ is churning.
-const PULL_POLL_MIN: Duration = Duration::from_micros(500);
+/// Worker-side hot-reloadable knobs, shared between the control-stream
+/// reader (which applies `ConfigUpdate` frames) and the loops that
+/// consume them.  Plain atomics: a torn read across two keys costs one
+/// mistimed poll, nothing more.
+struct PullTuning {
+    /// `pull_floor_us` — mirror poll floor, microseconds.
+    floor_us: AtomicU64,
+    /// `pull_ceil_ms` — idle poll ceiling, milliseconds.
+    ceil_ms: AtomicU64,
+    /// Heartbeat period, milliseconds (derived `net_liveness_ms / 3`,
+    /// floored at 10ms; 0 = heartbeats off).
+    hb_period_ms: AtomicU64,
+}
 
-/// Idle poll ceiling: bounds how stale the mirror can go once z̃
-/// quiesces (and how long a rank naps before noticing new versions if
-/// the publish hint is somehow lost).
-const PULL_POLL_MAX: Duration = Duration::from_millis(8);
+impl PullTuning {
+    fn from_cfg(cfg: &Config) -> Self {
+        PullTuning {
+            floor_us: AtomicU64::new(cfg.pull_floor_us.max(1)),
+            ceil_ms: AtomicU64::new(cfg.pull_ceil_ms.max(1)),
+            hb_period_ms: AtomicU64::new(heartbeat_period_ms(cfg.net_liveness_ms)),
+        }
+    }
+
+    fn floor(&self) -> Duration {
+        Duration::from_micros(self.floor_us.load(Ordering::Relaxed).max(1))
+    }
+
+    fn ceil(&self) -> Duration {
+        Duration::from_millis(self.ceil_ms.load(Ordering::Relaxed).max(1)).max(self.floor())
+    }
+}
+
+/// Heartbeat cadence for a liveness deadline: three beats per deadline
+/// window so one delayed frame never trips the deadline, floored at
+/// 10ms.  0 (liveness off) disables the thread.
+fn heartbeat_period_ms(net_liveness_ms: u64) -> u64 {
+    if net_liveness_ms == 0 {
+        0
+    } else {
+        (net_liveness_ms / 3).max(10)
+    }
+}
 
 /// Exponential idle backoff for the mirror poll loop: sleeps start at
-/// [`PULL_POLL_MIN`], double after every empty round (a `PullResp`
-/// carrying no blocks), cap at [`PULL_POLL_MAX`], and snap back to the
-/// floor on any productive response or publish-hint advance.
+/// the floor, double after every empty round (a `PullResp` carrying no
+/// blocks), cap at the ceiling, and snap back to the floor on any
+/// productive response or publish-hint advance.  The bounds arrive per
+/// round so a `ConfigUpdate` retunes the loop mid-run.
 struct PullCadence {
     cur: Duration,
 }
 
 impl PullCadence {
-    fn new() -> Self {
-        PullCadence { cur: PULL_POLL_MIN }
+    fn new(floor: Duration) -> Self {
+        PullCadence { cur: floor }
     }
 
     /// Sleep to take after a round; `productive` means the response
     /// carried at least one newer block.
-    fn after_round(&mut self, productive: bool) -> Duration {
+    fn after_round(&mut self, productive: bool, floor: Duration, ceil: Duration) -> Duration {
         if productive {
-            self.cur = PULL_POLL_MIN;
+            self.cur = floor;
             return self.cur;
         }
-        let d = self.cur;
-        self.cur = (self.cur * 2).min(PULL_POLL_MAX);
+        let d = self.cur.clamp(floor, ceil);
+        self.cur = (d * 2).min(ceil);
         d
     }
 
     /// The coordinator's publish hint advanced: poll at the floor again.
-    fn reset(&mut self) {
-        self.cur = PULL_POLL_MIN;
+    fn reset(&mut self, floor: Duration) {
+        self.cur = floor;
     }
 }
 
@@ -148,10 +223,170 @@ struct PullServeStats {
     dense_equiv_bytes: AtomicU64,
 }
 
-/// How long `serve` waits between join events before giving up on the
-/// barrier (a worker process that died pre-join must not wedge the
-/// coordinator forever).
-const JOIN_TIMEOUT: Duration = Duration::from_secs(60);
+// ---------------------------------------------------------------------
+// Rank liveness (serve side)
+// ---------------------------------------------------------------------
+
+/// Rank states on the coordinator's liveness board.
+const RANK_ALIVE: usize = 0;
+/// Control stream lost (or heartbeat deadline missed); under
+/// `failure=restart` the slot waits for a rejoin.
+const RANK_DEAD: usize = 1;
+/// Evicted under `failure=degrade`: lanes closed, parked purged, the
+/// run completes on the survivors.
+const RANK_EVICTED: usize = 2;
+/// `WorkerDone` received.
+const RANK_DONE: usize = 3;
+
+fn rank_state_name(state: usize) -> &'static str {
+    match state {
+        RANK_ALIVE => "alive",
+        RANK_DEAD => "dead",
+        RANK_EVICTED => "evicted",
+        RANK_DONE => "done",
+        _ => "unknown",
+    }
+}
+
+/// Per-rank liveness slot: last frame seen on the control stream
+/// (milliseconds since serve start), heartbeat count, state.
+struct RankSlot {
+    last_seen_ms: AtomicU64,
+    beats: AtomicU64,
+    state: AtomicUsize,
+}
+
+/// The coordinator's liveness board, shared by the control-stream
+/// readers (writers), the monitor loop (deadline scans, transitions)
+/// and the `/healthz` closure (readers).  Sized at the join barrier —
+/// `/healthz` before that reports `"starting"`.
+struct RankBoard {
+    start: Instant,
+    slots: OnceLock<Vec<RankSlot>>,
+}
+
+impl RankBoard {
+    fn new() -> Self {
+        RankBoard { start: Instant::now(), slots: OnceLock::new() }
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.start.elapsed().as_millis() as u64
+    }
+
+    /// Size the board once the barrier knows `n_ranks`; every rank
+    /// starts alive with a fresh last-seen stamp.
+    fn init(&self, n_ranks: usize) {
+        let now = self.now_ms();
+        let _ = self.slots.set(
+            (0..n_ranks)
+                .map(|_| RankSlot {
+                    last_seen_ms: AtomicU64::new(now),
+                    beats: AtomicU64::new(0),
+                    state: AtomicUsize::new(RANK_ALIVE),
+                })
+                .collect(),
+        );
+    }
+
+    /// A control frame arrived from `rank`; `heartbeat` distinguishes
+    /// Heartbeat frames (counted) from other traffic (stamp only).
+    fn seen(&self, rank: usize, heartbeat: bool) {
+        if let Some(s) = self.slots.get() {
+            s[rank].last_seen_ms.store(self.now_ms(), Ordering::Release);
+            if heartbeat {
+                s[rank].beats.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn set_state(&self, rank: usize, state: usize) {
+        if let Some(s) = self.slots.get() {
+            s[rank].state.store(state, Ordering::Release);
+        }
+    }
+
+    fn state(&self, rank: usize) -> usize {
+        self.slots.get().map_or(RANK_ALIVE, |s| s[rank].state.load(Ordering::Acquire))
+    }
+
+    /// Milliseconds since the rank's last control frame.
+    fn age_ms(&self, rank: usize) -> u64 {
+        self.slots
+            .get()
+            .map_or(0, |s| self.now_ms().saturating_sub(s[rank].last_seen_ms.load(Ordering::Acquire)))
+    }
+
+    /// The `/healthz` body: per-rank liveness detail plus an overall
+    /// status — `"degraded"` the moment any rank is dead or evicted.
+    fn health_json(&self) -> Json {
+        let Some(slots) = self.slots.get() else {
+            return obj(vec![
+                ("status", Json::Str("starting".into())),
+                ("ranks", Json::Arr(Vec::new())),
+                ("survivors", num(0.0)),
+                ("evicted", num(0.0)),
+            ]);
+        };
+        let mut ranks = Vec::with_capacity(slots.len());
+        let (mut survivors, mut evicted) = (0usize, 0usize);
+        for (rank, _) in slots.iter().enumerate() {
+            let state = self.state(rank);
+            match state {
+                RANK_ALIVE | RANK_DONE => survivors += 1,
+                RANK_EVICTED => evicted += 1,
+                _ => {}
+            }
+            ranks.push(obj(vec![
+                ("rank", num(rank as f64)),
+                ("state", Json::Str(rank_state_name(state).into())),
+                ("last_heartbeat_ms", num(self.age_ms(rank) as f64)),
+                ("heartbeats", num(slots[rank].beats.load(Ordering::Relaxed) as f64)),
+            ]));
+        }
+        let status = if survivors == slots.len() { "ok" } else { "degraded" };
+        obj(vec![
+            ("status", Json::Str(status.into())),
+            ("ranks", Json::Arr(ranks)),
+            ("survivors", num(survivors as f64)),
+            ("evicted", num(evicted as f64)),
+        ])
+    }
+}
+
+/// Everything the monitor loop reacts to, from every source: control
+/// readers (`Done`/`Dead`), the late-control drain (`Rejoin`), and the
+/// `POST /config` hook (`Config`).
+enum CtlEvent {
+    Done { rank: usize, pushes: u64, rounds: u64, empty: u64 },
+    Dead { rank: usize },
+    Rejoin { rank: usize, stream: TcpStream },
+    Config { kv: String },
+}
+
+/// Serve-side hot-reloadable knobs (the worker-side ones republish via
+/// `ConfigUpdate` and live in [`PullTuning`] over there).
+struct ServeTuning {
+    rebalance_ms: AtomicU64,
+    net_liveness_ms: AtomicU64,
+}
+
+/// The workers a rank runs: `w ≡ rank (mod n_ranks)`.
+fn rank_workers(rank: usize, n_ranks: usize, n_workers: usize) -> impl Iterator<Item = usize> {
+    (0..n_workers).filter(move |w| w % n_ranks == rank)
+}
+
+/// Mirror the drained fault events into the log the `/stats` and
+/// `/healthz` closures read.
+fn drain_faults(plan: &FaultPlan, log: &Mutex<Vec<String>>) {
+    let events = plan.take_events();
+    if !events.is_empty() {
+        let mut log = log.lock().unwrap();
+        for ev in events {
+            log.push(ev.describe());
+        }
+    }
+}
 
 /// Per-lane in-flight cap for the multi-process transport: the global
 /// budget [`push_inflight`] split per worker, floored so a lane can
@@ -202,7 +437,30 @@ fn config_kv_text(cfg: &Config) -> String {
     cfg.to_kv().iter().map(|(k, v)| format!("{k}={v}\n")).collect()
 }
 
+/// Per-worker resume state shipped in a rejoin `Welcome`
+/// (`failure=restart`): the crashed worker's last applied seq per slot
+/// (the gate accepts `seq + 1` next), the epochs it completed, and
+/// warm duals y ≈ w̃ − ρ·z̃ derived from server state.
+#[derive(Debug, PartialEq)]
+struct ResumeEntry {
+    worker: usize,
+    start_epoch: usize,
+    /// Last applied seq per slot, `shard.active_blocks` order.
+    seqs: Vec<u64>,
+    /// Packed warm duals, `n_slots × block_size`.
+    duals: Vec<f32>,
+}
+
 fn encode_welcome(cfg: &Config, owners: &[usize], map_version: u64) -> Vec<u8> {
+    encode_welcome_resume(cfg, owners, map_version, &[])
+}
+
+fn encode_welcome_resume(
+    cfg: &Config,
+    owners: &[usize],
+    map_version: u64,
+    resume: &[ResumeEntry],
+) -> Vec<u8> {
     let mut p = Vec::new();
     wire::put_str(&mut p, &config_kv_text(cfg));
     wire::put_u32(&mut p, owners.len() as u32);
@@ -210,10 +468,21 @@ fn encode_welcome(cfg: &Config, owners: &[usize], map_version: u64) -> Vec<u8> {
         wire::put_u32(&mut p, s as u32);
     }
     wire::put_u64(&mut p, map_version);
+    wire::put_u32(&mut p, resume.len() as u32);
+    for e in resume {
+        wire::put_u32(&mut p, e.worker as u32);
+        wire::put_u64(&mut p, e.start_epoch as u64);
+        wire::put_u32(&mut p, e.seqs.len() as u32);
+        for &s in &e.seqs {
+            wire::put_u64(&mut p, s);
+        }
+        wire::put_u32(&mut p, e.duals.len() as u32);
+        wire::put_f32s(&mut p, &e.duals);
+    }
     p
 }
 
-fn decode_welcome(payload: &[u8]) -> Result<(Config, Vec<usize>, u64)> {
+fn decode_welcome(payload: &[u8]) -> Result<(Config, Vec<usize>, u64, Vec<ResumeEntry>)> {
     let mut cur = wire::Cursor::new(kind::WELCOME, payload)?;
     let kv = cur.str("config")?.to_string();
     let n_blocks = cur.u32("n_blocks")? as usize;
@@ -222,6 +491,25 @@ fn decode_welcome(payload: &[u8]) -> Result<(Config, Vec<usize>, u64)> {
         owners.push(cur.u32("owner")? as usize);
     }
     let map_version = cur.u64("map_version")?;
+    let n_resume = cur.u32("n_resume")? as usize;
+    let mut resume = Vec::with_capacity(n_resume.min(64));
+    for _ in 0..n_resume {
+        let worker = cur.u32("worker")? as usize;
+        let start_epoch = cur.u64("start_epoch")? as usize;
+        let n_slots = cur.u32("n_slots")? as usize;
+        let mut seqs = Vec::with_capacity(n_slots.min(4096));
+        for _ in 0..n_slots {
+            seqs.push(cur.u64("next_seq")?);
+        }
+        let n_duals = cur.u32("n_duals")? as usize;
+        anyhow::ensure!(
+            n_duals <= wire::MAX_FRAME / 4,
+            "Welcome resume entry for worker {worker}: absurd dual count {n_duals}"
+        );
+        let mut duals = vec![0.0f32; n_duals];
+        cur.f32s_into(&mut duals, "duals")?;
+        resume.push(ResumeEntry { worker, start_epoch, seqs, duals });
+    }
     cur.finish()?;
     let mut cfg = Config::default();
     for line in kv.lines().filter(|l| !l.trim().is_empty()) {
@@ -230,11 +518,14 @@ fn decode_welcome(payload: &[u8]) -> Result<(Config, Vec<usize>, u64)> {
             .with_context(|| format!("Welcome config line {line:?}"))?;
         cfg.apply_kv(k, v)?;
     }
-    // The coordinator owns the observability endpoint and the fault
-    // plan; a worker process re-binding the same stats address or
-    // re-injecting the same faults would double them up.
+    // The coordinator owns the observability endpoint; a worker process
+    // re-binding the same stats address would double it up.  Of the
+    // fault plan, only the worker-side *wire* kinds survive the
+    // handshake — crash/stall/sendfail are in-process kinds and the
+    // coordinator keeps `corrupt:`, so re-injecting them here would
+    // double-fire the plan.
     cfg.stats_addr.clear();
-    cfg.faults.clear();
+    cfg.faults = FaultPlan::worker_net_spec(&cfg.faults);
     cfg.validate()?;
     anyhow::ensure!(
         cfg.n_blocks == n_blocks,
@@ -246,7 +537,23 @@ fn decode_welcome(payload: &[u8]) -> Result<(Config, Vec<usize>, u64)> {
         "Welcome owner map references a server shard >= {}",
         cfg.n_servers
     );
-    Ok((cfg, owners, map_version))
+    for e in &resume {
+        anyhow::ensure!(
+            e.worker < cfg.n_workers,
+            "Welcome resume entry references worker {} of {}",
+            e.worker,
+            cfg.n_workers
+        );
+        anyhow::ensure!(
+            e.duals.len() == e.seqs.len() * cfg.block_size,
+            "Welcome resume entry for worker {}: {} duals for {} slots of size {}",
+            e.worker,
+            e.duals.len(),
+            e.seqs.len(),
+            cfg.block_size
+        );
+    }
+    Ok((cfg, owners, map_version, resume))
 }
 
 fn parse_rank(s: &str) -> Result<(usize, usize)> {
@@ -310,6 +617,54 @@ fn serve(cfg: &Config, listen: &str) -> Result<()> {
         Backend::Native => None,
     });
 
+    // Warm-start from a periodic checkpoint left by a previous serve
+    // run: restore the consensus z̃ and the owner map (model state; the
+    // epoch budget restarts — module docs).  Geometry mismatches skip
+    // the resume rather than corrupt the run.
+    let mut resume_epoch = 0usize;
+    if cfg.checkpoint_every > 0 && cfg.checkpoint_path.exists() {
+        match Checkpoint::load(&cfg.checkpoint_path) {
+            Ok(ck) if ck.n_blocks == cfg.n_blocks && ck.block_size == cfg.block_size => {
+                for (j, block) in ck.z.chunks(cfg.block_size).enumerate() {
+                    store.write_versioned(j, block, 1);
+                }
+                for (j, &owner) in ck.block_owners.iter().enumerate() {
+                    if owner < cfg.n_servers && j < cfg.n_blocks {
+                        map.set_owner(j, owner);
+                    }
+                }
+                resume_epoch = ck.epoch;
+                println!(
+                    "# resumed from checkpoint {} (epoch {}, objective {:.6})",
+                    cfg.checkpoint_path.display(),
+                    ck.epoch,
+                    ck.objective
+                );
+            }
+            Ok(ck) => eprintln!(
+                "checkpoint {} is {}x{}, config wants {}x{}; starting cold",
+                cfg.checkpoint_path.display(),
+                ck.n_blocks,
+                ck.block_size,
+                cfg.n_blocks,
+                cfg.block_size
+            ),
+            Err(e) => {
+                eprintln!("checkpoint {} unreadable ({e:#}); starting cold", cfg.checkpoint_path.display())
+            }
+        }
+    }
+
+    // Serve-side fault plan: `corrupt:` entries fire on the pull
+    // streams here; the worker-side wire kinds ship via the Welcome.
+    let plan = Arc::new(FaultPlan::parse(&cfg.faults)?);
+    let fault_log: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let board = Arc::new(RankBoard::new());
+    let tuning = Arc::new(ServeTuning {
+        rebalance_ms: AtomicU64::new(cfg.rebalance_ms.max(1)),
+        net_liveness_ms: AtomicU64::new(cfg.net_liveness_ms),
+    });
+
     let transport =
         TcpTransport::bind(listen, cfg.n_workers, cfg.n_servers, lane_cap(cfg), cfg.batch)?;
     let (ctl_tx, ctl_rx) = channel::<CtlConn>();
@@ -318,6 +673,10 @@ fn serve(cfg: &Config, listen: &str) -> Result<()> {
     // Credit frames so idle workers snap their pull cadence back down.
     transport.set_version_hint(store.publish_counter());
     let pull_stats = Arc::new(PullServeStats::default());
+    // The monitor reacts to everything through one channel: Done/Dead
+    // from control readers, Rejoin from the late-control drain, Config
+    // from the POST /config hook.
+    let (events_tx, events_rx) = channel::<CtlEvent>();
     println!("# {}", cfg.summary());
     println!("# dataset {}: m={} d={} nnz={}", ds.name, ds.samples(), ds.dim(), ds.a.nnz());
     // Parsed by `asybadmm work` launchers and tests/netproc.rs; Rust
@@ -332,7 +691,47 @@ fn serve(cfg: &Config, listen: &str) -> Result<()> {
         let n_servers = cfg.n_servers;
         let wire_ctr = transport.wire_counters();
         let pull_stats = pull_stats.clone();
-        let server = StatsServer::spawn(
+        let health: HealthFn = {
+            let board = board.clone();
+            Arc::new(move || board.health_json())
+        };
+        // POST /config: validate every line against the reloadable
+        // whitelist on a scratch copy first (all-or-nothing), then
+        // flip the serve-side atomics and hand the kv text to the
+        // monitor for ConfigUpdate republish.
+        let config_hook: ConfigFn = {
+            let tuning = tuning.clone();
+            let events = Mutex::new(events_tx.clone());
+            let scratch = cfg.clone();
+            Arc::new(move |body: &str| {
+                let mut probe = scratch.clone();
+                let mut applied = Vec::new();
+                for line in body.lines().map(str::trim).filter(|l| !l.is_empty()) {
+                    let (k, v) = line.split_once('=').with_context(|| {
+                        format!("config line {line:?}: expected key=value")
+                    })?;
+                    probe.apply_reload_kv(k.trim(), v.trim())?;
+                    applied.push((k.trim().to_string(), v.trim().to_string()));
+                }
+                anyhow::ensure!(!applied.is_empty(), "empty config body (key=value lines)");
+                probe.validate()?;
+                tuning.rebalance_ms.store(probe.rebalance_ms.max(1), Ordering::Relaxed);
+                tuning.net_liveness_ms.store(probe.net_liveness_ms, Ordering::Relaxed);
+                let kv: String =
+                    applied.iter().map(|(k, v)| format!("{k}={v}\n")).collect();
+                let _ = events.lock().unwrap().send(CtlEvent::Config { kv });
+                Ok(format!(
+                    "applied: {}",
+                    applied
+                        .iter()
+                        .map(|(k, v)| format!("{k}={v}"))
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                ))
+            })
+        };
+        let fault_log = fault_log.clone();
+        let server = StatsServer::spawn_with(
             &cfg.stats_addr,
             Arc::new(move || {
                 let counts = table.push_counts();
@@ -380,11 +779,24 @@ fn serve(cfg: &Config, listen: &str) -> Result<()> {
                             ),
                         ]),
                     ),
-                    // Serve mode runs fault-free (module docs); the key
-                    // stays so /stats consumers see one schema.
-                    ("faults", Json::Arr(Vec::new())),
+                    // Fault events drained by the monitor (evictions,
+                    // rejoins, corrupt frames) — same schema as the
+                    // in-process report.
+                    (
+                        "faults",
+                        Json::Arr(
+                            fault_log
+                                .lock()
+                                .unwrap()
+                                .iter()
+                                .map(|s| Json::Str(s.clone()))
+                                .collect(),
+                        ),
+                    ),
                 ])
             }),
+            Some(health),
+            Some(config_hook),
         )?;
         println!("# stats on {}", server.addr());
         Some(server)
@@ -434,18 +846,36 @@ fn serve(cfg: &Config, listen: &str) -> Result<()> {
     }
 
     // -- join barrier: every rank sends JoinCtl, gets Welcome ----------
+    let join_timeout = Duration::from_millis(cfg.join_timeout_ms.max(1));
     let mut n_ranks: Option<usize> = None;
     let mut joined: Vec<Option<TcpStream>> = Vec::new();
     let mut joined_count = 0usize;
     while n_ranks.map_or(true, |n| joined_count < n) {
-        let conn = match ctl_rx.recv_timeout(JOIN_TIMEOUT) {
+        let conn = match ctl_rx.recv_timeout(join_timeout) {
             Ok(conn) => conn,
-            Err(RecvTimeoutError::Timeout) => bail!(
-                "no worker joined within {}s ({joined_count} rank(s) connected so far); \
-                 start `asybadmm work --connect {} --rank R/N`",
-                JOIN_TIMEOUT.as_secs(),
-                transport.local_addr()
-            ),
+            Err(RecvTimeoutError::Timeout) => {
+                let missing = match n_ranks {
+                    None => "every rank (none joined yet)".to_string(),
+                    Some(_) => format!(
+                        "rank(s) [{}]",
+                        joined
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, s)| s.is_none())
+                            .map(|(r, _)| r.to_string())
+                            .collect::<Vec<_>>()
+                            .join(", ")
+                    ),
+                };
+                bail!(
+                    "join barrier timed out after {}ms waiting for {missing} \
+                     ({joined_count} rank(s) connected so far); start \
+                     `asybadmm work --connect {} --rank R/N`, or raise \
+                     --set join_timeout_ms=MS",
+                    cfg.join_timeout_ms,
+                    transport.local_addr()
+                )
+            }
             Err(RecvTimeoutError::Disconnected) => {
                 bail!("control channel closed before all ranks joined")
             }
@@ -486,25 +916,61 @@ fn serve(cfg: &Config, listen: &str) -> Result<()> {
             }
             // A rank's mirror-sync stream may open before the last rank
             // joins; serve it right away.
-            kind::HELLO_PULL => spawn_pull_thread(conn.stream, store.clone(), pull_stats.clone()),
+            kind::HELLO_PULL => spawn_pull_thread(
+                conn.stream,
+                &conn.payload,
+                store.clone(),
+                pull_stats.clone(),
+                plan.clone(),
+            ),
             other => bail!("unexpected {} frame on the control plane", wire::kind_name(other)),
         }
     }
-    let n_ranks = n_ranks.expect("join barrier complete");
+    let n_ranks = match n_ranks {
+        Some(n) => n,
+        None => bail!("join barrier ended with no ranks joined"),
+    };
+    board.init(n_ranks);
 
-    // Late control connections (a pull stream opening after the
-    // barrier) drain on their own thread for the rest of the run.
+    // Late control connections drain on their own thread for the rest
+    // of the run: pull streams are served directly; a late JoinCtl is a
+    // rejoin attempt and routes to the monitor (`failure=restart`).
     let stop_ctl = Arc::new(AtomicBool::new(false));
     let ctl_drain = {
         let store = store.clone();
         let stats = pull_stats.clone();
         let stop = stop_ctl.clone();
+        let plan = plan.clone();
+        let events = events_tx.clone();
         std::thread::Builder::new()
             .name("ctl-drain".into())
             .spawn(move || loop {
                 match ctl_rx.recv_timeout(Duration::from_millis(50)) {
-                    Ok(conn) if conn.kind == kind::HELLO_PULL => {
-                        spawn_pull_thread(conn.stream, store.clone(), stats.clone())
+                    Ok(conn) if conn.kind == kind::HELLO_PULL => spawn_pull_thread(
+                        conn.stream,
+                        &conn.payload,
+                        store.clone(),
+                        stats.clone(),
+                        plan.clone(),
+                    ),
+                    Ok(conn) if conn.kind == kind::JOIN_CTL => {
+                        let parsed = (|| -> Result<usize> {
+                            let mut cur = wire::Cursor::new(kind::JOIN_CTL, &conn.payload)?;
+                            let rank = cur.u32("rank")? as usize;
+                            let ranks = cur.u32("n_ranks")? as usize;
+                            cur.finish()?;
+                            anyhow::ensure!(
+                                ranks == n_ranks && rank < n_ranks,
+                                "rejoin JoinCtl: rank {rank}/{ranks} against a {n_ranks}-rank run"
+                            );
+                            Ok(rank)
+                        })();
+                        match parsed {
+                            Ok(rank) => {
+                                let _ = events.send(CtlEvent::Rejoin { rank, stream: conn.stream });
+                            }
+                            Err(e) => eprintln!("rejoin refused: {e:#}"),
+                        }
                     }
                     Ok(conn) => {
                         eprintln!("late {} connection refused", wire::kind_name(conn.kind))
@@ -521,50 +987,230 @@ fn serve(cfg: &Config, listen: &str) -> Result<()> {
     };
 
     // Split each rank's control stream: the read half waits for
-    // WorkerDone, the write half carries OwnerUpdate republishes.
+    // WorkerDone (updating the liveness board on every Heartbeat), the
+    // write half carries OwnerUpdate/ConfigUpdate republishes.
     let mut ctl_writers = Vec::with_capacity(n_ranks);
-    let (done_tx, done_rx) = channel::<(usize, u64, u64, u64)>();
     for (rank, slot) in joined.into_iter().enumerate() {
-        let stream = slot.expect("join barrier complete");
+        let stream = match slot {
+            Some(s) => s,
+            None => bail!("join barrier ended with rank {rank} missing"),
+        };
         ctl_writers.push(stream.try_clone().context("clone control stream")?);
-        let done_tx = done_tx.clone();
+        let events = events_tx.clone();
+        let board = board.clone();
         std::thread::Builder::new()
             .name(format!("ctl-rank-{rank}"))
-            .spawn(move || ctl_read_loop(rank, stream, done_tx))
+            .spawn(move || ctl_read_loop(rank, stream, events, board))
             .context("spawn control reader")?;
     }
-    drop(done_tx);
 
-    // -- monitor: collect WorkerDone, drive the rebalancer, republish -
+    // -- monitor: liveness, evictions, rejoins, rebalancer, checkpoints
     let start = Instant::now();
     let mut rebalancer = (dynamic && cfg.n_servers > 1)
         .then(|| Rebalancer::new(map.clone(), table.clone(), cfg.n_servers));
-    let rebalance_every = Duration::from_millis(cfg.rebalance_ms.max(1));
     let mut last_scan = Instant::now();
     let mut owners_prev = map.snapshot();
     let tick = Duration::from_millis(cfg.rebalance_ms.clamp(5, 100));
-    let mut done_ranks = 0usize;
+    // `finished` counts done AND evicted ranks — both end the wait.
+    let mut finished = 0usize;
+    let mut evicted = 0usize;
+    let mut rejoin_attempts = vec![0usize; n_ranks];
+    let mut config_version = 0u64;
     let mut sent_total = 0u64;
     let (mut pull_rounds_total, mut pull_empty_total) = (0u64, 0u64);
-    while done_ranks < n_ranks {
-        match done_rx.recv_timeout(tick) {
-            Ok((rank, pushes, rounds, empty)) => {
-                done_ranks += 1;
-                sent_total += pushes;
-                pull_rounds_total += rounds;
-                pull_empty_total += empty;
+    let ckpt_every = if cfg.checkpoint_every > 0 { cfg.checkpoint_every } else { usize::MAX };
+    let mut next_ckpt = resume_epoch.saturating_add(ckpt_every);
+    while finished < n_ranks {
+        match events_rx.recv_timeout(tick) {
+            Ok(CtlEvent::Done { rank, pushes, rounds, empty }) => {
+                // An evicted rank's stale Done (it was mid-teardown as
+                // the deadline fired) must not double-count.
+                if board.state(rank) == RANK_ALIVE {
+                    board.set_state(rank, RANK_DONE);
+                    finished += 1;
+                    sent_total += pushes;
+                    pull_rounds_total += rounds;
+                    pull_empty_total += empty;
+                    info!(
+                        "serve",
+                        "rank {rank} done ({pushes} pushes, {rounds} pull rounds ({empty} \
+                         empty); {finished}/{n_ranks} ranks)"
+                    );
+                }
+            }
+            Ok(CtlEvent::Dead { rank }) => {
+                if board.state(rank) == RANK_ALIVE {
+                    match cfg.failure {
+                        FailurePolicy::Die => bail!(
+                            "rank {rank} died without finishing (control stream lost); rerun \
+                             with --set failure=degrade|restart to survive worker loss"
+                        ),
+                        FailurePolicy::Degrade => {
+                            evict_rank(
+                                rank, "lost its control stream", cfg, n_ranks, &transport,
+                                &table, &shards, &plan, &board,
+                            );
+                            finished += 1;
+                            evicted += 1;
+                        }
+                        FailurePolicy::Restart => {
+                            board.set_state(rank, RANK_DEAD);
+                            board.seen(rank, false); // stamp death for the rejoin deadline
+                            info!(
+                                "serve",
+                                "rank {rank} died; failure=restart — waiting for a replacement \
+                                 (`asybadmm work --connect {} --rank {rank}/{n_ranks}`)",
+                                transport.local_addr()
+                            );
+                        }
+                    }
+                }
+            }
+            Ok(CtlEvent::Rejoin { rank, stream }) => {
+                if cfg.failure != FailurePolicy::Restart {
+                    eprintln!(
+                        "rank {rank} attempted rejoin, but rejoin needs --set failure=restart; \
+                         refusing"
+                    );
+                } else if board.state(rank) != RANK_DEAD {
+                    eprintln!(
+                        "rank {rank} attempted rejoin while {}; refusing",
+                        rank_state_name(board.state(rank))
+                    );
+                } else {
+                    rejoin_attempts[rank] += 1;
+                    // Tail drain: TCP kernel buffers survive process
+                    // death, so the crashed streams' applied prefix is
+                    // contiguous; wait for the seq gates to go quiet
+                    // before reading the resume point.
+                    wait_seq_quiesce(&table, &shards, rank, n_ranks);
+                    let resume: Vec<ResumeEntry> = shards
+                        .iter()
+                        .filter(|sh| sh.worker_id % n_ranks == rank)
+                        .map(|sh| {
+                            let seqs: Vec<u64> = sh
+                                .active_blocks
+                                .iter()
+                                .map(|&j| table.next_seq(j, sh.worker_id).saturating_sub(1))
+                                .collect();
+                            let ledger: Vec<AtomicU64> =
+                                seqs.iter().map(|&s| AtomicU64::new(s)).collect();
+                            let duals = approx_duals(&table, &store, sh, &ledger, cfg.rho);
+                            let start_epoch = seqs.iter().sum::<u64>() as usize;
+                            ResumeEntry { worker: sh.worker_id, start_epoch, seqs, duals }
+                        })
+                        .collect();
+                    let mut stream = stream;
+                    let welcome =
+                        encode_welcome_resume(cfg, &map.snapshot(), map.version(), &resume);
+                    if let Err(e) = wire::write_frame(&mut stream, kind::WELCOME, &welcome) {
+                        eprintln!("rank {rank} rejoin: Welcome failed ({e:#}); still waiting");
+                    } else {
+                        match stream.try_clone() {
+                            Ok(writer) => {
+                                ctl_writers[rank] = writer;
+                                let events = events_tx.clone();
+                                let board2 = board.clone();
+                                std::thread::Builder::new()
+                                    .name(format!("ctl-rank-{rank}"))
+                                    .spawn(move || ctl_read_loop(rank, stream, events, board2))
+                                    .context("spawn rejoin control reader")?;
+                                board.seen(rank, false);
+                                board.set_state(rank, RANK_ALIVE);
+                                plan.record(FaultEvent::RankRejoined {
+                                    rank,
+                                    attempt: rejoin_attempts[rank],
+                                });
+                                let resumed: u64 =
+                                    resume.iter().flat_map(|e| e.seqs.iter()).sum();
+                                info!(
+                                    "serve",
+                                    "rank {rank} rejoined (attempt {}): resuming past {} \
+                                     applied pushes",
+                                    rejoin_attempts[rank],
+                                    resumed
+                                );
+                            }
+                            Err(e) => eprintln!(
+                                "rank {rank} rejoin: clone control stream failed ({e}); \
+                                 still waiting"
+                            ),
+                        }
+                    }
+                }
+            }
+            Ok(CtlEvent::Config { kv }) => {
+                config_version += 1;
+                let mut p = Vec::with_capacity(kv.len() + 12);
+                wire::put_u64(&mut p, config_version);
+                wire::put_str(&mut p, &kv);
+                // A rank that already finished may have closed its
+                // stream; EPIPE here is not an error.
+                for (rank, w) in ctl_writers.iter_mut().enumerate() {
+                    if board.state(rank) == RANK_ALIVE {
+                        let _ = wire::write_frame(w, kind::CONFIG_UPDATE, &p);
+                    }
+                }
                 info!(
                     "serve",
-                    "rank {rank} done ({pushes} pushes, {rounds} pull rounds ({empty} empty); \
-                     {done_ranks}/{n_ranks} ranks)"
+                    "config v{config_version} applied and republished: {}",
+                    kv.replace('\n', " ")
                 );
             }
             Err(RecvTimeoutError::Timeout) => {}
-            Err(RecvTimeoutError::Disconnected) => bail!(
-                "a worker process exited without finishing ({done_ranks}/{n_ranks} ranks done)"
-            ),
+            Err(RecvTimeoutError::Disconnected) => {
+                bail!("monitor event channel closed unexpectedly")
+            }
         }
+
+        // Heartbeat deadline scan: a rank silent past net_liveness_ms
+        // is dead even if its socket is technically open (SIGSTOP, a
+        // wedged peer, a one-way partition).  Dead ranks under
+        // failure=restart get join_timeout_ms to produce a rejoin.
+        let liveness = tuning.net_liveness_ms.load(Ordering::Relaxed);
+        for rank in 0..n_ranks {
+            let state = board.state(rank);
+            if state == RANK_ALIVE && liveness > 0 && board.age_ms(rank) > liveness {
+                match cfg.failure {
+                    FailurePolicy::Die => bail!(
+                        "rank {rank} missed its liveness deadline ({}ms silent > \
+                         net_liveness_ms={liveness}); rerun with --set \
+                         failure=degrade|restart to survive worker loss",
+                        board.age_ms(rank)
+                    ),
+                    FailurePolicy::Degrade => {
+                        evict_rank(
+                            rank, "missed its liveness deadline", cfg, n_ranks, &transport,
+                            &table, &shards, &plan, &board,
+                        );
+                        finished += 1;
+                        evicted += 1;
+                    }
+                    FailurePolicy::Restart => {
+                        board.set_state(rank, RANK_DEAD);
+                        board.seen(rank, false);
+                        info!(
+                            "serve",
+                            "rank {rank} missed its liveness deadline; failure=restart — \
+                             waiting for a replacement"
+                        );
+                    }
+                }
+            } else if state == RANK_DEAD && board.age_ms(rank) > cfg.join_timeout_ms.max(1) {
+                bail!(
+                    "rank {rank} died and no replacement rejoined within \
+                     join_timeout_ms={}; start `asybadmm work --connect {} \
+                     --rank {rank}/{n_ranks}` sooner or raise the timeout",
+                    cfg.join_timeout_ms,
+                    transport.local_addr()
+                );
+            }
+        }
+
         if let Some(rb) = rebalancer.as_mut() {
+            // Cadence is hot-reloadable (POST /config rebalance_ms=…).
+            let rebalance_every =
+                Duration::from_millis(tuning.rebalance_ms.load(Ordering::Relaxed).max(1));
             if last_scan.elapsed() >= rebalance_every {
                 rb.scan();
                 last_scan = Instant::now();
@@ -586,6 +1232,33 @@ fn serve(cfg: &Config, listen: &str) -> Result<()> {
                 }
             }
         }
+
+        // Periodic v2 checkpoint off the monitor loop: the epoch
+        // estimate is total applied pushes over n_workers (each worker
+        // pushes once per epoch).
+        if ckpt_every != usize::MAX {
+            let applied: usize = table.push_counts().iter().sum();
+            let epoch_est = resume_epoch + applied / cfg.n_workers.max(1);
+            if epoch_est >= next_ckpt {
+                let ledgers = pseudo_ledgers(&shards, &table);
+                let ck = snapshot_checkpoint(
+                    cfg, &shards, &store, &table, &map, &ledgers, &problem, weight, epoch_est,
+                );
+                match ck.save(&cfg.checkpoint_path) {
+                    Ok(()) => info!(
+                        "serve",
+                        "checkpoint at epoch ~{epoch_est} -> {}",
+                        cfg.checkpoint_path.display()
+                    ),
+                    Err(e) => eprintln!("checkpoint write failed: {e:#} (continuing)"),
+                }
+                while next_ckpt <= epoch_est {
+                    next_ckpt = next_ckpt.saturating_add(ckpt_every);
+                }
+            }
+        }
+
+        drain_faults(&plan, &fault_log);
     }
 
     // -- drain + summary ----------------------------------------------
@@ -595,11 +1268,15 @@ fn serve(cfg: &Config, listen: &str) -> Result<()> {
     }
     stop_ctl.store(true, Ordering::Release);
     let _ = ctl_drain.join();
+    drain_faults(&plan, &fault_log);
+    for line in fault_log.lock().unwrap().iter() {
+        println!("# fault: {line}");
+    }
     let applied: usize = shard_rts.iter().map(|rt| rt.shard.stats().pushes).sum();
     let final_obj = objective_at_z(&shards, &problem, weight, &store.snapshot());
     println!(
         "# done in {:.3}s: objective {:.6} (data {:.6} + reg {:.6}); pushes={} sent={} \
-         migrations={} pull_rounds={} pull_empty={}",
+         migrations={} pull_rounds={} pull_empty={} evicted={}",
         start.elapsed().as_secs_f64(),
         final_obj.total(),
         final_obj.data_loss,
@@ -608,17 +1285,113 @@ fn serve(cfg: &Config, listen: &str) -> Result<()> {
         sent_total,
         map.migrations(),
         pull_rounds_total,
-        pull_empty_total
+        pull_empty_total,
+        evicted
     );
     Ok(())
 }
 
-fn spawn_pull_thread(stream: TcpStream, store: Arc<BlockStore>, stats: Arc<PullServeStats>) {
+/// Degrade-path eviction: force-close the rank's push lanes (late
+/// reconnects refused), let the in-flight tail settle, purge parked
+/// early-arrivals so no seq gap blocks the survivors, and record the
+/// fault event.  The victim's already-applied pushes stay in the
+/// consensus.
+#[allow(clippy::too_many_arguments)]
+fn evict_rank(
+    rank: usize,
+    reason: &str,
+    cfg: &Config,
+    n_ranks: usize,
+    transport: &TcpTransport,
+    table: &BlockTable,
+    shards: &[WorkerShard],
+    plan: &FaultPlan,
+    board: &RankBoard,
+) {
+    for w in rank_workers(rank, n_ranks, cfg.n_workers) {
+        transport.close_worker_lanes(w);
+    }
+    // Quiesce before purging: frames already decoded from the dead
+    // sockets' kernel buffers keep applying for a moment, and a purge
+    // racing them could leave a fresh parked message behind.
+    wait_seq_quiesce(table, shards, rank, n_ranks);
+    let mut parked = 0usize;
+    for w in rank_workers(rank, n_ranks, cfg.n_workers) {
+        parked += table.purge_worker_pending(w);
+    }
+    plan.record(FaultEvent::RankEvicted { rank, parked_dropped: parked });
+    board.set_state(rank, RANK_EVICTED);
+    eprintln!(
+        "rank {rank} {reason}; evicted ({parked} parked pushes dropped), completing on survivors"
+    );
+}
+
+/// Wait until the seq gates of `rank`'s workers stop advancing (200ms
+/// quiet window, 2s bound): the crashed streams' kernel-buffered tail
+/// has then been applied and `next_seq` is the exact resume point.
+fn wait_seq_quiesce(table: &BlockTable, shards: &[WorkerShard], rank: usize, n_ranks: usize) {
+    let snap = || -> Vec<u64> {
+        shards
+            .iter()
+            .filter(|sh| sh.worker_id % n_ranks == rank)
+            .flat_map(|sh| {
+                sh.active_blocks.iter().map(move |&j| table.next_seq(j, sh.worker_id))
+            })
+            .collect()
+    };
+    let deadline = Instant::now() + Duration::from_secs(2);
+    let mut prev = snap();
+    let mut quiet_since = Instant::now();
+    while Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+        let cur = snap();
+        if cur != prev {
+            prev = cur;
+            quiet_since = Instant::now();
+        } else if quiet_since.elapsed() >= Duration::from_millis(200) {
+            return;
+        }
+    }
+}
+
+/// Server-side stand-in for the worker ledgers (which live in worker
+/// processes): per (worker, slot), the last applied seq — what the
+/// ledger would read after a clean drain.  Feeds the checkpoint and
+/// dual-approximation helpers shared with the in-process monitor.
+fn pseudo_ledgers(shards: &[WorkerShard], table: &BlockTable) -> Vec<Vec<AtomicU64>> {
+    shards
+        .iter()
+        .map(|sh| {
+            sh.active_blocks
+                .iter()
+                .map(|&j| AtomicU64::new(table.next_seq(j, sh.worker_id).saturating_sub(1)))
+                .collect()
+        })
+        .collect()
+}
+
+fn spawn_pull_thread(
+    stream: TcpStream,
+    payload: &[u8],
+    store: Arc<BlockStore>,
+    stats: Arc<PullServeStats>,
+    plan: Arc<FaultPlan>,
+) {
+    // The HelloPull payload carries the requesting rank — only needed
+    // to address `corrupt:sS@N` injections, so a malformed hello just
+    // disables injection for this stream instead of failing it.
+    let rank = (|| -> Result<usize> {
+        let mut cur = wire::Cursor::new(kind::HELLO_PULL, payload)?;
+        let r = cur.u32("rank")? as usize;
+        cur.finish()?;
+        Ok(r)
+    })()
+    .unwrap_or(usize::MAX);
     // Detached: exits on its worker's EOF, reaped at process exit
     // otherwise.
     let _ = std::thread::Builder::new()
         .name("pull-serve".into())
-        .spawn(move || pull_serve_loop(stream, store, stats));
+        .spawn(move || pull_serve_loop(stream, store, stats, plan, rank));
 }
 
 /// Answer one worker process's `PullReq` stream until it hangs up.
@@ -631,7 +1404,13 @@ fn spawn_pull_thread(stream: TcpStream, store: Arc<BlockStore>, stats: Arc<PullS
 /// ([`wire::sparse_saves_bytes`]).  Any base mismatch — first send on
 /// this connection, a reconnect, a worker that skipped a version —
 /// falls back to dense, so reconstruction is always exact.
-fn pull_serve_loop(mut stream: TcpStream, store: Arc<BlockStore>, stats: Arc<PullServeStats>) {
+fn pull_serve_loop(
+    mut stream: TcpStream,
+    store: Arc<BlockStore>,
+    stats: Arc<PullServeStats>,
+    plan: Arc<FaultPlan>,
+    rank: usize,
+) {
     let n = store.n_blocks();
     let db = store.block_size();
     let mut block = vec![0.0f32; db];
@@ -639,6 +1418,7 @@ fn pull_serve_loop(mut stream: TcpStream, store: Arc<BlockStore>, stats: Arc<Pul
     let mut sent: Vec<Vec<f32>> = vec![Vec::new(); n];
     let mut sent_v = vec![0u64; n];
     let (mut idx, mut vals) = (Vec::new(), Vec::new());
+    let mut frames = 0usize;
     loop {
         let payload = match wire::read_frame(&mut stream) {
             Ok(Some((kind::PULL_REQ, p))) => p,
@@ -696,44 +1476,83 @@ fn pull_serve_loop(mut stream: TcpStream, store: Arc<BlockStore>, stats: Arc<Pul
             eprintln!("pull stream: bad PullReq: {e:#}");
             return;
         }
+        frames += 1;
+        // `corrupt:sS@N` (DESIGN.md §2.0.7): flip the count field of
+        // this stream's Nth response.  The peer must surface a named
+        // decode error — never a panic — so this bypasses the encoder
+        // and mangles finished payload bytes.
+        if !plan.is_empty() && rank != usize::MAX && plan.corrupt_frame(rank, frames) {
+            for b in resp.iter_mut().take(4) {
+                *b ^= 0xFF;
+            }
+        }
         if wire::write_frame(&mut stream, kind::PULL_RESP, &resp).is_err() {
             return;
         }
     }
 }
 
-/// Wait for one rank's `WorkerDone` (or its death) on the control
-/// stream's read half.
-fn ctl_read_loop(rank: usize, mut stream: TcpStream, done: Sender<(usize, u64, u64, u64)>) {
+/// Read one rank's control stream until `WorkerDone` or its death,
+/// stamping the liveness board on every frame (heartbeats included).
+/// EOF or a stream error without a prior `WorkerDone` reports
+/// [`CtlEvent::Dead`] — the monitor's failure policy decides what that
+/// means.
+fn ctl_read_loop(
+    rank: usize,
+    mut stream: TcpStream,
+    events: Sender<CtlEvent>,
+    board: Arc<RankBoard>,
+) {
     loop {
         match wire::read_frame(&mut stream) {
+            Ok(Some((kind::HEARTBEAT, payload))) => {
+                let parsed = (|| -> Result<wire::WireHeartbeat> {
+                    let mut cur = wire::Cursor::new(kind::HEARTBEAT, &payload)?;
+                    let hb = wire::take_heartbeat(&mut cur)?;
+                    cur.finish()?;
+                    Ok(hb)
+                })();
+                match parsed {
+                    Ok(hb) if hb.rank as usize == rank => board.seen(rank, true),
+                    Ok(hb) => {
+                        eprintln!("rank {rank}: heartbeat claims rank {}; ignoring", hb.rank)
+                    }
+                    Err(e) => eprintln!("rank {rank}: bad Heartbeat: {e:#}"),
+                }
+            }
             Ok(Some((kind::WORKER_DONE, payload))) => {
-                let parsed = (|| -> Result<(usize, u64, u64, u64)> {
+                board.seen(rank, false);
+                let parsed = (|| -> Result<CtlEvent> {
                     let mut cur = wire::Cursor::new(kind::WORKER_DONE, &payload)?;
                     let r = cur.u32("rank")? as usize;
                     let pushes = cur.u64("pushes")?;
-                    let pull_rounds = cur.u64("pull_rounds")?;
-                    let pull_empty = cur.u64("pull_empty")?;
+                    let rounds = cur.u64("pull_rounds")?;
+                    let empty = cur.u64("pull_empty")?;
                     cur.finish()?;
-                    Ok((r, pushes, pull_rounds, pull_empty))
+                    Ok(CtlEvent::Done { rank: r, pushes, rounds, empty })
                 })();
                 match parsed {
-                    Ok(tuple) => {
-                        let _ = done.send(tuple);
+                    Ok(ev) => {
+                        let _ = events.send(ev);
                     }
-                    Err(e) => eprintln!("rank {rank}: bad WorkerDone: {e:#}"),
+                    Err(e) => {
+                        eprintln!("rank {rank}: bad WorkerDone: {e:#}");
+                        let _ = events.send(CtlEvent::Dead { rank });
+                    }
                 }
                 return;
             }
             Ok(Some((k, _))) => {
+                board.seen(rank, false);
                 eprintln!("rank {rank}: unexpected {} on control stream", wire::kind_name(k))
             }
-            // EOF without WorkerDone: the rank died.  Dropping `done`
-            // is the signal — once every reader exits, the monitor's
-            // channel disconnects and serve reports the failure.
-            Ok(None) => return,
+            Ok(None) => {
+                let _ = events.send(CtlEvent::Dead { rank });
+                return;
+            }
             Err(e) => {
                 eprintln!("rank {rank}: control stream error: {e:#}");
+                let _ = events.send(CtlEvent::Dead { rank });
                 return;
             }
         }
@@ -757,6 +1576,42 @@ pub fn work_main(argv: &[String]) -> Result<()> {
     work(p.get("connect"), rank, n_ranks)
 }
 
+/// Retry a fallible dial with jittered exponential backoff: 8 attempts,
+/// 50ms doubling to a 2s cap, ±25% deterministic jitter keyed off the
+/// process id so racing replacement ranks don't dial in lockstep.
+/// This is what makes `asybadmm work` a viable *replacement* process
+/// under `failure=restart`: it can be started before the coordinator
+/// notices the death it is replacing.
+fn with_backoff<T>(what: &str, mut f: impl FnMut() -> Result<T>) -> Result<T> {
+    const ATTEMPTS: u32 = 8;
+    let mut rng = 0x9E37_79B9_7F4A_7C15u64 ^ (u64::from(std::process::id()) << 17);
+    let mut wait = 50u64;
+    let mut last = None;
+    for attempt in 1..=ATTEMPTS {
+        match f() {
+            Ok(v) => return Ok(v),
+            Err(e) => {
+                if attempt < ATTEMPTS {
+                    rng ^= rng << 13;
+                    rng ^= rng >> 7;
+                    rng ^= rng << 17;
+                    let jitter = wait / 4;
+                    let ms = wait - jitter + rng % (2 * jitter + 1);
+                    eprintln!(
+                        "{what}: attempt {attempt}/{ATTEMPTS} failed ({e:#}); \
+                         retrying in {ms}ms"
+                    );
+                    std::thread::sleep(Duration::from_millis(ms));
+                    wait = (wait * 2).min(2000);
+                }
+                last = Some(e);
+            }
+        }
+    }
+    Err(last.expect("at least one attempt ran")
+        .context(format!("{what}: gave up after {ATTEMPTS} attempts")))
+}
+
 fn work(connect: &str, rank: usize, n_ranks: usize) -> Result<()> {
     let addr: SocketAddr = connect
         .to_socket_addrs()
@@ -764,19 +1619,25 @@ fn work(connect: &str, rank: usize, n_ranks: usize) -> Result<()> {
         .next()
         .with_context(|| format!("connect address {connect:?} resolved to nothing"))?;
 
-    // -- join ----------------------------------------------------------
-    let mut ctl = TcpStream::connect(addr)
-        .with_context(|| format!("connecting to coordinator at {addr}"))?;
-    ctl.set_nodelay(true).ok();
-    let mut join = Vec::with_capacity(8);
-    wire::put_u32(&mut join, rank as u32);
-    wire::put_u32(&mut join, n_ranks as u32);
-    wire::write_frame(&mut ctl, kind::JOIN_CTL, &join).context("sending JoinCtl")?;
-    let (k, payload) = wire::read_frame(&mut ctl)
-        .context("waiting for Welcome")?
-        .context("coordinator closed the connection before Welcome")?;
-    anyhow::ensure!(k == kind::WELCOME, "expected Welcome, got {}", wire::kind_name(k));
-    let (cfg, owners, _map_version) = decode_welcome(&payload)?;
+    // -- join (reconnect-with-backoff) --------------------------------
+    // The whole exchange retries, not just the connect: a replacement
+    // rank's JoinCtl can race the coordinator's death detection, whose
+    // refusal shows up here as EOF-before-Welcome.
+    let (mut ctl, cfg, owners, resume) =
+        with_backoff(&format!("rank {rank}/{n_ranks}: joining {addr}"), || {
+            let mut ctl = TcpStream::connect(addr).context("connect")?;
+            ctl.set_nodelay(true).ok();
+            let mut join = Vec::with_capacity(8);
+            wire::put_u32(&mut join, rank as u32);
+            wire::put_u32(&mut join, n_ranks as u32);
+            wire::write_frame(&mut ctl, kind::JOIN_CTL, &join).context("sending JoinCtl")?;
+            let (k, payload) = wire::read_frame(&mut ctl)
+                .context("waiting for Welcome")?
+                .context("coordinator closed the connection before Welcome")?;
+            anyhow::ensure!(k == kind::WELCOME, "expected Welcome, got {}", wire::kind_name(k));
+            let (cfg, owners, _map_version, resume) = decode_welcome(&payload)?;
+            Ok((ctl, cfg, owners, resume))
+        })?;
     anyhow::ensure!(
         n_ranks <= cfg.n_workers,
         "rank {rank}/{n_ranks}: only {} workers configured",
@@ -795,7 +1656,13 @@ fn work(connect: &str, rank: usize, n_ranks: usize) -> Result<()> {
     let map = Arc::new(BlockMap::new(&owners));
     let policy =
         DelayPolicy { net_mean_ms: cfg.net_delay_mean_ms, pull_hold: cfg.pull_hold.max(1) };
+    // In-process fault kinds don't re-plumb across the Welcome (they
+    // would double-fire); the worker-side *net* kinds arrive filtered
+    // through `worker_net_spec` and hook the push senders below.
     let fault_plan = FaultPlan::none();
+    let net_plan =
+        Arc::new(FaultPlan::parse(&cfg.faults).context("fault spec from Welcome")?);
+    let tuning = Arc::new(PullTuning::from_cfg(&cfg));
     let pool_cap =
         push_inflight(cfg.n_workers) + 4 + cfg.n_servers * cfg.batch.saturating_sub(1);
 
@@ -808,30 +1675,48 @@ fn work(connect: &str, rank: usize, n_ranks: usize) -> Result<()> {
     let pull_rounds = Arc::new(AtomicU64::new(0));
     let pull_empty = Arc::new(AtomicU64::new(0));
     let sync_handle = {
-        let mut stream = TcpStream::connect(addr).context("connecting the mirror-sync stream")?;
-        stream.set_nodelay(true).ok();
+        let mut stream = with_backoff("dialing the mirror-sync stream", || {
+            let s = TcpStream::connect(addr).context("connect")?;
+            s.set_nodelay(true).ok();
+            Ok(s)
+        })?;
         let mut hello = Vec::with_capacity(4);
         wire::put_u32(&mut hello, rank as u32);
         wire::write_frame(&mut stream, kind::HELLO_PULL, &hello).context("sending HelloPull")?;
         let store = store.clone();
         let stop = stop_sync.clone();
         let hint = publish_hint.clone();
+        let tuning = tuning.clone();
         let (rounds, empty) = (pull_rounds.clone(), pull_empty.clone());
         std::thread::Builder::new()
             .name("pull-sync".into())
-            .spawn(move || pull_sync_loop(stream, store, stop, hint, rounds, empty))
+            .spawn(move || pull_sync_loop(stream, store, stop, hint, tuning, rounds, empty))
             .context("spawn mirror-sync thread")?
     };
 
-    // -- owner-update reader (detached; exits on the coordinator's EOF)
+    // -- control-update reader (detached; exits on the coordinator's
+    // EOF).  Applies OwnerUpdate republishes and ConfigUpdate reloads.
     {
         let map = map.clone();
+        let tuning = tuning.clone();
         let stream = ctl.try_clone().context("clone control stream")?;
         std::thread::Builder::new()
-            .name("ctl-owner".into())
-            .spawn(move || owner_update_loop(stream, map))
-            .context("spawn owner-update thread")?;
+            .name("ctl-update".into())
+            .spawn(move || ctl_update_loop(stream, map, tuning))
+            .context("spawn control-update thread")?;
     }
+
+    // -- heartbeat thread (liveness; DESIGN.md §2.0.7) ----------------
+    let stop_hb = Arc::new(AtomicBool::new(false));
+    let hb_handle = {
+        let writer = ctl.try_clone().context("clone control stream for heartbeats")?;
+        let stop = stop_hb.clone();
+        let tuning = tuning.clone();
+        std::thread::Builder::new()
+            .name("heartbeat".into())
+            .spawn(move || heartbeat_loop(writer, rank, stop, tuning))
+            .context("spawn heartbeat thread")?
+    };
 
     // -- this rank's workers ------------------------------------------
     let local: Vec<&WorkerShard> =
@@ -844,24 +1729,63 @@ fn work(connect: &str, rank: usize, n_ranks: usize) -> Result<()> {
         .map(|s| (0..s.n_slots()).map(|_| AtomicU64::new(0)).collect())
         .collect();
 
+    // Seed the ledgers from the rejoin resume state: the seq gates
+    // server-side already sit past these, so the next push on slot s
+    // must carry seqs[s] + 1 — exactly what a ledger holding seqs[s]
+    // produces.
+    let mut resume_base = 0u64;
+    for e in &resume {
+        anyhow::ensure!(
+            e.worker % n_ranks == rank,
+            "Welcome resume entry for worker {} outside rank {rank}/{n_ranks}",
+            e.worker
+        );
+        let ledger = &ledgers[e.worker];
+        anyhow::ensure!(
+            e.seqs.len() == ledger.len(),
+            "Welcome resume entry for worker {}: {} slots, shard has {}",
+            e.worker,
+            e.seqs.len(),
+            ledger.len()
+        );
+        for (slot, &s) in e.seqs.iter().enumerate() {
+            ledger[slot].store(s, Ordering::Release);
+            resume_base += s;
+        }
+    }
+    if !resume.is_empty() {
+        info!(
+            "work",
+            "rank {rank}/{n_ranks} resuming past {resume_base} applied pushes across {} workers",
+            resume.len()
+        );
+    }
+
     // Dial every lane before spawning anything: a refused connection
     // fails the rank instead of stranding half-started workers.
     let mut senders = Vec::with_capacity(local.len());
     for shard in &local {
-        let mut tx = TcpPushSender::connect_remote(
-            &addr,
-            shard.worker_id,
-            cfg.n_servers,
-            lane_cap(&cfg),
-            cfg.batch,
-        )
-        .with_context(|| format!("worker {}: dialing push lanes", shard.worker_id))?;
+        let mut tx = with_backoff(
+            &format!("worker {}: dialing push lanes", shard.worker_id),
+            || {
+                TcpPushSender::connect_remote(
+                    &addr,
+                    shard.worker_id,
+                    cfg.n_servers,
+                    lane_cap(&cfg),
+                    cfg.batch,
+                )
+            },
+        )?;
         tx.set_hint_sink(publish_hint.clone());
+        if !net_plan.is_empty() {
+            tx.set_fault_plan(net_plan.clone());
+        }
         senders.push(tx);
     }
 
     let start = Instant::now();
-    std::thread::scope(|scope| -> Result<()> {
+    let run_result = std::thread::scope(|scope| -> Result<()> {
         let mut handles = Vec::with_capacity(local.len());
         for (shard, tx) in local.iter().zip(senders) {
             let wid = shard.worker_id;
@@ -874,6 +1798,7 @@ fn work(connect: &str, rank: usize, n_ranks: usize) -> Result<()> {
             let fault_plan = &fault_plan;
             let ledger: &[AtomicU64] = &ledgers[wid];
             let cfg = &cfg;
+            let resume_entry = resume.iter().find(|e| e.worker == wid);
             let seed = cfg.seed ^ (0x9E37 + wid as u64 * 0x1000_0000_01B3);
             let local_weight = 1.0 / shard.samples().max(1) as f32;
             handles.push(scope.spawn(move || -> Result<()> {
@@ -907,6 +1832,13 @@ fn work(connect: &str, rank: usize, n_ranks: usize) -> Result<()> {
                     fault_plan,
                     ledger,
                 );
+                if let Some(e) = resume_entry {
+                    // Rejoin: pick up the epoch count and per-slot seq
+                    // continuity where the crashed incarnation stopped,
+                    // with warm duals from the coordinator's state.
+                    ctx.resume_at(e.start_epoch, &e.seqs);
+                    ctx.warm_duals(&e.duals);
+                }
                 ctx.run(compute.as_mut()).with_context(|| format!("worker {wid} loop"))?;
                 Ok(())
             }));
@@ -915,7 +1847,7 @@ fn work(connect: &str, rank: usize, n_ranks: usize) -> Result<()> {
             h.join().map_err(|_| anyhow::anyhow!("worker thread panicked"))??;
         }
         Ok(())
-    })?;
+    });
 
     // -- report + teardown --------------------------------------------
     // Senders dropped with the scope: their FIN is behind the last
@@ -923,10 +1855,21 @@ fn work(connect: &str, rank: usize, n_ranks: usize) -> Result<()> {
     // before the EOF.
     stop_sync.store(true, Ordering::Release);
     let _ = sync_handle.join();
-    let sent: u64 = local
+    stop_hb.store(true, Ordering::Release);
+    let _ = hb_handle.join();
+    // Surface injected-fault events before deciding the exit: a rank
+    // that `netdrop` severed must still say what hit it.
+    for ev in net_plan.take_events() {
+        println!("# fault: {}", ev.describe());
+    }
+    run_result?;
+    let applied: u64 = local
         .iter()
         .map(|s| ledgers[s.worker_id].iter().map(|a| a.load(Ordering::Acquire)).sum::<u64>())
         .sum();
+    // A resumed rank's ledgers were seeded with the crashed
+    // incarnation's pushes; report only this process's own.
+    let sent = applied.saturating_sub(resume_base);
     // Counters are final: the sync thread joined above.
     let rounds = pull_rounds.load(Ordering::Acquire);
     let empty = pull_empty.load(Ordering::Acquire);
@@ -946,6 +1889,46 @@ fn work(connect: &str, rank: usize, n_ranks: usize) -> Result<()> {
     Ok(())
 }
 
+/// Beacon the coordinator's liveness board: one `Heartbeat` frame per
+/// period on the control stream's write half (own fd clone — the main
+/// thread only writes `WorkerDone`, after this thread joins).  The
+/// period is re-read every beat so a `ConfigUpdate` retuning
+/// `net_liveness_ms` takes effect mid-run; sleeps run in ≤25ms slices
+/// so stop requests never wait out a long period.
+fn heartbeat_loop(
+    mut writer: TcpStream,
+    rank: usize,
+    stop: Arc<AtomicBool>,
+    tuning: Arc<PullTuning>,
+) {
+    let mut seq = 0u64;
+    let mut buf = Vec::with_capacity(32);
+    while !stop.load(Ordering::Acquire) {
+        let period = tuning.hb_period_ms.load(Ordering::Relaxed);
+        if period == 0 {
+            // Liveness off (possibly retuned off); nap and re-check.
+            std::thread::sleep(Duration::from_millis(25));
+            continue;
+        }
+        let mut slept = 0u64;
+        while slept < period && !stop.load(Ordering::Acquire) {
+            let step = (period - slept).min(25);
+            std::thread::sleep(Duration::from_millis(step));
+            slept += step;
+        }
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+        seq += 1;
+        buf.clear();
+        wire::put_heartbeat_frame(&mut buf, rank as u32, seq);
+        if writer.write_all(&buf).is_err() {
+            // Coordinator gone; the control reader owns reporting that.
+            return;
+        }
+    }
+}
+
 /// Worker-side mirror refresh: poll the coordinator for blocks newer
 /// than the local replica and adopt them via
 /// [`BlockStore::write_versioned`].
@@ -962,6 +1945,7 @@ fn pull_sync_loop(
     store: Arc<BlockStore>,
     stop: Arc<AtomicBool>,
     hint: Arc<AtomicU64>,
+    tuning: Arc<PullTuning>,
     rounds_out: Arc<AtomicU64>,
     empty_out: Arc<AtomicU64>,
 ) {
@@ -970,7 +1954,7 @@ fn pull_sync_loop(
     let mut req = Vec::new();
     let mut shadow: Vec<Vec<f32>> = vec![vec![0.0f32; db]; n];
     let mut shadow_v = vec![0u64; n];
-    let mut cadence = PullCadence::new();
+    let mut cadence = PullCadence::new(tuning.floor());
     while !stop.load(Ordering::Acquire) {
         req.clear();
         wire::put_u32(&mut req, n as u32);
@@ -1030,45 +2014,74 @@ fn pull_sync_loop(
             empty_out.fetch_add(1, Ordering::Relaxed);
         }
         // Sleep in floor-sized slices so the publish hint (or stop) can
-        // cut a long idle nap short.
-        let target = cadence.after_round(got > 0);
+        // cut a long idle nap short.  Bounds are re-read per round so a
+        // `ConfigUpdate` retunes the cadence mid-run.
+        let (floor, ceil) = (tuning.floor(), tuning.ceil());
+        let target = cadence.after_round(got > 0, floor, ceil);
         let h0 = hint.load(Ordering::Relaxed);
         let mut slept = Duration::ZERO;
         while slept < target && !stop.load(Ordering::Acquire) {
-            let step = PULL_POLL_MIN.min(target - slept);
+            let step = floor.min(target - slept);
             std::thread::sleep(step);
             slept += step;
             if hint.load(Ordering::Relaxed) > h0 {
-                cadence.reset();
+                cadence.reset(floor);
                 break;
             }
         }
     }
 }
 
-/// Apply `OwnerUpdate` republishes to the process-local routing map.
-fn owner_update_loop(mut stream: TcpStream, map: Arc<BlockMap>) {
+/// Apply control-stream republishes to process-local state:
+/// `OwnerUpdate` frames move blocks in the routing map, `ConfigUpdate`
+/// frames retune the worker-side hot-reloadable knobs ([`PullTuning`]).
+/// Keys the worker doesn't consume (e.g. `rebalance_ms`) are ignored —
+/// the coordinator already applied them on its side.
+fn ctl_update_loop(mut stream: TcpStream, map: Arc<BlockMap>, tuning: Arc<PullTuning>) {
     loop {
-        let payload = match wire::read_frame(&mut stream) {
-            Ok(Some((kind::OWNER_UPDATE, p))) => p,
-            Ok(Some((k, _))) => {
-                eprintln!("owner-update: unexpected {} frame", wire::kind_name(k));
-                return;
-            }
+        let (k, payload) = match wire::read_frame(&mut stream) {
+            Ok(Some(f)) => f,
             Ok(None) | Err(_) => return,
         };
         let applied = (|| -> Result<()> {
-            let mut cur = wire::Cursor::new(kind::OWNER_UPDATE, &payload)?;
-            let j = cur.u32("block")? as usize;
-            let s = cur.u32("owner")? as usize;
-            let _v = cur.u64("map_version")?;
-            cur.finish()?;
-            anyhow::ensure!(j < map.n_blocks(), "OwnerUpdate: block {j} out of range");
-            map.set_owner(j, s);
+            match k {
+                kind::OWNER_UPDATE => {
+                    let mut cur = wire::Cursor::new(kind::OWNER_UPDATE, &payload)?;
+                    let j = cur.u32("block")? as usize;
+                    let s = cur.u32("owner")? as usize;
+                    let _v = cur.u64("map_version")?;
+                    cur.finish()?;
+                    anyhow::ensure!(j < map.n_blocks(), "OwnerUpdate: block {j} out of range");
+                    map.set_owner(j, s);
+                }
+                kind::CONFIG_UPDATE => {
+                    let mut cur = wire::Cursor::new(kind::CONFIG_UPDATE, &payload)?;
+                    let (version, kv) = wire::take_config_update(&mut cur)?;
+                    for line in kv.lines() {
+                        let Some((key, value)) = line.split_once('=') else { continue };
+                        match (key.trim(), value.trim().parse::<u64>()) {
+                            ("pull_floor_us", Ok(v)) => {
+                                tuning.floor_us.store(v.max(1), Ordering::Relaxed)
+                            }
+                            ("pull_ceil_ms", Ok(v)) => {
+                                tuning.ceil_ms.store(v.max(1), Ordering::Relaxed)
+                            }
+                            ("net_liveness_ms", Ok(v)) => tuning
+                                .hb_period_ms
+                                .store(heartbeat_period_ms(v), Ordering::Relaxed),
+                            _ => {}
+                        }
+                    }
+                    let kv = kv.replace('\n', " ");
+                    cur.finish()?;
+                    info!("work", "config v{version} applied: {kv}");
+                }
+                other => anyhow::bail!("unexpected {} frame", wire::kind_name(other)),
+            }
             Ok(())
         })();
         if let Err(e) = applied {
-            eprintln!("owner-update: {e:#}");
+            eprintln!("ctl-update: {e:#}");
             return;
         }
     }
@@ -1097,17 +2110,69 @@ mod tests {
         cfg.apply_kv("placement", "dynamic").unwrap();
         cfg.apply_kv("batch", "2").unwrap();
         cfg.apply_kv("stats_addr", "127.0.0.1:0").unwrap();
+        cfg.apply_kv("faults", "crash:w0@1;netdrop:w1@5;netstall:w0@10+25ms").unwrap();
         let owners: Vec<usize> = (0..cfg.n_blocks).map(|j| j % 2).collect();
         let payload = encode_welcome(&cfg, &owners, 7);
-        let (got, got_owners, v) = decode_welcome(&payload).unwrap();
+        let (got, got_owners, v, resume) = decode_welcome(&payload).unwrap();
         assert_eq!(got.n_workers, 3);
         assert_eq!(got.n_servers, 2);
         assert_eq!(got.epochs, 17);
         assert_eq!(got.batch, 2);
         assert_eq!(got_owners, owners);
         assert_eq!(v, 7);
-        // Worker-side policy: the coordinator keeps the stats endpoint.
+        assert!(resume.is_empty(), "cold-start Welcome must carry no resume state");
+        // Worker-side policy: the coordinator keeps the stats endpoint,
+        // and only the worker-side net fault kinds cross the wire.
         assert!(got.stats_addr.is_empty());
+        assert_eq!(got.faults, "netdrop:w1@5;netstall:w0@10+25ms");
+    }
+
+    #[test]
+    fn welcome_resume_entries_round_trip() {
+        let mut cfg = Config::default();
+        cfg.apply_kv("n_workers", "3").unwrap();
+        let owners: Vec<usize> = vec![0; cfg.n_blocks];
+        let db = cfg.block_size;
+        let resume = vec![
+            ResumeEntry {
+                worker: 1,
+                start_epoch: 9,
+                seqs: vec![4, 5],
+                duals: (0..2 * db).map(|i| i as f32 * 0.25).collect(),
+            },
+            ResumeEntry { worker: 2, start_epoch: 0, seqs: vec![0], duals: vec![0.5; db] },
+        ];
+        let payload = encode_welcome_resume(&cfg, &owners, 3, &resume);
+        let (_, _, v, got) = decode_welcome(&payload).unwrap();
+        assert_eq!(v, 3);
+        assert_eq!(got, resume);
+    }
+
+    #[test]
+    fn welcome_resume_rejects_bad_geometry() {
+        let mut cfg = Config::default();
+        cfg.apply_kv("n_workers", "2").unwrap();
+        let owners: Vec<usize> = vec![0; cfg.n_blocks];
+        // Worker id outside the config.
+        let bad_worker = vec![ResumeEntry {
+            worker: 5,
+            start_epoch: 0,
+            seqs: vec![1],
+            duals: vec![0.0; cfg.block_size],
+        }];
+        let payload = encode_welcome_resume(&cfg, &owners, 1, &bad_worker);
+        let err = format!("{:#}", decode_welcome(&payload).unwrap_err());
+        assert!(err.contains("worker"), "unexpected error: {err}");
+        // Dual vector inconsistent with the slot count.
+        let bad_duals = vec![ResumeEntry {
+            worker: 1,
+            start_epoch: 0,
+            seqs: vec![1, 2],
+            duals: vec![0.0; cfg.block_size],
+        }];
+        let payload = encode_welcome_resume(&cfg, &owners, 1, &bad_duals);
+        let err = format!("{:#}", decode_welcome(&payload).unwrap_err());
+        assert!(err.contains("dual"), "unexpected error: {err}");
     }
 
     #[test]
@@ -1125,26 +2190,35 @@ mod tests {
         let cfg = Config::default();
         let payload = encode_welcome(&cfg, &vec![0; cfg.n_blocks], 1);
         let err = format!("{:#}", decode_welcome(&payload[..payload.len() - 4]).unwrap_err());
+        assert!(err.contains("n_resume"), "unexpected error: {err}");
+        let err =
+            format!("{:#}", decode_welcome(&payload[..payload.len() - 12]).unwrap_err());
         assert!(err.contains("map_version"), "unexpected error: {err}");
     }
 
     #[test]
     fn pull_cadence_backs_off_doubling_and_resets_on_progress() {
-        let mut c = PullCadence::new();
-        assert_eq!(c.after_round(true), PULL_POLL_MIN);
-        assert_eq!(c.after_round(false), PULL_POLL_MIN);
-        let mut prev = PULL_POLL_MIN;
+        // The `pull_floor_us` / `pull_ceil_ms` config defaults.
+        let (floor, ceil) = (Duration::from_micros(500), Duration::from_millis(8));
+        let mut c = PullCadence::new(floor);
+        assert_eq!(c.after_round(true, floor, ceil), floor);
+        assert_eq!(c.after_round(false, floor, ceil), floor);
+        let mut prev = floor;
         for _ in 0..10 {
-            let d = c.after_round(false);
-            assert!(d >= prev && d <= PULL_POLL_MAX, "cadence left [{prev:?}, max]: {d:?}");
+            let d = c.after_round(false, floor, ceil);
+            assert!(d >= prev && d <= ceil, "cadence left [{prev:?}, max]: {d:?}");
             prev = d;
         }
-        assert_eq!(prev, PULL_POLL_MAX, "ten idle rounds must reach the ceiling");
-        assert_eq!(c.after_round(true), PULL_POLL_MIN, "productive round resets");
-        let _ = c.after_round(false);
-        assert!(c.after_round(false) > PULL_POLL_MIN);
-        c.reset();
-        assert_eq!(c.after_round(false), PULL_POLL_MIN, "hint reset returns to the floor");
+        assert_eq!(prev, ceil, "ten idle rounds must reach the ceiling");
+        assert_eq!(c.after_round(true, floor, ceil), floor, "productive round resets");
+        let _ = c.after_round(false, floor, ceil);
+        assert!(c.after_round(false, floor, ceil) > floor);
+        c.reset(floor);
+        assert_eq!(c.after_round(false, floor, ceil), floor, "hint reset returns to the floor");
+        // A ConfigUpdate shrinking the ceiling clamps the very next round.
+        let _ = c.after_round(false, floor, ceil);
+        let _ = c.after_round(false, floor, ceil);
+        assert!(c.after_round(false, floor, floor) == floor, "new bounds clamp in-flight state");
     }
 
     /// The serve and sync loops against each other over a real socket:
@@ -1165,7 +2239,7 @@ mod tests {
             let (store, stats) = (server_store.clone(), stats.clone());
             std::thread::spawn(move || {
                 let (s, _) = listener.accept().unwrap();
-                pull_serve_loop(s, store, stats);
+                pull_serve_loop(s, store, stats, Arc::new(FaultPlan::none()), usize::MAX);
             });
         }
         let worker_store = Arc::new(BlockStore::new(n, db));
@@ -1176,8 +2250,9 @@ mod tests {
         let sync = {
             let (ws, st) = (worker_store.clone(), stop.clone());
             let (h, r, e) = (hint.clone(), rounds.clone(), empty.clone());
+            let tuning = Arc::new(PullTuning::from_cfg(&Config::default()));
             let stream = TcpStream::connect(addr).unwrap();
-            std::thread::spawn(move || pull_sync_loop(stream, ws, st, h, r, e))
+            std::thread::spawn(move || pull_sync_loop(stream, ws, st, h, tuning, r, e))
         };
         let deadline = Instant::now() + Duration::from_secs(10);
         let wait_version = |j: usize, v: u64| {

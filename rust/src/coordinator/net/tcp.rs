@@ -56,7 +56,7 @@
 
 use std::collections::VecDeque;
 use std::io::{ErrorKind, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::Sender as MpscSender;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -66,6 +66,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use super::super::bufpool::LeasePool;
+use super::super::fault::FaultPlan;
 use super::super::messages::PushMsg;
 use super::super::transport::{Backoff, PushReceiver, PushSender, Transport, TryRecv};
 use super::wire::{self, kind, FrameReader, Poll};
@@ -263,6 +264,22 @@ impl TcpTransport {
     pub fn wire_counters(&self) -> Arc<WireCounters> {
         self.shared.wire.clone()
     }
+
+    /// Serve-mode eviction (`failure=degrade`): force-close every lane
+    /// of `worker` — the `Transport::close_and_drain` semantics over
+    /// sockets.  Local senders fail fast on the `closed` flag, parked
+    /// replacement sockets are orphaned, and the acceptor refuses any
+    /// later `HelloPush` for these lanes, so an evicted (possibly
+    /// zombie) process can never re-enter the seq streams after its
+    /// parked early-arrivals were purged.
+    pub fn close_worker_lanes(&self, worker: usize) {
+        assert!(worker < self.shared.n_workers, "worker {worker} out of range");
+        for server in 0..self.shared.n_servers {
+            let lane = self.shared.lane(server, worker);
+            lane.closed.store(true, Ordering::Release);
+            lane.incoming.lock().unwrap().clear();
+        }
+    }
 }
 
 impl Drop for TcpTransport {
@@ -307,6 +324,11 @@ fn admit(stream: TcpStream, shared: &Shared) -> Result<()> {
             cur.finish()?;
             if worker >= shared.n_workers || server >= shared.n_servers {
                 bail!("hello for unknown lane (worker {worker}, server {server})");
+            }
+            if shared.lane(server, worker).closed.load(Ordering::Acquire) {
+                // Evicted worker (failure=degrade): its streams were
+                // purged; a late reconnect must not re-enter them.
+                bail!("lane (worker {worker}, server {server}) is closed (worker evicted)");
             }
             s.set_read_timeout(None).ok();
             s.set_nonblocking(true).context("nonblocking lane socket")?;
@@ -372,6 +394,9 @@ pub struct TcpPushSender {
     /// Where Credit-frame version hints land (max-merged): the worker
     /// process's pull cadence resets when this advances.
     hint_sink: Option<Arc<AtomicU64>>,
+    /// Wire-level fault injection (`netdrop:`/`netstall:` entries);
+    /// `None` or an empty plan costs one branch per send.
+    faults: Option<Arc<FaultPlan>>,
 }
 
 /// Dial one lane socket and say hello.
@@ -424,6 +449,7 @@ fn connect_lanes(shared: &Arc<Shared>, worker: usize) -> TcpPushSender {
         pending: (0..shared.n_servers).map(|_| Vec::new()).collect(),
         wire_buf: Vec::new(),
         hint_sink: None,
+        faults: None,
     }
 }
 
@@ -451,7 +477,28 @@ impl TcpPushSender {
             pending: (0..n_servers).map(|_| Vec::new()).collect(),
             wire_buf: Vec::new(),
             hint_sink: None,
+            faults: None,
         })
+    }
+
+    /// Arm wire-level fault injection on this sender.  `netdrop:wW@E`
+    /// severs every lane socket at the first push of epoch `E`
+    /// (simulating a network partition — the next flush surfaces the
+    /// same "server hung up" error a real reset would); `netstall:wW@P+MSms`
+    /// freezes the push stream for `MS` ms once `P` frames have gone
+    /// out.  An empty plan is a single `is_empty` branch per call.
+    pub fn set_fault_plan(&mut self, plan: Arc<FaultPlan>) {
+        self.faults = Some(plan);
+    }
+
+    /// Sever every lane socket in both directions: in-flight kernel
+    /// bytes are discarded where possible and every subsequent flush
+    /// fails like a peer reset.
+    fn sever_all(&mut self) {
+        for conn in &mut self.conns {
+            let _ = conn.stream.shutdown(Shutdown::Both);
+            conn.eof = true;
+        }
     }
 
     /// Publish Credit-frame version hints into `sink` (max-merged —
@@ -534,6 +581,14 @@ impl TcpPushSender {
         if self.pending[server].is_empty() {
             return Ok(());
         }
+        if let Some(plan) = &self.faults {
+            if !plan.is_empty() {
+                let frames = self.conns.iter().map(|c| c.frames_out).sum::<u64>() as usize;
+                if let Some(ms) = plan.net_stall_ms(self.worker, frames) {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+            }
+        }
         let mut backoff = Backoff::new();
         loop {
             if self.lane_closed(server) {
@@ -606,6 +661,11 @@ fn write_all_nb(stream: &mut TcpStream, mut buf: &[u8]) -> std::io::Result<()> {
 
 impl PushSender for TcpPushSender {
     fn send(&mut self, server: usize, msg: PushMsg) -> Result<()> {
+        if let Some(plan) = self.faults.clone() {
+            if !plan.is_empty() && plan.net_drop(self.worker, msg.worker_epoch) {
+                self.sever_all();
+            }
+        }
         if self.lane_closed(server) || self.conns[server].eof {
             drop(msg); // recycles the pooled buffer
             bail!("server {server} hung up");
@@ -797,6 +857,14 @@ impl PushReceiver for TcpLaneReceiver {
             if self.done {
                 return TryRecv::Done;
             }
+            if self.conn.is_some()
+                && self.shared.lane(self.server, self.worker).closed.load(Ordering::Acquire)
+            {
+                // Evicted mid-run (`close_worker_lanes`): drop the live
+                // socket too, so a stopped-but-undead peer cannot keep
+                // feeding frames after its pending pushes were purged.
+                self.retire_socket();
+            }
             if self.conn.is_none() {
                 let next =
                     self.shared.lane(self.server, self.worker).incoming.lock().unwrap().pop_front();
@@ -809,10 +877,14 @@ impl PushReceiver for TcpLaneReceiver {
                         // Nothing connected right now: drained only if
                         // shut down AND every dialed socket was fully
                         // consumed (a dial is counted before its socket
-                        // can be parked, so this cannot run ahead).
+                        // can be parked, so this cannot run ahead).  A
+                        // closed lane waives the socket accounting: its
+                        // parked replacements were discarded unread by
+                        // the eviction, not consumed.
                         let lane = self.shared.lane(self.server, self.worker);
                         if self.shared.shutdown.load(Ordering::Acquire)
-                            && self.consumed >= lane.dialed.load(Ordering::Acquire)
+                            && (lane.closed.load(Ordering::Acquire)
+                                || self.consumed >= lane.dialed.load(Ordering::Acquire))
                             && lane.incoming.lock().unwrap().is_empty()
                         {
                             self.done = true;

@@ -74,6 +74,14 @@ pub mod kind {
     /// increasing z̃ publish counter so an idle pull stream learns that
     /// new versions exist without a round-trip (0 = no hint source).
     pub const CREDIT: u8 = 12;
+    /// Liveness beacon on an otherwise-idle control stream:
+    /// `rank u32, seq u64`.  `seq` increments per beacon so a receiver
+    /// can tell a fresh beacon from a replayed buffer on reconnect.
+    pub const HEARTBEAT: u8 = 13;
+    /// Coordinator → worker runtime-config republish:
+    /// `version u64, kv str` — the same `key=value` line format the
+    /// Welcome frame ships, restricted to `Config::RELOADABLE_KEYS`.
+    pub const CONFIG_UPDATE: u8 = 14;
 }
 
 /// Human name for a frame kind (error context).
@@ -91,12 +99,14 @@ pub fn kind_name(k: u8) -> &'static str {
         kind::PULL_RESP => "PullResp",
         kind::WORKER_DONE => "WorkerDone",
         kind::CREDIT => "Credit",
+        kind::HEARTBEAT => "Heartbeat",
+        kind::CONFIG_UPDATE => "ConfigUpdate",
         _ => "unknown",
     }
 }
 
 fn known_kind(k: u8) -> bool {
-    (kind::HELLO_PUSH..=kind::CREDIT).contains(&k)
+    (kind::HELLO_PUSH..=kind::CONFIG_UPDATE).contains(&k)
 }
 
 // ---------------------------------------------------------------------
@@ -304,6 +314,50 @@ pub fn take_credit(cur: &mut Cursor<'_>) -> Result<WireCredit> {
     let frames = cur.u32("frames")?;
     let hint = cur.u64("hint")?;
     Ok(WireCredit { frames, hint })
+}
+
+// ---------------------------------------------------------------------
+// Liveness + runtime-config frames (control plane)
+// ---------------------------------------------------------------------
+
+/// A decoded [`kind::HEARTBEAT`] body.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireHeartbeat {
+    /// Sending process's rank.
+    pub rank: u32,
+    /// Monotone per-connection beacon counter.
+    pub seq: u64,
+}
+
+/// Append one whole `Heartbeat` frame (envelope included) to `buf`.
+pub fn put_heartbeat_frame(buf: &mut Vec<u8>, rank: u32, seq: u64) {
+    let at = begin_frame(buf, kind::HEARTBEAT);
+    put_u32(buf, rank);
+    put_u64(buf, seq);
+    end_frame(buf, at);
+}
+
+/// Decode a `Heartbeat` body at the cursor.
+pub fn take_heartbeat(cur: &mut Cursor<'_>) -> Result<WireHeartbeat> {
+    let rank = cur.u32("rank")?;
+    let seq = cur.u64("seq")?;
+    Ok(WireHeartbeat { rank, seq })
+}
+
+/// Append one whole `ConfigUpdate` frame (envelope included) to `buf`.
+/// `kv` is `key=value` lines restricted to the reloadable subset.
+pub fn put_config_update_frame(buf: &mut Vec<u8>, version: u64, kv: &str) {
+    let at = begin_frame(buf, kind::CONFIG_UPDATE);
+    put_u64(buf, version);
+    put_str(buf, kv);
+    end_frame(buf, at);
+}
+
+/// Decode a `ConfigUpdate` body at the cursor: `(version, kv text)`.
+pub fn take_config_update<'a>(cur: &mut Cursor<'a>) -> Result<(u64, &'a str)> {
+    let version = cur.u64("version")?;
+    let kv = cur.str("kv")?;
+    Ok((version, kv))
 }
 
 // ---------------------------------------------------------------------
@@ -750,6 +804,52 @@ mod tests {
         let text = format!("{err:#}");
         assert!(text.contains("Credit frame truncated"), "{text}");
         assert!(text.contains("\"hint\""), "{text}");
+    }
+
+    #[test]
+    fn heartbeat_frame_round_trips() {
+        let mut buf = Vec::new();
+        put_heartbeat_frame(&mut buf, 3, 77);
+        assert_eq!(buf.len(), HEADER + 4 + 8);
+        assert_eq!(buf[4], kind::HEARTBEAT);
+        let mut cur = Cursor::new(buf[4], &buf[HEADER..]).unwrap();
+        let hb = take_heartbeat(&mut cur).unwrap();
+        cur.finish().unwrap();
+        assert_eq!(hb, WireHeartbeat { rank: 3, seq: 77 });
+    }
+
+    #[test]
+    fn truncated_heartbeat_names_kind_and_field() {
+        let mut buf = Vec::new();
+        put_heartbeat_frame(&mut buf, 1, 9);
+        let mut cur = Cursor::new(kind::HEARTBEAT, &buf[HEADER..buf.len() - 3]).unwrap();
+        let err = take_heartbeat(&mut cur).unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("Heartbeat frame truncated"), "{text}");
+        assert!(text.contains("\"seq\""), "{text}");
+    }
+
+    #[test]
+    fn config_update_frame_round_trips() {
+        let mut buf = Vec::new();
+        put_config_update_frame(&mut buf, 5, "rebalance_ms=20\nstall_warn_ms=0");
+        assert_eq!(buf[4], kind::CONFIG_UPDATE);
+        let mut cur = Cursor::new(buf[4], &buf[HEADER..]).unwrap();
+        let (v, kv) = take_config_update(&mut cur).unwrap();
+        cur.finish().unwrap();
+        assert_eq!(v, 5);
+        assert_eq!(kv, "rebalance_ms=20\nstall_warn_ms=0");
+    }
+
+    #[test]
+    fn truncated_config_update_names_kind_and_field() {
+        let mut buf = Vec::new();
+        put_config_update_frame(&mut buf, 1, "rebalance_ms=5");
+        let mut cur = Cursor::new(kind::CONFIG_UPDATE, &buf[HEADER..buf.len() - 4]).unwrap();
+        let err = take_config_update(&mut cur).unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("ConfigUpdate frame truncated"), "{text}");
+        assert!(text.contains("\"kv\""), "{text}");
     }
 
     #[test]

@@ -1168,7 +1168,7 @@ fn wait_tail_drained(table: &BlockTable, shard: &WorkerShard, ledger: &[AtomicU6
 /// w̃ = ρx + y and x ≈ z̃ give y ≈ w̃ − ρ·z̃; never-pushed slots keep
 /// the fresh-worker y⁰ = 0.  Used to warm-start restarted workers and
 /// to snapshot duals into checkpoints without touching worker threads.
-fn approx_duals(
+pub(crate) fn approx_duals(
     table: &BlockTable,
     store: &BlockStore,
     shard: &WorkerShard,
@@ -1195,7 +1195,7 @@ fn approx_duals(
 /// consensus z, live owner map, per-block push counters, and the
 /// approximate per-worker duals.
 #[allow(clippy::too_many_arguments)]
-fn snapshot_checkpoint(
+pub(crate) fn snapshot_checkpoint(
     cfg: &Config,
     shards: &[WorkerShard],
     store: &BlockStore,

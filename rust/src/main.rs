@@ -97,10 +97,16 @@ fn config_args(a: Args) -> Args {
              drain=owned|steal, server_threads=N (0 = one per shard), \
              kernel=scalar|unrolled|simd|auto (auto = AVX2 when available), \
              rebalance_ms=MS, batch=N, backend=native|xla, \
-             faults=crash:w1@5;stall:s0@100+25ms;sendfail:w2@4x3, \
+             faults=crash:w1@5;stall:s0@100+25ms;sendfail:w2@4x3 \
+             (wire-level under serve/work: netdrop:w1@5 severs worker 1's push \
+             sockets at epoch 5, netstall:w0@100+25ms freezes its stream 25ms \
+             after 100 frames, corrupt:s0@3 flips rank 0's 3rd pull frame), \
              failure=die|degrade|restart, stall_warn_ms=MS, \
+             net_liveness_ms=MS (serve: evict/await-restart a rank silent that \
+             long; 0 = off), join_timeout_ms=MS (join barrier + rejoin wait), \
+             pull_floor_us=US, pull_ceil_ms=MS (mirror-poll cadence bounds), \
              checkpoint_every=EPOCHS, checkpoint_path=FILE, \
-             stats_addr=HOST:PORT (live /stats + /healthz HTTP endpoint), \
+             stats_addr=HOST:PORT (live /stats + /healthz + POST /config), \
              n_workers=8; an unknown key lists all valid keys)",
         )
 }

@@ -1,0 +1,451 @@
+//! Networked chaos tests (DESIGN.md §2.0.7): the serve/work runtime
+//! must survive real process death and wire damage, not just the
+//! in-process fault hooks that `tests/chaos.rs` exercises.
+//!
+//!  * SIGKILL a worker under `failure=degrade`: the coordinator evicts
+//!    the dead rank, completes on survivors, and says so in the summary.
+//!  * SIGKILL a worker under `failure=restart`: a replacement process
+//!    rejoins the same rank, resumes past the crashed stream's applied
+//!    tail, and the run keeps *exact* push accounting end to end.
+//!  * Corrupt a pull-stream frame in flight (`corrupt:s0@N`): the
+//!    worker names the broken frame kind on stderr, tears the mirror
+//!    stream down cleanly, and both processes still exit 0.
+//!  * Property tests pin the new control-plane frames (`Heartbeat`,
+//!    `ConfigUpdate`) to the wire contract: exact roundtrip, contextual
+//!    truncation errors, and no panic under byte flips.
+//!
+//! Processes are torn down on any failure via a kill-on-drop guard.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use asybadmm::coordinator::wire;
+use asybadmm::testutil::forall;
+use asybadmm::util::json::Json;
+use asybadmm::util::rng::Rng;
+
+const BIN: &str = env!("CARGO_BIN_EXE_asybadmm");
+
+/// Kill-on-drop child guard: a failed assertion must not strand
+/// coordinator/worker processes (locally or in CI).
+struct Reap(Child);
+
+impl Drop for Reap {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+/// One curl-free HTTP GET against the stats endpoint.
+fn http_get(addr: &str, path: &str) -> std::io::Result<(String, String)> {
+    let mut conn = TcpStream::connect(addr)?;
+    conn.set_read_timeout(Some(Duration::from_secs(2))).ok();
+    conn.write_all(
+        format!("GET {path} HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").as_bytes(),
+    )?;
+    let mut raw = String::new();
+    conn.read_to_string(&mut raw)?;
+    let (head, body) = raw.split_once("\r\n\r\n").unwrap_or((raw.as_str(), ""));
+    Ok((head.lines().next().unwrap_or("").to_string(), body.to_string()))
+}
+
+/// `key=value` token out of the serve summary line.
+fn field_u64(line: &str, key: &str) -> u64 {
+    line.split_whitespace()
+        .find_map(|t| t.strip_prefix(key))
+        .unwrap_or_else(|| panic!("no {key:?} field in {line:?}"))
+        .trim_end_matches(|c: char| !c.is_ascii_digit())
+        .parse()
+        .unwrap_or_else(|e| panic!("bad {key:?} field in {line:?}: {e}"))
+}
+
+/// Spawn `asybadmm serve` and scrape its announced addresses off
+/// stdout.  Returns the guard, the remaining stdout line iterator, the
+/// push-lane address, and (when `stats_addr` was in `set`) the stats
+/// address.
+#[allow(clippy::type_complexity)]
+fn spawn_serve(
+    set: &str,
+) -> (Reap, std::io::Lines<BufReader<std::process::ChildStdout>>, String, Option<String>) {
+    let mut serve = Reap(
+        Command::new(BIN)
+            .args(["serve", "--listen", "127.0.0.1:0", "--set", set])
+            .stdout(Stdio::piped())
+            .spawn()
+            .expect("spawn serve"),
+    );
+    let want_stats = set.contains("stats_addr=");
+    let mut lines = BufReader::new(serve.0.stdout.take().expect("serve stdout")).lines();
+    let (mut listen, mut stats) = (None, None);
+    while listen.is_none() || (want_stats && stats.is_none()) {
+        let line = lines
+            .next()
+            .expect("serve exited before announcing its addresses")
+            .expect("serve stdout");
+        if let Some(a) = line.strip_prefix("# listening on ") {
+            listen = Some(a.trim().to_string());
+        } else if let Some(a) = line.strip_prefix("# stats on ") {
+            stats = Some(a.trim().to_string());
+        }
+    }
+    (serve, lines, listen.unwrap(), stats)
+}
+
+fn spawn_worker(listen: &str, rank: &str) -> Reap {
+    Reap(
+        Command::new(BIN)
+            .args(["work", "--connect", listen, "--rank", rank])
+            .stdout(Stdio::null())
+            .spawn()
+            .expect("spawn work"),
+    )
+}
+
+/// Block until `/stats` reports at least `min_pushes` applied pushes —
+/// i.e. the join barrier passed and the run is live — so a kill lands
+/// mid-run, not mid-handshake.
+fn wait_for_pushes(stats: &str, min_pushes: f64) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        assert!(
+            Instant::now() < deadline,
+            "run never reached {min_pushes} applied pushes (stats probe timed out)"
+        );
+        if let Ok((status, body)) = http_get(stats, "/stats") {
+            assert!(status.contains("200"), "stats: {status}");
+            let snap = Json::parse(&body).expect("stats body is JSON");
+            let pushes = snap.get("pushes_total").and_then(Json::as_f64).expect("pushes_total");
+            if pushes >= min_pushes {
+                return;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+fn done_line(lines: &mut std::io::Lines<BufReader<std::process::ChildStdout>>) -> String {
+    lines
+        .by_ref()
+        .map(|l| l.expect("serve stdout"))
+        .find(|l| l.starts_with("# done in "))
+        .expect("serve exited without a done line")
+}
+
+/// SIGKILL one of two ranks mid-run under `failure=degrade`: the
+/// coordinator must detect the lost control stream, evict the rank
+/// (purging its parked pushes), finish on the survivor's workers, and
+/// report `evicted=1` — no hang, exit 0.
+#[test]
+fn sigkill_under_degrade_evicts_and_completes_on_survivors() {
+    const EPOCHS: u64 = 2000;
+    let set = "samples=64,n_blocks=6,block_size=16,nnz_per_row=4,blocks_per_worker=3,\
+               shared_blocks=2,n_workers=3,n_servers=2,epochs=2000,rho=2,lambda=0.0001,\
+               batch=2,net_delay_mean_ms=0.1,log_every=100000,\
+               failure=degrade,net_liveness_ms=500,stats_addr=127.0.0.1:0";
+    let (mut serve, mut lines, listen, stats) = spawn_serve(set);
+    let stats = stats.expect("stats addr");
+
+    // rank 0 drives workers 0 and 2; rank 1 drives worker 1.
+    let mut survivor = spawn_worker(&listen, "0/2");
+    let mut victim = spawn_worker(&listen, "1/2");
+
+    wait_for_pushes(&stats, 30.0);
+    victim.0.kill().expect("SIGKILL rank 1");
+    victim.0.wait().expect("reap rank 1");
+
+    let done = done_line(&mut lines);
+    assert!(serve.0.wait().expect("wait serve").success(), "serve failed: {done}");
+    assert!(survivor.0.wait().expect("wait rank 0").success(), "rank 0/2 failed");
+
+    let applied = field_u64(&done, "pushes=");
+    let sent = field_u64(&done, "sent=");
+    let evicted = field_u64(&done, "evicted=");
+    assert_eq!(evicted, 1, "the killed rank was not evicted: {done}");
+    // The survivor's two workers finish all their epochs; the victim's
+    // worker contributed only what landed before the kill.
+    assert_eq!(sent, 2 * EPOCHS, "survivor accounting broke: {done}");
+    assert!(
+        applied >= 2 * EPOCHS && applied < 3 * EPOCHS,
+        "applied pushes outside the survivor band: {done}"
+    );
+}
+
+/// SIGKILL a rank mid-run under `failure=restart`, then start a
+/// replacement process on the same rank: the rejoin handshake must
+/// resume past the crashed stream's applied tail so the run ends with
+/// *exact* FIFO accounting — every epoch of every worker applied
+/// exactly once, `evicted=0`.
+#[test]
+fn sigkill_under_restart_rejoins_with_exact_fifo_resume() {
+    const EPOCHS: u64 = 2500;
+    const N_WORKERS: u64 = 2;
+    let set = "samples=64,n_blocks=6,block_size=16,nnz_per_row=4,blocks_per_worker=3,\
+               shared_blocks=2,n_workers=2,n_servers=1,epochs=2500,rho=2,lambda=0.0001,\
+               batch=2,net_delay_mean_ms=0.2,log_every=100000,\
+               failure=restart,net_liveness_ms=1000,join_timeout_ms=30000,\
+               stats_addr=127.0.0.1:0";
+    let (mut serve, mut lines, listen, stats) = spawn_serve(set);
+    let stats = stats.expect("stats addr");
+
+    let mut survivor = spawn_worker(&listen, "0/2");
+    let mut victim = spawn_worker(&listen, "1/2");
+
+    wait_for_pushes(&stats, 50.0);
+    victim.0.kill().expect("SIGKILL rank 1");
+    victim.0.wait().expect("reap rank 1");
+
+    // The replacement races serve's death detection; its join handshake
+    // retries with backoff until the monitor marks the rank dead and
+    // answers with a resume Welcome.
+    let mut replacement = spawn_worker(&listen, "1/2");
+
+    let done = done_line(&mut lines);
+    assert!(serve.0.wait().expect("wait serve").success(), "serve failed: {done}");
+    assert!(survivor.0.wait().expect("wait rank 0").success(), "rank 0/2 failed");
+    assert!(
+        replacement.0.wait().expect("wait replacement").success(),
+        "replacement rank 1/2 failed"
+    );
+
+    let applied = field_u64(&done, "pushes=");
+    let evicted = field_u64(&done, "evicted=");
+    assert_eq!(evicted, 0, "restart must rejoin, not evict: {done}");
+    assert_eq!(
+        applied,
+        EPOCHS * N_WORKERS,
+        "rejoin broke exact FIFO accounting (duplicates or gaps): {done}"
+    );
+}
+
+/// `corrupt:s0@3` flips bytes of the third pull-stream response in
+/// flight.  The worker must fail that frame with a *named* decode
+/// error ("PullResp"), retire its mirror stream without panicking, and
+/// still finish every epoch; the coordinator logs the injected fault
+/// and keeps exact accounting.
+#[test]
+fn corrupt_pull_frame_names_the_kind_and_tears_down_cleanly() {
+    const EPOCHS: u64 = 300;
+    let set = "samples=48,n_blocks=4,block_size=16,nnz_per_row=4,blocks_per_worker=4,\
+               shared_blocks=1,n_workers=1,n_servers=1,epochs=300,rho=2,lambda=0.0001,\
+               batch=2,net_delay_mean_ms=0.1,log_every=100000,faults=corrupt:s0@3";
+    let (mut serve, mut lines, listen, _stats) = spawn_serve(set);
+
+    let mut worker = Reap(
+        Command::new(BIN)
+            .args(["work", "--connect", &listen, "--rank", "0/1"])
+            .stdout(Stdio::null())
+            .stderr(Stdio::piped())
+            .spawn()
+            .expect("spawn work"),
+    );
+
+    // The fault ledger drains onto serve stdout just before the summary.
+    let mut fault_lines = Vec::new();
+    let mut done = None;
+    for line in lines.by_ref() {
+        let line = line.expect("serve stdout");
+        if line.starts_with("# fault: ") {
+            fault_lines.push(line);
+        } else if line.starts_with("# done in ") {
+            done = Some(line);
+            break;
+        }
+    }
+    let done = done.expect("serve exited without a done line");
+    assert!(serve.0.wait().expect("wait serve").success(), "serve failed: {done}");
+
+    let mut stderr = String::new();
+    worker
+        .0
+        .stderr
+        .take()
+        .expect("worker stderr")
+        .read_to_string(&mut stderr)
+        .expect("read worker stderr");
+    assert!(worker.0.wait().expect("wait worker").success(), "worker exit: {stderr}");
+    assert!(
+        stderr.contains("PullResp"),
+        "worker must name the corrupted frame kind on stderr: {stderr:?}"
+    );
+
+    assert!(
+        fault_lines.iter().any(|l| l.contains("corrupted in flight")),
+        "serve must log the injected corruption: {fault_lines:?}"
+    );
+    let applied = field_u64(&done, "pushes=");
+    let sent = field_u64(&done, "sent=");
+    assert_eq!(applied, EPOCHS, "a dead mirror stream must not cost pushes: {done}");
+    assert_eq!(applied, sent, "applied != sent after frame corruption: {done}");
+}
+
+// ---------------------------------------------------------------------
+// Wire properties for the liveness/config control-plane frames
+// ---------------------------------------------------------------------
+
+fn decode_heartbeat_frame(bytes: &[u8]) -> Result<wire::WireHeartbeat, String> {
+    let mut slice = bytes;
+    let (k, payload) = wire::read_frame(&mut slice)
+        .map_err(|e| format!("{e:#}"))?
+        .ok_or_else(|| "clean EOF instead of a frame".to_string())?;
+    if k != wire::kind::HEARTBEAT {
+        return Err(format!("not a heartbeat frame: {}", wire::kind_name(k)));
+    }
+    let mut cur = wire::Cursor::new(k, &payload).map_err(|e| format!("{e:#}"))?;
+    let hb = wire::take_heartbeat(&mut cur).map_err(|e| format!("{e:#}"))?;
+    cur.finish().map_err(|e| format!("{e:#}"))?;
+    Ok(hb)
+}
+
+/// Heartbeat frames: roundtrip exactly; truncation at every byte errors
+/// contextually (kind once the header is readable, field once the
+/// payload is short); random byte flips never panic.
+#[test]
+fn prop_wire_heartbeat_frames_roundtrip_truncate_and_survive_flips() {
+    forall(
+        "wire-heartbeat",
+        40,
+        |rng| (rng.below(1 << 16) as u32, rng.next_u64(), rng.next_u64()),
+        |(rank, seq, flip_seed)| {
+            let mut buf = Vec::new();
+            wire::put_heartbeat_frame(&mut buf, *rank, *seq);
+            let hb = decode_heartbeat_frame(&buf)?;
+            if hb != (wire::WireHeartbeat { rank: *rank, seq: *seq }) {
+                return Err(format!("roundtrip diverged: {} / {}", hb.rank, hb.seq));
+            }
+            for cut in 1..buf.len() {
+                let err = match decode_heartbeat_frame(&buf[..cut]) {
+                    Ok(_) => return Err(format!("decoded a heartbeat cut at {cut}")),
+                    Err(e) => e,
+                };
+                if cut < wire::HEADER {
+                    if !err.contains("mid-header") {
+                        return Err(format!("cut {cut}: header cut lacks context: {err}"));
+                    }
+                } else if !err.contains("Heartbeat") {
+                    return Err(format!("cut {cut}: error does not name the kind: {err}"));
+                }
+            }
+            // Payload truncation behind an intact envelope: the cursor
+            // names the missing field.
+            for keep in 0..buf.len() - wire::HEADER {
+                let mut f = Vec::new();
+                let start = wire::begin_frame(&mut f, wire::kind::HEARTBEAT);
+                f.extend_from_slice(&buf[wire::HEADER..wire::HEADER + keep]);
+                wire::end_frame(&mut f, start);
+                let err = decode_heartbeat_frame(&f).unwrap_err();
+                if !err.contains("Heartbeat") || !(err.contains("rank") || err.contains("seq")) {
+                    return Err(format!("short payload ({keep}B) lacks kind+field: {err}"));
+                }
+            }
+            // Byte flips: decode may fail (with context) but never panic.
+            let mut rng = Rng::new(*flip_seed);
+            for _ in 0..32 {
+                let mut bad = buf.clone();
+                let at = rng.below(bad.len());
+                bad[at] ^= 1 + rng.below(255) as u8;
+                if at < 4 {
+                    let claimed = u32::from_le_bytes(bad[..4].try_into().unwrap()) as usize;
+                    if claimed <= wire::MAX_FRAME {
+                        bad.resize(wire::HEADER + claimed, 0);
+                    }
+                }
+                match decode_heartbeat_frame(&bad) {
+                    Ok(_) => {}
+                    Err(e) if e.is_empty() => return Err("empty error context".into()),
+                    Err(_) => {}
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+fn decode_config_update_frame(bytes: &[u8]) -> Result<(u64, String), String> {
+    let mut slice = bytes;
+    let (k, payload) = wire::read_frame(&mut slice)
+        .map_err(|e| format!("{e:#}"))?
+        .ok_or_else(|| "clean EOF instead of a frame".to_string())?;
+    if k != wire::kind::CONFIG_UPDATE {
+        return Err(format!("not a config-update frame: {}", wire::kind_name(k)));
+    }
+    let mut cur = wire::Cursor::new(k, &payload).map_err(|e| format!("{e:#}"))?;
+    let (v, kv) = wire::take_config_update(&mut cur).map_err(|e| format!("{e:#}"))?;
+    cur.finish().map_err(|e| format!("{e:#}"))?;
+    Ok((v, kv.to_string()))
+}
+
+/// ConfigUpdate frames: the `version + kv text` body roundtrips exactly
+/// (including the empty and multi-line cases), truncation names the
+/// kind and the missing field, and byte flips — which can land in the
+/// string length prefix or mid-UTF-8 — never panic.
+#[test]
+fn prop_wire_config_update_frames_roundtrip_truncate_and_survive_flips() {
+    const KEYS: &[&str] =
+        &["rebalance_ms", "stall_warn_ms", "net_liveness_ms", "pull_floor_us", "pull_ceil_ms"];
+    forall(
+        "wire-config-update",
+        40,
+        |rng| {
+            let n = rng.below(4);
+            let kv = (0..n)
+                .map(|_| format!("{}={}", KEYS[rng.below(KEYS.len())], rng.below(100_000)))
+                .collect::<Vec<_>>()
+                .join("\n");
+            (rng.next_u64(), kv, rng.next_u64())
+        },
+        |(version, kv, flip_seed)| {
+            let mut buf = Vec::new();
+            wire::put_config_update_frame(&mut buf, *version, kv);
+            let (v, got) = decode_config_update_frame(&buf)?;
+            if v != *version || got != *kv {
+                return Err(format!("roundtrip diverged: v{v} {got:?}"));
+            }
+            for cut in 1..buf.len() {
+                let err = match decode_config_update_frame(&buf[..cut]) {
+                    Ok(_) => return Err(format!("decoded a config update cut at {cut}")),
+                    Err(e) => e,
+                };
+                if cut < wire::HEADER {
+                    if !err.contains("mid-header") {
+                        return Err(format!("cut {cut}: header cut lacks context: {err}"));
+                    }
+                } else if !err.contains("ConfigUpdate") {
+                    return Err(format!("cut {cut}: error does not name the kind: {err}"));
+                }
+            }
+            for keep in 0..buf.len() - wire::HEADER {
+                let mut f = Vec::new();
+                let start = wire::begin_frame(&mut f, wire::kind::CONFIG_UPDATE);
+                f.extend_from_slice(&buf[wire::HEADER..wire::HEADER + keep]);
+                wire::end_frame(&mut f, start);
+                let err = decode_config_update_frame(&f).unwrap_err();
+                if !err.contains("ConfigUpdate")
+                    || !(err.contains("version") || err.contains("kv"))
+                {
+                    return Err(format!("short payload ({keep}B) lacks kind+field: {err}"));
+                }
+            }
+            let mut rng = Rng::new(*flip_seed);
+            for _ in 0..32 {
+                let mut bad = buf.clone();
+                let at = rng.below(bad.len());
+                bad[at] ^= 1 + rng.below(255) as u8;
+                if at < 4 {
+                    let claimed = u32::from_le_bytes(bad[..4].try_into().unwrap()) as usize;
+                    if claimed <= wire::MAX_FRAME {
+                        bad.resize(wire::HEADER + claimed, 0);
+                    }
+                }
+                match decode_config_update_frame(&bad) {
+                    Ok(_) => {}
+                    Err(e) if e.is_empty() => return Err("empty error context".into()),
+                    Err(_) => {}
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -151,9 +151,24 @@ fn two_worker_processes_match_the_in_process_run() {
     let mut w1 = spawn_worker("1/2");
 
     // -- live /stats probe (bare TcpStream; no curl) -------------------
+    // serve publishes liveness detail on /healthz: JSON with an overall
+    // status ("starting" until the join barrier sizes the rank board,
+    // "ok"/"degraded" after) and a per-rank array.
     let (status, body) = http_get(&stats, "/healthz").expect("healthz");
     assert!(status.contains("200"), "healthz: {status}");
-    assert_eq!(body, "ok\n");
+    let health = Json::parse(&body).expect("healthz body is JSON");
+    let state = health
+        .get("status")
+        .and_then(|s| match s {
+            Json::Str(s) => Some(s.clone()),
+            _ => None,
+        })
+        .expect("healthz status field");
+    assert!(
+        ["starting", "ok", "degraded"].contains(&state.as_str()),
+        "unexpected healthz status {state:?} in {body}"
+    );
+    assert!(health.get("ranks").is_some(), "healthz must carry a ranks array: {body}");
     let deadline = Instant::now() + Duration::from_secs(30);
     let mut live = None;
     while live.is_none() {
